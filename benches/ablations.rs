@@ -1,0 +1,51 @@
+//! Ablation study over GOMA's decision dimensions (DESIGN.md §4 extension;
+//! evidence for the paper's §V-B1c "bypass is a key degree of freedom" and
+//! §III-C walking-axis claims).
+//!
+//! For representative GEMMs on each template, re-solve with one dimension
+//! frozen and report the energy regression vs. full GOMA:
+//!   - no bypass search (hardware-preset residency),
+//!   - fixed z/z walking axes (classic output-stationary order),
+//!   - tiling only (both frozen).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use goma::arch::{eyeriss_like, gemmini_like, tpu_v1_like};
+use goma::experiments::ablations::ablate;
+use goma::mapping::GemmShape;
+
+fn main() {
+    let gemms = [
+        ("attn_q_proj 1B(1k)", GemmShape::mnk(1024, 2048, 2048)),
+        ("attn_score 1B(1k)", GemmShape::mnk(1024, 1024, 64)),
+        ("mlp_down 1B(1k)", GemmShape::mnk(1024, 2048, 8192)),
+    ];
+    println!("== Ablations: energy regression when freezing a decision dimension ==");
+    println!(
+        "{:<14}{:<22}{:>12}{:>14}{:>12}{:>14}",
+        "template", "gemm", "full", "no-bypass", "fixed-walk", "tiling-only"
+    );
+    let mut worst_bypass: f64 = 1.0;
+    let mut worst_walk: f64 = 1.0;
+    for arch in [eyeriss_like(), gemmini_like(), tpu_v1_like()] {
+        for (name, shape) in gemms {
+            let Some(a) = ablate(shape, &arch) else {
+                println!("{:<14}{:<22}  (infeasible)", arch.name, name);
+                continue;
+            };
+            let (rb, rw, rt) = a.regressions();
+            worst_bypass = worst_bypass.max(rb);
+            worst_walk = worst_walk.max(rw);
+            println!(
+                "{:<14}{:<22}{:>12.4}{:>13.2}x{:>11.2}x{:>13.2}x",
+                arch.name, name, a.full, rb, rw, rt
+            );
+        }
+    }
+    println!(
+        "\nshape check: freezing bypass costs up to {worst_bypass:.2}x and freezing the\n\
+         walking axes up to {worst_walk:.2}x — both degrees of freedom carry real energy\n\
+         (paper §V-B1c / §III-C)."
+    );
+    assert!(worst_bypass > 1.05 || worst_walk > 1.05, "ablations show no effect?");
+}

@@ -1,0 +1,60 @@
+//! Fig. 6 — normalized EDP across the 24 evaluation cases for GOMA and the
+//! five baselines (all normalized to GOMA, lower is better).
+//!
+//! The first run executes the full sweep (minutes under the Fast profile;
+//! set GOMA_PROFILE=paper for published baseline budgets) and caches it in
+//! `target/goma_cases_<profile>.tsv`; later benches reuse the cache
+//! (GOMA_REFRESH=1 forces recompute).
+//!
+//! Run: `cargo bench --bench fig6_edp_cases`
+
+use goma::experiments::cases::{cached, normalize, MAPPER_ORDER};
+use goma::experiments::Profile;
+
+fn main() {
+    let profile = Profile::from_env();
+    let records = cached(profile);
+    let norm = normalize(&records, |r| r.edp_case());
+
+    let mut case_names: Vec<String> = records
+        .iter()
+        .filter(|r| r.mapper == "GOMA")
+        .map(|r| r.case_name.clone())
+        .collect();
+    case_names.dedup();
+
+    println!("== Fig. 6: normalized EDP per case (1.00 = GOMA; lower is better) ==");
+    print!("{:<38}", "case");
+    for m in MAPPER_ORDER {
+        print!("{:>12}", m.replace("Timeloop Hybrid", "TL-Hybrid"));
+    }
+    println!();
+    let mut wins = 0usize;
+    for case in &case_names {
+        print!("{case:<38}");
+        let mut goma_best = true;
+        for m in MAPPER_ORDER {
+            let v = norm
+                .get(&(m.to_string(), case.clone()))
+                .copied()
+                .unwrap_or(f64::NAN);
+            if m != "GOMA" && v < 1.0 - 1e-9 {
+                goma_best = false;
+            }
+            if v >= 1000.0 {
+                print!("{v:>12.2e}");
+            } else {
+                print!("{v:>12.2}");
+            }
+        }
+        if goma_best {
+            wins += 1;
+        }
+        println!();
+    }
+    println!(
+        "\nGOMA achieves the lowest EDP in {wins}/{} cases \
+         (paper: all cases; §V-B1a).",
+        case_names.len()
+    );
+}

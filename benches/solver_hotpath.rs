@@ -1,0 +1,102 @@
+//! §Perf — solver hot-path microbenchmark (the L3 performance deliverable).
+//!
+//! Times `solver::solve` across every (workload GEMM × matching template)
+//! pair plus the O(1) energy evaluation itself, printing latency
+//! distributions. This is the harness used for the EXPERIMENTS.md §Perf
+//! before/after log.
+//!
+//! Run: `cargo bench --bench solver_hotpath`
+
+use goma::arch::{center_templates, edge_templates};
+use goma::energy::evaluate;
+use goma::mapping::GemmShape;
+use goma::solver::{solve, SolverOptions};
+use goma::timeloop::score_unchecked;
+use goma::util::{geomean, percentile};
+use goma::workloads::{center_workloads, edge_workloads, Deployment};
+use std::time::Instant;
+
+fn time_solves(pairs: &[(GemmShape, goma::arch::Accelerator)]) -> Vec<f64> {
+    let mut out = Vec::new();
+    for (shape, arch) in pairs {
+        let t = Instant::now();
+        let r = solve(*shape, arch, SolverOptions::default());
+        let dt = t.elapsed().as_secs_f64();
+        if r.is_ok() {
+            out.push(dt);
+        }
+    }
+    out
+}
+
+fn report(label: &str, xs: &[f64]) {
+    println!(
+        "{label:<28} n={:<4} geomean={:>9.4}s p50={:>9.4}s p95={:>9.4}s max={:>9.4}s",
+        xs.len(),
+        geomean(xs),
+        percentile(xs, 50.0),
+        percentile(xs, 95.0),
+        xs.iter().cloned().fold(0.0, f64::max)
+    );
+}
+
+fn main() {
+    println!("== §Perf: solver hot path ==");
+
+    // Full-workload solve latency, edge and center.
+    let mut edge_pairs = Vec::new();
+    for w in edge_workloads() {
+        assert_eq!(w.deployment, Deployment::Edge);
+        for arch in edge_templates() {
+            for g in &w.gemms {
+                edge_pairs.push((g.shape, arch.clone()));
+            }
+        }
+    }
+    let mut center_pairs = Vec::new();
+    for w in center_workloads() {
+        for arch in center_templates() {
+            for g in &w.gemms {
+                center_pairs.push((g.shape, arch.clone()));
+            }
+        }
+    }
+    let edge_t = time_solves(&edge_pairs);
+    let center_t = time_solves(&center_pairs);
+    report("edge solves (96 GEMMs)", &edge_t);
+    report("center solves (96 GEMMs)", &center_t);
+    let all: Vec<f64> = edge_t.iter().chain(center_t.iter()).cloned().collect();
+    report("all solves", &all);
+
+    // O(1) objective evaluation latency (the paper's constant-time claim).
+    let shape = GemmShape::mnk(131072, 28672, 8192);
+    let arch = goma::arch::a100_like();
+    let m = solve(shape, &arch, SolverOptions::default()).unwrap().mapping;
+    let n = 200_000;
+    let t = Instant::now();
+    let mut acc = 0.0;
+    for _ in 0..n {
+        acc += evaluate(&m, shape, &arch).normalized;
+    }
+    let eval_ns = t.elapsed().as_nanos() as f64 / n as f64;
+    println!(
+        "closed-form evaluate()       {eval_ns:>9.1} ns/call (O(1); checksum {acc:.1})"
+    );
+
+    // Oracle scoring latency (the baselines' inner loop).
+    let t = Instant::now();
+    let mut acc2 = 0.0;
+    let n2 = 50_000;
+    for _ in 0..n2 {
+        acc2 += score_unchecked(&m, shape, &arch).edp;
+    }
+    let oracle_ns = t.elapsed().as_nanos() as f64 / n2 as f64;
+    println!(
+        "timeloop-lite score()        {oracle_ns:>9.1} ns/call (checksum {acc2:.3e})"
+    );
+
+    println!(
+        "\nshape check: per-GEMM optimal solve ≪ 1 s (paper: 0.65 s/GEMM geomean)."
+    );
+    assert!(geomean(&all) < 1.0, "solver fell out of real-time range");
+}

@@ -1,0 +1,50 @@
+//! Table II — summary of normalized EDP over the 24 evaluation cases
+//! (geomean and median, normalized to GOMA; lower is better).
+//!
+//! Paper reference row (geomean): GOMA 1.00, CoSA 2.24, FactorFlow 3.91,
+//! LOMA 4.17, SALSA 4.24, Timeloop Hybrid 98.5.
+//!
+//! Run: `cargo bench --bench table2_edp` (reuses the Fig. 6 cache)
+
+use goma::experiments::cases::{cached, normalize, summarize_normalized, MAPPER_ORDER};
+use goma::experiments::Profile;
+
+fn main() {
+    let records = cached(Profile::from_env());
+    let norm = normalize(&records, |r| r.edp_case());
+    let rows = summarize_normalized(&norm);
+
+    println!("== Table II: normalized EDP over 24 cases (lower is better) ==");
+    print!("{:<10}", "metric");
+    for m in MAPPER_ORDER {
+        print!("{:>12}", m.replace("Timeloop Hybrid", "TL-Hybrid"));
+    }
+    println!();
+    print!("{:<10}", "geomean");
+    for (_, g, _) in &rows {
+        if *g >= 1000.0 {
+            print!("{g:>12.2e}");
+        } else {
+            print!("{g:>12.2}");
+        }
+    }
+    println!();
+    print!("{:<10}", "median");
+    for (_, _, med) in &rows {
+        if *med >= 1000.0 {
+            print!("{med:>12.2e}");
+        } else {
+            print!("{med:>12.2}");
+        }
+    }
+    println!();
+    println!("\npaper     :      1.00       2.24        3.91        4.17        4.24        98.5   (geomean)");
+
+    // Shape checks: GOMA == 1; every baseline strictly > 1; CoSA closest.
+    let get = |name: &str| rows.iter().find(|(m, ..)| m == name).unwrap().1;
+    assert!((get("GOMA") - 1.0).abs() < 1e-9);
+    for m in MAPPER_ORDER.iter().skip(1) {
+        assert!(get(m) > 1.0, "{m} geomean not above GOMA");
+    }
+    println!("shape check PASSED: GOMA lowest, every baseline geomean > 1.");
+}

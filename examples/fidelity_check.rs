@@ -1,0 +1,45 @@
+//! Fidelity spot-check (§IV-G1 in miniature): compare GOMA's closed-form
+//! energy against the Timeloop-lite oracle for one GEMM across its
+//! tiling–walk–bypass grid, printing the worst mismatches.
+//!
+//! ```sh
+//! cargo run --release --example fidelity_check
+//! ```
+//! The full 7-GEMM study is `cargo bench --bench fidelity`.
+
+use goma::arch::eyeriss_like;
+use goma::experiments::fidelity;
+
+fn main() {
+    let arch = eyeriss_like();
+    let report = fidelity::study(&arch);
+
+    println!("fidelity over {} mappings:", report.total());
+    println!("  exact          : {:.2}%", report.exact_rate() * 100.0);
+    println!("  mean rel err   : {:.4}%", report.mean_rel_err() * 100.0);
+    println!("  p95 / p99      : {:.4}% / {:.4}%",
+        report.err_percentile(95.0) * 100.0,
+        report.err_percentile(99.0) * 100.0
+    );
+    println!("  energy-weighted: {:.4}%", report.energy_weighted_err() * 100.0);
+
+    // Show the tail: the boundary cases where the closed form's folded
+    // counting diverges from exact loop-nest counting (§IV-C remark).
+    let mut worst: Vec<&fidelity::Sample> = report.samples.iter().collect();
+    worst.sort_by(|a, b| b.rel_err().partial_cmp(&a.rel_err()).unwrap());
+    println!("\nworst 5 boundary cases (closed form vs oracle, pJ):");
+    for s in worst.iter().take(5) {
+        println!(
+            "  goma {:>14.1}  oracle {:>14.1}  rel err {:.3}%",
+            s.goma_pj,
+            s.oracle_pj,
+            s.rel_err() * 100.0
+        );
+    }
+    println!(
+        "\nInterpretation: mismatches are sparse and small — degenerate (bound-1)\n\
+         loops let the oracle's reuse analysis compress slightly further than\n\
+         the closed form folds (oracle ≤ closed form always; see the\n\
+         property_oracle_never_exceeds_closed_form test)."
+    );
+}

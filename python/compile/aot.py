@@ -1,0 +1,180 @@
+"""AOT lowering: JAX/Pallas -> HLO **text** artifacts for the Rust runtime.
+
+Run once at build time (`make artifacts`); Python never touches the request
+path. HLO text (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+  quickstart_gemm      64x64x64 mapped GEMM, default spec
+  mapped_gemm_<LxMxN>  GOMA-mapped GEMM variants (tile/walk from
+                       GOMA_AOT_MAPPING="l1x,l1y,l1z,alpha" when set,
+                       else defaults)
+  prefill_block        the L2 transformer block (all GEMMs via the kernel)
+
+plus `manifest.tsv`: name<TAB>description<TAB>in dims<TAB>out dims.
+
+Every artifact is numerically checked against the pure-jnp reference before
+being written — a broken kernel cannot ship.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.kernels.mapped_gemm import MappingSpec, default_spec, mapped_gemm
+from compile.kernels import ref
+from compile import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def dims(shape):
+    return "x".join(str(d) for d in shape)
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.rows = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, description, fn, example_args):
+        """Lower `fn` (returning a 1-tuple) at `example_args` and write
+        `<name>.hlo.txt` + a manifest row."""
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shape = jax.eval_shape(fn, *example_args)[0].shape
+        self.rows.append(
+            (
+                name,
+                description,
+                ";".join(dims(a.shape) for a in example_args),
+                dims(out_shape),
+            )
+        )
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.tsv")
+        with open(path, "w") as f:
+            f.write("# name\tdescription\tinputs\toutput\n")
+            for row in self.rows:
+                f.write("\t".join(row) + "\n")
+        print(f"  wrote {path} ({len(self.rows)} artifacts)")
+
+
+def parse_env_mapping():
+    """GOMA_AOT_MAPPING="l1x,l1y,l1z,alpha" threads solver output in."""
+    raw = os.environ.get("GOMA_AOT_MAPPING")
+    if not raw:
+        return None
+    parts = raw.split(",")
+    return MappingSpec(
+        l1=(int(parts[0]), int(parts[1]), int(parts[2])), alpha01=parts[3]
+    )
+
+
+def check_gemm(spec, m, n, k, rtol=1e-5):
+    """Build-time correctness gate: kernel vs. pure-jnp oracle."""
+    key = jax.random.PRNGKey(0)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (m, k), jnp.float32)
+    b = jax.random.normal(kb, (k, n), jnp.float32)
+    got = mapped_gemm(a, b, spec)
+    want = ref.gemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=1e-4)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="emit only the quickstart artifact"
+    )
+    args = ap.parse_args()
+    em = Emitter(args.out_dir)
+
+    # --- quickstart: small mapped GEMM -----------------------------------
+    spec64 = default_spec(64, 64, 64, cap=32)
+    check_gemm(spec64, 64, 64, 64)
+
+    def quickstart(a, b):
+        return (mapped_gemm(a, b, spec64),)
+
+    em.emit(
+        "quickstart_gemm",
+        f"mapped gemm 64x64x64, tile {spec64.l1}, walk {spec64.alpha01}",
+        quickstart,
+        (
+            jax.ShapeDtypeStruct((64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        ),
+    )
+
+    if not args.quick:
+        # --- GOMA-mapped GEMM variants ------------------------------------
+        env_spec = parse_env_mapping()
+        variants = [
+            (256, 256, 256, env_spec or MappingSpec(l1=(128, 64, 64), alpha01="x")),
+            (256, 256, 256, MappingSpec(l1=(64, 64, 256), alpha01="z")),
+            (128, 512, 256, MappingSpec(l1=(128, 128, 64), alpha01="y")),
+        ]
+        for i, (m, n, k, spec) in enumerate(variants):
+            check_gemm(spec, m, n, k)
+
+            def f(a, b, spec=spec):
+                return (mapped_gemm(a, b, spec),)
+
+            em.emit(
+                f"mapped_gemm_v{i}_{m}x{n}x{k}",
+                f"mapped gemm tile {spec.l1}, walk {spec.alpha01}",
+                f,
+                (
+                    jax.ShapeDtypeStruct((m, k), jnp.float32),
+                    jax.ShapeDtypeStruct((k, n), jnp.float32),
+                ),
+            )
+
+        # --- the L2 prefill block -----------------------------------------
+        cfg = model_lib.BlockConfig()
+        weights = model_lib.init_weights(cfg, jax.random.PRNGKey(7))
+        x = jax.random.normal(jax.random.PRNGKey(3), (cfg.seq, cfg.hidden), jnp.float32)
+        got = model_lib.prefill_block(x, weights, cfg)
+        want = model_lib.prefill_block_ref(x, weights, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+        def block(xin):
+            return (model_lib.prefill_block(xin, weights, cfg),)
+
+        em.emit(
+            "prefill_block",
+            f"transformer prefill block seq={cfg.seq} hidden={cfg.hidden} "
+            f"heads={cfg.heads} (weights baked)",
+            block,
+            (jax.ShapeDtypeStruct((cfg.seq, cfg.hidden), jnp.float32),),
+        )
+
+    em.write_manifest()
+    print("AOT done.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

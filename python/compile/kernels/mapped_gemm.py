@@ -1,0 +1,136 @@
+"""Layer-1 Pallas kernel: a GOMA-mapping-parameterized tiled GEMM.
+
+The GOMA mapping's outer levels translate directly onto Pallas concepts
+(DESIGN.md §Hardware-Adaptation):
+
+* SRAM tile ``L^(1)``    -> BlockSpec block shape (the VMEM-resident tile);
+* walking axis ``alpha_{0-1}`` -> the innermost grid dimension (the axis
+  along which blocks advance while one projection stays VMEM-stationary);
+* z traversal            -> the accumulation chain: the output block is
+  initialized at the z column head and accumulated in place across z steps
+  (the "first step reads no old value" boundary of paper SIV-C);
+* PE-array tile ``L^(2)``/regfile ``L^(3)`` -> the inner ``jnp.dot``, which
+  the TPU backend schedules onto the MXU systolic array (on CPU we run
+  interpret mode, so these levels are documented estimates, see
+  EXPERIMENTS.md SPerf).
+
+Python only ever runs at build time: `aot.py` lowers the jitted caller to
+HLO text that the Rust runtime loads.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+AXES = ("x", "y", "z")
+
+
+@dataclass(frozen=True)
+class MappingSpec:
+    """The slice of a GOMA mapping that shapes the kernel schedule.
+
+    ``l1`` is the SRAM/VMEM tile ``(L_x^(1), L_y^(1), L_z^(1))`` in the
+    paper's axis convention (x = M rows, y = N cols, z = reduction);
+    ``alpha01`` is the DRAM->SRAM walking axis.
+    """
+
+    l1: tuple  # (l1x, l1y, l1z)
+    alpha01: str = "z"
+
+    def __post_init__(self):
+        if self.alpha01 not in AXES:
+            raise ValueError(f"alpha01 must be one of {AXES}")
+        if len(self.l1) != 3 or any(int(v) < 1 for v in self.l1):
+            raise ValueError("l1 must be three positive tile lengths")
+
+    def grid_order(self):
+        """Grid axes outer-to-inner: walking axis innermost (last)."""
+        return tuple(a for a in AXES if a != self.alpha01) + (self.alpha01,)
+
+
+def _validate(m, n, k, spec):
+    l1x, l1y, l1z = spec.l1
+    if m % l1x or n % l1y or k % l1z:
+        raise ValueError(
+            f"tile {spec.l1} must divide GEMM ({m}, {n}, {k}) "
+            "(GOMA divisibility constraint, Eq. 4)"
+        )
+
+
+def _kernel(a_ref, b_ref, o_ref, *, z_pos):
+    """Accumulating tile kernel: o += a @ b with column-head init."""
+
+    @pl.when(pl.program_id(z_pos) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def mapped_gemm(a, b, spec: MappingSpec, *, interpret=True):
+    """Compute ``a @ b`` under the tiling/walk schedule of ``spec``.
+
+    ``a``: [M, K], ``b``: [K, N] -> [M, N]. ``interpret=True`` is required
+    for CPU PJRT execution (real-TPU lowering emits a Mosaic custom call the
+    CPU plugin cannot run).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    _validate(m, n, k, spec)
+    l1x, l1y, l1z = (int(v) for v in spec.l1)
+
+    order = spec.grid_order()
+    pos = {axis: i for i, axis in enumerate(order)}
+    counts = {"x": m // l1x, "y": n // l1y, "z": k // l1z}
+    grid = tuple(counts[axis] for axis in order)
+
+    # index_map returns *block* indices; pick each operand's coordinates out
+    # of the grid ids. A is the x-z projection, B the z-y, P the x-y (SIII-B).
+    def a_map(*ids):
+        return (ids[pos["x"]], ids[pos["z"]])
+
+    def b_map(*ids):
+        return (ids[pos["z"]], ids[pos["y"]])
+
+    def o_map(*ids):
+        return (ids[pos["x"]], ids[pos["y"]])
+
+    return pl.pallas_call(
+        partial(_kernel, z_pos=pos["z"]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l1x, l1z), a_map),
+            pl.BlockSpec((l1z, l1y), b_map),
+        ],
+        out_specs=pl.BlockSpec((l1x, l1y), o_map),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def default_spec(m, n, k, cap=128):
+    """A reasonable default mapping when no solver output is supplied:
+    largest power-of-two tiles up to ``cap`` that divide each extent,
+    walking z (output-stationary in VMEM)."""
+
+    def tile(extent):
+        t = 1
+        while t * 2 <= min(extent, cap) and extent % (t * 2) == 0:
+            t *= 2
+        return t
+
+    return MappingSpec(l1=(tile(m), tile(n), tile(k)), alpha01="z")
+
+
+def vmem_words(spec: MappingSpec):
+    """VMEM residency of one grid step in words (the L1 footprint the
+    paper's Eq. 32 bounds): A + B + P projections of the L^(1) tile."""
+    l1x, l1y, l1z = spec.l1
+    return l1x * l1z + l1z * l1y + l1x * l1y

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for kernel correctness (the build-time CORE signal).
+
+Every Pallas kernel in this tree must match its reference here to float
+tolerance before `aot.py` will emit artifacts (enforced by pytest and by an
+assertion inside `aot.py` itself).
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b):
+    """Reference GEMM: plain jnp matmul in f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def attention_ref(q, k, v, scale):
+    """Reference single-head attention (prefill, unmasked demo semantics —
+    the mapped model applies the same)."""
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    ctx = jnp.dot(probs.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    return ctx.astype(v.dtype)
+
+
+def mlp_ref(x, w_gate, w_up, w_down):
+    """Reference gated MLP (ReLU gate, demo semantics)."""
+    gate = jnp.dot(x, w_gate)
+    up = jnp.dot(x, w_up)
+    hidden = jnp.where(gate > 0, gate, 0.0) * up
+    return jnp.dot(hidden, w_down)

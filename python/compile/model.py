@@ -1,0 +1,140 @@
+"""Layer-2 JAX model: an LLM prefill transformer block whose GEMMs run
+through the Layer-1 mapped-GEMM Pallas kernel.
+
+This is the build-time compute graph the paper's workloads come from
+(SV-A1): q/kv projections, attention scores, context, output projection and
+the gated MLP — every matmul dispatched through
+`kernels.mapped_gemm.mapped_gemm` with a per-GEMM mapping, so the whole
+block lowers into a single HLO module for the Rust runtime.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mapped_gemm import MappingSpec, default_spec, mapped_gemm
+
+
+@dataclass(frozen=True)
+class BlockConfig:
+    """A miniature prefill block configuration (artifact-scale)."""
+
+    seq: int = 128
+    hidden: int = 256
+    heads: int = 4
+    head_dim: int = 64
+    intermediate: int = 512
+
+    @property
+    def q_dim(self):
+        return self.heads * self.head_dim
+
+
+def init_weights(cfg: BlockConfig, key):
+    """Deterministic small-magnitude weights for the artifact demo."""
+    ks = jax.random.split(key, 6)
+    s = 0.02
+    return {
+        "wq": jax.random.normal(ks[0], (cfg.hidden, cfg.q_dim), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (cfg.hidden, cfg.q_dim), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (cfg.hidden, cfg.q_dim), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (cfg.q_dim, cfg.hidden), jnp.float32) * s,
+        "w_gate_up": jax.random.normal(
+            ks[4], (cfg.hidden, 2 * cfg.intermediate), jnp.float32
+        )
+        * s,
+        "w_down": jax.random.normal(ks[5], (cfg.intermediate, cfg.hidden), jnp.float32)
+        * s,
+    }
+
+
+def _gemm(x, w, spec=None):
+    m, k = x.shape
+    _, n = w.shape
+    spec = spec or default_spec(m, n, k)
+    return mapped_gemm(x, w, spec)
+
+
+def attention(x, weights, cfg: BlockConfig, specs=None):
+    """Multi-head prefill attention with mapped GEMMs.
+
+    `specs` optionally overrides the MappingSpec per GEMM type (keys:
+    'qkv', 'score', 'context', 'out') — this is how GOMA solver output is
+    threaded into the kernel schedule.
+    """
+    specs = specs or {}
+    q = _gemm(x, weights["wq"], specs.get("qkv"))
+    k = _gemm(x, weights["wk"], specs.get("qkv"))
+    v = _gemm(x, weights["wv"], specs.get("qkv"))
+
+    scale = 1.0 / (cfg.head_dim**0.5)
+    outs = []
+    for h in range(cfg.heads):
+        sl = slice(h * cfg.head_dim, (h + 1) * cfg.head_dim)
+        qh, kh, vh = q[:, sl], k[:, sl], v[:, sl]
+        # attn_score: [S, D] x [D, S] (the paper's attn_score GEMM type)
+        scores = _gemm(qh, kh.T, specs.get("score")) * scale
+        probs = jax.nn.softmax(scores, axis=-1)
+        # attn_context: [S, S] x [S, D]
+        outs.append(_gemm(probs, vh, specs.get("context")))
+    ctx = jnp.concatenate(outs, axis=-1)
+    return _gemm(ctx, weights["wo"], specs.get("out"))
+
+
+def mlp(x, weights, cfg: BlockConfig, specs=None):
+    """Gated MLP: fused gate_up GEMM (the paper's mlp_gate_up), split,
+    gate, then mlp_down."""
+    specs = specs or {}
+    gate_up = _gemm(x, weights["w_gate_up"], specs.get("gate_up"))
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    hidden = jnp.where(gate > 0, gate, 0.0) * up
+    return _gemm(hidden, weights["w_down"], specs.get("down"))
+
+
+def rmsnorm(x, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def prefill_block(x, weights, cfg: BlockConfig, specs=None):
+    """One full transformer block (pre-norm residual)."""
+    x = x + attention(rmsnorm(x), weights, cfg, specs)
+    x = x + mlp(rmsnorm(x), weights, cfg, specs)
+    return x
+
+
+def prefill_block_ref(x, weights, cfg: BlockConfig):
+    """Reference block on plain jnp matmuls (no Pallas) for equivalence
+    testing — same math, different schedule."""
+    from .kernels import ref
+
+    def attn_ref(xn):
+        q = xn @ weights["wq"]
+        k = xn @ weights["wk"]
+        v = xn @ weights["wv"]
+        scale = 1.0 / (cfg.head_dim**0.5)
+        outs = []
+        for h in range(cfg.heads):
+            sl = slice(h * cfg.head_dim, (h + 1) * cfg.head_dim)
+            outs.append(ref.attention_ref(q[:, sl], k[:, sl], v[:, sl], scale))
+        return jnp.concatenate(outs, axis=-1) @ weights["wo"]
+
+    def mlp_ref_(xn):
+        gate_up = xn @ weights["w_gate_up"]
+        gate, up = jnp.split(gate_up, 2, axis=-1)
+        return (jnp.where(gate > 0, gate, 0.0) * up) @ weights["w_down"]
+
+    x = x + attn_ref(rmsnorm(x))
+    x = x + mlp_ref_(rmsnorm(x))
+    return x
+
+
+def specs_from_solver(tile_qkv=None, tile_score=None):
+    """Build a spec dict from solver-exported L^(1) tiles (see
+    `goma solve` output / GOMA_AOT_MAPPING in aot.py)."""
+    out = {}
+    if tile_qkv is not None:
+        out["qkv"] = MappingSpec(l1=tuple(tile_qkv[:3]), alpha01=tile_qkv[3])
+    if tile_score is not None:
+        out["score"] = MappingSpec(l1=tuple(tile_score[:3]), alpha01=tile_score[3])
+    return out

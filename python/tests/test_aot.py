@@ -1,0 +1,64 @@
+"""AOT path: HLO-text lowering and manifest emission (quick variant)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import dims, parse_env_mapping, to_hlo_text
+from compile.kernels.mapped_gemm import MappingSpec, mapped_gemm
+
+
+def test_to_hlo_text_emits_parsable_module():
+    def f(a, b):
+        return (mapped_gemm(a, b, MappingSpec(l1=(8, 8, 8))),)
+
+    spec = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    lowered = jax.jit(f).lower(spec, spec)
+    text = to_hlo_text(lowered)
+    # HLO text must be a module with an entry computation — the contract the
+    # Rust HloModuleProto::from_text_file parser relies on.
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "f32[16,16]" in text
+
+
+def test_dims_format():
+    assert dims((64, 32)) == "64x32"
+    assert dims((128,)) == "128"
+
+
+def test_parse_env_mapping(monkeypatch):
+    monkeypatch.delenv("GOMA_AOT_MAPPING", raising=False)
+    assert parse_env_mapping() is None
+    monkeypatch.setenv("GOMA_AOT_MAPPING", "32,64,16,y")
+    spec = parse_env_mapping()
+    assert spec == MappingSpec(l1=(32, 64, 16), alpha01="y")
+
+
+def test_quick_aot_run(tmp_path):
+    """End-to-end `aot.py --quick` into a temp dir: artifact + manifest."""
+    env = dict(os.environ)
+    repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--quick"],
+        cwd=repo_py,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    hlo = tmp_path / "quickstart_gemm.hlo.txt"
+    manifest = tmp_path / "manifest.tsv"
+    assert hlo.exists() and manifest.exists()
+    lines = [
+        l for l in manifest.read_text().splitlines() if l and not l.startswith("#")
+    ]
+    assert len(lines) == 1
+    name, desc, ins, outdims = lines[0].split("\t")
+    assert name == "quickstart_gemm"
+    assert ins == "64x64;64x64"
+    assert outdims == "64x64"

@@ -1,0 +1,187 @@
+//! Accelergy-lite energy reference table (ERT) generation.
+//!
+//! The paper sources per-access energies from Accelergy; we generate them
+//! from a small set of published anchors with standard scaling laws:
+//!
+//! * **DRAM**: per-word energy depends on the interface generation, not on
+//!   the accelerator's logic node. Anchors (8-bit words, derived from
+//!   published pJ/bit figures): LPDDR4 ≈ 14 pJ/bit, DDR3 ≈ 32.5 pJ/bit,
+//!   HBM2 ≈ 3.9 pJ/bit.
+//! * **SRAM**: anchored at 6 pJ/word for a 128 KiB buffer at 65 nm
+//!   (Eyeriss GLB, Accelergy table), scaled by `sqrt(capacity)` (bitline/
+//!   wordline growth) and by `(node/65)^1.3` (dynamic-energy shrink).
+//! * **Regfile**: anchored at 0.9 pJ/word for a 512-word file at 65 nm,
+//!   same scaling; floors at a pipeline-register cost for 1–2 word files
+//!   (Gemmini- and TPU-style PEs).
+//! * **MACC**: 8-bit MAC ≈ 0.56 pJ at 65 nm (Horowitz ISSCC'14 scaled to
+//!   8-bit), node-scaled.
+//! * **Leakage**: proportional to capacity, per cycle; leakage is constant
+//!   per (hardware, workload) pair and does not change the argmin mapping
+//!   (paper Eq. 30 remark), but we still report it.
+//!
+//! Absolute values are approximations; the mapping-ranking experiments only
+//! require the cross-level *ratios* to be realistic (DESIGN.md §2).
+
+
+/// External-memory interface kind (Table I "DRAM" column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DramKind {
+    Lpddr4,
+    Ddr3,
+    Hbm2,
+}
+
+impl DramKind {
+    /// Access energy in pJ per 8-bit word.
+    pub fn access_energy_pj(self) -> f64 {
+        match self {
+            DramKind::Lpddr4 => 14.0 * 8.0,
+            DramKind::Ddr3 => 32.5 * 8.0,
+            DramKind::Hbm2 => 3.9 * 8.0,
+        }
+    }
+
+    /// Sustained bandwidth in words (bytes) per nanosecond (== GB/s).
+    pub fn bandwidth_gbps(self) -> f64 {
+        match self {
+            DramKind::Lpddr4 => 25.6,
+            DramKind::Ddr3 => 12.8,
+            DramKind::Hbm2 => 900.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DramKind::Lpddr4 => "LPDDR4",
+            DramKind::Ddr3 => "DDR3",
+            DramKind::Hbm2 => "HBM2",
+        }
+    }
+}
+
+/// Energy reference table: per-access energies in pJ per word, MAC energy in
+/// pJ per op, leakage in pJ per cycle (§IV-D).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ert {
+    pub dram_read: f64,
+    pub dram_write: f64,
+    pub sram_read: f64,
+    pub sram_write: f64,
+    pub rf_read: f64,
+    pub rf_write: f64,
+    /// Per-MAC compute energy `e^MACC` (Eq. 28).
+    pub macc: f64,
+    /// Whole-SRAM leakage per cycle `e_leak^SRAM` (Eq. 30).
+    pub sram_leak: f64,
+    /// Per-PE regfile leakage per cycle `e_leak^RF` (Eq. 30).
+    pub rf_leak: f64,
+}
+
+/// Dynamic-energy scaling from 65 nm to `node` nm.
+fn node_scale(node: u32) -> f64 {
+    (node as f64 / 65.0).powf(1.3)
+}
+
+impl Ert {
+    /// Generate an ERT for a hierarchy instance (Accelergy substitute).
+    pub fn generate(
+        sram_words: u64,
+        regfile_words: u64,
+        _num_pe: u64,
+        tech_nm: u32,
+        dram: DramKind,
+    ) -> Ert {
+        let s = node_scale(tech_nm);
+        let dram_e = dram.access_energy_pj();
+
+        // SRAM: 6 pJ @ 128 KiB, 65 nm; sqrt capacity scaling.
+        let sram_kib = sram_words as f64 / 1024.0;
+        let sram_read = 6.0 * (sram_kib / 128.0).sqrt() * s;
+        // Regfile: 0.9 pJ @ 512 words, 65 nm; floored at a flop-register
+        // cost so 1-word "RFs" (Gemmini) stay physical.
+        let rf_read = (0.9 * (regfile_words as f64 / 512.0).sqrt() * s).max(0.01 * s);
+
+        Ert {
+            dram_read: dram_e,
+            dram_write: dram_e,
+            sram_read,
+            sram_write: sram_read * 1.1,
+            rf_read,
+            rf_write: rf_read * 1.1,
+            macc: 0.56 * s,
+            sram_leak: 0.015 * sram_kib * s,
+            rf_leak: (0.0002 * regfile_words as f64 * s).max(1e-5),
+        }
+    }
+
+    /// Read energy of level `p ∈ {0,1,3}` (DRAM/SRAM/regfile). Levels 2
+    /// (PE-array fabric) and 4 (MACC) carry no storage energy (Eqs. 20–21).
+    pub fn read(&self, level: usize) -> f64 {
+        match level {
+            0 => self.dram_read,
+            1 => self.sram_read,
+            2 => 0.0,
+            3 => self.rf_read,
+            4 => 0.0,
+            _ => panic!("level {level} out of range"),
+        }
+    }
+
+    /// Write energy of level `p` (same conventions as [`Ert::read`]).
+    pub fn write(&self, level: usize) -> f64 {
+        match level {
+            0 => self.dram_write,
+            1 => self.sram_write,
+            2 => 0.0,
+            3 => self.rf_write,
+            4 => 0.0,
+            _ => panic!("level {level} out of range"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_kinds_ordered_by_energy() {
+        assert!(DramKind::Ddr3.access_energy_pj() > DramKind::Lpddr4.access_energy_pj());
+        assert!(DramKind::Lpddr4.access_energy_pj() > DramKind::Hbm2.access_energy_pj());
+    }
+
+    #[test]
+    fn node_scaling_monotone() {
+        let big = Ert::generate(128 * 1024, 512, 256, 65, DramKind::Lpddr4);
+        let small = Ert::generate(128 * 1024, 512, 256, 7, DramKind::Lpddr4);
+        assert!(small.sram_read < big.sram_read);
+        assert!(small.macc < big.macc);
+        // DRAM energy is interface-bound, not node-bound.
+        assert_eq!(small.dram_read, big.dram_read);
+    }
+
+    #[test]
+    fn capacity_scaling_monotone() {
+        let small = Ert::generate(64 * 1024, 16, 256, 28, DramKind::Lpddr4);
+        let big = Ert::generate(4096 * 1024, 1024, 256, 28, DramKind::Lpddr4);
+        assert!(big.sram_read > small.sram_read);
+        assert!(big.rf_read > small.rf_read);
+    }
+
+    #[test]
+    fn one_word_rf_stays_positive() {
+        let e = Ert::generate(576 * 1024, 1, 256, 22, DramKind::Lpddr4);
+        assert!(e.rf_read > 0.0);
+        assert!(e.rf_read < e.sram_read);
+    }
+
+    #[test]
+    fn read_write_level_accessors() {
+        let e = Ert::generate(128 * 1024, 512, 256, 65, DramKind::Lpddr4);
+        assert_eq!(e.read(0), e.dram_read);
+        assert_eq!(e.write(1), e.sram_write);
+        assert_eq!(e.read(2), 0.0);
+        assert_eq!(e.write(4), 0.0);
+        assert_eq!(e.read(3), e.rf_read);
+    }
+}

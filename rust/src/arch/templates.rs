@@ -1,0 +1,145 @@
+//! The four evaluated accelerator templates (paper Table I).
+//!
+//! | Accelerator  | GLB (KiB) | #PE   | RF (words/PE) | Tech (nm) | DRAM   |
+//! |--------------|-----------|-------|---------------|-----------|--------|
+//! | Eyeriss-like | 162       | 256   | 424           | 65        | LPDDR4 |
+//! | Gemmini-like | 576       | 256   | 1             | 22        | LPDDR4 |
+//! | A100-like    | 36864     | 65536 | 128           | 7         | HBM2   |
+//! | TPU v1-like  | 30720     | 65536 | 2             | 28        | DDR3   |
+//!
+//! For A100-like the paper abstracts the L1/L2 cache hierarchy as a global
+//! buffer and scales the array to Tensor-Core-equivalent MACs; we follow the
+//! same abstraction. Clock frequencies use the published device values.
+
+use super::{Accelerator, DramKind, Ert};
+use crate::mapping::Bypass;
+
+#[allow(clippy::too_many_arguments)]
+fn build(
+    name: &str,
+    glb_kib: u64,
+    num_pe: u64,
+    rf_words: u64,
+    tech_nm: u32,
+    dram: DramKind,
+    clock_ghz: f64,
+    preset_rf_residency: Bypass,
+) -> Accelerator {
+    let sram_words = glb_kib * 1024;
+    let ert = Ert::generate(sram_words, rf_words, num_pe, tech_nm, dram);
+    Accelerator {
+        name: name.to_string(),
+        sram_words,
+        num_pe,
+        regfile_words: rf_words,
+        tech_nm,
+        dram,
+        ert,
+        clock_ghz,
+        // Bandwidth in words/cycle = (GB/s) / (GHz) for 1-byte words.
+        dram_bw_words_per_cycle: dram.bandwidth_gbps() / clock_ghz,
+        // On-chip GLB port width grows with array scale: one word per
+        // 8 PEs per cycle, floored at a 16-word port.
+        sram_bw_words_per_cycle: (num_pe as f64 / 8.0).max(16.0),
+        preset_rf_residency,
+    }
+}
+
+/// Eyeriss-like edge template (row-stationary-era design point). The
+/// 424-word RF comfortably holds all three data types.
+pub fn eyeriss_like() -> Accelerator {
+    build(
+        "eyeriss-like",
+        162,
+        256,
+        424,
+        65,
+        DramKind::Lpddr4,
+        0.2,
+        Bypass::ALL,
+    )
+}
+
+/// Gemmini-like edge template (systolic array, single-word PE register —
+/// the per-PE accumulator: output-stationary, only P resides in the PE).
+pub fn gemmini_like() -> Accelerator {
+    build(
+        "gemmini-like",
+        576,
+        256,
+        1,
+        22,
+        DramKind::Lpddr4,
+        1.0,
+        Bypass::new(false, false, true),
+    )
+}
+
+/// A100-like center template (caches abstracted as GLB, Tensor-Core
+/// equivalent array).
+pub fn a100_like() -> Accelerator {
+    build(
+        "a100-like",
+        36864,
+        65536,
+        128,
+        7,
+        DramKind::Hbm2,
+        1.41,
+        Bypass::ALL,
+    )
+}
+
+/// TPU v1-like center template (weight-stationary systolic array; 2-word
+/// PE registers hold the stationary weight).
+pub fn tpu_v1_like() -> Accelerator {
+    build(
+        "tpu-v1-like",
+        30720,
+        65536,
+        2,
+        28,
+        DramKind::Ddr3,
+        0.7,
+        Bypass::new(true, false, false),
+    )
+}
+
+/// All four templates in Table I order.
+pub fn all_templates() -> Vec<Accelerator> {
+    vec![eyeriss_like(), gemmini_like(), a100_like(), tpu_v1_like()]
+}
+
+/// The two edge templates (paired with edge workloads in the 24 cases).
+pub fn edge_templates() -> Vec<Accelerator> {
+    vec![eyeriss_like(), gemmini_like()]
+}
+
+/// The two center templates (paired with center workloads).
+pub fn center_templates() -> Vec<Accelerator> {
+    vec![a100_like(), tpu_v1_like()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_center_split() {
+        assert_eq!(edge_templates().len(), 2);
+        assert_eq!(center_templates().len(), 2);
+        assert!(edge_templates().iter().all(|a| a.num_pe == 256));
+        assert!(center_templates().iter().all(|a| a.num_pe == 65536));
+    }
+
+    #[test]
+    fn bandwidths_positive_and_hbm_fastest() {
+        let a = a100_like();
+        let t = tpu_v1_like();
+        assert!(a.dram_bw_words_per_cycle > t.dram_bw_words_per_cycle);
+        for arch in all_templates() {
+            assert!(arch.dram_bw_words_per_cycle > 0.0);
+            assert!(arch.sram_bw_words_per_cycle >= 16.0);
+        }
+    }
+}

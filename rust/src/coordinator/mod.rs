@@ -1,0 +1,15 @@
+//! L3 coordinator: the async mapping service.
+//!
+//! GOMA's headline capability is real-time mapping — sub-second optimal
+//! solves (§V-C1: 0.65 s geomean per GEMM) make it deployable *online*, at
+//! model-compile or request time. The coordinator packages the solver as a
+//! long-running service in the style of an inference router: an async
+//! request queue, de-duplication of identical in-flight requests, a result
+//! cache keyed by `(GEMM shape, accelerator)`, and service metrics. The
+//! compiled-artifact execution path ([`crate::runtime`]) hangs off the same
+//! event loop, so a request can go mapping → (optionally) execution without
+//! Python anywhere on the path.
+
+mod service;
+
+pub use service::{MappingService, ServiceHandle, ServiceMetrics};

@@ -1,0 +1,239 @@
+//! The mapping service: queueing, coalescing, caching, metrics.
+//!
+//! Thread-based (the offline registry has no async runtime): a dedicated
+//! service thread owns the result cache and drains the request queue in
+//! batches, so duplicate in-flight requests coalesce into a single solve.
+//! Handles are cheap clones; the service thread exits when every handle is
+//! dropped.
+
+use crate::arch::Accelerator;
+use crate::mapping::GemmShape;
+use crate::solver::{solve, SolveError, SolveResult, SolverOptions};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Cache/coalescing key: a workload shape on a named hardware instance.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Key {
+    shape: GemmShape,
+    arch: String,
+}
+
+struct Request {
+    shape: GemmShape,
+    arch: Accelerator,
+    reply: Sender<Result<Arc<SolveResult>, SolveError>>,
+}
+
+/// Service counters (exposed for the CLI's `serve` output and tests).
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub requests: AtomicU64,
+    pub solves: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub coalesced: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl ServiceMetrics {
+    /// `(requests, solves, cache_hits, coalesced, errors)`.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.requests.load(Ordering::Relaxed),
+            self.solves.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.coalesced.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// A pending reply that can be waited on (futures-lite, std-only).
+pub struct Pending {
+    rx: Receiver<Result<Arc<SolveResult>, SolveError>>,
+}
+
+impl Pending {
+    /// Block until the mapping is solved (or fails).
+    pub fn wait(self) -> Result<Arc<SolveResult>, SolveError> {
+        self.rx.recv().unwrap_or(Err(SolveError::NoFeasibleMapping))
+    }
+}
+
+/// Client handle: cheap to clone, submits mapping requests.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<Request>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl ServiceHandle {
+    /// Submit a request; returns a [`Pending`] so callers can batch many
+    /// submissions before waiting (in-flight duplicates coalesce).
+    pub fn submit(&self, shape: GemmShape, arch: Accelerator) -> Pending {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        // A send error means the service thread is gone; the Pending will
+        // then yield NoFeasibleMapping from the dropped channel.
+        let _ = self.tx.send(Request { shape, arch, reply });
+        Pending { rx }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn map(&self, shape: GemmShape, arch: Accelerator) -> Result<Arc<SolveResult>, SolveError> {
+        self.submit(shape, arch).wait()
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+}
+
+/// The mapping service: owns the cache, drains the queue in batches.
+pub struct MappingService {
+    options: SolverOptions,
+}
+
+impl Default for MappingService {
+    fn default() -> Self {
+        MappingService {
+            options: SolverOptions::default(),
+        }
+    }
+}
+
+impl MappingService {
+    pub fn new(options: SolverOptions) -> Self {
+        MappingService { options }
+    }
+
+    /// Spawn the service thread; returns the client handle. The thread
+    /// exits when every handle is dropped.
+    pub fn spawn(self) -> ServiceHandle {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(ServiceMetrics::default());
+        let m = metrics.clone();
+        let options = self.options;
+        std::thread::spawn(move || {
+            let mut cache: HashMap<Key, Arc<SolveResult>> = HashMap::new();
+            while let Ok(first) = rx.recv() {
+                // Drain whatever is queued behind the first request: the
+                // batch window in which identical keys coalesce.
+                let mut batch = vec![first];
+                while let Ok(r) = rx.try_recv() {
+                    batch.push(r);
+                }
+                // Group by key so each distinct (shape, arch) solves once.
+                let mut groups: HashMap<Key, Vec<Request>> = HashMap::new();
+                for r in batch {
+                    let key = Key {
+                        shape: r.shape,
+                        arch: r.arch.name.clone(),
+                    };
+                    groups.entry(key).or_default().push(r);
+                }
+                for (key, waiters) in groups {
+                    if waiters.len() > 1 {
+                        m.coalesced
+                            .fetch_add(waiters.len() as u64 - 1, Ordering::Relaxed);
+                    }
+                    let result = match cache.get(&key) {
+                        Some(r) => {
+                            m.cache_hits
+                                .fetch_add(waiters.len() as u64, Ordering::Relaxed);
+                            Ok(r.clone())
+                        }
+                        None => {
+                            m.solves.fetch_add(1, Ordering::Relaxed);
+                            match solve(key.shape, &waiters[0].arch, options) {
+                                Ok(r) => {
+                                    let arc = Arc::new(r);
+                                    cache.insert(key, arc.clone());
+                                    Ok(arc)
+                                }
+                                Err(e) => {
+                                    m.errors.fetch_add(1, Ordering::Relaxed);
+                                    Err(e)
+                                }
+                            }
+                        }
+                    };
+                    for w in waiters {
+                        let _ = w.reply.send(result.clone());
+                    }
+                }
+            }
+        });
+        ServiceHandle { tx, metrics }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> Accelerator {
+        Accelerator::custom("svc", 1 << 16, 16, 64)
+    }
+
+    #[test]
+    fn service_solves_and_caches() {
+        let handle = MappingService::default().spawn();
+        let shape = GemmShape::new(64, 64, 64);
+        let a = handle.map(shape, arch()).unwrap();
+        assert!(a.certificate.proved_optimal);
+        let b = handle.map(shape, arch()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second hit must come from cache");
+        let (req, solves, hits, _, errs) = handle.metrics().snapshot();
+        assert_eq!(req, 2);
+        assert_eq!(solves, 1);
+        assert_eq!(hits, 1);
+        assert_eq!(errs, 0);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_solve_once() {
+        let handle = MappingService::default().spawn();
+        let shape = GemmShape::new(128, 64, 32);
+        // Submit all eight before waiting: they land in one batch window or
+        // hit the cache — either way exactly one solve happens.
+        let pendings: Vec<_> = (0..8).map(|_| handle.submit(shape, arch())).collect();
+        for p in pendings {
+            assert!(p.wait().is_ok());
+        }
+        let (_, solves, ..) = handle.metrics().snapshot();
+        assert_eq!(solves, 1, "identical requests must solve exactly once");
+    }
+
+    #[test]
+    fn distinct_requests_all_solve() {
+        let handle = MappingService::default().spawn();
+        let shapes = [
+            GemmShape::new(32, 32, 32),
+            GemmShape::new(64, 32, 32),
+            GemmShape::new(32, 64, 32),
+        ];
+        let pendings: Vec<_> = shapes
+            .iter()
+            .map(|&s| handle.submit(s, arch()))
+            .collect();
+        for p in pendings {
+            assert!(p.wait().is_ok());
+        }
+        let (_, solves, ..) = handle.metrics().snapshot();
+        assert_eq!(solves, 3);
+    }
+
+    #[test]
+    fn infeasible_request_reports_error() {
+        let handle = MappingService::default().spawn();
+        // 7 PEs cannot split over 4×4×4.
+        let bad = Accelerator::custom("bad", 2048, 7, 16);
+        let err = handle.map(GemmShape::new(4, 4, 4), bad).unwrap_err();
+        assert_eq!(err, SolveError::NoFeasibleMapping);
+        let (.., errs) = handle.metrics().snapshot();
+        assert_eq!(errs, 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! GOMA's closed-form analytical energy model (paper §IV).
+//!
+//! Cross-level data movement is abstracted as *projection update counts*
+//! during traversal (§IV-B), gated by per-axis bypass, weighted by
+//! hierarchical per-access energies (§IV-D) and aggregated receiver-centric
+//! (§IV-E). Evaluation is O(1) for any mapping — a finite set of
+//! substitutions over `d ∈ {x,y,z}` — which is what makes globally optimal
+//! search tractable (§IV-F2).
+
+mod goma;
+
+pub use goma::{
+    axis_input, axis_term, evaluate, rho_z, update_counts, AxisTermInput, EnergyBreakdown,
+    UpdateCounts,
+};

@@ -1,0 +1,68 @@
+//! The 24 evaluation cases (§V-A2): workload × matching-class template.
+
+use crate::arch::{self, Accelerator};
+use crate::workloads::{center_workloads, edge_workloads, Workload};
+
+/// One evaluation case: a prefill workload on an accelerator template.
+#[derive(Debug, Clone)]
+pub struct Case {
+    pub workload: Workload,
+    pub arch: Accelerator,
+}
+
+impl Case {
+    pub fn name(&self) -> String {
+        format!("{} + {}", self.arch.name, self.workload.name)
+    }
+}
+
+/// All 24 cases: 6 edge workloads × 2 edge templates + 6 center workloads ×
+/// 2 center templates, in template-major order (matching Fig. 6's panels).
+pub fn all_cases() -> Vec<Case> {
+    let mut out = Vec::with_capacity(24);
+    for arch in [arch::eyeriss_like(), arch::gemmini_like()] {
+        for w in edge_workloads() {
+            out.push(Case {
+                workload: w,
+                arch: arch.clone(),
+            });
+        }
+    }
+    for arch in [arch::a100_like(), arch::tpu_v1_like()] {
+        for w in center_workloads() {
+            out.push(Case {
+                workload: w,
+                arch: arch.clone(),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Deployment;
+
+    #[test]
+    fn twenty_four_cases_class_matched() {
+        let cases = all_cases();
+        assert_eq!(cases.len(), 24);
+        for c in &cases {
+            let edge_arch = c.arch.num_pe == 256;
+            match c.workload.deployment {
+                Deployment::Edge => assert!(edge_arch, "{}", c.name()),
+                Deployment::Center => assert!(!edge_arch, "{}", c.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn case_names_unique() {
+        let cases = all_cases();
+        let mut names: Vec<String> = cases.iter().map(|c| c.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 24);
+    }
+}

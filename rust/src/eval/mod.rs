@@ -1,0 +1,31 @@
+//! Evaluation pipeline: the paper's 24-case study (§V).
+//!
+//! 12 LLM prefill workloads × the matching accelerator class (edge workloads
+//! on edge templates, center on center) = 24 cases; each case maps all
+//! eight GEMM types with each mapper, scores every returned mapping with the
+//! unified Timeloop-lite oracle, and aggregates case-level EDP with
+//! occurrence weights (Eq. 35). Normalization (Eq. 37) and the
+//! geomean/median summaries of Tables II–III live in [`runner`].
+
+mod cases;
+mod runner;
+
+pub use cases::{all_cases, Case};
+pub use runner::{run_case, run_gemm, CaseOutcome, GemmOutcome};
+
+use crate::util::Summary;
+
+/// Per-case normalized EDP of `other` against `goma` (Eq. 37; 1.0 = GOMA).
+pub fn normalized_edp(other: &CaseOutcome, goma: &CaseOutcome) -> f64 {
+    other.edp_case / goma.edp_case
+}
+
+/// Per-case normalized mapper runtime (Fig. 8 metric).
+pub fn normalized_runtime(other: &CaseOutcome, goma: &CaseOutcome) -> f64 {
+    other.search_runtime.as_secs_f64() / goma.search_runtime.as_secs_f64().max(1e-9)
+}
+
+/// Table II / Table III style summary over per-case normalized values.
+pub fn summarize(normalized: &[f64]) -> Summary {
+    Summary::of(normalized)
+}

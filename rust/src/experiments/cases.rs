@@ -1,0 +1,343 @@
+//! The 24-case study (Figs. 6–8, Tables II–III), with an on-disk cache.
+//!
+//! Five bench harnesses consume the same underlying sweep (per-case,
+//! per-GEMM EDP + mapper runtime for GOMA and the five baselines), so the
+//! sweep runs once and is cached as TSV under `target/`. Delete the cache
+//! file or set `GOMA_REFRESH=1` to recompute.
+
+use super::Profile;
+use crate::eval::{all_cases, run_case};
+use crate::mappers::{
+    cosa::Cosa, factorflow::FactorFlow, loma::Loma, salsa::Salsa,
+    timeloop_hybrid::TimeloopHybrid, GomaMapper, Mapper,
+};
+use crate::util::{geomean, median};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Mapper roster order used in every table (GOMA first, Table II order).
+pub const MAPPER_ORDER: [&str; 6] = [
+    "GOMA",
+    "CoSA",
+    "FactorFlow",
+    "LOMA",
+    "SALSA",
+    "Timeloop Hybrid",
+];
+
+/// Budget-scaled roster. `Fast` preserves the relative budget ratios of the
+/// published defaults while shrinking absolute work ~8× so the whole sweep
+/// fits in minutes on one vCPU (see DESIGN.md §2 testbed substitution).
+pub fn mappers_for(profile: Profile, seed: u64) -> Vec<Box<dyn Mapper>> {
+    match profile {
+        Profile::Paper => vec![
+            Box::new(GomaMapper::default()),
+            Box::new(Cosa {
+                max_nodes: 20_000_000,
+                time_limit: Duration::from_secs(10),
+            }),
+            Box::new(FactorFlow::seeded(seed)),
+            Box::new(Loma::default()),
+            Box::new(Salsa::seeded(seed)),
+            Box::new(TimeloopHybrid::seeded(seed)),
+        ],
+        Profile::Fast => vec![
+            Box::new(GomaMapper::default()),
+            Box::new(Cosa {
+                max_nodes: 2_000_000,
+                time_limit: Duration::from_millis(1500),
+            }),
+            Box::new(FactorFlow {
+                restarts: 4,
+                max_steps: 120,
+                seed,
+            }),
+            Box::new(Loma {
+                max_evaluations: 120_000,
+            }),
+            Box::new(Salsa {
+                iterations: 25_000,
+                restarts: 3,
+                ..Salsa::seeded(seed)
+            }),
+            Box::new(TimeloopHybrid {
+                victory_condition: 500,
+                max_samples: 100_000,
+                seed,
+                threads: 4,
+            }),
+        ],
+    }
+}
+
+/// One mapper×GEMM record (the cached unit).
+#[derive(Debug, Clone)]
+pub struct GemmRecord {
+    pub ty: String,
+    pub weight: u64,
+    pub edp: f64,
+    pub energy_pj: f64,
+    pub search_s: f64,
+    pub evaluations: u64,
+    pub fell_back: bool,
+}
+
+/// One mapper×case record.
+#[derive(Debug, Clone)]
+pub struct CaseRecord {
+    pub case_name: String,
+    pub mapper: String,
+    pub gemms: Vec<GemmRecord>,
+}
+
+impl CaseRecord {
+    /// Occurrence-weighted case EDP (Eq. 35).
+    pub fn edp_case(&self) -> f64 {
+        self.gemms.iter().map(|g| g.weight as f64 * g.edp).sum()
+    }
+
+    /// Total mapper search seconds over the eight GEMMs.
+    pub fn runtime_s(&self) -> f64 {
+        self.gemms.iter().map(|g| g.search_s).sum()
+    }
+}
+
+fn cache_path(profile: Profile) -> PathBuf {
+    let tag = match profile {
+        Profile::Fast => "fast",
+        Profile::Paper => "paper",
+    };
+    PathBuf::from("target").join(format!("goma_cases_{tag}.tsv"))
+}
+
+/// Run the full sweep fresh (expensive: minutes under `Fast`).
+pub fn run_all(profile: Profile) -> Vec<CaseRecord> {
+    let mut out = Vec::new();
+    let cases = all_cases();
+    for (ci, case) in cases.iter().enumerate() {
+        for mapper in mappers_for(profile, 0xC0FFEE) {
+            eprintln!(
+                "[cases {}/{}] {} × {}",
+                ci + 1,
+                cases.len(),
+                case.name(),
+                mapper.name()
+            );
+            let outcome = run_case(mapper.as_ref(), case);
+            out.push(CaseRecord {
+                case_name: outcome.case_name,
+                mapper: outcome.mapper,
+                gemms: outcome
+                    .gemms
+                    .iter()
+                    .map(|g| GemmRecord {
+                        ty: g.ty.name().to_string(),
+                        weight: g.weight,
+                        edp: g.oracle.edp,
+                        energy_pj: g.oracle.energy_pj,
+                        search_s: g.search_runtime.as_secs_f64(),
+                        evaluations: g.evaluations,
+                        fell_back: g.fell_back,
+                    })
+                    .collect(),
+            });
+        }
+    }
+    out
+}
+
+fn save(records: &[CaseRecord], path: &PathBuf) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "# case\tmapper\tgemm\tweight\tedp\tenergy_pj\tsearch_s\tevals\tfell_back")?;
+    for r in records {
+        for g in &r.gemms {
+            writeln!(
+                f,
+                "{}\t{}\t{}\t{}\t{:e}\t{:e}\t{:e}\t{}\t{}",
+                r.case_name,
+                r.mapper,
+                g.ty,
+                g.weight,
+                g.edp,
+                g.energy_pj,
+                g.search_s,
+                g.evaluations,
+                g.fell_back
+            )?;
+        }
+    }
+    Ok(())
+}
+
+fn load(path: &PathBuf) -> Option<Vec<CaseRecord>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut map: BTreeMap<(String, String), Vec<GemmRecord>> = BTreeMap::new();
+    let mut order: Vec<(String, String)> = Vec::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let c: Vec<&str> = line.split('\t').collect();
+        if c.len() != 9 {
+            return None; // stale/corrupt cache
+        }
+        let key = (c[0].to_string(), c[1].to_string());
+        if !map.contains_key(&key) {
+            order.push(key.clone());
+        }
+        map.entry(key).or_default().push(GemmRecord {
+            ty: c[2].to_string(),
+            weight: c[3].parse().ok()?,
+            edp: c[4].parse().ok()?,
+            energy_pj: c[5].parse().ok()?,
+            search_s: c[6].parse().ok()?,
+            evaluations: c[7].parse().ok()?,
+            fell_back: c[8] == "true",
+        });
+    }
+    if map.is_empty() {
+        return None;
+    }
+    Some(
+        order
+            .into_iter()
+            .map(|k| CaseRecord {
+                case_name: k.0.clone(),
+                mapper: k.1.clone(),
+                gemms: map.remove(&k).unwrap(),
+            })
+            .collect(),
+    )
+}
+
+/// Cached sweep: loads `target/goma_cases_<profile>.tsv` when present,
+/// otherwise runs fresh and saves.
+pub fn cached(profile: Profile) -> Vec<CaseRecord> {
+    let path = cache_path(profile);
+    let refresh = std::env::var("GOMA_REFRESH").is_ok();
+    if !refresh {
+        if let Some(r) = load(&path) {
+            eprintln!("[cases] loaded {} records from {}", r.len(), path.display());
+            return r;
+        }
+    }
+    let records = run_all(profile);
+    if let Err(e) = save(&records, &path) {
+        eprintln!("[cases] cache write failed: {e}");
+    }
+    records
+}
+
+/// Per-case normalized value (Eq. 37) of `metric` for each mapper, keyed
+/// `(mapper, case) -> metric / GOMA_metric`.
+pub fn normalize<F: Fn(&CaseRecord) -> f64>(
+    records: &[CaseRecord],
+    metric: F,
+) -> BTreeMap<(String, String), f64> {
+    let mut goma: BTreeMap<&str, f64> = BTreeMap::new();
+    for r in records.iter().filter(|r| r.mapper == "GOMA") {
+        goma.insert(&r.case_name, metric(r));
+    }
+    let mut out = BTreeMap::new();
+    for r in records {
+        if let Some(&g) = goma.get(r.case_name.as_str()) {
+            out.insert(
+                (r.mapper.clone(), r.case_name.clone()),
+                metric(r) / g.max(1e-30),
+            );
+        }
+    }
+    out
+}
+
+/// Table II / III aggregation: `(mapper, geomean, median)` rows over the
+/// normalized metric, in [`MAPPER_ORDER`].
+pub fn summarize_normalized(
+    normalized: &BTreeMap<(String, String), f64>,
+) -> Vec<(String, f64, f64)> {
+    MAPPER_ORDER
+        .iter()
+        .map(|&m| {
+            let vals: Vec<f64> = normalized
+                .iter()
+                .filter(|((mapper, _), _)| mapper == m)
+                .map(|(_, &v)| v)
+                .collect();
+            (m.to_string(), geomean(&vals), median(&vals))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_records() -> Vec<CaseRecord> {
+        let mk = |case: &str, mapper: &str, edp: f64, s: f64| CaseRecord {
+            case_name: case.into(),
+            mapper: mapper.into(),
+            gemms: vec![GemmRecord {
+                ty: "attn_q_proj".into(),
+                weight: 2,
+                edp,
+                energy_pj: 1.0,
+                search_s: s,
+                evaluations: 1,
+                fell_back: false,
+            }],
+        };
+        vec![
+            mk("c1", "GOMA", 1.0, 0.1),
+            mk("c1", "CoSA", 2.0, 0.4),
+            mk("c2", "GOMA", 4.0, 0.2),
+            mk("c2", "CoSA", 32.0, 0.2),
+        ]
+    }
+
+    #[test]
+    fn normalize_against_goma() {
+        let n = normalize(&fake_records(), |r| r.edp_case());
+        assert_eq!(n[&("GOMA".into(), "c1".into())], 1.0);
+        assert_eq!(n[&("CoSA".into(), "c1".into())], 2.0);
+        assert_eq!(n[&("CoSA".into(), "c2".into())], 8.0);
+    }
+
+    #[test]
+    fn summary_geomean_median() {
+        let n = normalize(&fake_records(), |r| r.edp_case());
+        let rows = summarize_normalized(&n);
+        let cosa = rows.iter().find(|(m, ..)| m == "CoSA").unwrap();
+        assert!((cosa.1 - 4.0).abs() < 1e-9); // geomean(2, 8)
+        assert!((cosa.2 - 5.0).abs() < 1e-9); // median(2, 8)
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let recs = fake_records();
+        let path = PathBuf::from("target").join("goma_cases_testtmp.tsv");
+        save(&recs, &path).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.len(), recs.len());
+        assert_eq!(back[0].case_name, "c1");
+        assert_eq!(back[0].gemms[0].weight, 2);
+        assert!((back[1].edp_case() - recs[1].edp_case()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rosters_have_six_mappers_in_order() {
+        for profile in [Profile::Fast, Profile::Paper] {
+            let names: Vec<&str> = mappers_for(profile, 1).iter().map(|m| m.name()).collect();
+            assert_eq!(names.len(), 6);
+            assert_eq!(names[0], "GOMA");
+            for n in &names {
+                assert!(MAPPER_ORDER.contains(n), "{n} not in order");
+            }
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! §IV-G1 fidelity study: GOMA's closed-form energy vs. the Timeloop-lite
+//! reference oracle under identical ERT and mapping semantics.
+//!
+//! The paper maps the seven distinct GEMM shapes of LLaMA-3.2-1B (1k
+//! prefill) onto an Eyeriss-like accelerator, builds 1152
+//! tiling–permutation(walking axis)–bypass combinations per GEMM (8064
+//! total), and reports: exact-match rate, mean relative error, median /
+//! p95 / p99, and the energy-weighted overall error. This driver
+//! reconstructs that grid: 2 tiling variants × 9 walking-axis pairs × 64
+//! bypass combinations = 1152 candidates per GEMM, feasibility-filtered.
+
+use crate::arch::Accelerator;
+use crate::energy::evaluate;
+use crate::mapping::{validate, Bypass, GemmShape, Mapping, Tile, AXES};
+use crate::timeloop::score_unchecked;
+use crate::util::{divisors, percentile, Summary};
+use crate::workloads::{llama_3_2_1b, prefill_gemms};
+
+/// One compared mapping: closed-form vs. oracle dynamic energy (pJ).
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub goma_pj: f64,
+    pub oracle_pj: f64,
+}
+
+impl Sample {
+    pub fn rel_err(&self) -> f64 {
+        (self.goma_pj - self.oracle_pj).abs() / self.oracle_pj
+    }
+}
+
+/// Aggregated fidelity statistics (the numbers of §IV-G1).
+#[derive(Debug, Clone)]
+pub struct FidelityReport {
+    pub samples: Vec<Sample>,
+    pub per_gemm_counts: Vec<(GemmShape, usize)>,
+}
+
+impl FidelityReport {
+    pub fn total(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Fraction with relative error == 0 (up to f64 noise).
+    pub fn exact_rate(&self) -> f64 {
+        let exact = self
+            .samples
+            .iter()
+            .filter(|s| s.rel_err() < 1e-12)
+            .count();
+        exact as f64 / self.total() as f64
+    }
+
+    pub fn mean_rel_err(&self) -> f64 {
+        self.samples.iter().map(|s| s.rel_err()).sum::<f64>() / self.total() as f64
+    }
+
+    pub fn err_percentile(&self, p: f64) -> f64 {
+        let errs: Vec<f64> = self.samples.iter().map(|s| s.rel_err()).collect();
+        percentile(&errs, p)
+    }
+
+    /// `Σ|E_goma − E_oracle| / ΣE_oracle` (the paper's energy-weighted
+    /// overall relative error).
+    pub fn energy_weighted_err(&self) -> f64 {
+        let num: f64 = self
+            .samples
+            .iter()
+            .map(|s| (s.goma_pj - s.oracle_pj).abs())
+            .sum();
+        let den: f64 = self.samples.iter().map(|s| s.oracle_pj).sum();
+        num / den
+    }
+
+    pub fn err_summary(&self) -> Summary {
+        let errs: Vec<f64> = self.samples.iter().map(|s| s.rel_err()).collect();
+        Summary::of(&errs)
+    }
+}
+
+/// Deterministic tiling variants for the grid: a coarse (large-tile) and a
+/// fine (small-tile) point of the divisor chain, per axis.
+fn tiling_variants(shape: GemmShape, arch: &Accelerator) -> Vec<(Tile, Tile, Tile)> {
+    // Spatial split: most-balanced valid triple (deterministic).
+    let triples = crate::solver::spatial_triples(shape, arch.num_pe, true);
+    let Some(&(sx, sy, sz)) = triples.iter().min_by_key(|(a, b, c)| a.max(b).max(c)) else {
+        return Vec::new();
+    };
+    let s = [sx, sy, sz];
+    let mut out = Vec::new();
+    for pick_big in [false, true] {
+        let mut l1 = Tile::UNIT;
+        let mut l3 = Tile::UNIT;
+        for &d in &AXES {
+            let i = d.index();
+            let divs: Vec<u64> = divisors(shape.get(d))
+                .into_iter()
+                .filter(|&v| v % s[i] == 0)
+                .collect();
+            // Prefer interior divisors: endpoints make the DRAM- or
+            // SRAM-stage loop degenerate (bound 1), which the closed form
+            // deliberately folds away — the paper's grid is built from
+            // proper tilings, with residual boundary cases only where the
+            // shape forces them (e.g. lm_head's x = 1).
+            let interior: Vec<u64> = divs
+                .iter()
+                .copied()
+                .filter(|&v| v != shape.get(d) && v != s[i])
+                .collect();
+            let pool = if interior.is_empty() { &divs } else { &interior };
+            let idx = if pick_big {
+                (pool.len() * 2 / 3).min(pool.len() - 1)
+            } else {
+                pool.len() / 3
+            };
+            let l1d = pool[idx];
+            let l3s = divisors(l1d / s[i]);
+            let l3_interior: Vec<u64> = l3s
+                .iter()
+                .copied()
+                .filter(|&v| v * s[i] != l1d || l3s.len() == 1)
+                .collect();
+            let l3pool = if l3_interior.is_empty() { &l3s } else { &l3_interior };
+            let l3d = l3pool[l3pool.len() / 2];
+            l1.set(d, l1d);
+            l3.set(d, l3d);
+        }
+        let l2 = Tile::new(l3.x * sx, l3.y * sy, l3.z * sz);
+        out.push((l1, l2, l3));
+    }
+    out.dedup();
+    out
+}
+
+/// Run the full study: 7 distinct LLaMA-3.2-1B(1k) GEMMs × up to 1152
+/// combos each on `arch` (paper: Eyeriss-like).
+pub fn study(arch: &Accelerator) -> FidelityReport {
+    let model = llama_3_2_1b();
+    let mut shapes: Vec<GemmShape> = prefill_gemms(&model, 1024)
+        .into_iter()
+        .map(|g| g.shape)
+        .collect();
+    shapes.sort_by_key(|s| (s.x, s.y, s.z));
+    shapes.dedup(); // 8 types → 7 distinct shapes (q_proj == attn_output)
+
+    let mut samples = Vec::new();
+    let mut per_gemm_counts = Vec::new();
+    for shape in shapes {
+        let mut count = 0usize;
+        for (l1, l2, l3) in tiling_variants(shape, arch) {
+            for &a01 in &AXES {
+                for &a12 in &AXES {
+                    for b1 in Bypass::all_combos() {
+                        for b3 in Bypass::all_combos() {
+                            let m = Mapping {
+                                l1,
+                                l2,
+                                l3,
+                                alpha01: a01,
+                                alpha12: a12,
+                                b1,
+                                b3,
+                            };
+                            if validate(&m, shape, arch, false).is_err() {
+                                continue;
+                            }
+                            count += 1;
+                            let v = shape.volume() as f64;
+                            samples.push(Sample {
+                                goma_pj: evaluate(&m, shape, arch).normalized * v,
+                                oracle_pj: score_unchecked(&m, shape, arch).dynamic_pj,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        per_gemm_counts.push((shape, count));
+    }
+    FidelityReport {
+        samples,
+        per_gemm_counts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::eyeriss_like;
+
+    #[test]
+    fn fidelity_matches_paper_shape() {
+        let r = study(&eyeriss_like());
+        // Thousands of combos over 7 shapes.
+        assert_eq!(r.per_gemm_counts.len(), 7);
+        assert!(r.total() > 2000, "only {} samples", r.total());
+        // Headline consistency: overwhelmingly exact, tiny mean error —
+        // same shape as the paper's 99.26% / 0.099%.
+        assert!(
+            r.exact_rate() > 0.95,
+            "exact rate {:.4} too low",
+            r.exact_rate()
+        );
+        assert!(
+            r.mean_rel_err() < 0.01,
+            "mean rel err {:.5} too high",
+            r.mean_rel_err()
+        );
+        assert_eq!(r.err_percentile(50.0), 0.0);
+        assert!(r.energy_weighted_err() < 0.01);
+    }
+}

@@ -1,0 +1,93 @@
+//! Fig. 2: energy variation across mappings for the same GEMM on the same
+//! accelerator (log scale, orders of magnitude of spread).
+
+use crate::arch::Accelerator;
+use crate::energy::evaluate;
+use crate::mapping::GemmShape;
+use crate::util::Rng;
+
+/// Result of the sweep: normalized energies (pJ/MAC) of sampled feasible
+/// mappings, sorted ascending.
+#[derive(Debug, Clone)]
+pub struct Fig2Sweep {
+    pub energies: Vec<f64>,
+    pub shape: GemmShape,
+    pub arch_name: String,
+}
+
+impl Fig2Sweep {
+    pub fn spread(&self) -> f64 {
+        self.energies.last().unwrap() / self.energies.first().unwrap()
+    }
+
+    /// Log-10 histogram over `bins` buckets, for terminal rendering.
+    pub fn log_histogram(&self, bins: usize) -> Vec<(f64, usize)> {
+        let lo = self.energies.first().unwrap().log10();
+        let hi = self.energies.last().unwrap().log10();
+        let width = ((hi - lo) / bins as f64).max(1e-12);
+        let mut out = vec![0usize; bins];
+        for &e in &self.energies {
+            let b = (((e.log10() - lo) / width) as usize).min(bins - 1);
+            out[b] += 1;
+        }
+        out.iter()
+            .enumerate()
+            .map(|(i, &c)| (10f64.powf(lo + (i as f64 + 0.5) * width), c))
+            .collect()
+    }
+}
+
+/// Sample `samples` feasible mappings (full-PE and relaxed mixed, as the
+/// paper's scatter includes both good and bad corners of the space) and
+/// evaluate each with the closed form.
+pub fn sweep(shape: GemmShape, arch: &Accelerator, samples: usize, seed: u64) -> Fig2Sweep {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut energies = Vec::with_capacity(samples);
+    let mut attempts = 0usize;
+    while energies.len() < samples && attempts < samples * 200 {
+        attempts += 1;
+        let full = rng.gen_bool();
+        if let Some(m) = crate::mappers::random_feasible(shape, arch, &mut rng, full) {
+            energies.push(evaluate(&m, shape, arch).normalized);
+        }
+    }
+    assert!(
+        !energies.is_empty(),
+        "no feasible mappings found for {shape} on {}",
+        arch.name
+    );
+    energies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Fig2Sweep {
+        energies,
+        shape,
+        arch_name: arch.name.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::eyeriss_like;
+
+    #[test]
+    fn sweep_shows_orders_of_magnitude_spread() {
+        // The paper's Fig. 2 point: mapping choice alone induces huge
+        // energy variation. Even a small sample must show >10× spread.
+        let shape = GemmShape::new(256, 512, 512);
+        let s = sweep(shape, &eyeriss_like(), 300, 42);
+        assert!(s.energies.len() >= 100);
+        assert!(
+            s.spread() > 10.0,
+            "expected orders-of-magnitude spread, got {:.2}×",
+            s.spread()
+        );
+    }
+
+    #[test]
+    fn histogram_covers_all_samples() {
+        let shape = GemmShape::new(64, 64, 64);
+        let s = sweep(shape, &eyeriss_like(), 200, 7);
+        let h = s.log_histogram(10);
+        assert_eq!(h.iter().map(|&(_, c)| c).sum::<usize>(), s.energies.len());
+    }
+}

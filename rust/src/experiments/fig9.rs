@@ -1,0 +1,83 @@
+//! Fig. 9 case study: GOMA vs. CoSA per-layer runtime on
+//! A100-like + Qwen3-32B (128k) — the scale-blowup comparison.
+//!
+//! The paper caps CoSA at 300 s per layer; the cap here scales with the
+//! profile (Fast: 5 s) — what matters is the *shape*: CoSA's prime-factor
+//! encoding saturates its cap on the large matrix-matrix GEMMs while GOMA
+//! stays in milliseconds, because GOMA's folded decision space grows only
+//! with divisor counts (§V-C2).
+
+use super::Profile;
+use crate::arch::a100_like;
+use crate::mappers::{cosa::Cosa, GomaMapper, Mapper};
+use crate::workloads::{center_workloads, GemmType, Workload};
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct LayerRuntime {
+    pub ty: GemmType,
+    pub shape: crate::mapping::GemmShape,
+    pub goma_s: f64,
+    pub cosa_s: f64,
+    pub cosa_hit_cap: bool,
+}
+
+pub fn workload() -> Workload {
+    center_workloads()
+        .into_iter()
+        .find(|w| w.name.contains("Qwen3-32B") && w.seq_len == (1 << 17))
+        .expect("Qwen3-32B(128k) in center workloads")
+}
+
+pub fn run(profile: Profile) -> Vec<LayerRuntime> {
+    let arch = a100_like();
+    let cap = match profile {
+        Profile::Paper => Duration::from_secs(300),
+        Profile::Fast => Duration::from_secs(5),
+    };
+    let cosa = Cosa {
+        max_nodes: u64::MAX,
+        time_limit: cap,
+    };
+    let goma = GomaMapper::default();
+    let mut out = Vec::new();
+    for g in &workload().gemms {
+        eprintln!("[fig9] {} {}", g.ty.name(), g.shape);
+        let gr = goma.map(g.shape, &arch).expect("goma solves");
+        let cr = cosa.map(g.shape, &arch);
+        let (cosa_s, hit) = match cr {
+            Some(r) => {
+                let s = r.runtime.as_secs_f64();
+                (s, s >= cap.as_secs_f64() * 0.95)
+            }
+            None => (cap.as_secs_f64(), true),
+        };
+        out.push(LayerRuntime {
+            ty: g.ty,
+            shape: g.shape,
+            goma_s: gr.runtime.as_secs_f64(),
+            cosa_s,
+            cosa_hit_cap: hit,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_workload_is_qwen32b_128k() {
+        let w = workload();
+        assert_eq!(w.seq_len, 131072);
+        assert_eq!(w.gemms.len(), 8);
+        let big = w
+            .gemms
+            .iter()
+            .find(|g| g.ty == GemmType::MlpGateUp)
+            .unwrap();
+        assert_eq!(big.shape.x, 131072);
+        assert_eq!(big.shape.y, 25600);
+    }
+}

@@ -1,0 +1,35 @@
+//! Experiment drivers shared by the bench harnesses, examples, and CLI.
+//!
+//! One module per paper artifact (DESIGN.md §4):
+//! * [`fig2`] — energy variation across mappings for one GEMM (Fig. 2);
+//! * [`fidelity`] — closed-form vs. timeloop-model consistency (§IV-G1);
+//! * [`cases`] — the 24-case EDP/runtime study feeding Fig. 6, Fig. 7,
+//!   Fig. 8, Table II and Table III, with an on-disk cache so the five
+//!   bench harnesses that share it don't recompute;
+//! * [`fig9`] — the GOMA vs. CoSA scale case study.
+
+pub mod ablations;
+pub mod cases;
+pub mod fidelity;
+pub mod fig2;
+pub mod fig9;
+
+/// Budget profile for the baseline mappers. The `Paper` profile mirrors the
+/// baselines' published/default settings (hours of total runtime on this
+/// 1-vCPU container); `Fast` scales every budget down proportionally so the
+/// full 24-case study finishes in minutes while preserving the runtime
+/// *ratios* between mappers (what Fig. 8/Table III report).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    Fast,
+    Paper,
+}
+
+impl Profile {
+    pub fn from_env() -> Profile {
+        match std::env::var("GOMA_PROFILE").as_deref() {
+            Ok("paper") => Profile::Paper,
+            _ => Profile::Fast,
+        }
+    }
+}

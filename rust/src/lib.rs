@@ -1,0 +1,45 @@
+//! # GOMA — Geometrically Optimal Mapping via Analytical Modeling
+//!
+//! Full-stack reproduction of *GOMA: Geometrically Optimal Mapping via
+//! Analytical Modeling for Spatial Accelerators* (Yang et al., 2026):
+//! a globally optimal GEMM mapping framework for spatial accelerators.
+//!
+//! GOMA views a GEMM as a 3D compute grid whose three matrices are
+//! orthogonal projections; a mapping hierarchically tiles the grid across a
+//! five-level memory hierarchy, walks each stage along one axis, and decides
+//! per-axis residency/bypass. Cross-level traffic reduces to *projection
+//! update counts*, giving an exact closed-form energy objective with O(1)
+//! evaluation ([`energy`]), which an exact branch-and-bound ([`solver`])
+//! minimizes under capacity/parallelism/divisibility constraints with a
+//! verifiable optimality certificate.
+//!
+//! The crate also contains everything the paper's evaluation depends on:
+//! a Timeloop-lite reference oracle ([`timeloop`]), an Accelergy-lite ERT
+//! and the four Table-I templates ([`arch`]), the five baseline mappers
+//! ([`mappers`]), the LLM prefill workload suite ([`workloads`]), the
+//! 24-case pipeline ([`eval`]), a PJRT runtime for executing AOT-compiled
+//! mapped-GEMM kernels ([`runtime`]), and an async mapping service
+//! ([`coordinator`]).
+//!
+//! ```no_run
+//! use goma::{arch, solver, mapping::GemmShape};
+//!
+//! let shape = GemmShape::mnk(1024, 2048, 2048);
+//! let acc = arch::eyeriss_like();
+//! let result = solver::solve(shape, &acc, Default::default()).unwrap();
+//! assert!(result.certificate.proved_optimal);
+//! println!("{}", result.mapping.describe());
+//! ```
+
+pub mod arch;
+pub mod coordinator;
+pub mod energy;
+pub mod eval;
+pub mod experiments;
+pub mod mappers;
+pub mod mapping;
+pub mod runtime;
+pub mod solver;
+pub mod timeloop;
+pub mod util;
+pub mod workloads;

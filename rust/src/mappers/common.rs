@@ -1,0 +1,120 @@
+//! Shared sampling and move machinery for the baseline mappers.
+
+use crate::arch::Accelerator;
+use crate::mapping::{validate, Axis, Bypass, GemmShape, Mapping, Tile, AXES};
+use crate::util::divisors;
+use crate::util::Rng;
+
+/// Draw a uniformly random point of the folded mapping space *without*
+/// feasibility checking: random spatial triple (product ≤ or == num_pe),
+/// random divisor-chain tiling, random walking axes, and either preset or
+/// random residency.
+pub fn random_mapping_unchecked(
+    shape: GemmShape,
+    arch: &Accelerator,
+    rng: &mut Rng,
+    full_pes: bool,
+    search_bypass: bool,
+) -> Mapping {
+    // Spatial triple: uniform draw over the valid factorizations of the PE
+    // budget across axes (timeloop-mapper samples spatial splits the same
+    // way, as permutations of the fanout's factors).
+    let triples = crate::solver::spatial_triples(shape, arch.num_pe, full_pes);
+    let s = match rng.choose(&triples) {
+        Some(&(a, b, c)) => [a, b, c],
+        None => [1, 1, 1], // no valid spatial split: let validation reject
+    };
+
+    let mut l1 = Tile::UNIT;
+    let mut l3 = Tile::UNIT;
+    for &d in &AXES {
+        let i = d.index();
+        let l0 = shape.get(d);
+        // l1 must be a multiple of the spatial fanout to nest l2 = l3·s.
+        let l1_choices: Vec<u64> = divisors(l0).into_iter().filter(|&v| v % s[i] == 0).collect();
+        let l1d = rng.choose(&l1_choices).copied().unwrap_or(l0);
+        let l3d = *rng.choose(&divisors(l1d / s[i])).unwrap();
+        l1.set(d, l1d);
+        l3.set(d, l3d);
+    }
+    let l2 = Tile::new(l3.x * s[0], l3.y * s[1], l3.z * s[2]);
+
+    let axes = [Axis::X, Axis::Y, Axis::Z];
+    let (b1, b3) = if search_bypass {
+        (
+            *rng.choose(&Bypass::all_combos()).unwrap(),
+            *rng.choose(&Bypass::all_combos()).unwrap(),
+        )
+    } else {
+        (Bypass::ALL, arch.preset_rf_residency)
+    };
+    Mapping {
+        l1,
+        l2,
+        l3,
+        alpha01: *rng.choose(&axes).unwrap(),
+        alpha12: *rng.choose(&axes).unwrap(),
+        b1,
+        b3,
+    }
+}
+
+/// One rejection-sampling attempt: `Some` iff the draw is feasible.
+pub fn random_feasible(
+    shape: GemmShape,
+    arch: &Accelerator,
+    rng: &mut Rng,
+    full_pes: bool,
+) -> Option<Mapping> {
+    let m = random_mapping_unchecked(shape, arch, rng, full_pes, true);
+    validate(&m, shape, arch, full_pes).ok().map(|_| m)
+}
+
+/// Clamp a mapping's residency to the hardware preset and re-fit the
+/// regfile tile if the preset makes the current tile infeasible.
+pub fn apply_preset_bypass(m: &mut Mapping, arch: &Accelerator) {
+    m.b1 = Bypass::ALL;
+    m.b3 = arch.preset_rf_residency;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    #[test]
+    fn random_draws_are_valid_divisor_chains() {
+        let shape = GemmShape::new(48, 64, 80);
+        let arch = Accelerator::custom("t", 1 << 16, 16, 256);
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..200 {
+            let m = random_mapping_unchecked(shape, &arch, &mut rng, true, true);
+            // Structural invariants must hold even before capacity checks.
+            assert!(m.l3.divides(&m.l2));
+            assert!(m.l2.divides(&m.l1));
+            assert!(m.l1.divides(&shape.as_tile()));
+            assert_eq!(m.pes_used(), arch.num_pe);
+        }
+    }
+
+    #[test]
+    fn relaxed_draws_fit_pe_budget() {
+        let shape = GemmShape::new(48, 64, 80);
+        let arch = Accelerator::custom("t", 1 << 16, 16, 256);
+        let mut rng = Rng::seed_from_u64(2);
+        for _ in 0..200 {
+            let m = random_mapping_unchecked(shape, &arch, &mut rng, false, true);
+            assert!(m.pes_used() <= arch.num_pe);
+        }
+    }
+
+    #[test]
+    fn feasible_sampler_yields_some() {
+        let shape = GemmShape::new(64, 64, 64);
+        let arch = Accelerator::custom("t", 1 << 16, 16, 256);
+        let mut rng = Rng::seed_from_u64(3);
+        let hits = (0..200)
+            .filter(|_| random_feasible(shape, &arch, &mut rng, true).is_some())
+            .count();
+        assert!(hits > 10, "feasibility rate collapsed: {hits}/200");
+    }
+}

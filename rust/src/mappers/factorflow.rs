@@ -1,0 +1,261 @@
+//! FactorFlow-style mapper: greedy seed + adaptive local search (§II, [23]).
+//!
+//! FactorFlow maps GEMMs by combining an aggressive greedy initialization
+//! (fill the array, fill the buffers) with steepest-descent moves of prime
+//! factors between levels, restarting from several seeds. Quality is often
+//! near-optimal but fluctuates with the workload (local optima), and the
+//! repeated cost-model interaction makes it an order of magnitude slower
+//! than GOMA (Table III: 23.3× geomean).
+
+use super::{Mapper, MapperResult};
+use crate::arch::Accelerator;
+use crate::mapping::{validate, Bypass, GemmShape, Mapping, Tile, AXES};
+use crate::solver::spatial_triples;
+use crate::timeloop::score_unchecked;
+use crate::util::{divisors, factorize};
+use crate::util::Rng;
+use std::time::Instant;
+
+pub struct FactorFlow {
+    pub restarts: u32,
+    pub max_steps: u32,
+    pub seed: u64,
+}
+
+impl FactorFlow {
+    pub fn seeded(seed: u64) -> Self {
+        FactorFlow {
+            seed,
+            ..Default::default()
+        }
+    }
+}
+
+impl Default for FactorFlow {
+    fn default() -> Self {
+        FactorFlow {
+            restarts: 4,
+            max_steps: 200,
+            seed: 0xFAC7,
+        }
+    }
+}
+
+/// Greedy seed for a given spatial split: grow the regfile tile then the
+/// SRAM tile to the largest capacity-feasible sizes, axis by axis.
+fn greedy_seed(shape: GemmShape, arch: &Accelerator, s: [u64; 3]) -> Option<Mapping> {
+    let b3 = arch.preset_rf_residency;
+    let mut l3 = Tile::UNIT;
+    // Grow RF tile greedily along each axis in turn while capacity holds.
+    for &d in &AXES {
+        let sd = s[d.index()];
+        for v in divisors(shape.get(d) / sd).into_iter().rev() {
+            let mut cand = l3;
+            cand.set(d, v);
+            let mut m = Mapping {
+                l1: shape.as_tile(),
+                l2: Tile::new(cand.x * s[0], cand.y * s[1], cand.z * s[2]),
+                l3: cand,
+                alpha01: crate::mapping::Axis::Z,
+                alpha12: crate::mapping::Axis::Z,
+                b1: Bypass::ALL,
+                b3,
+            };
+            // The regfile tile must fit the RF *and* leave the implied
+            // minimal SRAM tile (l1 = l2) within GLB capacity, or no l1
+            // can ever validate downstream.
+            m.l1 = m.l2;
+            let sram_ok = m.sram_words() <= arch.sram_words;
+            m.l1 = shape.as_tile();
+            if m.regfile_words() <= arch.regfile_words && sram_ok && m.l2.divides(&m.l1) {
+                l3 = cand;
+                break;
+            }
+        }
+    }
+    let l2 = Tile::new(l3.x * s[0], l3.y * s[1], l3.z * s[2]);
+    // Grow the SRAM tile from l2 upward while Eq. 32 holds.
+    let mut l1 = l2;
+    for &d in &AXES {
+        for v in divisors(shape.get(d)).into_iter().rev() {
+            if v % l2.get(d) != 0 {
+                continue;
+            }
+            let mut cand = l1;
+            cand.set(d, v);
+            let m = Mapping {
+                l1: cand,
+                l2,
+                l3,
+                alpha01: crate::mapping::Axis::Z,
+                alpha12: crate::mapping::Axis::Z,
+                b1: Bypass::ALL,
+                b3,
+            };
+            if m.sram_words() <= arch.sram_words {
+                l1 = cand;
+                break;
+            }
+        }
+    }
+    let m = Mapping {
+        l1,
+        l2,
+        l3,
+        alpha01: crate::mapping::Axis::Z,
+        alpha12: crate::mapping::Axis::Z,
+        b1: Bypass::ALL,
+        b3,
+    };
+    validate(&m, shape, arch, false).ok().map(|_| m)
+}
+
+/// All single-prime-factor moves and walking-axis reassignments around `m`.
+fn moves(m: &Mapping, shape: GemmShape) -> Vec<Mapping> {
+    let mut out = Vec::new();
+    for &d in &AXES {
+        let l0 = shape.get(d);
+        let primes: Vec<u64> = factorize(l0).into_iter().map(|(p, _)| p).collect();
+        for &p in &primes {
+            // Move a factor across the DRAM↔SRAM boundary (grow/shrink l1).
+            let mut grow = *m;
+            grow.l1.set(d, m.l1.get(d) * p);
+            if l0 % grow.l1.get(d) == 0 {
+                out.push(grow);
+            }
+            let mut shrink = *m;
+            if m.l1.get(d) % (p * m.l2.get(d)) == 0 {
+                shrink.l1.set(d, m.l1.get(d) / p);
+                out.push(shrink);
+            }
+            // Move a factor across the PE↔RF boundary (grow/shrink l3,
+            // carrying l2 along to preserve the spatial fanout).
+            let fanout = m.spatial_fanout(d);
+            let mut grow3 = *m;
+            grow3.l3.set(d, m.l3.get(d) * p);
+            grow3.l2.set(d, grow3.l3.get(d) * fanout);
+            if m.l1.get(d) % grow3.l2.get(d) == 0 {
+                out.push(grow3);
+            }
+            let mut shrink3 = *m;
+            if m.l3.get(d) % p == 0 {
+                shrink3.l3.set(d, m.l3.get(d) / p);
+                shrink3.l2.set(d, shrink3.l3.get(d) * fanout);
+                out.push(shrink3);
+            }
+        }
+    }
+    for &a in &AXES {
+        let mut w1 = *m;
+        w1.alpha01 = a;
+        out.push(w1);
+        let mut w2 = *m;
+        w2.alpha12 = a;
+        out.push(w2);
+    }
+    out
+}
+
+impl Mapper for FactorFlow {
+    fn name(&self) -> &'static str {
+        "FactorFlow"
+    }
+
+    fn map(&self, shape: GemmShape, arch: &Accelerator) -> Option<MapperResult> {
+        let start = Instant::now();
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let mut triples = spatial_triples(shape, arch.num_pe, true);
+        if triples.is_empty() {
+            triples = spatial_triples(shape, arch.num_pe, false);
+        }
+        if triples.is_empty() {
+            return None;
+        }
+        // Restart from the most-balanced spatial splits (deterministic),
+        // with random tie-shuffling beyond the first few.
+        triples.sort_by(|a, b| {
+            let f = |t: &(u64, u64, u64)| {
+                1.0 / t.0 as f64 + 1.0 / t.1 as f64 + 1.0 / t.2 as f64
+            };
+            f(a).partial_cmp(&f(b)).unwrap()
+        });
+        let mut best: Option<(Mapping, f64)> = None;
+        let mut evaluations = 0u64;
+        for restart in 0..self.restarts {
+            let &(sx, sy, sz) = if (restart as usize) < triples.len().min(2) {
+                &triples[restart as usize]
+            } else {
+                rng.choose(&triples)?
+            };
+            let Some(mut cur) = greedy_seed(shape, arch, [sx, sy, sz]) else {
+                continue;
+            };
+            let mut cur_cost = score_unchecked(&cur, shape, arch).edp;
+            evaluations += 1;
+            for _ in 0..self.max_steps {
+                // Steepest descent over the whole move neighborhood.
+                let mut improved = false;
+                let mut step_best = cur_cost;
+                let mut step_mapping = cur;
+                for cand in moves(&cur, shape) {
+                    if validate(&cand, shape, arch, false).is_err() {
+                        continue;
+                    }
+                    // FactorFlow's adaptive programming re-derives the loop
+                    // permutation for every tiling move: evaluate all nine
+                    // walking-axis pairs of the candidate.
+                    for &a01 in &AXES {
+                        for &a12 in &AXES {
+                            let mut perm = cand;
+                            perm.alpha01 = a01;
+                            perm.alpha12 = a12;
+                            evaluations += 1;
+                            let c = score_unchecked(&perm, shape, arch).edp;
+                            if c < step_best {
+                                step_best = c;
+                                step_mapping = perm;
+                                improved = true;
+                            }
+                        }
+                    }
+                }
+                if !improved {
+                    break;
+                }
+                cur = step_mapping;
+                cur_cost = step_best;
+            }
+            if best.as_ref().map_or(true, |&(_, b)| cur_cost < b) {
+                best = Some((cur, cur_cost));
+            }
+        }
+        best.map(|(mapping, _)| MapperResult {
+            mapping,
+            evaluations,
+            runtime: start.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_seed_is_feasible() {
+        let shape = GemmShape::new(64, 64, 64);
+        let arch = Accelerator::custom("t", 1 << 14, 16, 32);
+        let ts = spatial_triples(shape, arch.num_pe, true);
+        let m = greedy_seed(shape, &arch, [ts[0].0, ts[0].1, ts[0].2]).unwrap();
+        validate(&m, shape, &arch, false).unwrap();
+    }
+
+    #[test]
+    fn local_search_monotonically_improves() {
+        let shape = GemmShape::new(64, 128, 64);
+        let arch = Accelerator::custom("t", 1 << 16, 16, 64);
+        let r = FactorFlow::seeded(5).map(shape, &arch).expect("ff solves");
+        validate(&r.mapping, shape, &arch, false).unwrap();
+        assert!(r.evaluations > 10);
+    }
+}

@@ -1,0 +1,89 @@
+//! Timeloop-mapper–style random search (§II-1).
+//!
+//! Uniform rejection sampling over the mapping space, scoring every feasible
+//! draw with the oracle and keeping the best. Representative of Timeloop,
+//! Simba, and Interstellar's exploration strategy: strong generality, weak
+//! sampling efficiency.
+
+use super::{common, Mapper, MapperResult};
+use crate::arch::Accelerator;
+use crate::mapping::{validate, GemmShape};
+use crate::timeloop::score_unchecked;
+use crate::util::Rng;
+use std::time::Instant;
+
+pub struct RandomMapper {
+    pub samples: u64,
+    pub seed: u64,
+    /// Whether to sample bypass decisions (plain random search does not).
+    pub search_bypass: bool,
+}
+
+impl Default for RandomMapper {
+    fn default() -> Self {
+        RandomMapper {
+            samples: 4_000,
+            seed: 0xD1CE,
+            search_bypass: false,
+        }
+    }
+}
+
+impl Mapper for RandomMapper {
+    fn name(&self) -> &'static str {
+        "Random"
+    }
+
+    fn map(&self, shape: GemmShape, arch: &Accelerator) -> Option<MapperResult> {
+        let start = Instant::now();
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let mut best: Option<(crate::mapping::Mapping, f64)> = None;
+        let mut evaluations = 0;
+        for _ in 0..self.samples {
+            let m =
+                common::random_mapping_unchecked(shape, arch, &mut rng, false, self.search_bypass);
+            if validate(&m, shape, arch, false).is_err() {
+                continue;
+            }
+            evaluations += 1;
+            let s = score_unchecked(&m, shape, arch);
+            if best.map_or(true, |(_, b)| s.edp < b) {
+                best = Some((m, s.edp));
+            }
+        }
+        best.map(|(mapping, _)| MapperResult {
+            mapping,
+            evaluations,
+            runtime: start.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_finds_feasible_mapping() {
+        let shape = GemmShape::new(64, 64, 64);
+        let arch = Accelerator::custom("t", 1 << 16, 16, 256);
+        let r = RandomMapper {
+            samples: 500,
+            ..Default::default()
+        }
+        .map(shape, &arch)
+        .expect("random should find something on an easy instance");
+        assert!(r.evaluations > 0);
+        validate(&r.mapping, shape, &arch, false).unwrap();
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let shape = GemmShape::new(32, 64, 32);
+        let arch = Accelerator::custom("t", 1 << 16, 16, 256);
+        let m = RandomMapper::default();
+        let a = m.map(shape, &arch).unwrap();
+        let b = m.map(shape, &arch).unwrap();
+        assert_eq!(a.mapping, b.mapping);
+    }
+}

@@ -1,0 +1,131 @@
+//! Timeloop-mapper "Hybrid" search (§V-A3).
+//!
+//! Timeloop's hybrid mode runs random-pruned traversal threads, each
+//! terminating on a *victory condition*: a streak of consecutive
+//! non-improving evaluations. Unlike the other baselines it **does** search
+//! per-level bypass (the paper credits its edge-template wins to exactly
+//! this), and it samples the under-filled-array part of the space, which is
+//! why it destabilizes on 65 k-PE templates — randomly hitting both a full
+//! spatial factorization and a good tiling becomes vanishingly unlikely as
+//! the space explodes (§V-B1d).
+
+use super::{common, Mapper, MapperResult};
+use crate::arch::Accelerator;
+use crate::mapping::{validate, GemmShape, Mapping};
+use crate::timeloop::score_unchecked;
+use crate::util::Rng;
+use std::time::Instant;
+
+pub struct TimeloopHybrid {
+    /// Victory condition: consecutive non-improving feasible evaluations.
+    pub victory_condition: u64,
+    /// Hard cap on total draws (feasible or not).
+    pub max_samples: u64,
+    pub seed: u64,
+    /// Number of independent search "threads" (restarts; serialized here).
+    pub threads: u32,
+}
+
+impl TimeloopHybrid {
+    pub fn seeded(seed: u64) -> Self {
+        TimeloopHybrid {
+            seed,
+            ..Default::default()
+        }
+    }
+}
+
+impl Default for TimeloopHybrid {
+    fn default() -> Self {
+        TimeloopHybrid {
+            victory_condition: 500,
+            max_samples: 100_000,
+            seed: 0x71AE,
+            threads: 4,
+        }
+    }
+}
+
+impl Mapper for TimeloopHybrid {
+    fn name(&self) -> &'static str {
+        "Timeloop Hybrid"
+    }
+
+    fn map(&self, shape: GemmShape, arch: &Accelerator) -> Option<MapperResult> {
+        let start = Instant::now();
+        let mut best: Option<(Mapping, f64)> = None;
+        let mut evaluations = 0;
+        for t in 0..self.threads {
+            let mut rng = Rng::seed_from_u64(self.seed ^ (t as u64) << 32);
+            let mut streak = 0u64;
+            let mut thread_best = f64::INFINITY;
+            let mut draws = 0u64;
+            while streak < self.victory_condition && draws < self.max_samples {
+                draws += 1;
+                let m = common::random_mapping_unchecked(shape, arch, &mut rng, false, true);
+                if validate(&m, shape, arch, false).is_err() {
+                    // Infeasible draws also consume the streak in
+                    // timeloop-mapper ("invalid" counts toward termination).
+                    streak += 1;
+                    continue;
+                }
+                evaluations += 1;
+                let s = score_unchecked(&m, shape, arch);
+                if s.edp < thread_best {
+                    thread_best = s.edp;
+                    streak = 0;
+                } else {
+                    streak += 1;
+                }
+                if best.as_ref().map_or(true, |&(_, b)| s.edp < b) {
+                    best = Some((m, s.edp));
+                }
+            }
+        }
+        best.map(|(mapping, _)| MapperResult {
+            mapping,
+            evaluations,
+            runtime: start.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timeloop::score;
+
+    #[test]
+    fn hybrid_beats_plain_random_with_same_budget() {
+        // Bypass search should pay off on a template with a tiny regfile
+        // (residency of all three types is infeasible there).
+        let shape = GemmShape::new(64, 64, 64);
+        let mut arch = Accelerator::custom("t", 1 << 16, 16, 2);
+        arch.preset_rf_residency = crate::mapping::Bypass::new(true, false, false);
+        let hybrid = TimeloopHybrid {
+            victory_condition: 200,
+            max_samples: 3_000,
+            seed: 9,
+            threads: 2,
+        }
+        .map(shape, &arch)
+        .expect("hybrid finds a mapping");
+        validate(&hybrid.mapping, shape, &arch, false).unwrap();
+        assert!(score(&hybrid.mapping, shape, &arch, false).is_ok());
+    }
+
+    #[test]
+    fn victory_condition_terminates() {
+        let shape = GemmShape::new(16, 16, 16);
+        let arch = Accelerator::custom("t", 1 << 16, 4, 64);
+        let r = TimeloopHybrid {
+            victory_condition: 50,
+            max_samples: 10_000,
+            seed: 1,
+            threads: 1,
+        }
+        .map(shape, &arch)
+        .unwrap();
+        assert!(r.evaluations < 10_000);
+    }
+}

@@ -1,0 +1,17 @@
+//! Core mapping representation (paper §III–§IV-A).
+//!
+//! A GEMM `P(x,y) = Σ_z A(x,z)·B(y,z)` is a 3D compute grid
+//! `G = [1,Lx]×[1,Ly]×[1,Lz]` (Eq. 2). A *mapping* hierarchically tiles `G`
+//! across the five-level hierarchy `DRAM → SRAM → PE-array → regfile → MACC`
+//! (Eq. 3), picks a *walking axis* for the two temporal stages (Eq. 6), and
+//! a per-axis residency/bypass bit for SRAM and regfile (Eqs. 7–8).
+//!
+//! Axis↔matrix convention (paper §IV-A1): the axis `d` indexes the *normal*
+//! of a projection plane, so `d = x ↔ B (y–z plane)`, `d = y ↔ A (x–z
+//! plane)`, `d = z ↔ P (x–y plane)`.
+
+mod types;
+mod validate;
+
+pub use types::{Axis, Bypass, GemmShape, Mapping, Tile, AXES};
+pub use validate::{validate, MappingError};

@@ -1,0 +1,377 @@
+//! Mapping data types: axes, tiles, bypass switches, and the full `Mapping`.
+
+use std::fmt;
+
+/// One of the three GEMM iteration axes (Eq. 1): `x` and `y` index the
+/// output `P(x,y)`; `z` is the reduction axis.
+///
+/// Used both as an iteration axis and — via the plane-normal convention —
+/// as a *data type* index: `X ↔ B`, `Y ↔ A`, `Z ↔ P`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Axis {
+    X,
+    Y,
+    Z,
+}
+
+/// All axes in canonical order. Iteration order used for `Σ_d` sums in the
+/// energy model (Eqs. 25–27).
+pub const AXES: [Axis; 3] = [Axis::X, Axis::Y, Axis::Z];
+
+impl Axis {
+    /// The two axes other than `self` — the axes spanning the projection
+    /// plane whose normal is `self` (§III-B).
+    pub fn others(self) -> (Axis, Axis) {
+        match self {
+            Axis::X => (Axis::Y, Axis::Z),
+            Axis::Y => (Axis::X, Axis::Z),
+            Axis::Z => (Axis::X, Axis::Y),
+        }
+    }
+
+    /// Matrix name of the data type whose projection-plane normal is `self`.
+    pub fn matrix_name(self) -> &'static str {
+        match self {
+            Axis::X => "B",
+            Axis::Y => "A",
+            Axis::Z => "P",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Axis::X => 0,
+            Axis::Y => 1,
+            Axis::Z => 2,
+        }
+    }
+}
+
+impl fmt::Display for Axis {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Axis::X => write!(f, "x"),
+            Axis::Y => write!(f, "y"),
+            Axis::Z => write!(f, "z"),
+        }
+    }
+}
+
+/// Per-axis extent triple. Used for the global GEMM shape `L^(0)` and for
+/// per-level tile shapes `L^(1..3)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tile {
+    pub x: u64,
+    pub y: u64,
+    pub z: u64,
+}
+
+impl Tile {
+    pub const UNIT: Tile = Tile { x: 1, y: 1, z: 1 };
+
+    pub fn new(x: u64, y: u64, z: u64) -> Self {
+        Tile { x, y, z }
+    }
+
+    pub fn get(&self, d: Axis) -> u64 {
+        match d {
+            Axis::X => self.x,
+            Axis::Y => self.y,
+            Axis::Z => self.z,
+        }
+    }
+
+    pub fn set(&mut self, d: Axis, v: u64) {
+        match d {
+            Axis::X => self.x = v,
+            Axis::Y => self.y = v,
+            Axis::Z => self.z = v,
+        }
+    }
+
+    /// Number of compute points covered by this tile.
+    pub fn volume(&self) -> u64 {
+        self.x * self.y * self.z
+    }
+
+    /// Projection area onto the plane with normal `d` (§III-B): the word
+    /// footprint of data type `d` for this tile.
+    pub fn proj_area(&self, d: Axis) -> u64 {
+        let (a, b) = d.others();
+        self.get(a) * self.get(b)
+    }
+
+    /// Component-wise divisibility: `self[d] | outer[d]` for all axes
+    /// (Eq. 4 nesting).
+    pub fn divides(&self, outer: &Tile) -> bool {
+        AXES.iter()
+            .all(|&d| self.get(d) >= 1 && outer.get(d) % self.get(d) == 0)
+    }
+
+    /// Component-wise ratio `outer / self`; caller must ensure divisibility.
+    pub fn ratio(outer: &Tile, inner: &Tile) -> Tile {
+        debug_assert!(inner.divides(outer));
+        Tile {
+            x: outer.x / inner.x,
+            y: outer.y / inner.y,
+            z: outer.z / inner.z,
+        }
+    }
+}
+
+impl fmt::Display for Tile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({}, {}, {})", self.x, self.y, self.z)
+    }
+}
+
+/// The global GEMM workload shape `(L_x^(0), L_y^(0), L_z^(0))` (Eq. 2).
+///
+/// For `P = A·Bᵀ` with `A ∈ R^{M×K}`, `B ∈ R^{N×K}`: `x = M`, `y = N`,
+/// `z = K`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub x: u64,
+    pub y: u64,
+    pub z: u64,
+}
+
+impl GemmShape {
+    pub fn new(x: u64, y: u64, z: u64) -> Self {
+        GemmShape { x, y, z }
+    }
+
+    /// `(M, N, K)` GEMM convention: `P[M,N] = A[M,K] × B[K,N]`.
+    pub fn mnk(m: u64, n: u64, k: u64) -> Self {
+        GemmShape { x: m, y: n, z: k }
+    }
+
+    pub fn get(&self, d: Axis) -> u64 {
+        match d {
+            Axis::X => self.x,
+            Axis::Y => self.y,
+            Axis::Z => self.z,
+        }
+    }
+
+    pub fn as_tile(&self) -> Tile {
+        Tile::new(self.x, self.y, self.z)
+    }
+
+    /// Global compute-point count `V = Lx·Ly·Lz` (Eq. 5) — total MACs.
+    pub fn volume(&self) -> u64 {
+        self.x * self.y * self.z
+    }
+
+    /// Word footprints of `A`, `B`, `P` (projection areas of the full grid).
+    pub fn matrix_words(&self, d: Axis) -> u64 {
+        self.as_tile().proj_area(d)
+    }
+}
+
+impl fmt::Display for GemmShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "GEMM[x={}, y={}, z={}]", self.x, self.y, self.z)
+    }
+}
+
+/// Per-axis residency bits for one bypassable level (Eq. 7). `true` means
+/// the data type with plane-normal `d` *resides* at this level
+/// (`B_{d,p} = 1`); `false` means it bypasses the level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Bypass {
+    pub x: bool,
+    pub y: bool,
+    pub z: bool,
+}
+
+impl Bypass {
+    /// All data types resident (no bypass) — the only legal value for
+    /// DRAM / PE-array / MACC levels (Eq. 8).
+    pub const ALL: Bypass = Bypass {
+        x: true,
+        y: true,
+        z: true,
+    };
+
+    pub fn new(x: bool, y: bool, z: bool) -> Self {
+        Bypass { x, y, z }
+    }
+
+    pub fn get(&self, d: Axis) -> bool {
+        match d {
+            Axis::X => self.x,
+            Axis::Y => self.y,
+            Axis::Z => self.z,
+        }
+    }
+
+    /// Enumerate all 8 residency combinations (for search and sweeps).
+    pub fn all_combos() -> [Bypass; 8] {
+        let mut out = [Bypass::ALL; 8];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = Bypass::new(i & 1 != 0, i & 2 != 0, i & 4 != 0);
+        }
+        out
+    }
+}
+
+impl fmt::Display for Bypass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = |b: bool| if b { "keep" } else { "byp" };
+        write!(f, "[B:{} A:{} P:{}]", s(self.x), s(self.y), s(self.z))
+    }
+}
+
+/// A complete GOMA mapping (the decision vector of Eq. 34).
+///
+/// * `l1`, `l2`, `l3` — tile shapes held by SRAM, PE-array, and regfile
+///   (levels 1–3; level 0 is the workload itself and level 4 is the unit
+///   MACC point).
+/// * `alpha01`, `alpha12` — walking axes of the DRAM→SRAM and SRAM→PE-array
+///   temporal stages (Eq. 6).
+/// * `b1`, `b3` — per-axis residency at SRAM and regfile (Eq. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Mapping {
+    pub l1: Tile,
+    pub l2: Tile,
+    pub l3: Tile,
+    pub alpha01: Axis,
+    pub alpha12: Axis,
+    pub b1: Bypass,
+    pub b3: Bypass,
+}
+
+impl Mapping {
+    /// The trivial mapping: everything in one tile, fully resident.
+    /// Feasible only when the whole workload fits each capacity.
+    pub fn monolithic(shape: GemmShape) -> Self {
+        Mapping {
+            l1: shape.as_tile(),
+            l2: shape.as_tile(),
+            l3: shape.as_tile(),
+            alpha01: Axis::Z,
+            alpha12: Axis::Z,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        }
+    }
+
+    /// Tile shape at level `p ∈ {0..4}`; level 0 needs the workload shape.
+    pub fn level_tile(&self, p: usize, shape: GemmShape) -> Tile {
+        match p {
+            0 => shape.as_tile(),
+            1 => self.l1,
+            2 => self.l2,
+            3 => self.l3,
+            4 => Tile::UNIT,
+            _ => panic!("level {p} out of range"),
+        }
+    }
+
+    /// Spatial fanout along axis `d`: `L̂_d^(2-3) = L_d^(2)/L_d^(3)`.
+    pub fn spatial_fanout(&self, d: Axis) -> u64 {
+        self.l2.get(d) / self.l3.get(d)
+    }
+
+    /// Total PEs used: `Π_d L̂_d^(2-3)` (left side of Eq. 29).
+    pub fn pes_used(&self) -> u64 {
+        AXES.iter().map(|&d| self.spatial_fanout(d)).product()
+    }
+
+    /// Words resident at SRAM (left side of Eq. 32), gated by `b1`.
+    pub fn sram_words(&self) -> u64 {
+        AXES.iter()
+            .filter(|&&d| self.b1.get(d))
+            .map(|&d| self.l1.proj_area(d))
+            .sum()
+    }
+
+    /// Words resident in one PE's regfile (left side of Eq. 31), gated by
+    /// `b3`.
+    pub fn regfile_words(&self) -> u64 {
+        AXES.iter()
+            .filter(|&&d| self.b3.get(d))
+            .map(|&d| self.l3.proj_area(d))
+            .sum()
+    }
+
+    /// Human-readable one-liner used by the CLI and examples.
+    pub fn describe(&self) -> String {
+        format!(
+            "L1={} L2={} L3={} walk(0-1)={} walk(1-2)={} sram{} rf{}",
+            self.l1, self.l2, self.l3, self.alpha01, self.alpha12, self.b1, self.b3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_others_and_names() {
+        assert_eq!(Axis::X.others(), (Axis::Y, Axis::Z));
+        assert_eq!(Axis::Z.matrix_name(), "P");
+        assert_eq!(Axis::Y.matrix_name(), "A");
+        assert_eq!(Axis::X.matrix_name(), "B");
+    }
+
+    #[test]
+    fn tile_projection_areas() {
+        let t = Tile::new(4, 6, 10);
+        assert_eq!(t.proj_area(Axis::X), 60); // B footprint: y*z
+        assert_eq!(t.proj_area(Axis::Y), 40); // A footprint: x*z
+        assert_eq!(t.proj_area(Axis::Z), 24); // P footprint: x*y
+        assert_eq!(t.volume(), 240);
+    }
+
+    #[test]
+    fn tile_divides_and_ratio() {
+        let outer = Tile::new(8, 12, 16);
+        let inner = Tile::new(4, 3, 8);
+        assert!(inner.divides(&outer));
+        assert_eq!(Tile::ratio(&outer, &inner), Tile::new(2, 4, 2));
+        assert!(!Tile::new(3, 3, 8).divides(&outer));
+    }
+
+    #[test]
+    fn gemm_shape_mnk_convention() {
+        let g = GemmShape::mnk(128, 256, 64);
+        assert_eq!(g.x, 128);
+        assert_eq!(g.y, 256);
+        assert_eq!(g.z, 64);
+        assert_eq!(g.volume(), 128 * 256 * 64);
+        // A is M×K = x*z
+        assert_eq!(g.matrix_words(Axis::Y), 128 * 64);
+    }
+
+    #[test]
+    fn bypass_combos_are_distinct() {
+        let combos = Bypass::all_combos();
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_ne!(combos[i], combos[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn mapping_fanout_and_capacity_words() {
+        let m = Mapping {
+            l1: Tile::new(32, 32, 64),
+            l2: Tile::new(16, 16, 4),
+            l3: Tile::new(2, 2, 4),
+            alpha01: Axis::X,
+            alpha12: Axis::Y,
+            b1: Bypass::ALL,
+            b3: Bypass::new(true, true, false),
+        };
+        assert_eq!(m.spatial_fanout(Axis::X), 8);
+        assert_eq!(m.pes_used(), 8 * 8 * 1);
+        // SRAM: A(32*64) + B(32*64) + P(32*32)
+        assert_eq!(m.sram_words(), 2048 + 2048 + 1024);
+        // RF holds only A (y: 2*4) and B (x: 2*4); P bypassed
+        assert_eq!(m.regfile_words(), 8 + 8);
+    }
+}

@@ -1,0 +1,202 @@
+//! Feasibility checking for mappings (the hard constraints of Eq. 34).
+//!
+//! A mapping is feasible for a `(GemmShape, Accelerator)` pair iff:
+//! 1. divisibility nesting `L^(3) | L^(2) | L^(1) | L^(0)` per axis (Eq. 4);
+//! 2. the PE-number constraint `Π_d L̂_d^(2-3) = num_pe` (Eq. 29) — or
+//!    `≤ num_pe` when the accelerator permits under-utilization (baselines
+//!    may emit such mappings; GOMA itself enforces equality);
+//! 3. regfile capacity (Eq. 31) and SRAM capacity (Eq. 32), with bypassed
+//!    data types excluded;
+//! 4. a bypassed level must still be *consistent*: residency at DRAM,
+//!    PE-array, and MACC is mandatory (Eq. 8) — encoded structurally — and
+//!    a data type must reside somewhere above MACC, which DRAM guarantees.
+
+use super::types::{GemmShape, Mapping, AXES};
+use crate::arch::Accelerator;
+use std::fmt;
+
+/// Why a mapping is infeasible.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MappingError {
+    /// `L_d^(p+1)` does not divide `L_d^(p)` for some axis/level pair.
+    Divisibility { axis: char, levels: (usize, usize) },
+    /// `Π_d L̂_d^(2-3)` ≠ (or >) the accelerator's PE count.
+    PeCount { used: u64, available: u64, exact: bool },
+    /// SRAM words needed exceed capacity (Eq. 32).
+    SramCapacity { needed: u64, capacity: u64 },
+    /// Regfile words needed exceed capacity (Eq. 31).
+    RegfileCapacity { needed: u64, capacity: u64 },
+    /// A tile extent is zero.
+    ZeroExtent,
+}
+
+impl fmt::Display for MappingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MappingError::Divisibility { axis, levels } => write!(
+                f,
+                "divisibility violated on axis {} between levels {} and {}",
+                axis, levels.0, levels.1
+            ),
+            MappingError::PeCount { used, available, exact } => write!(
+                f,
+                "PE constraint violated: uses {used} of {available} PEs (exact required: {exact})"
+            ),
+            MappingError::SramCapacity { needed, capacity } => {
+                write!(f, "SRAM capacity exceeded: {needed} > {capacity} words")
+            }
+            MappingError::RegfileCapacity { needed, capacity } => {
+                write!(f, "regfile capacity exceeded: {needed} > {capacity} words")
+            }
+            MappingError::ZeroExtent => write!(f, "tile extent is zero"),
+        }
+    }
+}
+
+impl std::error::Error for MappingError {}
+
+/// Check all hard constraints of Eq. 34.
+///
+/// `require_full_pes` selects between GOMA's equality constraint (Eq. 29)
+/// and the relaxed `≤` form used when scoring baseline mappings that
+/// under-fill the array.
+pub fn validate(
+    m: &Mapping,
+    shape: GemmShape,
+    arch: &Accelerator,
+    require_full_pes: bool,
+) -> Result<(), MappingError> {
+    let l0 = shape.as_tile();
+    for &d in &AXES {
+        if m.l3.get(d) == 0 || m.l2.get(d) == 0 || m.l1.get(d) == 0 {
+            return Err(MappingError::ZeroExtent);
+        }
+    }
+    // (1) divisibility nesting, outer to inner
+    let chain = [(0usize, l0, m.l1), (1, m.l1, m.l2), (2, m.l2, m.l3)];
+    for (p, outer, inner) in chain {
+        for &d in &AXES {
+            if outer.get(d) % inner.get(d) != 0 || inner.get(d) > outer.get(d) {
+                return Err(MappingError::Divisibility {
+                    axis: match d {
+                        crate::mapping::Axis::X => 'x',
+                        crate::mapping::Axis::Y => 'y',
+                        crate::mapping::Axis::Z => 'z',
+                    },
+                    levels: (p, p + 1),
+                });
+            }
+        }
+    }
+    // (2) PE-number constraint (Eq. 29)
+    let used = m.pes_used();
+    if (require_full_pes && used != arch.num_pe) || used > arch.num_pe {
+        return Err(MappingError::PeCount {
+            used,
+            available: arch.num_pe,
+            exact: require_full_pes,
+        });
+    }
+    // (3) capacities, bypass-gated (Eqs. 31–32)
+    let sram = m.sram_words();
+    if sram > arch.sram_words {
+        return Err(MappingError::SramCapacity {
+            needed: sram,
+            capacity: arch.sram_words,
+        });
+    }
+    let rf = m.regfile_words();
+    if rf > arch.regfile_words {
+        return Err(MappingError::RegfileCapacity {
+            needed: rf,
+            capacity: arch.regfile_words,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Accelerator;
+    use crate::mapping::{Axis, Bypass, Tile};
+
+    fn tiny_arch() -> Accelerator {
+        Accelerator::custom("tiny", 64 * 1024, 16, 64)
+    }
+
+    fn base_mapping() -> (Mapping, GemmShape) {
+        let shape = GemmShape::new(64, 64, 64);
+        let m = Mapping {
+            l1: Tile::new(32, 32, 32),
+            l2: Tile::new(8, 8, 8),
+            l3: Tile::new(2, 4, 4),
+            alpha01: Axis::X,
+            alpha12: Axis::Z,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        };
+        (m, shape)
+    }
+
+    #[test]
+    fn valid_mapping_passes() {
+        let (m, shape) = base_mapping();
+        // fanout = 4*2*2 = 16 PEs; SRAM = 3*1024 = 3072 ≤ 64k; RF = 8+16+8=32 ≤ 64
+        validate(&m, shape, &tiny_arch(), true).unwrap();
+    }
+
+    #[test]
+    fn divisibility_violation_detected() {
+        let (mut m, shape) = base_mapping();
+        m.l1.x = 24; // 64 % 24 != 0
+        assert!(matches!(
+            validate(&m, shape, &tiny_arch(), true),
+            Err(MappingError::Divisibility { axis: 'x', levels: (0, 1) })
+        ));
+    }
+
+    #[test]
+    fn pe_constraint_exact_vs_relaxed() {
+        let (mut m, shape) = base_mapping();
+        m.l3 = Tile::new(4, 4, 4); // fanout 2*2*2 = 8 < 16
+        assert!(matches!(
+            validate(&m, shape, &tiny_arch(), true),
+            Err(MappingError::PeCount { used: 8, .. })
+        ));
+        // Relaxed mode accepts under-utilization
+        validate(&m, shape, &tiny_arch(), false).unwrap();
+    }
+
+    #[test]
+    fn pe_overflow_rejected_even_relaxed() {
+        let (mut m, shape) = base_mapping();
+        m.l3 = Tile::new(1, 1, 1); // fanout 8*8*8 = 512 > 16
+        assert!(validate(&m, shape, &tiny_arch(), false).is_err());
+    }
+
+    #[test]
+    fn capacity_gated_by_bypass() {
+        let (mut m, shape) = base_mapping();
+        let mut small = tiny_arch();
+        small.regfile_words = 24; // A(2*4=8)+B(4*4=16)+P(2*4=8) = 32 > 24
+        assert!(matches!(
+            validate(&m, shape, &small, true),
+            Err(MappingError::RegfileCapacity { needed: 32, capacity: 24 })
+        ));
+        // Bypassing P at the regfile shrinks the demand to 24 and passes.
+        m.b3 = Bypass::new(true, true, false);
+        validate(&m, shape, &small, true).unwrap();
+    }
+
+    #[test]
+    fn sram_capacity_violation() {
+        let (m, shape) = base_mapping();
+        let mut small = tiny_arch();
+        small.sram_words = 100;
+        assert!(matches!(
+            validate(&m, shape, &small, true),
+            Err(MappingError::SramCapacity { .. })
+        ));
+    }
+}

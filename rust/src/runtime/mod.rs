@@ -1,0 +1,110 @@
+//! PJRT runtime: load and execute AOT-compiled artifacts.
+//!
+//! The build-time Python layers (L2 JAX model + L1 Pallas kernel) are
+//! lowered once by `python/compile/aot.py` to **HLO text** under
+//! `artifacts/` (text, not serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids). This module is the only place the request path touches
+//! compiled computations: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. Python never
+//! runs at request time.
+
+mod registry;
+
+pub use registry::{artifacts_dir, load_manifest as registry_manifest, ArtifactSpec};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A PJRT client plus the compiled executables loaded from `artifacts/`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Construct on the host CPU PJRT backend.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            executables: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform name (e.g. `"cpu"`), for diagnostics.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Whether `name` has been loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Loaded artifact names (sorted, for reporting).
+    pub fn loaded(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.executables.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Execute a loaded artifact on f32 inputs given as `(data, dims)`
+    /// pairs; returns the flattened f32 elements of the (1-tuple) output.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// result buffer is unwrapped with `to_tuple1`.
+    pub fn execute_f32(&self, name: &str, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<f32>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .with_context(|| format!("reshaping input to {dims:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result buffer")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let rt = Runtime::cpu().expect("cpu client");
+        assert!(!rt.has("nope"));
+        let err = rt.execute_f32("nope", &[]).unwrap_err();
+        assert!(err.to_string().contains("not loaded"));
+    }
+
+    #[test]
+    fn bad_path_fails_gracefully() {
+        let mut rt = Runtime::cpu().expect("cpu client");
+        assert!(rt
+            .load_hlo_text("x", Path::new("/nonexistent/file.hlo.txt"))
+            .is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Artifact registry: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `aot.py` writes one `<name>.hlo.txt` per compiled computation plus a
+//! `manifest.tsv` describing shapes. The manifest is a plain tab-separated
+//! format (the offline registry has no JSON crate):
+//!
+//! ```text
+//! name<TAB>description<TAB>in0_dims,in1_dims,...<TAB>out_dims
+//! mapped_gemm_64x64x64	tiled gemm	64x32;32x64	64x64
+//! ```
+//!
+//! dims are `x`-separated, operands `;`-separated.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Directory holding AOT artifacts (`GOMA_ARTIFACTS` env override, default
+/// `./artifacts`).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("GOMA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// One entry of `artifacts/manifest.tsv` (written by `aot.py`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Artifact name (file is `<name>.hlo.txt`).
+    pub name: String,
+    /// Human description (kernel + mapping it encodes).
+    pub description: String,
+    /// Input shapes, row-major dims per operand.
+    pub inputs: Vec<Vec<i64>>,
+    /// Output shape (single result).
+    pub output: Vec<i64>,
+}
+
+impl ArtifactSpec {
+    /// Path of this artifact under `dir`.
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+}
+
+fn parse_dims(s: &str) -> Result<Vec<i64>> {
+    s.split('x')
+        .map(|t| t.trim().parse::<i64>().context("bad dim"))
+        .collect()
+}
+
+/// Parse one manifest line (`None` for blank/comment lines).
+pub fn parse_manifest_line(line: &str) -> Result<Option<ArtifactSpec>> {
+    let line = line.trim_end();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let cols: Vec<&str> = line.split('\t').collect();
+    if cols.len() != 4 {
+        bail!("manifest line needs 4 tab-separated columns, got {}", cols.len());
+    }
+    let inputs = cols[2]
+        .split(';')
+        .map(parse_dims)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Some(ArtifactSpec {
+        name: cols[0].to_string(),
+        description: cols[1].to_string(),
+        inputs,
+        output: parse_dims(cols[3])?,
+    }))
+}
+
+/// Load `manifest.tsv` from the artifacts directory.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(spec) =
+            parse_manifest_line(line).with_context(|| format!("manifest line {}", i + 1))?
+        {
+            out.push(spec);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("GOMA_ARTIFACTS", "/tmp/goma-artifacts-test");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/goma-artifacts-test"));
+        std::env::remove_var("GOMA_ARTIFACTS");
+        assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn parse_line_roundtrip() {
+        let spec = parse_manifest_line("g64\ttiled gemm\t64x32;32x64\t64x64")
+            .unwrap()
+            .unwrap();
+        assert_eq!(spec.name, "g64");
+        assert_eq!(spec.inputs, vec![vec![64, 32], vec![32, 64]]);
+        assert_eq!(spec.output, vec![64, 64]);
+        assert_eq!(
+            spec.path(Path::new("artifacts")),
+            PathBuf::from("artifacts/g64.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        assert!(parse_manifest_line("# comment").unwrap().is_none());
+        assert!(parse_manifest_line("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(parse_manifest_line("only\ttwo").is_err());
+        assert!(parse_manifest_line("a\tb\tnot-dims\t4x4").is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! Per-axis candidate generation with memoization.
+//!
+//! For a fixed axis configuration — global extent `L^(0)`, spatial fanout
+//! `Ŝ`, walking-axis membership flags, bypass bits — the axis's feasible
+//! tiling decisions are the divisor-chain pairs `(L^(1), L^(3))` with
+//! `L^(3)·Ŝ | L^(1) | L^(0)` (Eq. 4 nesting with `L^(2) = L^(3)·Ŝ`).
+//! Each candidate's objective contribution is the separable axis term
+//! ([`crate::energy::axis_term`]); lists are sorted ascending so index 0 is
+//! the per-axis lower bound.
+//!
+//! Lists depend only on `(L^(0), Ŝ, flags)` and are shared across the
+//! thousands of (α, B, Ŝ) combinations a solve visits — the memoization
+//! that keeps whole-space search in the milliseconds (§V-C).
+
+use crate::arch::Accelerator;
+use crate::energy::{axis_term, AxisTermInput};
+use crate::util::divisors;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// One feasible per-axis tiling decision and its objective contribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AxisCandidate {
+    /// SRAM tile length `L^(1)`.
+    pub l1: u64,
+    /// Regfile tile length `L^(3)` (`L^(2) = l3 · fanout`).
+    pub l3: u64,
+    /// Separable objective term `src1_d + src3_d + src4_d` (pJ/MAC).
+    pub f: f64,
+}
+
+/// Memo key: everything the axis term depends on besides the accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    l0: u64,
+    fanout: u64,
+    flags: u8,
+}
+
+fn flags(is_alpha01: bool, is_alpha12: bool, b1: bool, b3: bool, is_z: bool) -> u8 {
+    (is_alpha01 as u8)
+        | (is_alpha12 as u8) << 1
+        | (b1 as u8) << 2
+        | (b3 as u8) << 3
+        | (is_z as u8) << 4
+}
+
+/// Memoizing candidate-list factory, scoped to one `(shape, arch)` solve.
+pub struct CandidateCache<'a> {
+    arch: &'a Accelerator,
+    lists: HashMap<Key, Rc<Vec<AxisCandidate>>>,
+    /// Divisor lists memoized per extent (shared across axes and fanouts).
+    divs: HashMap<u64, Rc<Vec<u64>>>,
+}
+
+impl<'a> CandidateCache<'a> {
+    pub fn new(arch: &'a Accelerator) -> Self {
+        CandidateCache {
+            arch,
+            lists: HashMap::new(),
+            divs: HashMap::new(),
+        }
+    }
+
+    fn divisors_of(&mut self, n: u64) -> Rc<Vec<u64>> {
+        self.divs
+            .entry(n)
+            .or_insert_with(|| Rc::new(divisors(n)))
+            .clone()
+    }
+
+    /// Sorted candidate list for one axis configuration. Empty when the
+    /// fanout does not divide the extent (configuration infeasible).
+    #[allow(clippy::too_many_arguments)]
+    pub fn get(
+        &mut self,
+        l0: u64,
+        fanout: u64,
+        is_alpha01: bool,
+        is_alpha12: bool,
+        b1: bool,
+        b3: bool,
+        is_z: bool,
+    ) -> Rc<Vec<AxisCandidate>> {
+        let key = Key {
+            l0,
+            fanout,
+            flags: flags(is_alpha01, is_alpha12, b1, b3, is_z),
+        };
+        if let Some(list) = self.lists.get(&key) {
+            return list.clone();
+        }
+        let mut out = Vec::new();
+        if l0 % fanout == 0 {
+            let l1s = self.divisors_of(l0);
+            for &l1 in l1s.iter().filter(|&&l1| l1 % fanout == 0) {
+                let l3s = self.divisors_of(l1 / fanout);
+                for &l3 in l3s.iter() {
+                    let t = AxisTermInput {
+                        l0,
+                        l1,
+                        l2: l3 * fanout,
+                        l3,
+                        is_alpha01,
+                        is_alpha12,
+                        b1,
+                        b3,
+                        is_z,
+                    };
+                    let (s1, s3, s4) = axis_term(self.arch, &t);
+                    out.push(AxisCandidate {
+                        l1,
+                        l3,
+                        f: s1 + s3 + s4,
+                    });
+                }
+            }
+            out.sort_by(|a, b| a.f.partial_cmp(&b.f).unwrap());
+        }
+        let rc = Rc::new(out);
+        self.lists.insert(key, rc.clone());
+        rc
+    }
+
+    /// Number of distinct lists materialized (search-space telemetry).
+    pub fn lists_built(&self) -> usize {
+        self.lists.len()
+    }
+}
+
+/// Spatial fanout triples `(Ŝ_x, Ŝ_y, Ŝ_z)` satisfying the PE-number
+/// constraint (Eq. 29) and per-axis divisibility of the workload extents.
+///
+/// With `exact = true` the product must equal `num_pe` (GOMA's constraint);
+/// otherwise any product dividing `num_pe` is allowed (used to probe
+/// under-filled arrays, e.g. for infeasibility diagnostics).
+pub fn spatial_triples(
+    shape: crate::mapping::GemmShape,
+    num_pe: u64,
+    exact: bool,
+) -> Vec<(u64, u64, u64)> {
+    let products: Vec<u64> = if exact {
+        vec![num_pe]
+    } else {
+        divisors(num_pe)
+    };
+    let mut out = Vec::new();
+    for p in products {
+        for (a, b, c) in crate::util::ordered_factor_triples(p) {
+            if shape.x % a == 0 && shape.y % b == 0 && shape.z % c == 0 {
+                out.push((a, b, c));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Accelerator;
+    use crate::mapping::GemmShape;
+
+    #[test]
+    fn candidates_sorted_and_feasible() {
+        let a = Accelerator::custom("t", 1 << 20, 16, 256);
+        let mut cache = CandidateCache::new(&a);
+        let list = cache.get(64, 4, false, true, true, true, false);
+        assert!(!list.is_empty());
+        assert!(list.windows(2).all(|w| w[0].f <= w[1].f));
+        for c in list.iter() {
+            assert_eq!(64 % c.l1, 0);
+            assert_eq!(c.l1 % (c.l3 * 4), 0);
+        }
+    }
+
+    #[test]
+    fn infeasible_fanout_gives_empty_list() {
+        let a = Accelerator::custom("t", 1 << 20, 16, 256);
+        let mut cache = CandidateCache::new(&a);
+        let list = cache.get(63, 4, false, false, true, true, false);
+        assert!(list.is_empty()); // 4 ∤ 63
+    }
+
+    #[test]
+    fn memoization_reuses_lists() {
+        let a = Accelerator::custom("t", 1 << 20, 16, 256);
+        let mut cache = CandidateCache::new(&a);
+        let l1 = cache.get(64, 4, false, true, true, true, false);
+        let l2 = cache.get(64, 4, false, true, true, true, false);
+        assert!(Rc::ptr_eq(&l1, &l2));
+        assert_eq!(cache.lists_built(), 1);
+    }
+
+    #[test]
+    fn spatial_triples_respect_divisibility() {
+        let shape = GemmShape::new(12, 8, 6);
+        let ts = spatial_triples(shape, 16, true);
+        assert!(!ts.is_empty());
+        for (a, b, c) in &ts {
+            assert_eq!(a * b * c, 16);
+            assert_eq!(12 % a, 0);
+            assert_eq!(8 % b, 0);
+            assert_eq!(6 % c, 0);
+        }
+        // (4, 4, 1) works, (16, 1, 1) does not (16 ∤ 12).
+        assert!(ts.contains(&(4, 4, 1)));
+        assert!(!ts.contains(&(16, 1, 1)));
+    }
+
+    #[test]
+    fn relaxed_triples_superset_of_exact() {
+        let shape = GemmShape::new(64, 64, 64);
+        let exact = spatial_triples(shape, 16, true);
+        let relaxed = spatial_triples(shape, 16, false);
+        assert!(relaxed.len() > exact.len());
+        for t in &exact {
+            assert!(relaxed.contains(t));
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Exhaustive enumeration of the folded mapping space.
+//!
+//! Deliberately independent of the branch-and-bound code path (plain nested
+//! divisor loops + `validate`): it is the ground truth the solver's
+//! optimality certificate is property-tested against, and the mapping
+//! generator behind the Fig. 2 energy-variation sweep and the §IV-G1
+//! fidelity study (which needs *all* tiling–permutation–bypass combinations
+//! of a given granularity, not just optimal ones).
+
+use crate::arch::Accelerator;
+use crate::energy::evaluate;
+use crate::mapping::{validate, Bypass, GemmShape, Mapping, Tile, AXES};
+use crate::util::divisors;
+
+/// Callback alias for mapping enumeration.
+pub type MappingVisitor<'a> = dyn FnMut(&Mapping) + 'a;
+
+/// Visit every feasible mapping of the folded space (all spatial triples,
+/// tilings, walking axes, bypass combinations). Exponential in divisor
+/// counts — use on small/medium shapes only (tests, sweeps).
+pub fn enumerate_all(
+    shape: GemmShape,
+    arch: &Accelerator,
+    exact_pe: bool,
+    visit: &mut MappingVisitor<'_>,
+) {
+    let triples = super::candidates::spatial_triples(shape, arch.num_pe, exact_pe);
+    for (sx, sy, sz) in triples {
+        let s = [sx, sy, sz];
+        // Per-axis (l1, l3) pairs honoring the divisor chain.
+        let mut axis_pairs: Vec<Vec<(u64, u64)>> = Vec::with_capacity(3);
+        for &d in &AXES {
+            let l0 = shape.get(d);
+            let mut pairs = Vec::new();
+            for l1 in divisors(l0) {
+                if l1 % s[d.index()] != 0 {
+                    continue;
+                }
+                for l3 in divisors(l1 / s[d.index()]) {
+                    pairs.push((l1, l3));
+                }
+            }
+            axis_pairs.push(pairs);
+        }
+        for &(l1x, l3x) in &axis_pairs[0] {
+            for &(l1y, l3y) in &axis_pairs[1] {
+                for &(l1z, l3z) in &axis_pairs[2] {
+                    for &a01 in &AXES {
+                        for &a12 in &AXES {
+                            for b1 in Bypass::all_combos() {
+                                for b3 in Bypass::all_combos() {
+                                    let m = Mapping {
+                                        l1: Tile::new(l1x, l1y, l1z),
+                                        l2: Tile::new(l3x * sx, l3y * sy, l3z * sz),
+                                        l3: Tile::new(l3x, l3y, l3z),
+                                        alpha01: a01,
+                                        alpha12: a12,
+                                        b1,
+                                        b3,
+                                    };
+                                    if validate(&m, shape, arch, exact_pe).is_ok() {
+                                        visit(&m);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Brute-force global optimum by full enumeration (ground truth for the
+/// solver's certificate). Returns `(mapping, normalized_energy)`.
+pub fn exhaustive_best(shape: GemmShape, arch: &Accelerator) -> Option<(Mapping, f64)> {
+    let mut best: Option<(Mapping, f64)> = None;
+    enumerate_all(shape, arch, true, &mut |m| {
+        let e = evaluate(m, shape, arch).normalized;
+        if best.map_or(true, |(_, b)| e < b) {
+            best = Some((*m, e));
+        }
+    });
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Accelerator;
+
+    #[test]
+    fn enumeration_visits_only_feasible() {
+        let shape = GemmShape::new(8, 8, 8);
+        let a = Accelerator::custom("t", 512, 4, 8);
+        let mut n = 0u64;
+        enumerate_all(shape, &a, true, &mut |m| {
+            assert!(validate(m, shape, &a, true).is_ok());
+            n += 1;
+        });
+        assert!(n > 0, "space must be non-empty");
+    }
+
+    #[test]
+    fn exhaustive_best_is_minimum() {
+        let shape = GemmShape::new(8, 16, 8);
+        let a = Accelerator::custom("t", 1024, 4, 8);
+        let (_, best) = exhaustive_best(shape, &a).unwrap();
+        enumerate_all(shape, &a, true, &mut |m| {
+            assert!(evaluate(m, shape, &a).normalized >= best - 1e-12);
+        });
+    }
+}

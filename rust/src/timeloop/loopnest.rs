@@ -1,0 +1,187 @@
+//! Rendering a [`Mapping`] as a concrete loop nest.
+//!
+//! GOMA's mapping representation folds loop permutations down to one walking
+//! axis per temporal stage (§III-C). The oracle un-folds this into an
+//! explicit nest so the reuse analysis is independent of the folding: per
+//! stage the walking axis is the innermost loop and the remaining two axes
+//! follow in canonical (x, y, z) order going outward — the paper's claim
+//! (§IV-A3) is that the β/γ order does not affect counting, which our
+//! property tests verify except for degenerate bounds.
+
+use crate::mapping::{Axis, GemmShape, Mapping, AXES};
+
+/// Which part of the hierarchy a loop belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageId {
+    /// DRAM-level temporal loops (tile `L^(0)/L^(1)` steps).
+    DramTemporal,
+    /// SRAM-level temporal loops (tile `L^(1)/L^(2)` steps).
+    SramTemporal,
+    /// Spatial unrolling over the PE array (`L^(2)/L^(3)` fanout).
+    Spatial,
+    /// Regfile-level temporal loops (`L^(3)` MAC steps inside a PE).
+    RfTemporal,
+}
+
+/// One loop of the rendered nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Loop {
+    pub axis: Axis,
+    pub bound: u64,
+    pub stage: StageId,
+}
+
+/// A mapping rendered as an explicit nest, ordered **outermost first**.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopNest {
+    pub loops: Vec<Loop>,
+    pub shape: GemmShape,
+    /// Spatial fanout per axis (`L̂^(2-3)`), kept for multicast analysis.
+    pub spatial: [u64; 3],
+}
+
+/// Stage rendering: walking axis innermost, remaining axes outward in
+/// canonical order. (Allocation-free: rendering runs once per oracle call.)
+fn stage_loops(bounds: [u64; 3], walk: Axis, stage: StageId, out: &mut Vec<Loop>) {
+    for &axis in AXES.iter().filter(|&&a| a != walk) {
+        out.push(Loop {
+            axis,
+            bound: bounds[axis.index()],
+            stage,
+        });
+    }
+    // walking axis innermost ⇒ last in outer-first order
+    out.push(Loop {
+        axis: walk,
+        bound: bounds[walk.index()],
+        stage,
+    });
+}
+
+impl LoopNest {
+    /// Render `m` over `shape`. Panics on non-nesting tiles (callers
+    /// validate first).
+    pub fn render(m: &Mapping, shape: GemmShape) -> LoopNest {
+        let l0 = shape.as_tile();
+        let b0 = [l0.x / m.l1.x, l0.y / m.l1.y, l0.z / m.l1.z];
+        let b1 = [m.l1.x / m.l2.x, m.l1.y / m.l2.y, m.l1.z / m.l2.z];
+        let sp = [m.l2.x / m.l3.x, m.l2.y / m.l3.y, m.l2.z / m.l3.z];
+        let b3 = [m.l3.x, m.l3.y, m.l3.z];
+
+        let mut loops = Vec::with_capacity(12);
+        stage_loops(b0, m.alpha01, StageId::DramTemporal, &mut loops);
+        stage_loops(b1, m.alpha12, StageId::SramTemporal, &mut loops);
+        for &d in &AXES {
+            loops.push(Loop {
+                axis: d,
+                bound: sp[d.index()],
+                stage: StageId::Spatial,
+            });
+        }
+        // RF-level traversal order is immaterial to counting (every MAC
+        // touches all three operands); canonical order, z innermost, so the
+        // per-PE accumulation chain is explicit.
+        stage_loops(b3, Axis::Z, StageId::RfTemporal, &mut loops);
+
+        LoopNest {
+            loops,
+            shape,
+            spatial: sp,
+        }
+    }
+
+    /// The temporal stages visible above storage level `p ∈ {1, 3, 4}`.
+    /// (Level 1 = SRAM sees the DRAM-temporal stage; level 3 = regfile sees
+    /// DRAM- and SRAM-temporal stages — the spatial stage is transparent to
+    /// temporal reuse, §IV-B3.)
+    pub fn stages_above(level: usize) -> &'static [StageId] {
+        match level {
+            1 => &[StageId::DramTemporal],
+            3 => &[StageId::DramTemporal, StageId::SramTemporal],
+            4 => &[
+                StageId::DramTemporal,
+                StageId::SramTemporal,
+                StageId::RfTemporal,
+            ],
+            _ => panic!("no storage at level {level}"),
+        }
+    }
+
+    /// Temporal loops above storage level `p`, outermost first (allocating
+    /// convenience wrapper; the counting hot path iterates in place via
+    /// [`LoopNest::stages_above`]).
+    pub fn temporal_loops_above(&self, level: usize) -> Vec<Loop> {
+        let keep = Self::stages_above(level);
+        self.loops
+            .iter()
+            .copied()
+            .filter(|l| keep.contains(&l.stage))
+            .collect()
+    }
+
+    /// Total number of PEs engaged (product of spatial fanouts).
+    pub fn pes_used(&self) -> u64 {
+        self.spatial.iter().product()
+    }
+
+    /// Product of all temporal bounds × spatial bounds — must equal `V`.
+    pub fn total_points(&self) -> u64 {
+        self.loops.iter().map(|l| l.bound).product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::{Bypass, Tile};
+
+    fn mapping() -> (Mapping, GemmShape) {
+        let shape = GemmShape::new(16, 32, 64);
+        let m = Mapping {
+            l1: Tile::new(8, 16, 16),
+            l2: Tile::new(4, 4, 8),
+            l3: Tile::new(2, 2, 2),
+            alpha01: Axis::Y,
+            alpha12: Axis::X,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        };
+        (m, shape)
+    }
+
+    #[test]
+    fn nest_covers_all_points() {
+        let (m, shape) = mapping();
+        let nest = LoopNest::render(&m, shape);
+        assert_eq!(nest.total_points(), shape.volume());
+        assert_eq!(nest.loops.len(), 12);
+    }
+
+    #[test]
+    fn walking_axis_is_stage_innermost() {
+        let (m, shape) = mapping();
+        let nest = LoopNest::render(&m, shape);
+        let dram: Vec<&Loop> = nest
+            .loops
+            .iter()
+            .filter(|l| l.stage == StageId::DramTemporal)
+            .collect();
+        assert_eq!(dram.last().unwrap().axis, Axis::Y);
+        let sram: Vec<&Loop> = nest
+            .loops
+            .iter()
+            .filter(|l| l.stage == StageId::SramTemporal)
+            .collect();
+        assert_eq!(sram.last().unwrap().axis, Axis::X);
+    }
+
+    #[test]
+    fn loops_above_levels() {
+        let (m, shape) = mapping();
+        let nest = LoopNest::render(&m, shape);
+        assert_eq!(nest.temporal_loops_above(1).len(), 3);
+        assert_eq!(nest.temporal_loops_above(3).len(), 6);
+        assert_eq!(nest.temporal_loops_above(4).len(), 9);
+        assert_eq!(nest.pes_used(), 2 * 2 * 4);
+    }
+}

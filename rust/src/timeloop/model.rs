@@ -1,0 +1,281 @@
+//! Oracle scoring: energy, latency, and EDP for any feasible mapping.
+//!
+//! Energy follows the receiver-centric per-data-type access chains of
+//! §III-D/§IV-E: for each data type the resident levels form a chain
+//! `DRAM → (SRAM) → (regfile) → MACC`; each adjacent hop pays source-side
+//! reads (multicast-amortized when the hop crosses the spatial level),
+//! receiver-side writes, and — for the partial-sum axis — write-backs and
+//! ρ-scaled old-value re-reads with exact init counting (no closed-form
+//! approximation).
+//!
+//! Latency is `max(compute, DRAM bandwidth, SRAM bandwidth)` in cycles;
+//! leakage accrues per cycle (Eq. 30). `EDP = E × T` (Eq. 36).
+
+use super::counts::{count, AccessCounts};
+use super::loopnest::LoopNest;
+use crate::arch::Accelerator;
+use crate::mapping::{validate, Axis, GemmShape, Mapping, MappingError, AXES};
+
+/// Unified oracle verdict for one mapping (paper §V-A4: E, T, EDP are all
+/// reported through this model for GOMA and every baseline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OracleScore {
+    /// Total energy including leakage, pJ.
+    pub energy_pj: f64,
+    /// Execution cycles (max of compute and bandwidth bounds).
+    pub cycles: f64,
+    /// Wall-clock seconds at the template's clock.
+    pub seconds: f64,
+    /// Energy-delay product, J·s (Eq. 36).
+    pub edp: f64,
+    /// PE utilization in (0, 1]: `pes_used / num_pe`.
+    pub utilization: f64,
+    /// Total DRAM-side words moved (both directions).
+    pub dram_words: f64,
+    /// Total SRAM-side words accessed (both directions).
+    pub sram_words: f64,
+    /// Dynamic (non-leakage) energy, pJ — comparable to
+    /// `energy::EnergyBreakdown::normalized × V`.
+    pub dynamic_pj: f64,
+}
+
+/// Index into [`AccessCounts`]-style per-receiver arrays.
+fn receiver_counts(c: &AccessCounts, level: usize, d: Axis) -> f64 {
+    match level {
+        1 => c.sram[d.index()],
+        3 => c.rf[d.index()],
+        4 => c.macc[d.index()],
+        _ => unreachable!(),
+    }
+}
+
+fn z_inits(c: &AccessCounts, level: usize) -> f64 {
+    match level {
+        1 => c.z_inits[0],
+        3 => c.z_inits[1],
+        4 => c.z_inits[2],
+        _ => unreachable!(),
+    }
+}
+
+/// Score a mapping after validating feasibility.
+pub fn score(
+    m: &Mapping,
+    shape: GemmShape,
+    arch: &Accelerator,
+    require_full_pes: bool,
+) -> Result<OracleScore, MappingError> {
+    validate(m, shape, arch, require_full_pes)?;
+    Ok(score_unchecked(m, shape, arch))
+}
+
+/// Score without feasibility checking (hot path for search loops that
+/// already maintain feasibility invariants).
+pub fn score_unchecked(m: &Mapping, shape: GemmShape, arch: &Accelerator) -> OracleScore {
+    let nest = LoopNest::render(m, shape);
+    let c = count(m, &nest);
+    let v = shape.volume() as f64;
+
+    let mut dynamic = arch.ert.macc * v; // Eq. 28 compute term
+    let mut dram_words = 0.0;
+    let mut sram_words = 0.0;
+
+    for &d in &AXES {
+        // Residency chain for this data type: DRAM always; SRAM/RF gated.
+        // Fixed-size buffer — this is the oracle's hot loop.
+        let mut chain = [0usize; 4];
+        let mut len = 1;
+        if m.b1.get(d) {
+            chain[len] = 1;
+            len += 1;
+        }
+        if m.b3.get(d) {
+            chain[len] = 3;
+            len += 1;
+        }
+        chain[len] = 4;
+        len += 1;
+
+        for w in chain[..len].windows(2) {
+            let (s, r) = (w[0], w[1]);
+            let n = receiver_counts(&c, r, d);
+            // Multicast/spatial-reduction share: hops that cross the PE
+            // array amortize source-side words by the fanout along the
+            // data type's irrelevant axis (§IV-E2/E3).
+            let share = if s <= 1 && r >= 3 {
+                m.spatial_fanout(d) as f64
+            } else {
+                1.0
+            };
+
+            let (src_words, rcv_energy, src_energy);
+            if d == Axis::Z {
+                // Partial sums: N write-backs to the source, plus
+                // (N − inits) old-value re-reads delivered back down. The
+                // receiver-side read for write-back is not charged
+                // (Timeloop convention, §IV-D preamble).
+                let reads_old = (n - z_inits(&c, r)).max(0.0);
+                src_words = n / share + reads_old / share;
+                src_energy =
+                    (n / share) * arch.ert.write(s) + (reads_old / share) * arch.ert.read(s);
+                rcv_energy = reads_old * arch.ert.write(r);
+            } else {
+                // Inputs: N words delivered; source reads amortized by
+                // multicast, receiver pays a write per word.
+                src_words = n / share;
+                src_energy = (n / share) * arch.ert.read(s);
+                rcv_energy = n * arch.ert.write(r);
+            }
+            dynamic += src_energy + rcv_energy;
+
+            if s == 0 {
+                dram_words += src_words;
+            }
+            if s == 1 {
+                sram_words += src_words;
+            }
+            if r == 1 {
+                // words landing in SRAM (writes) also occupy the GLB port
+                sram_words += if d == Axis::Z {
+                    (n - z_inits(&c, r)).max(0.0) + n // old-value writes + write-back stores
+                } else {
+                    n
+                };
+            }
+        }
+    }
+
+    // Latency: compute-bound lower bound vs. bandwidth bounds.
+    let pes = m.pes_used().max(1) as f64;
+    let compute_cycles = v / pes;
+    let dram_cycles = dram_words / arch.dram_bw_words_per_cycle;
+    let sram_cycles = sram_words / arch.sram_bw_words_per_cycle;
+    let cycles = compute_cycles.max(dram_cycles).max(sram_cycles);
+
+    let leak = (arch.ert.sram_leak + arch.ert.rf_leak * arch.num_pe as f64) * cycles;
+    let energy_pj = dynamic + leak;
+    let seconds = cycles * arch.cycle_seconds();
+    OracleScore {
+        energy_pj,
+        cycles,
+        seconds,
+        edp: energy_pj * 1e-12 * seconds,
+        utilization: pes / arch.num_pe as f64,
+        dram_words,
+        sram_words,
+        dynamic_pj: dynamic,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Accelerator;
+    use crate::mapping::{Bypass, Tile};
+
+    fn arch() -> Accelerator {
+        Accelerator::custom("t", 1 << 20, 8, 1 << 12)
+    }
+
+    fn mapping() -> (Mapping, GemmShape) {
+        let shape = GemmShape::new(64, 64, 64);
+        let m = Mapping {
+            l1: Tile::new(32, 32, 32),
+            l2: Tile::new(8, 8, 8),
+            l3: Tile::new(4, 4, 4),
+            alpha01: Axis::Y,
+            alpha12: Axis::Z,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        };
+        (m, shape)
+    }
+
+    #[test]
+    fn oracle_matches_goma_closed_form_on_nondegenerate_mapping() {
+        // The headline consistency claim (§IV-G1): on mappings without
+        // degenerate loop bounds the two independently derived models agree
+        // to floating-point precision on dynamic energy.
+        let (m, shape) = mapping();
+        let a = arch();
+        let oracle = score(&m, shape, &a, true).unwrap();
+        let goma = crate::energy::evaluate(&m, shape, &a);
+        let goma_dynamic = goma.normalized * shape.volume() as f64;
+        let rel = (oracle.dynamic_pj - goma_dynamic).abs() / goma_dynamic;
+        assert!(
+            rel < 1e-12,
+            "oracle {} vs goma {} (rel {rel})",
+            oracle.dynamic_pj,
+            goma_dynamic
+        );
+    }
+
+    #[test]
+    fn full_pe_mapping_hits_compute_bound_or_bw() {
+        let (m, shape) = mapping();
+        let a = arch();
+        let s = score(&m, shape, &a, true).unwrap();
+        assert!(s.utilization == 1.0);
+        assert!(s.cycles >= shape.volume() as f64 / a.num_pe as f64);
+        assert!(s.edp > 0.0);
+    }
+
+    #[test]
+    fn underutilized_mapping_is_slower() {
+        let (m, shape) = mapping();
+        let a = arch();
+        let mut lazy = m;
+        lazy.l3 = Tile::new(8, 4, 4); // fanout 1*2*2 = 4 < 8 PEs
+        let s_full = score(&m, shape, &a, true).unwrap();
+        let s_lazy = score(&lazy, shape, &a, false).unwrap();
+        assert!(s_lazy.cycles > s_full.cycles);
+        assert!(s_lazy.utilization < 1.0);
+    }
+
+    #[test]
+    fn infeasible_mapping_rejected() {
+        let (mut m, shape) = mapping();
+        m.l1.x = 48; // 64 % 48 != 0
+        assert!(score(&m, shape, &arch(), true).is_err());
+    }
+
+    #[test]
+    fn energy_includes_leakage() {
+        let (m, shape) = mapping();
+        let a = arch();
+        let s = score(&m, shape, &a, true).unwrap();
+        assert!(s.energy_pj > s.dynamic_pj);
+    }
+
+    #[test]
+    fn beta_gamma_order_invariance_claim() {
+        // §IV-A3: the order of the two non-walking axes does not affect
+        // counting. Our canonical rendering fixes one order; flipping the
+        // workload symmetrically (x↔y swap with matching walk axes) must
+        // give identical energy by symmetry of the model.
+        let a = arch();
+        let shape = GemmShape::new(32, 64, 16);
+        let m = Mapping {
+            l1: Tile::new(16, 32, 8),
+            l2: Tile::new(8, 8, 4),
+            l3: Tile::new(4, 4, 2), // fanout 2*2*2 = 8
+            alpha01: Axis::Z,
+            alpha12: Axis::Z,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        };
+        let swapped_shape = GemmShape::new(64, 32, 16);
+        let swapped = Mapping {
+            l1: Tile::new(32, 16, 8),
+            l2: Tile::new(8, 8, 4),
+            l3: Tile::new(4, 4, 2),
+            alpha01: Axis::Z,
+            alpha12: Axis::Z,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        };
+        let s1 = score(&m, shape, &a, true).unwrap();
+        let s2 = score(&swapped, swapped_shape, &a, true).unwrap();
+        assert!((s1.dynamic_pj - s2.dynamic_pj).abs() / s1.dynamic_pj < 1e-12);
+    }
+}

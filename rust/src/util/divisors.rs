@@ -1,0 +1,142 @@
+//! Divisor and prime-factor machinery.
+//!
+//! GOMA's folded search space enumerates, per axis, divisor chains
+//! `L^(3) | L^(2) | L^(1) | L^(0)` (Eq. 4 divisibility nesting). All of that
+//! reduces to fast divisor enumeration of the global GEMM dimensions, which
+//! for LLM shapes are highly composite (powers of two times small odd
+//! factors), so sorted divisor lists stay small (tens of entries even for
+//! 128k-scale dims).
+
+/// Prime factorization as `(prime, multiplicity)` pairs, ascending by prime.
+///
+/// Trial division is ample: mapping dimensions are ≤ a few 10^5 and the
+/// function is called once per GEMM axis, then memoized by the solver.
+pub fn factorize(mut n: u64) -> Vec<(u64, u32)> {
+    assert!(n >= 1, "factorize() requires n >= 1");
+    let mut out = Vec::new();
+    let mut p = 2u64;
+    while p * p <= n {
+        if n % p == 0 {
+            let mut m = 0u32;
+            while n % p == 0 {
+                n /= p;
+                m += 1;
+            }
+            out.push((p, m));
+        }
+        p += if p == 2 { 1 } else { 2 };
+    }
+    if n > 1 {
+        out.push((n, 1));
+    }
+    out
+}
+
+/// All divisors of `n`, sorted ascending.
+pub fn divisors(n: u64) -> Vec<u64> {
+    let facs = factorize(n);
+    let mut ds = vec![1u64];
+    for (p, m) in facs {
+        let prev = ds.clone();
+        let mut pk = 1u64;
+        for _ in 0..m {
+            pk *= p;
+            ds.extend(prev.iter().map(|d| d * pk));
+        }
+    }
+    ds.sort_unstable();
+    ds
+}
+
+/// Number of divisors of `n` (d(n)); used for search-space size reporting.
+pub fn num_divisors(n: u64) -> u64 {
+    factorize(n).iter().map(|&(_, m)| (m as u64) + 1).product()
+}
+
+/// All ordered triples `(a, b, c)` with `a*b*c == n`.
+///
+/// Used to enumerate PE-array spatial factorizations of `num_pe` across the
+/// three axes (Eq. 29). For powers of two like 256 or 65536 this is a few
+/// dozen to a few hundred triples.
+pub fn ordered_factor_triples(n: u64) -> Vec<(u64, u64, u64)> {
+    let mut out = Vec::new();
+    for a in divisors(n) {
+        let rem = n / a;
+        for b in divisors(rem) {
+            out.push((a, b, rem / b));
+        }
+    }
+    out
+}
+
+/// Greatest common divisor.
+pub fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Divisors of `n` that are also ≤ `cap`, sorted ascending.
+pub fn divisors_up_to(n: u64, cap: u64) -> Vec<u64> {
+    divisors(n).into_iter().filter(|&d| d <= cap).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorize_small() {
+        assert_eq!(factorize(1), vec![]);
+        assert_eq!(factorize(2), vec![(2, 1)]);
+        assert_eq!(factorize(12), vec![(2, 2), (3, 1)]);
+        assert_eq!(factorize(97), vec![(97, 1)]);
+        assert_eq!(factorize(1 << 17), vec![(2, 17)]);
+    }
+
+    #[test]
+    fn divisors_sorted_and_complete() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        let ds = divisors(4096);
+        assert_eq!(ds.len(), 13);
+        assert!(ds.windows(2).all(|w| w[0] < w[1]));
+        for &d in &ds {
+            assert_eq!(4096 % d, 0);
+        }
+    }
+
+    #[test]
+    fn num_divisors_matches_list() {
+        for n in [1u64, 2, 12, 60, 1024, 4096, 65536, 3 * 1024] {
+            assert_eq!(num_divisors(n), divisors(n).len() as u64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn factor_triples_product_invariant() {
+        for n in [1u64, 8, 256, 360] {
+            let ts = ordered_factor_triples(n);
+            assert!(ts.iter().all(|&(a, b, c)| a * b * c == n));
+            // count = sum over divisors a of d(n/a)
+            let expect: u64 = divisors(n).iter().map(|&a| num_divisors(n / a)).sum();
+            assert_eq!(ts.len() as u64, expect);
+        }
+    }
+
+    #[test]
+    fn gcd_basic() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(gcd(5, 0), 5);
+    }
+
+    #[test]
+    fn divisors_up_to_caps() {
+        assert_eq!(divisors_up_to(12, 4), vec![1, 2, 3, 4]);
+        assert_eq!(divisors_up_to(12, 100), divisors(12));
+    }
+}

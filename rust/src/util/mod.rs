@@ -1,0 +1,11 @@
+//! Shared numeric utilities: divisor/prime machinery used by the folded
+//! mapping search space, and statistics helpers used by the evaluation
+//! pipeline (geomean / median / percentiles of normalized EDP and runtime).
+
+pub mod divisors;
+pub mod rng;
+pub mod stats;
+
+pub use divisors::{divisors, divisors_up_to, factorize, gcd, num_divisors, ordered_factor_triples};
+pub use rng::Rng;
+pub use stats::{geomean, median, percentile, Summary};

@@ -1,0 +1,233 @@
+//! LLM prefill workloads (paper §V-A1).
+//!
+//! The evaluation uses four representative models — edge (Qwen3-0.6B,
+//! LLaMA-3.2-1B) and center (Qwen3-32B, LLaMA-3.3-70B) — at three input
+//! lengths each ({1k, 8k, 32k} edge, {2k, 32k, 128k} center): 12 workloads.
+//! Every matrix multiplication of the prefill phase is enumerated and
+//! grouped into eight GEMM types; each type is one mapping instance whose
+//! EDP is weighted by its occurrence count `w_g` in the prefill compute
+//! graph (Eq. 35), derived from the model structural parameters
+//! (#layers, #heads, GQA kv-heads) exactly as the paper does.
+
+pub mod conv;
+pub mod dit;
+mod models;
+
+pub use conv::{resnet50_layers, ConvShape};
+pub use dit::{dit_gemms, dit_xl_2, DitConfig};
+pub use models::{llama_3_2_1b, llama_3_3_70b, qwen3_0_6b, qwen3_32b, ModelConfig};
+
+use crate::mapping::GemmShape;
+
+/// The eight GEMM types of the prefill phase (paper §V-A1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemmType {
+    AttnQProj,
+    AttnKvProj,
+    AttnScore,
+    AttnContext,
+    AttnOutput,
+    MlpGateUp,
+    MlpDown,
+    LmHead,
+}
+
+impl GemmType {
+    pub const ALL: [GemmType; 8] = [
+        GemmType::AttnQProj,
+        GemmType::AttnKvProj,
+        GemmType::AttnScore,
+        GemmType::AttnContext,
+        GemmType::AttnOutput,
+        GemmType::MlpGateUp,
+        GemmType::MlpDown,
+        GemmType::LmHead,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmType::AttnQProj => "attn_q_proj",
+            GemmType::AttnKvProj => "attn_kv_proj",
+            GemmType::AttnScore => "attn_score",
+            GemmType::AttnContext => "attn_context",
+            GemmType::AttnOutput => "attn_output",
+            GemmType::MlpGateUp => "mlp_gate_up",
+            GemmType::MlpDown => "mlp_down",
+            GemmType::LmHead => "lm_head",
+        }
+    }
+}
+
+/// One mapping instance: a GEMM type, its shape, and its occurrence count
+/// `w_g` in the prefill graph (Eq. 35).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmInstance {
+    pub ty: GemmType,
+    pub shape: GemmShape,
+    pub weight: u64,
+}
+
+/// Edge vs. center deployment class (pairs workloads with templates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deployment {
+    Edge,
+    Center,
+}
+
+/// One evaluation workload: a model at a given prefill length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub name: String,
+    pub model: ModelConfig,
+    pub seq_len: u64,
+    pub deployment: Deployment,
+    pub gemms: Vec<GemmInstance>,
+}
+
+/// Enumerate the eight prefill GEMM instances of `model` at length `s`.
+///
+/// Shape convention (`GemmShape::mnk`): `x = M` (rows of the activation),
+/// `y = N` (output features), `z = K` (reduction). `lm_head` applies to the
+/// last position only — the "matrix-vector" shape the paper calls out
+/// (§V-B2a).
+pub fn prefill_gemms(model: &ModelConfig, s: u64) -> Vec<GemmInstance> {
+    let h = model.hidden;
+    let q_dim = model.heads * model.head_dim;
+    let kv_dim = model.kv_heads * model.head_dim;
+    let l = model.layers;
+    vec![
+        GemmInstance {
+            ty: GemmType::AttnQProj,
+            shape: GemmShape::mnk(s, q_dim, h),
+            weight: l,
+        },
+        GemmInstance {
+            ty: GemmType::AttnKvProj,
+            shape: GemmShape::mnk(s, kv_dim, h),
+            weight: 2 * l, // K and V projections
+        },
+        GemmInstance {
+            ty: GemmType::AttnScore,
+            shape: GemmShape::mnk(s, s, model.head_dim),
+            weight: model.heads * l, // per head, per layer
+        },
+        GemmInstance {
+            ty: GemmType::AttnContext,
+            shape: GemmShape::mnk(s, model.head_dim, s),
+            weight: model.heads * l,
+        },
+        GemmInstance {
+            ty: GemmType::AttnOutput,
+            shape: GemmShape::mnk(s, h, q_dim),
+            weight: l,
+        },
+        GemmInstance {
+            ty: GemmType::MlpGateUp,
+            shape: GemmShape::mnk(s, model.intermediate, h),
+            weight: 2 * l, // gate and up projections
+        },
+        GemmInstance {
+            ty: GemmType::MlpDown,
+            shape: GemmShape::mnk(s, h, model.intermediate),
+            weight: l,
+        },
+        GemmInstance {
+            ty: GemmType::LmHead,
+            // Prefill emits logits for the last position only.
+            shape: GemmShape::mnk(1, model.vocab, h),
+            weight: 1,
+        },
+    ]
+}
+
+fn workload(model: ModelConfig, s: u64, deployment: Deployment) -> Workload {
+    let gemms = prefill_gemms(&model, s);
+    Workload {
+        name: format!("{}({}k)", model.name, s / 1024),
+        model,
+        seq_len: s,
+        deployment,
+        gemms,
+    }
+}
+
+/// The six edge workloads ({1k, 8k, 32k} × {Qwen3-0.6B, LLaMA-3.2-1B}).
+pub fn edge_workloads() -> Vec<Workload> {
+    let mut out = Vec::new();
+    for s in [1u64 << 10, 1 << 13, 1 << 15] {
+        out.push(workload(qwen3_0_6b(), s, Deployment::Edge));
+        out.push(workload(llama_3_2_1b(), s, Deployment::Edge));
+    }
+    out
+}
+
+/// The six center workloads ({2k, 32k, 128k} × {Qwen3-32B, LLaMA-3.3-70B}).
+pub fn center_workloads() -> Vec<Workload> {
+    let mut out = Vec::new();
+    for s in [1u64 << 11, 1 << 15, 1 << 17] {
+        out.push(workload(qwen3_32b(), s, Deployment::Center));
+        out.push(workload(llama_3_3_70b(), s, Deployment::Center));
+    }
+    out
+}
+
+/// All 12 workloads in edge-then-center order.
+pub fn all_workloads() -> Vec<Workload> {
+    let mut w = edge_workloads();
+    w.extend(center_workloads());
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_workloads_eight_gemms_each() {
+        let ws = all_workloads();
+        assert_eq!(ws.len(), 12);
+        for w in &ws {
+            assert_eq!(w.gemms.len(), 8);
+            // distinct types, positive weights
+            for g in &w.gemms {
+                assert!(g.weight >= 1);
+                assert!(g.shape.volume() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn llama1b_shapes_at_1k() {
+        let g = prefill_gemms(&llama_3_2_1b(), 1024);
+        let q = g.iter().find(|g| g.ty == GemmType::AttnQProj).unwrap();
+        assert_eq!(q.shape, GemmShape::mnk(1024, 2048, 2048));
+        assert_eq!(q.weight, 16);
+        let kv = g.iter().find(|g| g.ty == GemmType::AttnKvProj).unwrap();
+        assert_eq!(kv.shape, GemmShape::mnk(1024, 512, 2048));
+        assert_eq!(kv.weight, 32);
+        let score = g.iter().find(|g| g.ty == GemmType::AttnScore).unwrap();
+        assert_eq!(score.shape, GemmShape::mnk(1024, 1024, 64));
+        assert_eq!(score.weight, 32 * 16);
+        let lm = g.iter().find(|g| g.ty == GemmType::LmHead).unwrap();
+        assert_eq!(lm.shape, GemmShape::mnk(1, 128256, 2048));
+        assert_eq!(lm.weight, 1);
+    }
+
+    #[test]
+    fn lm_head_is_matrix_vector() {
+        for w in all_workloads() {
+            let lm = w.gemms.iter().find(|g| g.ty == GemmType::LmHead).unwrap();
+            assert_eq!(lm.shape.x, 1);
+        }
+    }
+
+    #[test]
+    fn deployment_split() {
+        assert!(edge_workloads().iter().all(|w| w.deployment == Deployment::Edge));
+        assert!(center_workloads()
+            .iter()
+            .all(|w| w.deployment == Deployment::Center));
+        assert_eq!(edge_workloads().len(), 6);
+        assert_eq!(center_workloads().len(), 6);
+    }
+}

@@ -1,0 +1,104 @@
+//! Structural parameters of the four evaluated models (paper §V-A1).
+//!
+//! The paper derives occurrence weights and GEMM shapes from the public
+//! model configurations ("model structural parameters and source-code
+//! parsing"); these are the published `config.json` values.
+
+
+/// Transformer structural parameters sufficient to enumerate every prefill
+/// GEMM (weights/data are irrelevant to mapping, only shapes matter).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub hidden: u64,
+    pub layers: u64,
+    pub heads: u64,
+    /// Grouped-query-attention KV heads.
+    pub kv_heads: u64,
+    pub head_dim: u64,
+    /// MLP intermediate size (per gate/up projection).
+    pub intermediate: u64,
+    pub vocab: u64,
+}
+
+/// Qwen3-0.6B (edge): 28 layers, d=1024, 16 Q / 8 KV heads, head_dim 128.
+pub fn qwen3_0_6b() -> ModelConfig {
+    ModelConfig {
+        name: "Qwen3-0.6B".into(),
+        hidden: 1024,
+        layers: 28,
+        heads: 16,
+        kv_heads: 8,
+        head_dim: 128,
+        intermediate: 3072,
+        vocab: 151_936,
+    }
+}
+
+/// LLaMA-3.2-1B (edge): 16 layers, d=2048, 32 Q / 8 KV heads, head_dim 64.
+pub fn llama_3_2_1b() -> ModelConfig {
+    ModelConfig {
+        name: "LLaMA-3.2-1B".into(),
+        hidden: 2048,
+        layers: 16,
+        heads: 32,
+        kv_heads: 8,
+        head_dim: 64,
+        intermediate: 8192,
+        vocab: 128_256,
+    }
+}
+
+/// Qwen3-32B (center): 64 layers, d=5120, 64 Q / 8 KV heads, head_dim 128.
+pub fn qwen3_32b() -> ModelConfig {
+    ModelConfig {
+        name: "Qwen3-32B".into(),
+        hidden: 5120,
+        layers: 64,
+        heads: 64,
+        kv_heads: 8,
+        head_dim: 128,
+        intermediate: 25_600,
+        vocab: 151_936,
+    }
+}
+
+/// LLaMA-3.3-70B (center): 80 layers, d=8192, 64 Q / 8 KV heads,
+/// head_dim 128.
+pub fn llama_3_3_70b() -> ModelConfig {
+    ModelConfig {
+        name: "LLaMA-3.3-70B".into(),
+        hidden: 8192,
+        layers: 80,
+        heads: 64,
+        kv_heads: 8,
+        head_dim: 128,
+        intermediate: 28_672,
+        vocab: 128_256,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dims_consistent() {
+        // For the LLaMA family hidden = heads × head_dim; Qwen3 decouples
+        // head_dim from hidden (128 regardless).
+        let l1 = llama_3_2_1b();
+        assert_eq!(l1.heads * l1.head_dim, l1.hidden);
+        let l70 = llama_3_3_70b();
+        assert_eq!(l70.heads * l70.head_dim, l70.hidden);
+        assert_eq!(qwen3_0_6b().head_dim, 128);
+        assert_eq!(qwen3_32b().head_dim, 128);
+    }
+
+    #[test]
+    fn gqa_ratio_sane() {
+        for m in [qwen3_0_6b(), llama_3_2_1b(), qwen3_32b(), llama_3_3_70b()] {
+            assert!(m.kv_heads <= m.heads);
+            assert_eq!(m.heads % m.kv_heads, 0, "{}", m.name);
+        }
+    }
+}

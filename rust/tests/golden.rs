@@ -1,0 +1,52 @@
+//! Golden regression values: certified optimal energies for the
+//! LLaMA-3.2-1B(1k) prefill GEMMs on the Eyeriss-like template.
+//!
+//! These pin the *entire* modeling + solving stack (ERT generation, closed
+//! form, constraints, branch-and-bound): any semantic drift in Eqs. 10-33,
+//! the capacity constraints, or the templates shows up as a golden diff
+//! here long before it would surface as a subtly-wrong experiment.
+
+use goma::arch::eyeriss_like;
+use goma::solver::{solve, SolverOptions};
+use goma::workloads::{llama_3_2_1b, prefill_gemms, GemmType};
+
+const GOLDEN: [(GemmType, f64); 8] = [
+    (GemmType::AttnQProj, 2.9663),
+    (GemmType::AttnKvProj, 2.9663),
+    (GemmType::AttnScore, 4.1712),
+    (GemmType::AttnContext, 4.2305),
+    (GemmType::AttnOutput, 2.9663),
+    (GemmType::MlpGateUp, 2.9663),
+    (GemmType::MlpDown, 2.9278),
+    (GemmType::LmHead, 113.4867),
+];
+
+#[test]
+fn golden_optimal_energies_llama1b_on_eyeriss() {
+    let arch = eyeriss_like();
+    let gemms = prefill_gemms(&llama_3_2_1b(), 1024);
+    for (ty, expect) in GOLDEN {
+        let g = gemms.iter().find(|g| g.ty == ty).unwrap();
+        let r = solve(g.shape, &arch, SolverOptions::default())
+            .unwrap_or_else(|e| panic!("{}: {e}", ty.name()));
+        assert!(r.certificate.proved_optimal);
+        let got = r.energy.normalized;
+        assert!(
+            (got - expect).abs() < 5e-4 * expect,
+            "{}: optimal energy drifted: got {got:.4}, golden {expect:.4}",
+            ty.name()
+        );
+    }
+}
+
+#[test]
+fn golden_certificate_node_counts_are_stable_order() {
+    // Not exact counts (pruning order may evolve) but the magnitude must
+    // stay in the fast-solve regime the paper claims (§V-C1).
+    let arch = eyeriss_like();
+    let g = prefill_gemms(&llama_3_2_1b(), 1024)[0];
+    let r = solve(g.shape, &arch, SolverOptions::default()).unwrap();
+    assert!(r.certificate.nodes < 5_000_000, "node blow-up: {}", r.certificate.nodes);
+    assert!(r.certificate.combos_pruned * 10 > r.certificate.combos_total * 9,
+        "pruning rate collapsed: {}/{}", r.certificate.combos_pruned, r.certificate.combos_total);
+}

@@ -1,0 +1,234 @@
+//! Property-based tests over randomized instances (hand-rolled generators —
+//! the offline registry has no proptest; every property sweeps many seeded
+//! random draws and shrink-prints the failing instance).
+//!
+//! Invariants covered:
+//! * solver global optimality vs. independent exhaustive enumeration;
+//! * closed-form (GOMA) vs. loop-nest (Timeloop-lite) model consistency:
+//!   the oracle never exceeds the closed form (its reuse analysis is a
+//!   strict refinement) and matches it exactly on non-degenerate mappings;
+//! * feasibility invariants of the random-mapping generator;
+//! * oracle EDP algebra (`edp = E·T`);
+//! * coordinator bookkeeping (all requests answered, ≤1 solve per key).
+
+use goma::arch::Accelerator;
+use goma::energy::evaluate;
+use goma::mapping::{validate, GemmShape};
+use goma::solver::{exhaustive_best, solve, SolverOptions};
+use goma::timeloop::{score, score_unchecked, LoopNest, StageId};
+use goma::util::Rng;
+
+/// Random small-but-composite extent.
+fn rand_extent(rng: &mut Rng) -> u64 {
+    let choices = [4u64, 6, 8, 12, 16, 24, 32];
+    *rng.choose(&choices).unwrap()
+}
+
+fn rand_shape(rng: &mut Rng) -> GemmShape {
+    GemmShape::new(rand_extent(rng), rand_extent(rng), rand_extent(rng))
+}
+
+fn rand_arch(rng: &mut Rng, i: u64) -> Accelerator {
+    let pes = [2u64, 4, 8, 16];
+    let rf = [8u64, 16, 64, 256];
+    let sram = [1u64 << 10, 1 << 12, 1 << 14];
+    Accelerator::custom(
+        &format!("prop{i}"),
+        *rng.choose(&sram).unwrap(),
+        *rng.choose(&pes).unwrap(),
+        *rng.choose(&rf).unwrap(),
+    )
+}
+
+#[test]
+fn property_solver_matches_exhaustive() {
+    let mut rng = Rng::seed_from_u64(2024);
+    let mut verified = 0;
+    for i in 0..12 {
+        let shape = rand_shape(&mut rng);
+        let arch = rand_arch(&mut rng, i);
+        let solved = solve(shape, &arch, SolverOptions::default());
+        let brute = exhaustive_best(shape, &arch);
+        match (solved, brute) {
+            (Ok(r), Some((bm, be))) => {
+                assert!(
+                    (r.energy.normalized - be).abs() <= 1e-9 * be,
+                    "instance {i} {shape} on {}: bnb={} brute={} (bnb {:?} vs brute {:?})",
+                    arch.name,
+                    r.energy.normalized,
+                    be,
+                    r.mapping,
+                    bm
+                );
+                assert!(r.certificate.verify(&r.mapping, shape, &arch));
+                verified += 1;
+            }
+            (Err(_), None) => {} // consistently infeasible
+            (s, b) => panic!(
+                "feasibility disagreement on {shape}: solver={:?} brute={:?}",
+                s.map(|r| r.mapping),
+                b
+            ),
+        }
+    }
+    assert!(verified >= 6, "too few feasible instances: {verified}");
+}
+
+#[test]
+fn property_oracle_never_exceeds_closed_form() {
+    // The oracle's reuse analysis is a refinement of the closed form
+    // (degenerate loops only add compression), so its dynamic energy is
+    // ≤ the closed form's — and equal when no loop bound is 1.
+    let mut rng = Rng::seed_from_u64(77);
+    let mut checked = 0;
+    let mut exact = 0;
+    while checked < 400 {
+        let shape = rand_shape(&mut rng);
+        let arch = rand_arch(&mut rng, 999);
+        let Some(m) = goma::mappers::random_feasible(shape, &arch, &mut rng, false) else {
+            continue;
+        };
+        checked += 1;
+        let goma_dyn = evaluate(&m, shape, &arch).normalized * shape.volume() as f64;
+        let oracle_dyn = score_unchecked(&m, shape, &arch).dynamic_pj;
+        assert!(
+            oracle_dyn <= goma_dyn * (1.0 + 1e-9),
+            "oracle above closed form for {m:?} on {shape}: {oracle_dyn} > {goma_dyn}"
+        );
+        // Non-degenerate mappings must agree exactly.
+        let nest = LoopNest::render(&m, shape);
+        let degenerate = nest
+            .loops
+            .iter()
+            .any(|l| l.bound == 1 && l.stage != StageId::Spatial && l.stage != StageId::RfTemporal);
+        if !degenerate {
+            assert!(
+                (oracle_dyn - goma_dyn).abs() <= 1e-9 * goma_dyn,
+                "non-degenerate mismatch: {oracle_dyn} vs {goma_dyn} for {m:?}"
+            );
+            exact += 1;
+        }
+    }
+    // Random draws are usually degenerate somewhere (tile == extent is
+    // common), so only a handful of fully non-degenerate mappings appear —
+    // but each one must match the closed form exactly.
+    assert!(exact >= 3, "too few non-degenerate samples: {exact}");
+}
+
+#[test]
+fn property_random_feasible_always_scores() {
+    let mut rng = Rng::seed_from_u64(5150);
+    let mut n = 0;
+    while n < 300 {
+        let shape = rand_shape(&mut rng);
+        let arch = rand_arch(&mut rng, 5);
+        if let Some(m) = goma::mappers::random_feasible(shape, &arch, &mut rng, false) {
+            n += 1;
+            let s = score(&m, shape, &arch, false).expect("feasible must score");
+            assert!(s.energy_pj.is_finite() && s.energy_pj > 0.0);
+            assert!(s.cycles >= shape.volume() as f64 / arch.num_pe as f64 - 1e-9);
+        }
+    }
+}
+
+#[test]
+fn property_oracle_edp_algebra() {
+    let mut rng = Rng::seed_from_u64(31337);
+    let mut n = 0;
+    while n < 100 {
+        let shape = rand_shape(&mut rng);
+        let arch = rand_arch(&mut rng, 11);
+        if let Some(m) = goma::mappers::random_feasible(shape, &arch, &mut rng, false) {
+            n += 1;
+            let s = score_unchecked(&m, shape, &arch);
+            let expect = s.energy_pj * 1e-12 * s.seconds;
+            assert!(
+                (s.edp - expect).abs() <= 1e-15 * expect.max(1e-30),
+                "edp algebra broken: {} vs {expect}",
+                s.edp
+            );
+            assert!((s.seconds - s.cycles * arch.cycle_seconds()).abs() < 1e-12 * s.seconds);
+        }
+    }
+}
+
+#[test]
+fn property_solution_dominates_random_samples() {
+    // For random instances, no random feasible full-PE mapping may beat the
+    // solver's certificate (upper bound == true optimum).
+    let mut rng = Rng::seed_from_u64(404);
+    for i in 0..6 {
+        let shape = rand_shape(&mut rng);
+        let arch = rand_arch(&mut rng, 100 + i);
+        let Ok(r) = solve(shape, &arch, SolverOptions::default()) else {
+            continue;
+        };
+        let mut tried = 0;
+        while tried < 60 {
+            if let Some(m) = goma::mappers::random_feasible(shape, &arch, &mut rng, true) {
+                tried += 1;
+                let e = evaluate(&m, shape, &arch).normalized;
+                assert!(
+                    e >= r.energy.normalized - 1e-9,
+                    "random beat certificate: {e} < {} for {m:?}",
+                    r.energy.normalized
+                );
+            } else {
+                tried += 1; // count failed draws so sparse spaces terminate
+            }
+        }
+    }
+}
+
+#[test]
+fn property_validate_rejects_mutations() {
+    // Mutating any tile length of a feasible mapping to a non-divisor must
+    // be caught by validation.
+    let mut rng = Rng::seed_from_u64(8088);
+    let shape = GemmShape::new(16, 24, 32);
+    let arch = Accelerator::custom("mut", 1 << 14, 4, 64);
+    let mut found = 0;
+    while found < 50 {
+        let Some(m) = goma::mappers::random_feasible(shape, &arch, &mut rng, false) else {
+            continue;
+        };
+        found += 1;
+        let mut bad = m;
+        // +1 on a tile length breaks divisibility almost surely; if the
+        // mutated value happens to still divide, skip.
+        bad.l1.x += 1;
+        if shape.x % bad.l1.x == 0 && bad.l1.x % bad.l2.x == 0 {
+            continue;
+        }
+        assert!(validate(&bad, shape, &arch, false).is_err());
+    }
+}
+
+#[test]
+fn property_coordinator_bookkeeping() {
+    use goma::coordinator::MappingService;
+    let mut rng = Rng::seed_from_u64(99);
+    let handle = MappingService::default().spawn();
+    let arch = Accelerator::custom("propsvc", 1 << 14, 8, 64);
+    let shapes: Vec<GemmShape> = (0..20).map(|_| rand_shape(&mut rng)).collect();
+    let mut distinct: Vec<GemmShape> = shapes.clone();
+    distinct.sort_by_key(|s| (s.x, s.y, s.z));
+    distinct.dedup();
+    let pendings: Vec<_> = shapes
+        .iter()
+        .map(|&s| handle.submit(s, arch.clone()))
+        .collect();
+    let mut answered = 0;
+    for p in pendings {
+        let _ = p.wait(); // Ok or infeasible — both are answers
+        answered += 1;
+    }
+    assert_eq!(answered, 20);
+    let (req, solves, ..) = handle.metrics().snapshot();
+    assert_eq!(req, 20);
+    assert!(
+        solves <= distinct.len() as u64,
+        "solves {solves} > distinct keys {}",
+        distinct.len()
+    );
+}
