@@ -43,6 +43,10 @@ fn report(label: &str, xs: &[f64]) {
 fn main() {
     println!("== §Perf: solver hot path ==");
 
+    // CI bench-rot smoke: GOMA_SMOKE=1 trims the pair set and iteration
+    // counts so the harness exercises every code path in seconds.
+    let smoke = std::env::var("GOMA_SMOKE").is_ok();
+
     // Full-workload solve latency, edge and center.
     let mut edge_pairs = Vec::new();
     for w in edge_workloads() {
@@ -61,10 +65,20 @@ fn main() {
             }
         }
     }
+    if smoke {
+        edge_pairs.truncate(6);
+        center_pairs.truncate(2);
+    }
     let edge_t = time_solves(&edge_pairs);
     let center_t = time_solves(&center_pairs);
-    report("edge solves (96 GEMMs)", &edge_t);
-    report("center solves (96 GEMMs)", &center_t);
+    report(
+        &format!("edge solves ({} GEMMs)", edge_pairs.len()),
+        &edge_t,
+    );
+    report(
+        &format!("center solves ({} GEMMs)", center_pairs.len()),
+        &center_t,
+    );
     let all: Vec<f64> = edge_t.iter().chain(center_t.iter()).cloned().collect();
     report("all solves", &all);
 
@@ -72,7 +86,7 @@ fn main() {
     let shape = GemmShape::mnk(131072, 28672, 8192);
     let arch = goma::arch::a100_like();
     let m = solve(shape, &arch, SolverOptions::default()).unwrap().mapping;
-    let n = 200_000;
+    let n = if smoke { 20_000 } else { 200_000 };
     let t = Instant::now();
     let mut acc = 0.0;
     for _ in 0..n {
@@ -86,7 +100,7 @@ fn main() {
     // Oracle scoring latency (the baselines' inner loop).
     let t = Instant::now();
     let mut acc2 = 0.0;
-    let n2 = 50_000;
+    let n2 = if smoke { 5_000 } else { 50_000 };
     for _ in 0..n2 {
         acc2 += score_unchecked(&m, shape, &arch).edp;
     }

@@ -38,7 +38,11 @@ fn main() {
         }
     }
     println!();
-    println!("\npaper     :      1.00       2.24        3.91        4.17        4.24        98.5   (geomean)");
+    print!("\n{:<10}", "paper");
+    for v in [1.00, 2.24, 3.91, 4.17, 4.24, 98.5] {
+        print!("{v:>12.2}");
+    }
+    println!("   (geomean)");
 
     // Shape checks: GOMA == 1; every baseline strictly > 1; CoSA closest.
     let get = |name: &str| rows.iter().find(|(m, ..)| m == name).unwrap().1;

@@ -30,7 +30,11 @@ fn main() {
         print!("{med:>12.2}");
     }
     println!();
-    println!("\npaper     :      1.00        3.83       23.3        11.0        73.6        43.5   (geomean)");
+    print!("\n{:<10}", "paper");
+    for v in [1.00, 3.83, 23.3, 11.0, 73.6, 43.5] {
+        print!("{v:>12.2}");
+    }
+    println!("   (geomean)");
 
     let get = |name: &str| rows.iter().find(|(m, ..)| m == name).unwrap().1;
     assert!((get("GOMA") - 1.0).abs() < 1e-9);

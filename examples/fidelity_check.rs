@@ -17,7 +17,8 @@ fn main() {
     println!("fidelity over {} mappings:", report.total());
     println!("  exact          : {:.2}%", report.exact_rate() * 100.0);
     println!("  mean rel err   : {:.4}%", report.mean_rel_err() * 100.0);
-    println!("  p95 / p99      : {:.4}% / {:.4}%",
+    println!(
+        "  p95 / p99      : {:.4}% / {:.4}%",
         report.err_percentile(95.0) * 100.0,
         report.err_percentile(99.0) * 100.0
     );

@@ -22,7 +22,6 @@
 //! Absolute values are approximations; the mapping-ranking experiments only
 //! require the cross-level *ratios* to be realistic (DESIGN.md §2).
 
-
 /// External-memory interface kind (Table I "DRAM" column).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DramKind {

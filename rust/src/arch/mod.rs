@@ -20,7 +20,6 @@ pub use templates::{
     tpu_v1_like,
 };
 
-
 /// A concrete spatial-accelerator instance (one row of Table I plus the
 /// derived ERT and timing/bandwidth parameters used by the latency model).
 ///

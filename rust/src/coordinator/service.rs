@@ -92,16 +92,9 @@ impl ServiceHandle {
 }
 
 /// The mapping service: owns the cache, drains the queue in batches.
+#[derive(Default)]
 pub struct MappingService {
     options: SolverOptions,
-}
-
-impl Default for MappingService {
-    fn default() -> Self {
-        MappingService {
-            options: SolverOptions::default(),
-        }
-    }
 }
 
 impl MappingService {

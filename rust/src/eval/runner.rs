@@ -5,6 +5,7 @@ use crate::arch::Accelerator;
 use crate::mappers::{Mapper, MapperResult};
 use crate::mapping::{GemmShape, Mapping};
 use crate::timeloop::{score, OracleScore};
+use crate::util::parallel::ordered_map;
 use crate::util::Rng;
 use crate::workloads::{GemmInstance, GemmType};
 use std::time::Duration;
@@ -53,11 +54,7 @@ fn rescue(shape: GemmShape, arch: &Accelerator) -> Option<Mapping> {
 }
 
 /// Run one mapper on one GEMM instance, rescuing on failure.
-pub fn run_gemm(
-    mapper: &dyn Mapper,
-    g: &GemmInstance,
-    arch: &Accelerator,
-) -> Option<GemmOutcome> {
+pub fn run_gemm(mapper: &dyn Mapper, g: &GemmInstance, arch: &Accelerator) -> Option<GemmOutcome> {
     let (result, fell_back): (MapperResult, bool) = match mapper.map(g.shape, arch) {
         Some(r) => (r, false),
         None => {
@@ -85,21 +82,38 @@ pub fn run_gemm(
     })
 }
 
-/// Run one mapper over a full case and aggregate per Eq. 35.
+/// Run one mapper over a full case and aggregate per Eq. 35 (serial; the
+/// single-worker degenerate case of [`run_case_jobs`]).
 pub fn run_case(mapper: &dyn Mapper, case: &Case) -> CaseOutcome {
-    let mut gemms = Vec::with_capacity(case.workload.gemms.len());
+    run_case_jobs(mapper, case, 1)
+}
+
+/// [`run_case`] with the case's GEMMs fanned out across `jobs` workers —
+/// the request-path API for mapping a fresh workload quickly (the batch
+/// sweep fans out the full grid itself, see
+/// [`crate::experiments::cases::run_all_jobs`]).
+///
+/// Each GEMM instance is mapped and scored independently (the solver and
+/// oracle are pure functions of `(shape, arch)`), then the outcomes are
+/// aggregated in workload order — so for any mapper with a deterministic
+/// search budget (GOMA and every baseline except the wall-clock-capped
+/// CoSA), `edp_case` / `energy_case` are bit-identical to the serial path
+/// for every `jobs` value. Wall-clock `search_runtime` entries vary run to
+/// run regardless (they are measured times).
+pub fn run_case_jobs(mapper: &dyn Mapper, case: &Case, jobs: usize) -> CaseOutcome {
+    let gemms = ordered_map(&case.workload.gemms, jobs, |_, g| {
+        run_gemm(mapper, g, &case.arch)
+            .unwrap_or_else(|| panic!("no feasible mapping at all for {:?} {}", g.ty, g.shape))
+    });
     let mut edp_case = 0.0;
     let mut energy_case = 0.0;
     let mut search_runtime = Duration::ZERO;
     let mut fallbacks = 0;
-    for g in &case.workload.gemms {
-        let out = run_gemm(mapper, g, &case.arch)
-            .unwrap_or_else(|| panic!("no feasible mapping at all for {:?} {}", g.ty, g.shape));
-        edp_case += g.weight as f64 * out.oracle.edp;
-        energy_case += g.weight as f64 * out.oracle.energy_pj;
+    for out in &gemms {
+        edp_case += out.weight as f64 * out.oracle.edp;
+        energy_case += out.weight as f64 * out.oracle.energy_pj;
         search_runtime += out.search_runtime;
         fallbacks += out.fell_back as u32;
-        gemms.push(out);
     }
     CaseOutcome {
         mapper: mapper.name().to_string(),
@@ -163,5 +177,49 @@ mod tests {
             .map(|g| g.weight as f64 * g.oracle.edp)
             .sum();
         assert!((out.edp_case - manual).abs() < 1e-18);
+    }
+
+    #[test]
+    fn parallel_case_is_bit_identical_to_serial() {
+        // The tentpole invariant: fanning the GEMMs across a worker pool
+        // must not perturb the Eq. 35 aggregates by even one ULP.
+        let arch = Accelerator::custom("t", 1 << 18, 16, 64);
+        let model = crate::workloads::ModelConfig {
+            name: "tiny".into(),
+            hidden: 64,
+            layers: 2,
+            heads: 4,
+            kv_heads: 2,
+            head_dim: 16,
+            intermediate: 128,
+            vocab: 256,
+        };
+        let case = Case {
+            workload: crate::workloads::Workload {
+                name: "tiny(0k)".into(),
+                model: model.clone(),
+                seq_len: 64,
+                deployment: crate::workloads::Deployment::Edge,
+                gemms: prefill_gemms(&model, 64),
+            },
+            arch,
+        };
+        let serial = run_case(&GomaMapper::default(), &case);
+        for jobs in [2, 4, 8] {
+            let par = run_case_jobs(&GomaMapper::default(), &case, jobs);
+            assert_eq!(par.edp_case.to_bits(), serial.edp_case.to_bits(), "jobs={jobs}");
+            assert_eq!(
+                par.energy_case.to_bits(),
+                serial.energy_case.to_bits(),
+                "jobs={jobs}"
+            );
+            assert_eq!(par.fallbacks, serial.fallbacks);
+            assert_eq!(par.gemms.len(), serial.gemms.len());
+            for (p, s) in par.gemms.iter().zip(serial.gemms.iter()) {
+                assert_eq!(p.ty, s.ty);
+                assert_eq!(p.mapping, s.mapping);
+                assert_eq!(p.oracle.edp.to_bits(), s.oracle.edp.to_bits());
+            }
+        }
     }
 }

@@ -8,8 +8,8 @@
 //! frozen and reports the energy regression vs. full GOMA.
 
 use crate::arch::Accelerator;
-use crate::energy::{evaluate, axis_input, axis_term};
-use crate::mapping::{Axis, Bypass, GemmShape, Mapping, validate};
+use crate::energy::{axis_input, axis_term, evaluate};
+use crate::mapping::{validate, Axis, Bypass, GemmShape, Mapping};
 use crate::solver::{enumerate_all, solve, SolverOptions};
 
 /// Result of one ablated solve: optimal energy with the dimension frozen.
@@ -144,11 +144,7 @@ fn frozen_best(
                                 }
                                 let m = Mapping {
                                     l1: crate::mapping::Tile::new(l1x, l1y, l1z),
-                                    l2: crate::mapping::Tile::new(
-                                        l3x * sx,
-                                        l3y * sy,
-                                        l3z * sz,
-                                    ),
+                                    l2: crate::mapping::Tile::new(l3x * sx, l3y * sy, l3z * sz),
                                     l3: crate::mapping::Tile::new(l3x, l3y, l3z),
                                     alpha01: a01,
                                     alpha12: a12,

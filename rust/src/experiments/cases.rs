@@ -6,7 +6,7 @@
 //! file or set `GOMA_REFRESH=1` to recompute.
 
 use super::Profile;
-use crate::eval::{all_cases, run_case};
+use crate::eval::{all_cases, run_gemm};
 use crate::mappers::{
     cosa::Cosa, factorflow::FactorFlow, loma::Loma, salsa::Salsa,
     timeloop_hybrid::TimeloopHybrid, GomaMapper, Mapper,
@@ -14,7 +14,7 @@ use crate::mappers::{
 use crate::util::{geomean, median};
 use std::collections::BTreeMap;
 use std::io::Write;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 /// Mapper roster order used in every table (GOMA first, Table II order).
@@ -112,43 +112,89 @@ fn cache_path(profile: Profile) -> PathBuf {
     PathBuf::from("target").join(format!("goma_cases_{tag}.tsv"))
 }
 
-/// Run the full sweep fresh (expensive: minutes under `Fast`).
+/// Run the full sweep fresh (expensive: minutes under `Fast`) with
+/// [`crate::util::parallel::default_jobs`] workers (serial unless
+/// `GOMA_JOBS` is set — the sweep times each mapper's search, and those
+/// wall-clock numbers are only comparable without worker contention).
 pub fn run_all(profile: Profile) -> Vec<CaseRecord> {
-    let mut out = Vec::new();
+    run_all_jobs(profile, crate::util::parallel::default_jobs())
+}
+
+/// [`run_all`] with an explicit worker count — the `--jobs` knob of
+/// `goma eval`.
+///
+/// Fans the full 24-case × 6-mapper × 8-GEMM grid (1152 units) across the
+/// worker pool and reassembles results in the serial sweep order, so every
+/// mapper whose search budget is deterministic (GOMA and all baselines
+/// except CoSA — they are node/iteration/sample-capped with fixed seeds)
+/// produces mappings and Eq. 35 EDP/energy aggregates bit-identical to
+/// `jobs == 1`. CoSA is wall-clock-capped (the paper's 300 s-style limit),
+/// so its rows were never run-to-run reproducible — serial or parallel —
+/// once the cap binds; expect them to vary with machine load. Measured
+/// `search_s` fields are wall-clock and vary under contention for
+/// everyone.
+pub fn run_all_jobs(profile: Profile, jobs: usize) -> Vec<CaseRecord> {
     let cases = all_cases();
+    // One roster per case; a mapper instance is shared read-only across its
+    // case's eight GEMMs.
+    let rosters: Vec<Vec<Box<dyn Mapper>>> =
+        cases.iter().map(|_| mappers_for(profile, 0xC0FFEE)).collect();
+    // The grid in serial sweep order: case-major, then mapper, then GEMM.
+    let mut units: Vec<(usize, usize, usize)> = Vec::new();
     for (ci, case) in cases.iter().enumerate() {
-        for mapper in mappers_for(profile, 0xC0FFEE) {
+        for mi in 0..rosters[ci].len() {
+            for gi in 0..case.workload.gemms.len() {
+                units.push((ci, mi, gi));
+            }
+        }
+    }
+    let outs = crate::util::parallel::ordered_map(&units, jobs, |_, &(ci, mi, gi)| {
+        let case = &cases[ci];
+        let mapper = rosters[ci][mi].as_ref();
+        if gi == 0 {
             eprintln!(
                 "[cases {}/{}] {} × {}",
-                ci + 1,
-                cases.len(),
+                ci * rosters[ci].len() + mi + 1,
+                cases.len() * rosters[ci].len(),
                 case.name(),
                 mapper.name()
             );
-            let outcome = run_case(mapper.as_ref(), case);
-            out.push(CaseRecord {
-                case_name: outcome.case_name,
-                mapper: outcome.mapper,
-                gemms: outcome
-                    .gemms
-                    .iter()
-                    .map(|g| GemmRecord {
-                        ty: g.ty.name().to_string(),
-                        weight: g.weight,
-                        edp: g.oracle.edp,
-                        energy_pj: g.oracle.energy_pj,
-                        search_s: g.search_runtime.as_secs_f64(),
-                        evaluations: g.evaluations,
-                        fell_back: g.fell_back,
-                    })
-                    .collect(),
+        }
+        let g = &case.workload.gemms[gi];
+        run_gemm(mapper, g, &case.arch)
+            .unwrap_or_else(|| panic!("no feasible mapping at all for {:?} {}", g.ty, g.shape))
+    });
+    // Regroup in grid order: per (case, mapper), the eight GemmOutcomes in
+    // workload order — the same order a serial run_case would produce, so
+    // CaseRecord::edp_case() sums identically.
+    let mut records = Vec::with_capacity(cases.len() * rosters[0].len());
+    let mut it = outs.into_iter();
+    for (ci, case) in cases.iter().enumerate() {
+        for mapper in &rosters[ci] {
+            let gemms: Vec<GemmRecord> = it
+                .by_ref()
+                .take(case.workload.gemms.len())
+                .map(|g| GemmRecord {
+                    ty: g.ty.name().to_string(),
+                    weight: g.weight,
+                    edp: g.oracle.edp,
+                    energy_pj: g.oracle.energy_pj,
+                    search_s: g.search_runtime.as_secs_f64(),
+                    evaluations: g.evaluations,
+                    fell_back: g.fell_back,
+                })
+                .collect();
+            records.push(CaseRecord {
+                case_name: case.name(),
+                mapper: mapper.name().to_string(),
+                gemms,
             });
         }
     }
-    out
+    records
 }
 
-fn save(records: &[CaseRecord], path: &PathBuf) -> std::io::Result<()> {
+fn save(records: &[CaseRecord], path: &Path) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -174,7 +220,7 @@ fn save(records: &[CaseRecord], path: &PathBuf) -> std::io::Result<()> {
     Ok(())
 }
 
-fn load(path: &PathBuf) -> Option<Vec<CaseRecord>> {
+fn load(path: &Path) -> Option<Vec<CaseRecord>> {
     let text = std::fs::read_to_string(path).ok()?;
     let mut map: BTreeMap<(String, String), Vec<GemmRecord>> = BTreeMap::new();
     let mut order: Vec<(String, String)> = Vec::new();
@@ -216,17 +262,27 @@ fn load(path: &PathBuf) -> Option<Vec<CaseRecord>> {
 }
 
 /// Cached sweep: loads `target/goma_cases_<profile>.tsv` when present,
-/// otherwise runs fresh and saves.
+/// otherwise runs fresh (with the default worker count) and saves.
 pub fn cached(profile: Profile) -> Vec<CaseRecord> {
+    cached_jobs(profile, crate::util::parallel::default_jobs(), false)
+}
+
+/// [`cached`] with an explicit worker count and a force-refresh switch (the
+/// `GOMA_REFRESH` env var also forces a recompute). For every mapper with
+/// a deterministic search budget the cached rows are jobs-independent (see
+/// [`run_all_jobs`]); CoSA's wall-clock cap makes its rows load-dependent
+/// regardless of the worker count, and `search_s` timings are only
+/// comparable when the cache was written serially.
+pub fn cached_jobs(profile: Profile, jobs: usize, refresh: bool) -> Vec<CaseRecord> {
     let path = cache_path(profile);
-    let refresh = std::env::var("GOMA_REFRESH").is_ok();
+    let refresh = refresh || std::env::var("GOMA_REFRESH").is_ok();
     if !refresh {
         if let Some(r) = load(&path) {
             eprintln!("[cases] loaded {} records from {}", r.len(), path.display());
             return r;
         }
     }
-    let records = run_all(profile);
+    let records = run_all_jobs(profile, jobs);
     if let Err(e) = save(&records, &path) {
         eprintln!("[cases] cache write failed: {e}");
     }

@@ -32,6 +32,7 @@
 //! ```
 
 pub mod arch;
+pub mod cli;
 pub mod coordinator;
 pub mod energy;
 pub mod eval;

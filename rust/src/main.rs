@@ -1,253 +1,11 @@
-//! `goma` CLI: solve mappings, inspect templates/workloads, serve requests,
-//! and execute AOT artifacts. (Arg parsing is hand-rolled: the offline
-//! registry has no clap.)
-
-use goma::arch;
-use goma::coordinator::MappingService;
-use goma::mapping::GemmShape;
-use goma::solver::{solve, SolverOptions};
-use std::collections::HashMap;
-
-const USAGE: &str = "\
-goma — globally optimal GEMM mapping for spatial accelerators
-
-USAGE:
-    goma solve --m <M> --n <N> --k <K> [--arch eyeriss|gemmini|a100|tpu]
-    goma templates
-    goma workloads
-    goma serve [--arch <name>] [--workload <0-11>]
-    goma exec [--name <artifact>] [--dir <artifacts-dir>]
-    goma conv [--arch eyeriss|gemmini|a100|tpu]
-    goma help
-";
-
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
-    let mut out = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                out.insert(key.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                out.insert(key.to_string(), "true".to_string());
-                i += 1;
-            }
-        } else {
-            eprintln!("unexpected argument '{}'", args[i]);
-            i += 1;
-        }
-    }
-    out
-}
-
-fn pick_arch(name: &str) -> goma::arch::Accelerator {
-    match name {
-        "eyeriss" | "eyeriss-like" => arch::eyeriss_like(),
-        "gemmini" | "gemmini-like" => arch::gemmini_like(),
-        "a100" | "a100-like" => arch::a100_like(),
-        "tpu" | "tpu-v1-like" => arch::tpu_v1_like(),
-        other => {
-            eprintln!("unknown arch '{other}', using eyeriss-like");
-            arch::eyeriss_like()
-        }
-    }
-}
-
-fn req_u64(flags: &HashMap<String, String>, key: &str) -> u64 {
-    flags
-        .get(key)
-        .unwrap_or_else(|| panic!("missing required flag --{key}"))
-        .parse()
-        .unwrap_or_else(|_| panic!("flag --{key} must be an integer"))
-}
-
-fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let shape = GemmShape::mnk(
-        req_u64(flags, "m"),
-        req_u64(flags, "n"),
-        req_u64(flags, "k"),
-    );
-    let acc = pick_arch(flags.get("arch").map(String::as_str).unwrap_or("eyeriss"));
-    let r = solve(shape, &acc, SolverOptions::default())?;
-    println!("workload : {shape}");
-    println!("arch     : {}", acc.name);
-    println!("mapping  : {}", r.mapping.describe());
-    println!(
-        "energy   : {:.4} pJ/MAC ({:.3} µJ total)",
-        r.energy.normalized,
-        r.energy.total_pj / 1e6
-    );
-    println!(
-        "cert     : ub={:.6} lb={:.6} gap={:.1}% nodes={} ({} combos, {} pruned) in {:?}",
-        r.certificate.upper_bound,
-        r.certificate.lower_bound,
-        r.certificate.gap * 100.0,
-        r.certificate.nodes,
-        r.certificate.combos_total,
-        r.certificate.combos_pruned,
-        r.solve_time
-    );
-    println!("verified : {}", r.certificate.verify(&r.mapping, shape, &acc));
-    Ok(())
-}
-
-fn cmd_templates() {
-    println!(
-        "{:<14}{:>10}{:>8}{:>10}{:>6}  {}",
-        "name", "GLB KiB", "#PE", "RF w/PE", "nm", "DRAM"
-    );
-    for a in arch::all_templates() {
-        println!(
-            "{:<14}{:>10}{:>8}{:>10}{:>6}  {}",
-            a.name,
-            a.sram_words / 1024,
-            a.num_pe,
-            a.regfile_words,
-            a.tech_nm,
-            a.dram.name()
-        );
-    }
-}
-
-fn cmd_workloads() {
-    for (i, w) in goma::workloads::all_workloads().iter().enumerate() {
-        println!("[{i:2}] {} ({:?})", w.name, w.deployment);
-        for g in &w.gemms {
-            println!(
-                "      {:<14} {:>9}x{:<9}x{:<7} w={}",
-                g.ty.name(),
-                g.shape.x,
-                g.shape.y,
-                g.shape.z,
-                g.weight
-            );
-        }
-    }
-}
-
-fn cmd_serve(flags: &HashMap<String, String>) {
-    let acc = pick_arch(flags.get("arch").map(String::as_str).unwrap_or("eyeriss"));
-    let idx: usize = flags
-        .get("workload")
-        .map(|s| s.parse().expect("--workload must be an index"))
-        .unwrap_or(1);
-    let workloads = goma::workloads::all_workloads();
-    let w = workloads
-        .get(idx)
-        .unwrap_or_else(|| panic!("workload index {idx} out of range (0-11)"));
-    println!("serving {} on {}", w.name, acc.name);
-    let handle = MappingService::default().spawn();
-    // Submit all GEMMs up front (the service coalesces duplicates), then
-    // wait — the request-path pattern a compiler/serving stack would use.
-    let pendings: Vec<_> = w
-        .gemms
-        .iter()
-        .map(|g| (g.ty, g.shape, handle.submit(g.shape, acc.clone())))
-        .collect();
-    for (ty, shape, pending) in pendings {
-        match pending.wait() {
-            Ok(r) => println!(
-                "{:<14} {:>10}x{:<7}x{:<7} -> {:.4} pJ/MAC, cert gap {:.0}%, {:?}",
-                ty.name(),
-                shape.x,
-                shape.y,
-                shape.z,
-                r.energy.normalized,
-                r.certificate.gap * 100.0,
-                r.solve_time
-            ),
-            Err(e) => println!("{:<14} -> error: {e}", ty.name()),
-        }
-    }
-    let (req, solves, hits, coalesced, errs) = handle.metrics().snapshot();
-    println!(
-        "service: {req} requests, {solves} solves, {hits} cache hits, \
-         {coalesced} coalesced, {errs} errors"
-    );
-}
-
-fn cmd_exec(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let dir = flags
-        .get("dir")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(goma::runtime::artifacts_dir);
-    let name = flags
-        .get("name")
-        .map(String::as_str)
-        .unwrap_or("quickstart_gemm");
-    let manifest = goma::runtime::registry_manifest(&dir)?;
-    let spec = manifest
-        .iter()
-        .find(|s| s.name == name)
-        .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
-    let mut rt = goma::runtime::Runtime::cpu()?;
-    rt.load_hlo_text(&spec.name, &spec.path(&dir))?;
-    let inputs: Vec<(Vec<f32>, Vec<i64>)> = spec
-        .inputs
-        .iter()
-        .map(|dims| {
-            let n: i64 = dims.iter().product();
-            (
-                (0..n).map(|i| (i % 7) as f32 * 0.25).collect(),
-                dims.clone(),
-            )
-        })
-        .collect();
-    let out = rt.execute_f32(&spec.name, &inputs)?;
-    println!(
-        "executed '{}' on {}: output {} elements, first 4 = {:?}",
-        spec.name,
-        rt.platform(),
-        out.len(),
-        &out[..out.len().min(4)]
-    );
-    Ok(())
-}
-
-/// §III-D4: certified mappings for CNN layers via im2col lowering.
-fn cmd_conv(flags: &HashMap<String, String>) {
-    let acc = pick_arch(flags.get("arch").map(String::as_str).unwrap_or("eyeriss"));
-    println!(
-        "{:<12}{:>26}{:>14}{:>12}{:>12}",
-        "layer", "im2col GEMM (x,y,z)", "pJ/MAC", "gap", "time"
-    );
-    for (name, conv) in goma::workloads::resnet50_layers() {
-        let g = conv.to_gemm();
-        match solve(g, &acc, SolverOptions::default()) {
-            Ok(r) => println!(
-                "{:<12}{:>26}{:>14.4}{:>12.0}{:>11.1?}",
-                name,
-                format!("{}x{}x{}", g.x, g.y, g.z),
-                r.energy.normalized,
-                r.certificate.gap,
-                r.solve_time
-            ),
-            Err(e) => println!("{name:<12} -> {e}"),
-        }
-    }
-}
+//! `goma` binary: a thin wrapper over [`goma::cli`]. Arg parsing and
+//! command dispatch live in the library so `cargo test` covers them.
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let Some(cmd) = args.first() else {
-        print!("{USAGE}");
-        return Ok(());
-    };
-    let flags = parse_flags(&args[1..]);
-    match cmd.as_str() {
-        "solve" => cmd_solve(&flags)?,
-        "templates" => cmd_templates(),
-        "workloads" => cmd_workloads(),
-        "serve" => cmd_serve(&flags),
-        "exec" => cmd_exec(&flags)?,
-        "conv" => cmd_conv(&flags),
-        "help" | "--help" | "-h" => print!("{USAGE}"),
-        other => {
-            eprintln!("unknown command '{other}'\n");
-            print!("{USAGE}");
-            std::process::exit(2);
-        }
+    let code = goma::cli::run(&args)?;
+    if code != 0 {
+        std::process::exit(code);
     }
     Ok(())
 }

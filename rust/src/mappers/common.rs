@@ -80,7 +80,7 @@ pub fn apply_preset_bypass(m: &mut Mapping, arch: &Accelerator) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    
+
     #[test]
     fn random_draws_are_valid_divisor_chains() {
         let shape = GemmShape::new(48, 64, 80);

@@ -97,11 +97,7 @@ impl<'a> Dfs<'a> {
             self.t3[1] * self.sp[1],
             self.t3[2] * self.sp[2],
         );
-        let l1 = Tile::new(
-            l2.x * self.t1[0],
-            l2.y * self.t1[1],
-            l2.z * self.t1[2],
-        );
+        let l1 = Tile::new(l2.x * self.t1[0], l2.y * self.t1[1], l2.z * self.t1[2]);
         // Permutation heuristic (one-shot, no cost-model iteration): walk
         // the axis with the longest loop at each stage — the choice that
         // maximizes the surrogate's notion of reuse.

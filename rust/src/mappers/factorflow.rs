@@ -12,8 +12,7 @@ use crate::arch::Accelerator;
 use crate::mapping::{validate, Bypass, GemmShape, Mapping, Tile, AXES};
 use crate::solver::spatial_triples;
 use crate::timeloop::score_unchecked;
-use crate::util::{divisors, factorize};
-use crate::util::Rng;
+use crate::util::{divisors, factorize, Rng};
 use std::time::Instant;
 
 pub struct FactorFlow {

@@ -46,7 +46,11 @@ pub struct MapperResult {
 }
 
 /// A mapping-space-exploration algorithm.
-pub trait Mapper {
+///
+/// `Send + Sync` is a supertrait so the evaluation pipeline can share one
+/// mapper across the worker threads of [`crate::util::parallel::ordered_map`]
+/// (every mapper is plain seeded data, so the bound is free).
+pub trait Mapper: Send + Sync {
     fn name(&self) -> &'static str;
     /// Search for a mapping; `None` when the algorithm finds nothing
     /// feasible within its budget.
@@ -54,16 +58,9 @@ pub trait Mapper {
 }
 
 /// GOMA itself, wrapped as a [`Mapper`] for the unified evaluation pipeline.
+#[derive(Default)]
 pub struct GomaMapper {
     pub options: crate::solver::SolverOptions,
-}
-
-impl Default for GomaMapper {
-    fn default() -> Self {
-        GomaMapper {
-            options: crate::solver::SolverOptions::default(),
-        }
-    }
 }
 
 impl Mapper for GomaMapper {

@@ -13,8 +13,7 @@ use crate::arch::Accelerator;
 use crate::mapping::{validate, GemmShape, Mapping, AXES};
 use crate::solver::spatial_triples;
 use crate::timeloop::score_unchecked;
-use crate::util::divisors;
-use crate::util::Rng;
+use crate::util::{divisors, Rng};
 use std::time::Instant;
 
 pub struct Salsa {

@@ -56,7 +56,7 @@ impl Mapper for TimeloopHybrid {
         let mut best: Option<(Mapping, f64)> = None;
         let mut evaluations = 0;
         for t in 0..self.threads {
-            let mut rng = Rng::seed_from_u64(self.seed ^ (t as u64) << 32);
+            let mut rng = Rng::seed_from_u64(self.seed ^ ((t as u64) << 32));
             let mut streak = 0u64;
             let mut thread_best = f64::INFINITY;
             let mut draws = 0u64;

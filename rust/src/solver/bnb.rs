@@ -243,11 +243,7 @@ pub fn solve(
                                         ub = base + cz.f;
                                         best = Some(Mapping {
                                             l1: Tile::new(cx.l1, cy.l1, cz.l1),
-                                            l2: Tile::new(
-                                                cx.l3 * sx,
-                                                cy.l3 * sy,
-                                                cz.l3 * sz,
-                                            ),
+                                            l2: Tile::new(cx.l3 * sx, cy.l3 * sy, cz.l3 * sz),
                                             l3: Tile::new(cx.l3, cy.l3, cz.l3),
                                             alpha01: a01,
                                             alpha12: a12,

@@ -28,7 +28,6 @@ pub use bnb::{solve, SolveError, SolveResult, SolverOptions};
 pub use candidates::{spatial_triples, AxisCandidate, CandidateCache};
 pub use exhaustive::{enumerate_all, exhaustive_best, MappingVisitor};
 
-
 /// Verifiable optimality certificate (paper contribution 3).
 ///
 /// `upper_bound` is the objective of the returned mapping; `lower_bound` is

@@ -108,24 +108,26 @@ pub fn score_unchecked(m: &Mapping, shape: GemmShape, arch: &Accelerator) -> Ora
                 1.0
             };
 
-            let (src_words, rcv_energy, src_energy);
-            if d == Axis::Z {
+            let (src_words, src_energy, rcv_energy) = if d == Axis::Z {
                 // Partial sums: N write-backs to the source, plus
                 // (N − inits) old-value re-reads delivered back down. The
                 // receiver-side read for write-back is not charged
                 // (Timeloop convention, §IV-D preamble).
                 let reads_old = (n - z_inits(&c, r)).max(0.0);
-                src_words = n / share + reads_old / share;
-                src_energy =
-                    (n / share) * arch.ert.write(s) + (reads_old / share) * arch.ert.read(s);
-                rcv_energy = reads_old * arch.ert.write(r);
+                (
+                    n / share + reads_old / share,
+                    (n / share) * arch.ert.write(s) + (reads_old / share) * arch.ert.read(s),
+                    reads_old * arch.ert.write(r),
+                )
             } else {
                 // Inputs: N words delivered; source reads amortized by
                 // multicast, receiver pays a write per word.
-                src_words = n / share;
-                src_energy = (n / share) * arch.ert.read(s);
-                rcv_energy = n * arch.ert.write(r);
-            }
+                (
+                    n / share,
+                    (n / share) * arch.ert.read(s),
+                    n * arch.ert.write(r),
+                )
+            };
             dynamic += src_energy + rcv_energy;
 
             if s == 0 {

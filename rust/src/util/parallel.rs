@@ -1,0 +1,122 @@
+//! Deterministic fan-out over a slice with a scoped worker pool.
+//!
+//! The evaluation pipeline's hot path is embarrassingly parallel — the
+//! solver and the Timeloop-lite oracle are pure functions of
+//! `(shape, arch)` — but the paper's Eq. 35 aggregation is a float sum, so
+//! result *order* must not depend on thread scheduling. `ordered_map` runs
+//! `f` over the items with up to `jobs` threads (`std::thread::scope`; the
+//! offline registry has no rayon) and reassembles results in input order,
+//! so any downstream reduction is bit-identical to a serial run.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` with up to `jobs` worker threads, returning the
+/// results in input order. `f` receives `(index, item)` so callers can log
+/// progress or label work. `jobs <= 1` degenerates to a plain serial map
+/// with zero thread overhead.
+///
+/// Workers claim indices from a shared atomic counter (work stealing by
+/// construction: an uneven item is no worse than the slowest single item),
+/// collect `(index, result)` pairs locally, and the pairs are sorted back
+/// into input order at the end — the scheduling never leaks into the
+/// output.
+pub fn ordered_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let jobs = jobs.clamp(1, items.len().max(1));
+    if jobs <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let collected: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    local.push((i, f(i, &items[i])));
+                }
+                collected.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut pairs = collected.into_inner().unwrap();
+    debug_assert_eq!(pairs.len(), items.len());
+    pairs.sort_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Default worker count: the `GOMA_JOBS` env override when set, otherwise
+/// 1 (serial). Serial is the default on purpose: the evaluation sweeps
+/// *time* each mapper's search (Table III / Fig. 8), and wall-clock
+/// measurements are only comparable without worker contention — so
+/// parallelism is opt-in via `--jobs` / `GOMA_JOBS`.
+pub fn default_jobs() -> usize {
+    if let Ok(v) = std::env::var("GOMA_JOBS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn ordered_map_preserves_input_order() {
+        let items: Vec<u64> = (0..97).collect();
+        for jobs in [1, 2, 4, 16] {
+            let out = ordered_map(&items, jobs, |i, &x| {
+                assert_eq!(i as u64, x);
+                x * x
+            });
+            let expect: Vec<u64> = items.iter().map(|&x| x * x).collect();
+            assert_eq!(out, expect, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn ordered_map_handles_degenerate_inputs() {
+        let empty: [u32; 0] = [];
+        assert!(ordered_map(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(ordered_map(&[7u32], 8, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let items: Vec<usize> = (0..50).collect();
+        let out = ordered_map(&items, 4, |i, _| i);
+        let distinct: HashSet<usize> = out.iter().copied().collect();
+        assert_eq!(distinct.len(), items.len());
+    }
+
+    #[test]
+    fn float_reduction_is_bit_identical_across_job_counts() {
+        // The property the eval pipeline depends on: reassembled order makes
+        // a left-to-right float sum independent of the worker count.
+        let items: Vec<f64> = (1..200).map(|i| 1.0 / i as f64).collect();
+        let sum = |jobs: usize| -> f64 {
+            ordered_map(&items, jobs, |_, &x| x * 1.0000001).iter().sum()
+        };
+        let serial = sum(1);
+        for jobs in [2, 3, 8] {
+            assert_eq!(sum(jobs).to_bits(), serial.to_bits(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

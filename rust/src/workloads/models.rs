@@ -4,7 +4,6 @@
 //! model configurations ("model structural parameters and source-code
 //! parsing"); these are the published `config.json` values.
 
-
 /// Transformer structural parameters sufficient to enumerate every prefill
 /// GEMM (weights/data are irrelevant to mapping, only shapes matter).
 #[derive(Debug, Clone, PartialEq, Eq)]

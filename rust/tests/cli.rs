@@ -1,0 +1,83 @@
+//! CLI smoke tests: drive `goma::cli` exactly as the binary's `main` does,
+//! so arg parsing and command dispatch are covered by `cargo test`.
+
+use goma::cli::{parse_flags, pick_arch, run};
+
+fn args(list: &[&str]) -> Vec<String> {
+    list.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn solve_smoke_llama1b_qproj_on_eyeriss() {
+    // The README quickstart invocation: a real certified solve end-to-end.
+    let a = args(&["solve", "--m", "1024", "--n", "2048", "--k", "2048", "--arch", "eyeriss"]);
+    assert_eq!(run(&a).unwrap(), 0);
+}
+
+#[test]
+fn templates_listing_runs() {
+    assert_eq!(run(&args(&["templates"])).unwrap(), 0);
+}
+
+#[test]
+fn workloads_listing_runs() {
+    assert_eq!(run(&args(&["workloads"])).unwrap(), 0);
+}
+
+#[test]
+fn help_and_empty_args_print_usage() {
+    assert_eq!(run(&args(&["help"])).unwrap(), 0);
+    assert_eq!(run(&args(&["--help"])).unwrap(), 0);
+    assert_eq!(run(&args(&[])).unwrap(), 0);
+}
+
+#[test]
+fn unknown_command_returns_exit_code_2() {
+    assert_eq!(run(&args(&["frobnicate"])).unwrap(), 2);
+}
+
+#[test]
+fn exec_without_artifacts_errors_cleanly() {
+    // No artifacts/ in a clean checkout: `exec` must surface an error, not
+    // panic (the manifest read is the failure point).
+    let r = run(&args(&["exec", "--dir", "/nonexistent-artifacts-dir"]));
+    assert!(r.is_err());
+}
+
+#[test]
+fn parse_flags_pairs_and_booleans() {
+    let f = parse_flags(&args(&["--m", "64", "--refresh", "--arch", "tpu"]));
+    assert_eq!(f.get("m").map(String::as_str), Some("64"));
+    assert_eq!(f.get("refresh").map(String::as_str), Some("true"));
+    assert_eq!(f.get("arch").map(String::as_str), Some("tpu"));
+    assert_eq!(f.len(), 3);
+}
+
+#[test]
+fn parse_flags_trailing_boolean() {
+    let f = parse_flags(&args(&["--jobs", "4", "--fresh"]));
+    assert_eq!(f.get("jobs").map(String::as_str), Some("4"));
+    assert_eq!(f.get("fresh").map(String::as_str), Some("true"));
+}
+
+#[test]
+fn pick_arch_resolves_all_templates_and_falls_back() {
+    assert_eq!(pick_arch("eyeriss").name, "eyeriss-like");
+    assert_eq!(pick_arch("gemmini-like").name, "gemmini-like");
+    assert_eq!(pick_arch("a100").name, "a100-like");
+    assert_eq!(pick_arch("tpu").name, "tpu-v1-like");
+    assert_eq!(pick_arch("wat").name, "eyeriss-like");
+}
+
+#[test]
+fn eval_rejects_bad_flags_before_running() {
+    assert!(run(&args(&["eval", "--jobs", "0"])).is_err());
+    assert!(run(&args(&["eval", "--jobs", "nope"])).is_err());
+    assert!(run(&args(&["eval", "--profile", "warp-speed"])).is_err());
+}
+
+#[test]
+#[should_panic(expected = "missing required flag --m")]
+fn solve_missing_required_flag_panics_with_message() {
+    let _ = run(&args(&["solve", "--n", "64", "--k", "64"]));
+}

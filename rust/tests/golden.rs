@@ -47,6 +47,10 @@ fn golden_certificate_node_counts_are_stable_order() {
     let g = prefill_gemms(&llama_3_2_1b(), 1024)[0];
     let r = solve(g.shape, &arch, SolverOptions::default()).unwrap();
     assert!(r.certificate.nodes < 5_000_000, "node blow-up: {}", r.certificate.nodes);
-    assert!(r.certificate.combos_pruned * 10 > r.certificate.combos_total * 9,
-        "pruning rate collapsed: {}/{}", r.certificate.combos_pruned, r.certificate.combos_total);
+    assert!(
+        r.certificate.combos_pruned * 10 > r.certificate.combos_total * 9,
+        "pruning rate collapsed: {}/{}",
+        r.certificate.combos_pruned,
+        r.certificate.combos_total
+    );
 }

@@ -1,0 +1,224 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so the workspace vendors the
+//! minimal API surface this repository uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait for `Result`/`Option`, and the `anyhow!` /
+//! `bail!` / `ensure!` macros. Semantics match the real crate for this
+//! subset (context wraps outermost-first; `Display` shows the outermost
+//! message; `Debug` shows the whole chain). Swap back to the registry crate
+//! by repointing the `anyhow` path dependency — no call sites change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost message plus the chain of causes beneath
+/// it (each context layer pushes a new outermost message).
+pub struct Error {
+    /// Messages outermost-first; always non-empty.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> + '_ {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes this blanket conversion legal.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context extension for `Result` and `Option`, as in the real crate.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// `Result<T, Error>` gets its own impl (chaining context onto an already
+// wrapped error). Coherence with the generic impl above holds for the same
+// reason the blanket `From` does: `Error` does not implement `StdError`,
+// and no downstream crate can add that impl.
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built from the arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("opening the manifest")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "opening the manifest");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| format!("step {}", 3))
+            .unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("step 3"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing thing"));
+    }
+
+    #[test]
+    fn option_context_yields_message() {
+        let e = None::<u32>.context("nothing here").unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert_eq!(inner(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(inner(7).unwrap_err().to_string(), "unlucky 7");
+        assert_eq!(anyhow!("plain {}", 5).to_string(), "plain 5");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_results() {
+        // The layering registry-style code relies on: context applied to a
+        // Result that is already anyhow-typed.
+        fn inner() -> Result<()> {
+            Err(anyhow!("inner failure"))
+        }
+        let e = inner()
+            .with_context(|| format!("line {}", 7))
+            .context("loading manifest")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest");
+        let msgs: Vec<&str> = e.chain().collect();
+        assert_eq!(msgs, ["loading manifest", "line 7", "inner failure"]);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+    }
+}

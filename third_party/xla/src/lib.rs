@@ -1,0 +1,198 @@
+//! Offline stub of the PJRT `xla` bindings.
+//!
+//! The build image carries no XLA/PJRT distribution, so this crate provides
+//! the exact API surface `goma::runtime` compiles against. Everything up to
+//! execution works for real — HLO text artifacts are read and sanity
+//! checked, literals carry data and shapes — but [`PjRtLoadedExecutable::execute`]
+//! returns an honest error instead of running the computation. The
+//! integration tests and examples already gate the execution leg on
+//! `artifacts/manifest.tsv` existing, so a clean checkout never hits it.
+//! Swap in real PJRT by repointing the `xla` path dependency — no call
+//! sites change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (mirrors the binding crate's opaque error).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A parsed (well, carried) HLO module in text form.
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an `.hlo.txt` artifact. Fails if the file is unreadable or is
+    /// clearly not HLO text.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(Path::new(path))
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return Err(Error(format!("{path}: no HloModule header (not HLO text?)")));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation(HloModuleProto);
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        XlaComputation(HloModuleProto {
+            text: proto.text.clone(),
+        })
+    }
+}
+
+/// Stub PJRT client ("cpu" platform).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// The host CPU backend. Always constructible in the stub.
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    /// "Compile" a computation: the stub validates and retains the HLO text.
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            hlo_text: computation.0.text.clone(),
+        })
+    }
+}
+
+/// A loaded executable (the stub holds the HLO text it would run).
+pub struct PjRtLoadedExecutable {
+    hlo_text: String,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execution is unavailable offline; returns an honest error.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(format!(
+            "PJRT execution unavailable in the offline xla stub ({} bytes of HLO loaded); \
+             point the workspace `xla` dependency at the real bindings to execute artifacts",
+            self.hlo_text.len()
+        )))
+    }
+}
+
+/// A device buffer holding one literal (never constructed by the stub's
+/// `execute`, but part of the API surface callers compile against).
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A host-side f32 literal with a shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// A rank-1 literal over `data`.
+    pub fn vec1(data: &[f32]) -> Self {
+        Literal {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// The literal's shape.
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Unwrap a 1-tuple result (identity in the stub's data model).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    /// The elements, converted from f32.
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_and_platform() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+    }
+
+    #[test]
+    fn missing_hlo_file_errors() {
+        let e = HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").unwrap_err();
+        assert!(e.to_string().contains("/nonexistent/x.hlo.txt"));
+    }
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.shape(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn execute_is_honestly_unavailable() {
+        let tmp = std::env::temp_dir().join("goma_xla_stub_test.hlo.txt");
+        std::fs::write(&tmp, "HloModule test\nENTRY main { ROOT x = f32[] constant(0) }")
+            .unwrap();
+        let proto = HloModuleProto::from_text_file(tmp.to_str().unwrap()).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let err = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(err.to_string().contains("offline xla stub"));
+    }
+}
