@@ -1,0 +1,128 @@
+//! §Perf — mapping-service throughput benchmark (sharded solve pool).
+//!
+//! Drives the coordinator with a 24-distinct-key batch at increasing
+//! worker-pool sizes and reports wall-clock, solves/s, and the speedup vs.
+//! the single-worker serial service; then exercises the persistent
+//! warm-start path on the `goma serve --workload 1` key set (identical
+//! fingerprints, so a cache dir populated by that CLI in another process —
+//! CI carries one across jobs — genuinely warms the first spawn): the
+//! second spawn must answer with **zero solves**.
+//!
+//! Run:   `cargo bench --bench coordinator_throughput`
+//! Smoke: `GOMA_SMOKE=1 cargo bench --bench coordinator_throughput`
+//! Env:   `GOMA_CACHE_DIR` overrides the warm-start dir
+//!        (default `target/goma_warm_bench`).
+
+use goma::arch::Accelerator;
+use goma::coordinator::MappingService;
+use goma::mapping::GemmShape;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// 24 distinct solve keys: 4 × 3 × 2 extent combinations.
+fn batch() -> Vec<GemmShape> {
+    let mut out = Vec::new();
+    for &x in &[64u64, 96, 128, 192] {
+        for &y in &[64u64, 128, 256] {
+            for &z in &[32u64, 64] {
+                out.push(GemmShape::new(x, y, z));
+            }
+        }
+    }
+    out
+}
+
+/// One service lifetime over the batch: returns (seconds, solves, hits).
+fn run_once(
+    workers: usize,
+    arch: &Accelerator,
+    shapes: &[GemmShape],
+    cache_dir: Option<&Path>,
+) -> (f64, u64, u64) {
+    let mut service = MappingService::default().with_workers(workers);
+    if let Some(dir) = cache_dir {
+        service = service.with_cache_dir(dir);
+    }
+    let handle = service.spawn();
+    let t = Instant::now();
+    let pendings = handle.submit_batch(arch, shapes);
+    for p in pendings {
+        p.wait().expect("bench instances are feasible");
+    }
+    let dt = t.elapsed().as_secs_f64();
+    let (_, solves, hits, ..) = handle.metrics().snapshot();
+    handle.shutdown(); // flush the warm store before the next spawn reads it
+    (dt, solves, hits)
+}
+
+fn main() {
+    let smoke = std::env::var("GOMA_SMOKE").is_ok();
+    let arch = Accelerator::custom("bench-pool", 1 << 17, 64, 64);
+    let mut shapes = batch();
+    if smoke {
+        shapes.truncate(8);
+    }
+    let reps = if smoke { 1 } else { 3 };
+
+    println!(
+        "== coordinator_throughput: {}-distinct-key batch, {} rep(s) ==",
+        shapes.len(),
+        reps
+    );
+    let mut serial_best = f64::INFINITY;
+    for &workers in &[1usize, 2, 4] {
+        let mut best = f64::INFINITY;
+        let mut solves = 0;
+        for _ in 0..reps {
+            let (dt, s, _) = run_once(workers, &arch, &shapes, None);
+            best = best.min(dt);
+            solves = s;
+        }
+        if workers == 1 {
+            serial_best = best;
+        }
+        println!(
+            "workers={workers}: best {best:.4}s  {:>7.1} solves/s  speedup x{:.2}  \
+             ({solves} solves)",
+            solves as f64 / best,
+            serial_best / best
+        );
+    }
+
+    // Warm-start path, keyed IDENTICALLY to `goma serve --workload 1
+    // --cache-dir` (eyeriss-like arch, default solver options): when CI
+    // restores the dir that job populated, the first spawn below is
+    // genuinely warm *cross-process* (watch for "0 solves" on the cold
+    // line). Locally the first spawn populates and the second must answer
+    // entirely from the store.
+    let explicit_dir = std::env::var("GOMA_CACHE_DIR").is_ok();
+    let dir = std::env::var("GOMA_CACHE_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target").join("goma_warm_bench"));
+    let store_existed = dir.join(goma::coordinator::WARM_CACHE_FILE).exists();
+    let serve_arch = goma::arch::eyeriss_like();
+    let workloads = goma::workloads::all_workloads();
+    let serve_shapes: Vec<GemmShape> = workloads[1].gemms.iter().map(|g| g.shape).collect();
+    let (cold_s, cold_solves, cold_hits) = run_once(4, &serve_arch, &serve_shapes, Some(&dir));
+    let (warm_s, warm_solves, warm_hits) = run_once(4, &serve_arch, &serve_shapes, Some(&dir));
+    println!(
+        "warm-start ({}): cold {cold_s:.4}s ({cold_solves} solves, {cold_hits} hits) -> \
+         warm {warm_s:.4}s ({warm_solves} solves, {warm_hits} hits)",
+        dir.display()
+    );
+    if explicit_dir && store_existed {
+        // An explicitly handed-over store (CI restores build-test's
+        // `goma serve --cache-dir` output) must fully warm the first spawn:
+        // this is the genuinely cross-process assertion, and it fails if
+        // the serve CLI's and this bench's fingerprint inputs ever drift.
+        assert_eq!(
+            cold_solves, 0,
+            "a pre-populated GOMA_CACHE_DIR store must warm the serve key set across processes"
+        );
+    }
+    assert_eq!(
+        warm_solves, 0,
+        "a spawn against a populated cache dir must not solve"
+    );
+    assert!(warm_hits > 0, "warm answers must come from the cache");
+}

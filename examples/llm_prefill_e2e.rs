@@ -35,20 +35,20 @@ fn main() -> anyhow::Result<()> {
     println!("=== GOMA end-to-end: {} on {} ===\n", workload.name, arch.name);
 
     // ---- 2. coordinator maps the whole prefill graph ---------------------
-    let handle = MappingService::default().spawn();
+    // The sharded service: the whole workload goes in as ONE batch call,
+    // distinct shapes fan out across the solve pool, duplicates coalesce.
+    let workers = goma::util::parallel::default_jobs();
+    let handle = MappingService::default().with_workers(workers).spawn();
     let t0 = Instant::now();
-    let pendings: Vec<_> = workload
-        .gemms
-        .iter()
-        .map(|g| (g, handle.submit(g.shape, arch.clone())))
-        .collect();
+    let shapes: Vec<_> = workload.gemms.iter().map(|g| g.shape).collect();
+    let pendings = handle.submit_batch(&arch, &shapes);
     let mut edp_case = 0.0;
     let mut energy_case = 0.0;
     println!(
         "{:<14}{:>24}{:>6}{:>12}{:>12}{:>8}",
         "gemm", "shape", "w", "pJ/MAC", "EDP (J*s)", "gap"
     );
-    for (g, pending) in pendings {
+    for (g, pending) in workload.gemms.iter().zip(pendings) {
         let r = pending.wait()?;
         assert!(r.certificate.proved_optimal, "{}", g.ty.name());
         assert!(r.certificate.verify(&r.mapping, g.shape, &arch));

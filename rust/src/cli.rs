@@ -21,7 +21,7 @@ USAGE:
     goma templates
     goma workloads
     goma eval [--jobs <N>] [--profile fast|paper] [--refresh]
-    goma serve [--arch <name>] [--workload <0-11>]
+    goma serve [--arch <name>] [--workload <0-11>] [--workers <N>] [--cache-dir <dir>]
     goma exec [--name <artifact>] [--dir <artifacts-dir>]
     goma conv [--arch eyeriss|gemmini|a100|tpu]
     goma help
@@ -172,45 +172,68 @@ fn cmd_eval(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(flags: &HashMap<String, String>) {
+/// The sharded mapping service on one workload: all GEMMs submitted as one
+/// batch (duplicates coalesce), distinct keys fanned across `--workers`
+/// solver threads, and — with `--cache-dir` — results persisted so the next
+/// process starts warm.
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let acc = pick_arch(flags.get("arch").map(String::as_str).unwrap_or("eyeriss"));
-    let idx: usize = flags
-        .get("workload")
-        .map(|s| s.parse().expect("--workload must be an index"))
-        .unwrap_or(1);
+    let idx: usize = match flags.get("workload") {
+        Some(s) => match s.parse() {
+            Ok(i) => i,
+            Err(_) => anyhow::bail!("--workload must be an index, got '{s}'"),
+        },
+        None => 1,
+    };
+    let workers = match flags.get("workers") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => anyhow::bail!("--workers must be a positive integer, got '{s}'"),
+        },
+        None => crate::util::parallel::default_jobs(),
+    };
     let workloads = crate::workloads::all_workloads();
-    let w = workloads
-        .get(idx)
-        .unwrap_or_else(|| panic!("workload index {idx} out of range (0-11)"));
-    println!("serving {} on {}", w.name, acc.name);
-    let handle = MappingService::default().spawn();
-    // Submit all GEMMs up front (the service coalesces duplicates), then
-    // wait — the request-path pattern a compiler/serving stack would use.
-    let pendings: Vec<_> = w
-        .gemms
-        .iter()
-        .map(|g| (g.ty, g.shape, handle.submit(g.shape, acc.clone())))
-        .collect();
-    for (ty, shape, pending) in pendings {
-        match pending.wait() {
+    let Some(w) = workloads.get(idx) else {
+        anyhow::bail!("workload index {idx} out of range (0-{})", workloads.len() - 1);
+    };
+    println!("serving {} on {} ({workers} worker(s))", w.name, acc.name);
+    let mut service = MappingService::default().with_workers(workers);
+    if let Some(dir) = flags.get("cache-dir") {
+        service = service.with_cache_dir(dir.as_str());
+    }
+    let handle = service.spawn();
+    // Submit the whole workload in one batch call — the request-path
+    // pattern a compiler/serving stack would use.
+    for (g, result) in w.gemms.iter().zip(handle.map_workload(w, &acc)) {
+        match result {
             Ok(r) => println!(
                 "{:<14} {:>10}x{:<7}x{:<7} -> {:.4} pJ/MAC, cert gap {:.0}%, {:?}",
-                ty.name(),
-                shape.x,
-                shape.y,
-                shape.z,
+                g.ty.name(),
+                g.shape.x,
+                g.shape.y,
+                g.shape.z,
                 r.energy.normalized,
                 r.certificate.gap * 100.0,
                 r.solve_time
             ),
-            Err(e) => println!("{:<14} -> error: {e}", ty.name()),
+            Err(e) => println!("{:<14} -> error: {e}", g.ty.name()),
         }
     }
-    let (req, solves, hits, coalesced, errs) = handle.metrics().snapshot();
+    let metrics = handle.metrics();
+    let (req, solves, hits, coalesced, errs) = metrics.snapshot();
+    let (warm, negative) = (metrics.warm_hits(), metrics.negative_hits());
     println!(
-        "service: {req} requests, {solves} solves, {hits} cache hits, \
-         {coalesced} coalesced, {errs} errors"
+        "service: {req} requests, {solves} solves, {hits} cache hits \
+         ({warm} warm, {negative} negative), {coalesced} coalesced, {errs} errors"
     );
+    println!(
+        "shards : hits/shard {:?}, queue depth {}",
+        metrics.per_shard_hits(),
+        metrics.queue_depth()
+    );
+    // Deterministic flush of the warm-start store (no-op without a dir).
+    handle.shutdown();
+    Ok(())
 }
 
 fn cmd_exec(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -287,7 +310,7 @@ pub fn run(args: &[String]) -> anyhow::Result<i32> {
         "templates" => cmd_templates(),
         "workloads" => cmd_workloads(),
         "eval" => cmd_eval(&flags)?,
-        "serve" => cmd_serve(&flags),
+        "serve" => cmd_serve(&flags)?,
         "exec" => cmd_exec(&flags)?,
         "conv" => cmd_conv(&flags),
         "help" | "--help" | "-h" => print!("{USAGE}"),

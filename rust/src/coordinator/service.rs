@@ -1,43 +1,178 @@
-//! The mapping service: queueing, coalescing, caching, metrics.
+//! The sharded mapping service: queueing, coalescing, a hash-sharded
+//! result cache, an N-worker solve pool, and a persistent warm-start store.
 //!
-//! Thread-based (the offline registry has no async runtime): a dedicated
-//! service thread owns the result cache and drains the request queue in
-//! batches, so duplicate in-flight requests coalesce into a single solve.
-//! Handles are cheap clones; the service thread exits when every handle is
-//! dropped.
+//! Thread-based (the offline registry has no async runtime). A dispatcher
+//! thread owns the sharded state and drains the request queue in batch
+//! windows; within a window requests group by **solve fingerprint** (the
+//! in-flight/coalescing table), cached keys — positive *and* negative —
+//! answer immediately, and the distinct uncached keys fan out to a
+//! [`crate::util::parallel::ordered_map`] scoped pool of `workers` threads.
+//! Each pooled solve builds its own `Rc`-based
+//! [`crate::solver::CandidateCache`] on its worker thread, so nothing
+//! non-`Send` ever crosses a thread boundary. Coalescing holds by
+//! construction: a key is grouped within its window and cached across
+//! windows, so at most one solve per in-flight key happens no matter how
+//! many duplicate requests race in from different client threads.
+//!
+//! The cache is hash-sharded by fingerprint (`fp % shards`, one shard per
+//! worker) with per-shard hit metrics; with a `--cache-dir`, shards are
+//! seeded from the on-disk warm store ([`super::warm`]) at spawn and merged
+//! back + flushed when the pool exits, making repeated runs warm across
+//! processes. Handles are cheap clones; the service exits when every handle
+//! is dropped, or deterministically via [`ServiceHandle::shutdown`].
 
+use super::warm::{WarmOutcome, WarmStore};
 use crate::arch::Accelerator;
 use crate::mapping::GemmShape;
 use crate::solver::{solve, SolveError, SolveResult, SolverOptions};
+use crate::util::parallel::ordered_map;
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
-/// Cache/coalescing key: a workload shape on a named hardware instance.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-struct Key {
-    shape: GemmShape,
-    arch: String,
+/// Fingerprint/on-disk format version. Mixed into every fingerprint and
+/// into the warm-store header: bumping it cold-starts every cache.
+pub const CACHE_FORMAT_VERSION: u32 = 1;
+
+/// Stable 64-bit FNV-1a over a canonical little-endian byte encoding.
+/// `HashMap`'s SipHash is randomly keyed per process, so the persistent
+/// store needs its own run-to-run-stable hash.
+struct Fnv(u64);
+
+const FNV_OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+impl Fnv {
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.bytes(&[v]);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+}
+
+/// The cache/coalescing/persistence key: a stable fingerprint of everything
+/// a solve's outcome depends on — the GEMM shape, the **full** architecture
+/// parameter set (capacities, PE count, node, DRAM kind, ERT, bandwidths,
+/// residency preset — deliberately *not* `arch.name`, which two different
+/// `Accelerator::custom` instances can share), the solver options, and
+/// [`CACHE_FORMAT_VERSION`].
+pub fn solve_fingerprint(shape: GemmShape, arch: &Accelerator, opts: SolverOptions) -> u64 {
+    let mut h = Fnv(FNV_OFFSET_BASIS);
+    h.u32(CACHE_FORMAT_VERSION);
+    h.u64(shape.x);
+    h.u64(shape.y);
+    h.u64(shape.z);
+    h.u64(arch.sram_words);
+    h.u64(arch.num_pe);
+    h.u64(arch.regfile_words);
+    h.u32(arch.tech_nm);
+    h.u8(arch.dram as u8);
+    h.f64(arch.clock_ghz);
+    h.f64(arch.dram_bw_words_per_cycle);
+    h.f64(arch.sram_bw_words_per_cycle);
+    h.u8(arch.preset_rf_residency.bits());
+    h.f64(arch.ert.dram_read);
+    h.f64(arch.ert.dram_write);
+    h.f64(arch.ert.sram_read);
+    h.f64(arch.ert.sram_write);
+    h.f64(arch.ert.rf_read);
+    h.f64(arch.ert.rf_write);
+    h.f64(arch.ert.macc);
+    h.f64(arch.ert.sram_leak);
+    h.f64(arch.ert.rf_leak);
+    h.u8(opts.exact_pe as u8);
+    match opts.time_limit {
+        None => h.u8(0),
+        Some(d) => {
+            h.u8(1);
+            h.u64(d.as_nanos() as u64);
+        }
+    }
+    h.0
 }
 
 struct Request {
+    fp: u64,
     shape: GemmShape,
     arch: Accelerator,
-    reply: Sender<Result<Arc<SolveResult>, SolveError>>,
+    reply: Sender<WarmOutcome>,
 }
 
-/// Service counters (exposed for the CLI's `serve` output and tests).
-#[derive(Debug, Default)]
+enum Msg {
+    /// Boxed: an `Accelerator` clone travels with every request, and the
+    /// variant should not bloat the queue's unit size.
+    Solve(Box<Request>),
+    /// Cooperative termination marker (see [`ServiceHandle::shutdown`]).
+    Shutdown,
+}
+
+/// Service counters (exposed for the CLI's `serve` output, the throughput
+/// bench, and the concurrency property suite).
+///
+/// Accounting: `requests` counts submissions *accepted* by a live
+/// dispatcher (a submission that can only resolve to `ServiceUnavailable`
+/// is un-counted), and every accepted request lands in exactly one of
+/// `cache_hits`, `coalesced` (duplicate of an in-flight key beyond the
+/// first), `solves` (it triggered a successful solve), or `errors` (it
+/// triggered a solve that reported infeasibility) — so once the service is
+/// quiescent, `requests == cache_hits + coalesced + solves + errors`.
+/// `warm_hits` and `negative_hits` are overlays counting the subset of
+/// `cache_hits` served from the on-disk store / from a cached
+/// infeasibility; they do not enter the sum.
+///
+/// One narrow caveat: a submission racing the pool's final teardown
+/// instants (after the dispatcher's exit drain, before its receiver
+/// drops) is accepted by the channel but never answered or reconciled, so
+/// it can leave `requests`/`queue_depth` one high. The invariant is exact
+/// whenever quiescence is observed through answered requests on a live
+/// service — which is how the property suite asserts it.
+#[derive(Debug)]
 pub struct ServiceMetrics {
-    pub requests: AtomicU64,
-    pub solves: AtomicU64,
-    pub cache_hits: AtomicU64,
-    pub coalesced: AtomicU64,
-    pub errors: AtomicU64,
+    requests: AtomicU64,
+    solves: AtomicU64,
+    cache_hits: AtomicU64,
+    coalesced: AtomicU64,
+    errors: AtomicU64,
+    warm_hits: AtomicU64,
+    negative_hits: AtomicU64,
+    queue_depth: AtomicU64,
+    per_shard_hits: Vec<AtomicU64>,
 }
 
 impl ServiceMetrics {
+    fn new(shards: usize) -> Self {
+        ServiceMetrics {
+            requests: AtomicU64::new(0),
+            solves: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            warm_hits: AtomicU64::new(0),
+            negative_hits: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            per_shard_hits: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
     /// `(requests, solves, cache_hits, coalesced, errors)`.
     pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
         (
@@ -48,25 +183,52 @@ impl ServiceMetrics {
             self.errors.load(Ordering::Relaxed),
         )
     }
+
+    /// Cache hits answered by entries loaded from the persistent store.
+    pub fn warm_hits(&self) -> u64 {
+        self.warm_hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache hits answered by a cached infeasibility (negative cache).
+    pub fn negative_hits(&self) -> u64 {
+        self.negative_hits.load(Ordering::Relaxed)
+    }
+
+    /// Requests submitted but not yet answered (gauge; 0 when quiescent).
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Per-shard cache-hit counts, indexed by shard id.
+    pub fn per_shard_hits(&self) -> Vec<u64> {
+        self.per_shard_hits
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect()
+    }
 }
 
 /// A pending reply that can be waited on (futures-lite, std-only).
 pub struct Pending {
-    rx: Receiver<Result<Arc<SolveResult>, SolveError>>,
+    rx: Receiver<WarmOutcome>,
 }
 
 impl Pending {
-    /// Block until the mapping is solved (or fails).
+    /// Block until the mapping is solved (or fails). A reply channel that
+    /// closes without an answer means the worker pool is gone — that is
+    /// [`SolveError::ServiceUnavailable`], *not* infeasibility.
     pub fn wait(self) -> Result<Arc<SolveResult>, SolveError> {
-        self.rx.recv().unwrap_or(Err(SolveError::NoFeasibleMapping))
+        self.rx.recv().unwrap_or(Err(SolveError::ServiceUnavailable))
     }
 }
 
 /// Client handle: cheap to clone, submits mapping requests.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: Sender<Request>,
+    tx: Sender<Msg>,
+    options: SolverOptions,
     metrics: Arc<ServiceMetrics>,
+    joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl ServiceHandle {
@@ -74,10 +236,20 @@ impl ServiceHandle {
     /// submissions before waiting (in-flight duplicates coalesce).
     pub fn submit(&self, shape: GemmShape, arch: Accelerator) -> Pending {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let fp = solve_fingerprint(shape, &arch, self.options);
         let (reply, rx) = channel();
-        // A send error means the service thread is gone; the Pending will
-        // then yield NoFeasibleMapping from the dropped channel.
-        let _ = self.tx.send(Request { shape, arch, reply });
+        let msg = Msg::Solve(Box::new(Request { fp, shape, arch, reply }));
+        if self.tx.send(msg).is_err() {
+            // Dispatcher gone: the reply sender travelled inside the failed
+            // message and was dropped with it, so `wait` sees a closed
+            // channel and reports ServiceUnavailable. The submission was
+            // never accepted, so it is un-counted entirely — `requests`
+            // tracks accepted submissions and the accounting invariant
+            // stays exact.
+            self.metrics.requests.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        }
         Pending { rx }
     }
 
@@ -86,80 +258,267 @@ impl ServiceHandle {
         self.submit(shape, arch).wait()
     }
 
+    /// Batch submission against one architecture: returns the pendings in
+    /// input order. Duplicate shapes coalesce into a single solve, so a
+    /// whole workload can be submitted in one call.
+    pub fn submit_batch(&self, arch: &Accelerator, shapes: &[GemmShape]) -> Vec<Pending> {
+        shapes.iter().map(|&s| self.submit(s, arch.clone())).collect()
+    }
+
+    /// Map every GEMM of `workload` on `arch` in one call; results are in
+    /// `workload.gemms` order. The service solves each *distinct* shape
+    /// once (duplicated GEMM shapes inside a workload coalesce).
+    pub fn map_workload(
+        &self,
+        workload: &crate::workloads::Workload,
+        arch: &Accelerator,
+    ) -> Vec<Result<Arc<SolveResult>, SolveError>> {
+        let shapes: Vec<GemmShape> = workload.gemms.iter().map(|g| g.shape).collect();
+        self.submit_batch(arch, &shapes)
+            .into_iter()
+            .map(|p| p.wait())
+            .collect()
+    }
+
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.metrics
     }
+
+    /// Terminate the worker pool deterministically: the dispatcher finishes
+    /// its current batch window, merges every cache shard into the warm
+    /// store, and (with a cache dir configured) flushes it to disk. Blocks
+    /// until the pool has exited, so a subsequent cold process sees the
+    /// complete store. Requests queued behind the shutdown marker — and any
+    /// submitted through surviving clones of this handle afterwards —
+    /// resolve to [`SolveError::ServiceUnavailable`].
+    ///
+    /// Dropping every handle instead also stops the pool and flushes, but
+    /// asynchronously — a process may exit before that flush lands; call
+    /// `shutdown` when the warm store matters.
+    pub fn shutdown(self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        let handles: Vec<JoinHandle<()>> = {
+            let mut g = self.joins.lock().unwrap();
+            g.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
 }
 
-/// The mapping service: owns the cache, drains the queue in batches.
-#[derive(Default)]
+/// The mapping service configuration: solver options, worker-pool size
+/// (== cache shard count), and the optional persistent cache location.
 pub struct MappingService {
     options: SolverOptions,
+    workers: usize,
+    cache_dir: Option<PathBuf>,
+}
+
+impl Default for MappingService {
+    fn default() -> Self {
+        MappingService {
+            options: SolverOptions::default(),
+            workers: 1,
+            cache_dir: None,
+        }
+    }
 }
 
 impl MappingService {
     pub fn new(options: SolverOptions) -> Self {
-        MappingService { options }
+        MappingService {
+            options,
+            ..MappingService::default()
+        }
     }
 
-    /// Spawn the service thread; returns the client handle. The thread
-    /// exits when every handle is dropped.
+    /// Size of the solve pool and of the sharded cache (min 1). `1`
+    /// degenerates to the serial service every parallel run is checked
+    /// against.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Enable the persistent warm-start cache rooted at `dir` (see
+    /// [`super::warm`] for the format and invalidation rules).
+    pub fn with_cache_dir<P: Into<PathBuf>>(mut self, dir: P) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Spawn the dispatcher; returns the client handle. The pool exits when
+    /// every handle is dropped or [`ServiceHandle::shutdown`] is called.
     pub fn spawn(self) -> ServiceHandle {
-        let (tx, rx) = channel::<Request>();
-        let metrics = Arc::new(ServiceMetrics::default());
+        let workers = self.workers.max(1);
+        let metrics = Arc::new(ServiceMetrics::new(workers));
+        let store = Arc::new(WarmStore::open(self.cache_dir));
+        // Seed the cache shards from the warm store (fp-routed, so the
+        // partition is stable for a given worker count but the store itself
+        // is worker-count-independent).
+        let mut shards: Vec<HashMap<u64, CacheEntry>> =
+            (0..workers).map(|_| HashMap::new()).collect();
+        for (fp, outcome) in store.loaded() {
+            let entry = CacheEntry { result: outcome, warm: true };
+            shards[(fp % workers as u64) as usize].insert(fp, entry);
+        }
+        let (tx, rx) = channel::<Msg>();
         let m = metrics.clone();
         let options = self.options;
-        std::thread::spawn(move || {
-            let mut cache: HashMap<Key, Arc<SolveResult>> = HashMap::new();
-            while let Ok(first) = rx.recv() {
-                // Drain whatever is queued behind the first request: the
-                // batch window in which identical keys coalesce.
-                let mut batch = vec![first];
-                while let Ok(r) = rx.try_recv() {
-                    batch.push(r);
-                }
-                // Group by key so each distinct (shape, arch) solves once.
-                let mut groups: HashMap<Key, Vec<Request>> = HashMap::new();
-                for r in batch {
-                    let key = Key {
-                        shape: r.shape,
-                        arch: r.arch.name.clone(),
-                    };
-                    groups.entry(key).or_default().push(r);
-                }
-                for (key, waiters) in groups {
-                    if waiters.len() > 1 {
-                        m.coalesced
-                            .fetch_add(waiters.len() as u64 - 1, Ordering::Relaxed);
-                    }
-                    let result = match cache.get(&key) {
-                        Some(r) => {
-                            m.cache_hits
-                                .fetch_add(waiters.len() as u64, Ordering::Relaxed);
-                            Ok(r.clone())
-                        }
-                        None => {
-                            m.solves.fetch_add(1, Ordering::Relaxed);
-                            match solve(key.shape, &waiters[0].arch, options) {
-                                Ok(r) => {
-                                    let arc = Arc::new(r);
-                                    cache.insert(key, arc.clone());
-                                    Ok(arc)
-                                }
-                                Err(e) => {
-                                    m.errors.fetch_add(1, Ordering::Relaxed);
-                                    Err(e)
-                                }
-                            }
-                        }
-                    };
-                    for w in waiters {
-                        let _ = w.reply.send(result.clone());
-                    }
+        let join = std::thread::spawn(move || {
+            service_loop(rx, workers, shards, m, options, store);
+        });
+        ServiceHandle {
+            tx,
+            options,
+            metrics,
+            joins: Arc::new(Mutex::new(vec![join])),
+        }
+    }
+}
+
+struct CacheEntry {
+    result: WarmOutcome,
+    /// Loaded from the persistent store (so hits discriminate warm/cold).
+    warm: bool,
+}
+
+fn reply_all(waiters: Vec<Request>, result: &WarmOutcome, m: &ServiceMetrics) {
+    for w in waiters {
+        // Decrement BEFORE the send: the reply channel is the happens-before
+        // edge to the waiter, so a client that observed its answer must
+        // already see this request gone from the gauge.
+        m.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = w.reply.send(result.clone());
+    }
+}
+
+fn service_loop(
+    rx: Receiver<Msg>,
+    workers: usize,
+    mut shards: Vec<HashMap<u64, CacheEntry>>,
+    m: Arc<ServiceMetrics>,
+    options: SolverOptions,
+    store: Arc<WarmStore>,
+) {
+    let nshards = shards.len() as u64;
+    let mut quit = false;
+    while !quit {
+        let first = match rx.recv() {
+            Ok(Msg::Solve(r)) => *r,
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        // Batch window: drain whatever queued behind the first request.
+        let mut batch = vec![first];
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::Solve(r) => batch.push(*r),
+                Msg::Shutdown => {
+                    quit = true;
+                    break;
                 }
             }
+        }
+        // The window's in-flight/coalescing table: group by fingerprint in
+        // arrival order, so each distinct key solves at most once no matter
+        // how many duplicates raced in.
+        let mut groups: Vec<(u64, Vec<Request>)> = Vec::new();
+        let mut index: HashMap<u64, usize> = HashMap::new();
+        for r in batch {
+            match index.get(&r.fp) {
+                Some(&i) => groups[i].1.push(r),
+                None => {
+                    index.insert(r.fp, groups.len());
+                    groups.push((r.fp, vec![r]));
+                }
+            }
+        }
+        // Split cached keys (positive or negative) from misses, and answer
+        // the hits before starting any (possibly slow) solve.
+        let mut misses: Vec<(u64, Vec<Request>)> = Vec::new();
+        for (fp, waiters) in groups {
+            if waiters.len() > 1 {
+                m.coalesced.fetch_add(waiters.len() as u64 - 1, Ordering::Relaxed);
+            }
+            let sid = (fp % nshards) as usize;
+            match shards[sid].get(&fp) {
+                Some(e) => {
+                    m.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    m.per_shard_hits[sid].fetch_add(1, Ordering::Relaxed);
+                    if e.warm {
+                        m.warm_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if e.result.is_err() {
+                        m.negative_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    reply_all(waiters, &e.result, &m);
+                }
+                None => misses.push((fp, waiters)),
+            }
+        }
+        // Fan the distinct misses out to the scoped solve pool, answering
+        // each key's waiters the moment its *own* solve finishes — no
+        // barrier on the rest of the window. Each worker's solve builds its
+        // own Rc-based CandidateCache thread-locally, and the waiters hand
+        // over through per-key Mutex slots so only `Send` data crosses
+        // threads (the reply senders never need to be `Sync`).
+        let mut keys: Vec<u64> = Vec::with_capacity(misses.len());
+        let mut inputs: Vec<(GemmShape, Accelerator)> = Vec::with_capacity(misses.len());
+        let mut slots: Vec<Mutex<Vec<Request>>> = Vec::with_capacity(misses.len());
+        for (fp, waiters) in misses {
+            keys.push(fp);
+            inputs.push((waiters[0].shape, waiters[0].arch.clone()));
+            slots.push(Mutex::new(waiters));
+        }
+        let solved = ordered_map(&inputs, workers, |i, inp| {
+            let result: WarmOutcome = match solve(inp.0, &inp.1, options) {
+                Ok(r) => {
+                    m.solves.fetch_add(1, Ordering::Relaxed);
+                    Ok(Arc::new(r))
+                }
+                Err(e) => {
+                    m.errors.fetch_add(1, Ordering::Relaxed);
+                    Err(e)
+                }
+            };
+            let waiters = std::mem::take(&mut *slots[i].lock().unwrap());
+            reply_all(waiters, &result, &m);
+            result
         });
-        ServiceHandle { tx, metrics }
+        for (fp, result) in keys.into_iter().zip(solved) {
+            // Cache only *proved* outcomes. Under a wall-clock cap both a
+            // NoFeasibleMapping bailout and an unproven incumbent
+            // (`proved_optimal == false`) are load-dependent — caching or
+            // persisting either would pin a machine-load artifact onto the
+            // key forever. With no time limit every outcome is a proof.
+            let proved = match &result {
+                Ok(r) => r.certificate.proved_optimal,
+                Err(_) => options.time_limit.is_none(),
+            };
+            if proved {
+                let sid = (fp % nshards) as usize;
+                let entry = CacheEntry { result, warm: false };
+                shards[sid].insert(fp, entry);
+            }
+        }
+    }
+    // Pool exit: merge every shard into the shared store and flush...
+    store.merge_and_flush(
+        shards
+            .into_iter()
+            .flat_map(|s| s.into_iter().map(|(fp, e)| (fp, e.result))),
+    );
+    // ...then, as the dispatcher's very last act before the receiver drops,
+    // drain anything still queued so the gauges stay honest: those waiters
+    // get ServiceUnavailable from their dropped reply senders and are
+    // un-counted like any unaccepted submission (see
+    // [`ServiceHandle::submit`]).
+    while let Ok(msg) = rx.try_recv() {
+        if let Msg::Solve(_) = msg {
+            m.requests.fetch_sub(1, Ordering::Relaxed);
+            m.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -188,7 +547,7 @@ mod tests {
 
     #[test]
     fn concurrent_identical_requests_solve_once() {
-        let handle = MappingService::default().spawn();
+        let handle = MappingService::default().with_workers(4).spawn();
         let shape = GemmShape::new(128, 64, 32);
         // Submit all eight before waiting: they land in one batch window or
         // hit the cache — either way exactly one solve happens.
@@ -202,16 +561,13 @@ mod tests {
 
     #[test]
     fn distinct_requests_all_solve() {
-        let handle = MappingService::default().spawn();
+        let handle = MappingService::default().with_workers(2).spawn();
         let shapes = [
             GemmShape::new(32, 32, 32),
             GemmShape::new(64, 32, 32),
             GemmShape::new(32, 64, 32),
         ];
-        let pendings: Vec<_> = shapes
-            .iter()
-            .map(|&s| handle.submit(s, arch()))
-            .collect();
+        let pendings: Vec<_> = shapes.iter().map(|&s| handle.submit(s, arch())).collect();
         for p in pendings {
             assert!(p.wait().is_ok());
         }
@@ -228,5 +584,133 @@ mod tests {
         assert_eq!(err, SolveError::NoFeasibleMapping);
         let (.., errs) = handle.metrics().snapshot();
         assert_eq!(errs, 1);
+    }
+
+    #[test]
+    fn infeasible_outcome_is_negative_cached() {
+        let handle = MappingService::default().spawn();
+        let bad = Accelerator::custom("bad", 2048, 7, 16);
+        for _ in 0..3 {
+            let err = handle.map(GemmShape::new(4, 4, 4), bad.clone()).unwrap_err();
+            assert_eq!(err, SolveError::NoFeasibleMapping);
+        }
+        let (req, solves, hits, _, errs) = handle.metrics().snapshot();
+        assert_eq!(req, 3);
+        assert_eq!(errs, 1, "exactly one solve attempt for a repeated infeasible key");
+        assert_eq!(solves, 0);
+        assert_eq!(hits, 2);
+        assert_eq!(handle.metrics().negative_hits(), 2);
+    }
+
+    #[test]
+    fn time_limited_bailout_is_not_negative_cached() {
+        // Under a wall-clock cap every outcome is load-dependent — an Err
+        // bailout on a feasible key, or an unproven incumbent — so neither
+        // may poison the cache: every submission re-attempts the solve.
+        let opts = SolverOptions {
+            exact_pe: true,
+            time_limit: Some(std::time::Duration::from_nanos(1)),
+        };
+        let handle = MappingService::new(opts).spawn();
+        let big = Accelerator::custom("cap", 1 << 20, 256, 64);
+        let shape = GemmShape::new(1 << 10, 1 << 10, 1 << 10);
+        for _ in 0..2 {
+            let _ = handle.map(shape, big.clone());
+        }
+        let (_, solves, hits, _, errs) = handle.metrics().snapshot();
+        assert_eq!(hits, 0, "a capped bailout must not be served from cache");
+        assert_eq!(solves + errs, 2, "every submission must re-attempt the solve");
+    }
+
+    #[test]
+    fn cache_key_covers_full_arch_parameters_not_name() {
+        // Regression: the old key hashed `arch.name` only, so two same-name
+        // instances with different SRAM/PE/RF silently returned each
+        // other's cached mappings. Under the fingerprint key they must each
+        // solve.
+        let handle = MappingService::default().spawn();
+        let shape = GemmShape::new(64, 64, 64);
+        let big = Accelerator::custom("twin", 1 << 16, 16, 64);
+        let small = Accelerator::custom("twin", 1 << 12, 8, 16);
+        let a = handle.map(shape, big).unwrap();
+        let b = handle.map(shape, small).unwrap();
+        let (_, solves, hits, ..) = handle.metrics().snapshot();
+        assert_eq!(solves, 2, "same-name archs with different params must not alias");
+        assert_eq!(hits, 0);
+        // exact_pe forces PEs-used == num_pe, so the mappings provably differ.
+        assert_eq!(a.mapping.pes_used(), 16);
+        assert_eq!(b.mapping.pes_used(), 8);
+    }
+
+    #[test]
+    fn fingerprint_covers_params_and_options_but_not_name() {
+        let shape = GemmShape::new(8, 8, 8);
+        let o = SolverOptions::default();
+        let a = Accelerator::custom("name-one", 4096, 8, 32);
+        let b = Accelerator::custom("name-two", 4096, 8, 32);
+        assert_eq!(
+            solve_fingerprint(shape, &a, o),
+            solve_fingerprint(shape, &b, o),
+            "the name must not enter the key"
+        );
+        let c = Accelerator::custom("name-one", 8192, 8, 32);
+        assert_ne!(solve_fingerprint(shape, &a, o), solve_fingerprint(shape, &c, o));
+        assert_ne!(
+            solve_fingerprint(shape, &a, o),
+            solve_fingerprint(GemmShape::new(8, 8, 16), &a, o)
+        );
+        let relaxed = SolverOptions { exact_pe: false, time_limit: None };
+        assert_ne!(solve_fingerprint(shape, &a, o), solve_fingerprint(shape, &a, relaxed));
+        let capped = SolverOptions {
+            exact_pe: true,
+            time_limit: Some(std::time::Duration::from_secs(1)),
+        };
+        assert_ne!(solve_fingerprint(shape, &a, o), solve_fingerprint(shape, &a, capped));
+    }
+
+    #[test]
+    fn dead_service_is_unavailable_not_infeasible() {
+        // Unit level: a reply channel dropped without an answer.
+        let (tx, rx) = channel::<WarmOutcome>();
+        drop(tx);
+        assert_eq!(Pending { rx }.wait().unwrap_err(), SolveError::ServiceUnavailable);
+        // Full path: a surviving clone submitting after shutdown.
+        let handle = MappingService::default().spawn();
+        let survivor = handle.clone();
+        handle.shutdown();
+        assert_eq!(
+            survivor.map(GemmShape::new(32, 32, 32), arch()).unwrap_err(),
+            SolveError::ServiceUnavailable
+        );
+    }
+
+    #[test]
+    fn batch_api_answers_in_order_and_coalesces() {
+        let handle = MappingService::default().with_workers(4).spawn();
+        let s1 = GemmShape::new(32, 32, 32);
+        let s2 = GemmShape::new(64, 32, 32);
+        let s3 = GemmShape::new(32, 64, 64);
+        let shapes = [s1, s2, s1, s3, s2, s1];
+        let results: Vec<_> = handle
+            .submit_batch(&arch(), &shapes)
+            .into_iter()
+            .map(|p| p.wait().unwrap())
+            .collect();
+        for (shape, r) in shapes.iter().zip(&results) {
+            let direct = solve(*shape, &arch(), SolverOptions::default()).unwrap();
+            assert_eq!(r.mapping, direct.mapping, "answer out of order for {shape}");
+            assert_eq!(r.energy.normalized.to_bits(), direct.energy.normalized.to_bits());
+        }
+        let (req, solves, hits, coalesced, errs) = handle.metrics().snapshot();
+        assert_eq!(req, 6);
+        assert_eq!(solves, 3, "three distinct keys");
+        assert_eq!(errs, 0);
+        assert_eq!(req, hits + coalesced + solves + errs, "metrics accounting must sum");
+        assert_eq!(handle.metrics().queue_depth(), 0);
+        assert_eq!(
+            handle.metrics().per_shard_hits().iter().sum::<u64>(),
+            hits,
+            "per-shard hits must sum to the total"
+        );
     }
 }

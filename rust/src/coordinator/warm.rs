@@ -1,0 +1,354 @@
+//! Persistent warm-start cache for the mapping service.
+//!
+//! Solved results outlive the process: the service loads this store at
+//! spawn and flushes it when the worker pool exits, so repeated CLI/eval
+//! runs against the same `--cache-dir` answer without re-solving — the
+//! "same (workload, hardware) pairs recur across runs" serving pattern.
+//!
+//! **Format v1** (`warm_cache_v1.tsv` inside the cache dir): a header line
+//! ([`WARM_CACHE_HEADER`]) followed by one TSV entry per solve key. Keys
+//! are the 64-bit solve fingerprints of
+//! [`super::service::solve_fingerprint`] — shape, *full* architecture
+//! parameter set, solver options, and format version; never an arch name.
+//! Every `f64` is serialized as its IEEE-754 bit pattern in hex
+//! (`to_bits`), so a warm result is **bit-identical** to the original
+//! solve. Infeasible outcomes persist too (`err` lines): the negative
+//! cache is as warm as the positive one.
+//!
+//! **Invalidation rules** are by construction, not by deletion:
+//! * any change to the shape, arch parameters, or solver options changes
+//!   the fingerprint, so stale entries are simply never looked up;
+//! * bumping [`super::service::CACHE_FORMAT_VERSION`] changes both the
+//!   header (whole-file rejection) and every fingerprint;
+//! * a file with an unknown header is ignored wholesale (start cold);
+//! * individually corrupt or truncated lines (e.g. a killed process mid
+//!   write, despite the tmp-file + rename flush) are skipped one by one —
+//!   every intact entry survives.
+
+use crate::mapping::{Axis, Bypass, Mapping, Tile};
+use crate::solver::{Certificate, SolveError, SolveResult};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// First line of every store file; the version must match exactly.
+pub const WARM_CACHE_HEADER: &str = "# goma-warm-cache v1";
+
+/// File name of the store inside a service's `--cache-dir`.
+pub const WARM_CACHE_FILE: &str = "warm_cache_v1.tsv";
+
+/// One persisted outcome: the solve succeeded (full result) or proved the
+/// key infeasible (negative entry).
+pub type WarmOutcome = Result<Arc<SolveResult>, SolveError>;
+
+/// The shared on-disk store: loaded once at service spawn; at pool exit
+/// the dispatcher merges every cache shard back in (warm entries included,
+/// since shards never evict) and the file is rewritten atomically
+/// (unique tmp file + rename).
+pub struct WarmStore {
+    path: Option<PathBuf>,
+    loaded: HashMap<u64, WarmOutcome>,
+    merged: Mutex<HashMap<u64, WarmOutcome>>,
+}
+
+impl WarmStore {
+    /// Open the store under `dir` (`None` disables persistence). A missing,
+    /// version-mismatched, or unreadable file is not an error — recovery is
+    /// "start cold".
+    pub fn open(dir: Option<PathBuf>) -> WarmStore {
+        let path = dir.map(|d| d.join(WARM_CACHE_FILE));
+        let loaded = match &path {
+            Some(p) => load_file(p),
+            None => HashMap::new(),
+        };
+        WarmStore {
+            path,
+            merged: Mutex::new(HashMap::new()),
+            loaded,
+        }
+    }
+
+    /// Entries present on disk at open time (handed to the cache shards).
+    pub fn loaded(&self) -> impl Iterator<Item = (u64, WarmOutcome)> + '_ {
+        self.loaded.iter().map(|(&fp, v)| (fp, v.clone()))
+    }
+
+    /// Number of entries loaded at open time.
+    pub fn loaded_len(&self) -> usize {
+        self.loaded.len()
+    }
+
+    /// Merge `entries` into the store and rewrite the file. The dispatcher
+    /// calls this once at pool exit with every shard's entries (the loaded
+    /// warm set flows back through the shards, so the flush carries the
+    /// full union). A store without a path merges in memory only.
+    pub fn merge_and_flush(&self, entries: impl IntoIterator<Item = (u64, WarmOutcome)>) {
+        let mut merged = self.merged.lock().unwrap();
+        for (fp, v) in entries {
+            merged.insert(fp, v);
+        }
+        if let Some(path) = &self.path {
+            if let Err(e) = write_file(path, &merged) {
+                eprintln!("[coordinator] warm-cache flush to {} failed: {e}", path.display());
+            }
+        }
+    }
+}
+
+fn load_file(path: &Path) -> HashMap<u64, WarmOutcome> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return HashMap::new();
+    };
+    let mut lines = text.lines();
+    if lines.next() != Some(WARM_CACHE_HEADER) {
+        // Unknown version or foreign file: reject wholesale rather than
+        // guess at a layout that may have changed meaning.
+        return HashMap::new();
+    }
+    let mut out = HashMap::new();
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some((fp, v)) = parse_line(line) {
+            out.insert(fp, v);
+        }
+    }
+    out
+}
+
+fn write_file(path: &Path, entries: &HashMap<u64, WarmOutcome>) -> std::io::Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    // Unique per writer: concurrent flushes into one shared cache dir (two
+    // processes, or two services in one process) must not interleave on a
+    // common tmp path — last rename wins with an intact file either way.
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension(format!(
+        "tsv.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        writeln!(f, "{WARM_CACHE_HEADER}")?;
+        // Sorted keys: deterministic file contents for a given entry set.
+        let mut keys: Vec<u64> = entries.keys().copied().collect();
+        keys.sort_unstable();
+        for fp in keys {
+            match &entries[&fp] {
+                Err(_) => writeln!(f, "{fp:016x}\terr\tinfeasible")?,
+                Ok(r) => writeln!(f, "{fp:016x}\tok\t{}", format_result(r.as_ref()))?,
+            }
+        }
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// Hex IEEE-754 bit pattern: the exact-round-trip float encoding.
+fn fx(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn hex_u64(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn hex_f64(s: &str) -> Option<f64> {
+    Some(f64::from_bits(hex_u64(s)?))
+}
+
+fn axis_of(s: &str) -> Option<Axis> {
+    match s {
+        "x" => Some(Axis::X),
+        "y" => Some(Axis::Y),
+        "z" => Some(Axis::Z),
+        _ => None,
+    }
+}
+
+fn bypass_of(s: &str) -> Option<Bypass> {
+    Bypass::from_bits(s.parse::<u8>().ok()?)
+}
+
+/// The 28 payload fields of an `ok` line, tab-joined: 9 tile lengths, the
+/// two walking axes, the two bypass bitmasks, the 7 energy terms, the
+/// certificate (3 bounds, 3 counters, proved bit), and the solve time.
+fn format_result(r: &SolveResult) -> String {
+    let m = &r.mapping;
+    let e = &r.energy;
+    let c = &r.certificate;
+    format!(
+        "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t\
+         {}\t{}\t{}\t{}\t{}\t{}\t{}\t\
+         {}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+        m.l1.x,
+        m.l1.y,
+        m.l1.z,
+        m.l2.x,
+        m.l2.y,
+        m.l2.z,
+        m.l3.x,
+        m.l3.y,
+        m.l3.z,
+        m.alpha01,
+        m.alpha12,
+        m.b1.bits(),
+        m.b3.bits(),
+        fx(e.src1),
+        fx(e.src3),
+        fx(e.src4),
+        fx(e.compute),
+        fx(e.leakage),
+        fx(e.normalized),
+        fx(e.total_pj),
+        fx(c.upper_bound),
+        fx(c.lower_bound),
+        fx(c.gap),
+        c.nodes,
+        c.combos_total,
+        c.combos_pruned,
+        c.proved_optimal as u8,
+        fx(r.solve_time.as_secs_f64()),
+    )
+}
+
+/// Parse one entry line; `None` on any malformation (the caller skips it).
+fn parse_line(line: &str) -> Option<(u64, WarmOutcome)> {
+    let f: Vec<&str> = line.split('\t').collect();
+    let fp = hex_u64(f.first()?)?;
+    match *f.get(1)? {
+        "err" => {
+            if f.len() != 3 || f[2] != "infeasible" {
+                return None;
+            }
+            Some((fp, Err(SolveError::NoFeasibleMapping)))
+        }
+        "ok" => {
+            if f.len() != 30 {
+                return None;
+            }
+            let t = |i: usize| f[2 + i].parse::<u64>().ok();
+            let mapping = Mapping {
+                l1: Tile::new(t(0)?, t(1)?, t(2)?),
+                l2: Tile::new(t(3)?, t(4)?, t(5)?),
+                l3: Tile::new(t(6)?, t(7)?, t(8)?),
+                alpha01: axis_of(f[11])?,
+                alpha12: axis_of(f[12])?,
+                b1: bypass_of(f[13])?,
+                b3: bypass_of(f[14])?,
+            };
+            let energy = crate::energy::EnergyBreakdown {
+                src1: hex_f64(f[15])?,
+                src3: hex_f64(f[16])?,
+                src4: hex_f64(f[17])?,
+                compute: hex_f64(f[18])?,
+                leakage: hex_f64(f[19])?,
+                normalized: hex_f64(f[20])?,
+                total_pj: hex_f64(f[21])?,
+            };
+            let certificate = Certificate {
+                upper_bound: hex_f64(f[22])?,
+                lower_bound: hex_f64(f[23])?,
+                gap: hex_f64(f[24])?,
+                nodes: f[25].parse().ok()?,
+                combos_total: f[26].parse().ok()?,
+                combos_pruned: f[27].parse().ok()?,
+                proved_optimal: match f[28] {
+                    "1" => true,
+                    "0" => false,
+                    _ => return None,
+                },
+            };
+            let solve_time = Duration::try_from_secs_f64(hex_f64(f[29])?).ok()?;
+            Some((
+                fp,
+                Ok(Arc::new(SolveResult {
+                    mapping,
+                    energy,
+                    certificate,
+                    solve_time,
+                })),
+            ))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Accelerator;
+    use crate::mapping::GemmShape;
+    use crate::solver::{solve, SolverOptions};
+
+    fn solved() -> SolveResult {
+        let arch = Accelerator::custom("warmfmt", 1 << 16, 16, 64);
+        solve(GemmShape::new(64, 96, 32), &arch, SolverOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn line_round_trip_is_bit_exact() {
+        let r = solved();
+        let line = format!("{:016x}\tok\t{}", 0xDEADBEEFu64, format_result(&r));
+        let (fp, back) = parse_line(&line).expect("own format must parse");
+        let back = back.unwrap();
+        assert_eq!(fp, 0xDEADBEEF);
+        assert_eq!(back.mapping, r.mapping);
+        assert_eq!(back.energy.normalized.to_bits(), r.energy.normalized.to_bits());
+        assert_eq!(back.energy.total_pj.to_bits(), r.energy.total_pj.to_bits());
+        assert_eq!(
+            back.certificate.upper_bound.to_bits(),
+            r.certificate.upper_bound.to_bits()
+        );
+        assert_eq!(back.certificate.nodes, r.certificate.nodes);
+        assert_eq!(back.certificate.proved_optimal, r.certificate.proved_optimal);
+        assert_eq!(
+            back.solve_time.as_secs_f64().to_bits(),
+            r.solve_time.as_secs_f64().to_bits()
+        );
+    }
+
+    #[test]
+    fn err_line_round_trips() {
+        let (fp, v) = parse_line("00000000000000aa\terr\tinfeasible").unwrap();
+        assert_eq!(fp, 0xaa);
+        assert_eq!(v.unwrap_err(), SolveError::NoFeasibleMapping);
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_not_panicked() {
+        let r = solved();
+        let good = format!("{:016x}\tok\t{}", 1u64, format_result(&r));
+        // Overflowing integer field + field count off by one.
+        let overflow = good.replace("\tok\t", "\tok\t99999999999999999999\t");
+        for bad in [
+            "",
+            "garbage",
+            "zz\terr\tinfeasible",
+            "01\terr\tsomething-else",
+            "01\tok\tnot-enough-fields",
+            "01\twat\tinfeasible",
+            &good[..good.len() / 2], // truncated mid write
+            overflow.as_str(),
+        ] {
+            assert!(parse_line(bad).is_none(), "accepted malformed line: {bad:?}");
+        }
+        assert!(parse_line(&good).is_some());
+    }
+
+    #[test]
+    fn store_rejects_unknown_version_wholesale() {
+        let dir = std::env::temp_dir().join(format!("goma_warm_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(WARM_CACHE_FILE);
+        std::fs::write(&path, "# goma-warm-cache v0\n00aa\terr\tinfeasible\n").unwrap();
+        let store = WarmStore::open(Some(dir.clone()));
+        assert_eq!(store.loaded_len(), 0, "v0 file must be ignored wholesale");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -11,7 +11,7 @@ mod cases;
 mod runner;
 
 pub use cases::{all_cases, Case};
-pub use runner::{run_case, run_case_jobs, run_gemm, CaseOutcome, GemmOutcome};
+pub use runner::{run_case, run_case_jobs, run_case_service, run_gemm, CaseOutcome, GemmOutcome};
 
 use crate::util::Summary;
 

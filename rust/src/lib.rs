@@ -18,8 +18,8 @@
 //! and the four Table-I templates ([`arch`]), the five baseline mappers
 //! ([`mappers`]), the LLM prefill workload suite ([`workloads`]), the
 //! 24-case pipeline ([`eval`]), a PJRT runtime for executing AOT-compiled
-//! mapped-GEMM kernels ([`runtime`]), and an async mapping service
-//! ([`coordinator`]).
+//! mapped-GEMM kernels ([`runtime`]), and a sharded mapping service with a
+//! persistent warm-start cache ([`coordinator`]).
 //!
 //! ```no_run
 //! use goma::{arch, solver, mapping::GemmShape};

@@ -214,6 +214,21 @@ impl Bypass {
         }
         out
     }
+
+    /// Dense 3-bit encoding `x | y<<1 | z<<2` — the single source of truth
+    /// shared by the coordinator's solve fingerprint and the warm-store
+    /// on-disk codec (the two must never diverge).
+    pub fn bits(self) -> u8 {
+        (self.x as u8) | (self.y as u8) << 1 | (self.z as u8) << 2
+    }
+
+    /// Inverse of [`Bypass::bits`]; `None` for out-of-range encodings.
+    pub fn from_bits(bits: u8) -> Option<Bypass> {
+        if bits > 7 {
+            return None;
+        }
+        Some(Bypass::new(bits & 1 != 0, bits & 2 != 0, bits & 4 != 0))
+    }
 }
 
 impl fmt::Display for Bypass {
@@ -354,6 +369,15 @@ mod tests {
                 assert_ne!(combos[i], combos[j]);
             }
         }
+    }
+
+    #[test]
+    fn bypass_bits_round_trip() {
+        for (i, b) in Bypass::all_combos().into_iter().enumerate() {
+            assert_eq!(b.bits(), i as u8);
+            assert_eq!(Bypass::from_bits(i as u8), Some(b));
+        }
+        assert_eq!(Bypass::from_bits(8), None);
     }
 
     #[test]

@@ -52,12 +52,21 @@ pub enum SolveError {
     /// No mapping satisfies the hard constraints (e.g. the PE count cannot
     /// be factored over the workload extents, or capacities are too small).
     NoFeasibleMapping,
+    /// The mapping service's worker pool went away (shut down or crashed)
+    /// before answering. Distinct from [`SolveError::NoFeasibleMapping`] on
+    /// purpose: a dead service says nothing about feasibility, and callers
+    /// must be able to retry elsewhere instead of mis-reporting "no mapping
+    /// exists". Never produced by [`solve`] itself.
+    ServiceUnavailable,
 }
 
 impl fmt::Display for SolveError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SolveError::NoFeasibleMapping => write!(f, "no feasible mapping exists"),
+            SolveError::ServiceUnavailable => {
+                write!(f, "mapping service unavailable (worker pool shut down)")
+            }
         }
     }
 }

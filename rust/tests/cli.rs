@@ -77,6 +77,14 @@ fn eval_rejects_bad_flags_before_running() {
 }
 
 #[test]
+fn serve_rejects_bad_flags_before_running() {
+    assert!(run(&args(&["serve", "--workers", "0"])).is_err());
+    assert!(run(&args(&["serve", "--workers", "many"])).is_err());
+    assert!(run(&args(&["serve", "--workload", "abc"])).is_err());
+    assert!(run(&args(&["serve", "--workload", "99"])).is_err());
+}
+
+#[test]
 #[should_panic(expected = "missing required flag --m")]
 fn solve_missing_required_flag_panics_with_message() {
     let _ = run(&args(&["solve", "--n", "64", "--k", "64"]));

@@ -1,0 +1,15 @@
+//! Helpers shared across the integration-test binaries (each test file is
+//! its own crate, so this lives in `tests/common/` — a directory module,
+//! which cargo does not treat as a test target itself).
+
+/// Worker-pool size for the mapping service under test. CI runs the whole
+/// suite at both `GOMA_TEST_WORKERS=1` (serial degenerate pool) and `=4`
+/// (sharded), so shard/concurrency regressions cannot land green by only
+/// passing the single-worker path.
+pub fn test_workers() -> usize {
+    std::env::var("GOMA_TEST_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(4)
+}

@@ -9,7 +9,12 @@
 //!   strict refinement) and matches it exactly on non-degenerate mappings;
 //! * feasibility invariants of the random-mapping generator;
 //! * oracle EDP algebra (`edp = E·T`);
-//! * coordinator bookkeeping (all requests answered, ≤1 solve per key).
+//! * coordinator bookkeeping (all requests answered, ≤1 solve per key);
+//! * sharded-service concurrency: a seeded multi-client stress property
+//!   (every request answered exactly once, solves ≤ distinct keys, metrics
+//!   accounting sums, results bit-identical to serial single-worker
+//!   solves) across 100 deterministic iterations. `GOMA_TEST_WORKERS`
+//!   sets the pool size under test (CI runs 1 and 4).
 
 use goma::arch::Accelerator;
 use goma::energy::evaluate;
@@ -17,6 +22,9 @@ use goma::mapping::{validate, GemmShape};
 use goma::solver::{exhaustive_best, solve, SolverOptions};
 use goma::timeloop::{score, score_unchecked, LoopNest, StageId};
 use goma::util::Rng;
+
+mod common;
+use common::test_workers;
 
 /// Random small-but-composite extent.
 fn rand_extent(rng: &mut Rng) -> u64 {
@@ -208,7 +216,7 @@ fn property_validate_rejects_mutations() {
 fn property_coordinator_bookkeeping() {
     use goma::coordinator::MappingService;
     let mut rng = Rng::seed_from_u64(99);
-    let handle = MappingService::default().spawn();
+    let handle = MappingService::default().with_workers(test_workers()).spawn();
     let arch = Accelerator::custom("propsvc", 1 << 14, 8, 64);
     let shapes: Vec<GemmShape> = (0..20).map(|_| rand_shape(&mut rng)).collect();
     let mut distinct: Vec<GemmShape> = shapes.clone();
@@ -224,11 +232,138 @@ fn property_coordinator_bookkeeping() {
         answered += 1;
     }
     assert_eq!(answered, 20);
-    let (req, solves, ..) = handle.metrics().snapshot();
+    let (req, solves, hits, coalesced, errs) = handle.metrics().snapshot();
     assert_eq!(req, 20);
     assert!(
         solves <= distinct.len() as u64,
         "solves {solves} > distinct keys {}",
         distinct.len()
     );
+    assert_eq!(
+        req,
+        hits + coalesced + solves + errs,
+        "metrics accounting must sum once quiescent"
+    );
+    assert_eq!(handle.metrics().queue_depth(), 0);
+}
+
+#[test]
+fn property_sharded_service_stress() {
+    use goma::coordinator::MappingService;
+    use goma::solver::SolveError;
+    use std::collections::{HashMap, HashSet};
+
+    const ITERATIONS: u64 = 100;
+    const CLIENTS: usize = 8;
+    const REQUESTS_PER_CLIENT: usize = 12;
+
+    let workers = test_workers();
+    let arch = Accelerator::custom("stress", 1 << 14, 8, 64);
+    // A small pool of keys so client draws overlap heavily; (5,5,5) is
+    // infeasible on 8 PEs (no factor triple of 8 divides it), exercising
+    // the negative-cache path under concurrency.
+    let mut pool: Vec<GemmShape> = Vec::new();
+    for &x in &[4u64, 8, 16] {
+        for &y in &[8u64, 16, 32] {
+            pool.push(GemmShape::new(x, y, 16));
+        }
+    }
+    pool.push(GemmShape::new(5, 5, 5));
+
+    // Serial single-worker ground truth, solved once up front.
+    let reference: HashMap<(u64, u64, u64), Result<u64, SolveError>> = pool
+        .iter()
+        .map(|&s| {
+            let key = (s.x, s.y, s.z);
+            match solve(s, &arch, SolverOptions::default()) {
+                Ok(r) => (key, Ok(r.energy.normalized.to_bits())),
+                Err(e) => (key, Err(e)),
+            }
+        })
+        .collect();
+
+    for iter in 0..ITERATIONS {
+        let mut rng = Rng::seed_from_u64(0xA11CE + iter);
+        let per_client: Vec<Vec<GemmShape>> = (0..CLIENTS)
+            .map(|_| {
+                (0..REQUESTS_PER_CLIENT)
+                    .map(|_| *rng.choose(&pool).unwrap())
+                    .collect()
+            })
+            .collect();
+        let distinct: HashSet<(u64, u64, u64)> = per_client
+            .iter()
+            .flatten()
+            .map(|s| (s.x, s.y, s.z))
+            .collect();
+
+        let handle = MappingService::default().with_workers(workers).spawn();
+        // Hammer the service from CLIENTS threads with overlapping keys.
+        let answered: Vec<(GemmShape, Result<u64, SolveError>)> = std::thread::scope(|scope| {
+            let joins: Vec<_> = per_client
+                .iter()
+                .map(|shapes| {
+                    let h = handle.clone();
+                    let a = arch.clone();
+                    scope.spawn(move || {
+                        shapes
+                            .iter()
+                            .map(|&s| {
+                                let r = h
+                                    .map(s, a.clone())
+                                    .map(|ok| ok.energy.normalized.to_bits());
+                                (s, r)
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            joins
+                .into_iter()
+                .flat_map(|j| j.join().expect("client thread must not panic"))
+                .collect()
+        });
+
+        // Every request answered exactly once.
+        assert_eq!(answered.len(), CLIENTS * REQUESTS_PER_CLIENT, "iter {iter}");
+
+        // Bit-identical to the serial single-worker ground truth.
+        for (s, got) in &answered {
+            match (&reference[&(s.x, s.y, s.z)], got) {
+                (Ok(bits), Ok(got_bits)) => {
+                    assert_eq!(got_bits, bits, "iter {iter}: nondeterministic result for {s}")
+                }
+                (Err(_), Err(e)) => assert_eq!(
+                    *e,
+                    SolveError::NoFeasibleMapping,
+                    "iter {iter}: wrong error kind for {s}"
+                ),
+                (want, got) => {
+                    panic!("iter {iter}: feasibility flip for {s}: want {want:?} got {got:?}")
+                }
+            }
+        }
+
+        // Metrics accounting.
+        let (req, solves, hits, coalesced, errs) = handle.metrics().snapshot();
+        assert_eq!(req, (CLIENTS * REQUESTS_PER_CLIENT) as u64, "iter {iter}");
+        assert!(
+            solves + errs <= distinct.len() as u64,
+            "iter {iter}: {solves} solves + {errs} errors > {} distinct keys",
+            distinct.len()
+        );
+        assert_eq!(
+            req,
+            hits + coalesced + solves + errs,
+            "iter {iter}: accounting must sum (hits {hits}, coalesced {coalesced}, \
+             solves {solves}, errors {errs})"
+        );
+        assert_eq!(handle.metrics().queue_depth(), 0, "iter {iter}");
+        assert_eq!(
+            handle.metrics().per_shard_hits().iter().sum::<u64>(),
+            hits,
+            "iter {iter}: per-shard hits must sum to the total"
+        );
+        handle.shutdown();
+    }
 }

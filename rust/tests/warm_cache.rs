@@ -1,0 +1,168 @@
+//! Persistent warm-start cache: golden round-trip, version-mismatch
+//! rejection, and graceful recovery from a truncated file.
+//!
+//! Two service instances sharing one cache dir stand in for two processes
+//! (the store is written on shutdown and read at spawn, exactly as a real
+//! second process would see it); CI additionally carries a cache dir across
+//! jobs to exercise the genuinely-cross-process path.
+
+use goma::arch::Accelerator;
+use goma::coordinator::{MappingService, ServiceHandle, WARM_CACHE_FILE, WARM_CACHE_HEADER};
+use goma::mapping::GemmShape;
+use goma::solver::SolveError;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+mod common;
+use common::test_workers;
+
+/// Fresh per-test temp dir (tests run concurrently in one process).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("goma_warm_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn arch() -> Accelerator {
+    Accelerator::custom("warm", 1 << 16, 16, 64)
+}
+
+fn shapes() -> Vec<GemmShape> {
+    vec![
+        GemmShape::new(64, 64, 64),
+        GemmShape::new(128, 64, 32),
+        GemmShape::new(32, 96, 64),
+        GemmShape::new(48, 48, 48),
+    ]
+}
+
+fn spawn_with(dir: &Path) -> ServiceHandle {
+    MappingService::default()
+        .with_workers(test_workers())
+        .with_cache_dir(dir)
+        .spawn()
+}
+
+fn solve_all(handle: &ServiceHandle) -> Vec<Arc<goma::solver::SolveResult>> {
+    handle
+        .submit_batch(&arch(), &shapes())
+        .into_iter()
+        .map(|p| p.wait().expect("feasible"))
+        .collect()
+}
+
+#[test]
+fn warm_round_trip_is_solve_free_and_bit_identical() {
+    let dir = tmp_dir("roundtrip");
+    // "Process" 1: cold — every key solves, shutdown flushes the store.
+    let h1 = spawn_with(&dir);
+    let first = solve_all(&h1);
+    let (_, solves1, ..) = h1.metrics().snapshot();
+    assert_eq!(solves1, shapes().len() as u64);
+    h1.shutdown();
+    assert!(dir.join(WARM_CACHE_FILE).exists(), "shutdown must flush");
+
+    // "Process" 2: warm — zero solves, answers bit-identical to process 1.
+    let h2 = spawn_with(&dir);
+    let second = solve_all(&h2);
+    let metrics = h2.metrics();
+    let (_, solves2, hits2, ..) = metrics.snapshot();
+    assert_eq!(solves2, 0, "a populated warm cache must answer without solving");
+    assert_eq!(hits2, shapes().len() as u64);
+    assert_eq!(metrics.warm_hits(), shapes().len() as u64);
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.mapping, b.mapping);
+        assert_eq!(a.energy.normalized.to_bits(), b.energy.normalized.to_bits());
+        assert_eq!(a.energy.total_pj.to_bits(), b.energy.total_pj.to_bits());
+        assert_eq!(
+            a.certificate.upper_bound.to_bits(),
+            b.certificate.upper_bound.to_bits()
+        );
+        assert_eq!(a.certificate.nodes, b.certificate.nodes);
+        assert_eq!(a.certificate.proved_optimal, b.certificate.proved_optimal);
+    }
+    h2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn infeasible_outcomes_persist_as_negative_entries() {
+    let dir = tmp_dir("negative");
+    let bad = Accelerator::custom("bad", 2048, 7, 16);
+    let h1 = spawn_with(&dir);
+    assert_eq!(
+        h1.map(GemmShape::new(4, 4, 4), bad.clone()).unwrap_err(),
+        SolveError::NoFeasibleMapping
+    );
+    h1.shutdown();
+
+    let h2 = spawn_with(&dir);
+    assert_eq!(
+        h2.map(GemmShape::new(4, 4, 4), bad).unwrap_err(),
+        SolveError::NoFeasibleMapping
+    );
+    let metrics = h2.metrics();
+    let (_, solves, hits, _, errs) = metrics.snapshot();
+    assert_eq!(errs, 0, "the warm negative entry must prevent the re-solve");
+    assert_eq!(solves, 0);
+    assert_eq!(hits, 1);
+    assert_eq!(metrics.warm_hits(), 1);
+    assert_eq!(metrics.negative_hits(), 1);
+    h2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn version_mismatch_is_rejected_wholesale() {
+    let dir = tmp_dir("version");
+    // A v0 store (or any foreign file) must be ignored, not misparsed.
+    std::fs::write(
+        dir.join(WARM_CACHE_FILE),
+        "# goma-warm-cache v0\n00aa\terr\tinfeasible\n",
+    )
+    .unwrap();
+    let h = spawn_with(&dir);
+    let _ = solve_all(&h);
+    let metrics = h.metrics();
+    let (_, solves, ..) = metrics.snapshot();
+    assert_eq!(solves, shapes().len() as u64, "must start cold on mismatch");
+    assert_eq!(metrics.warm_hits(), 0);
+    h.shutdown();
+    // The flush self-heals the file to the current version.
+    let text = std::fs::read_to_string(dir.join(WARM_CACHE_FILE)).unwrap();
+    assert_eq!(text.lines().next(), Some(WARM_CACHE_HEADER));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_store_recovers_intact_entries() {
+    let dir = tmp_dir("truncated");
+    let h1 = spawn_with(&dir);
+    let _ = solve_all(&h1);
+    h1.shutdown();
+
+    // Simulate a write cut off mid-entry: header + one intact entry + half
+    // of the next line.
+    let path = dir.join(WARM_CACHE_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 1 + shapes().len());
+    let mut broken = format!("{}\n{}\n", lines[0], lines[1]);
+    broken.push_str(&lines[2][..lines[2].len() / 2]);
+    std::fs::write(&path, broken).unwrap();
+
+    // Second spawn: no panic, the intact entry is warm, the rest re-solve.
+    let h2 = spawn_with(&dir);
+    let _ = solve_all(&h2);
+    let metrics = h2.metrics();
+    let (_, solves, ..) = metrics.snapshot();
+    assert_eq!(metrics.warm_hits(), 1, "the intact entry must survive");
+    assert_eq!(solves, shapes().len() as u64 - 1);
+    h2.shutdown();
+
+    // And the flush heals the store back to the full entry set.
+    let healed = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(healed.lines().count(), 1 + shapes().len());
+    std::fs::remove_dir_all(&dir).ok();
+}
