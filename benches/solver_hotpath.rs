@@ -1,43 +1,78 @@
 //! §Perf — solver hot-path microbenchmark (the L3 performance deliverable).
 //!
 //! Times `solver::solve` across every (workload GEMM × matching template)
-//! pair plus the O(1) energy evaluation itself, printing latency
-//! distributions. This is the harness used for the EXPERIMENTS.md §Perf
-//! before/after log.
+//! pair at engine thread counts 1 and 4, plus a dominance-pruning-off
+//! baseline leg and the O(1) energy evaluation itself, printing latency
+//! distributions. Emits `BENCH_solver.json` (geomean solve time, expanded
+//! nodes, combos pruned at threads 1/4, dominance savings) so the perf
+//! trajectory is recorded run over run; this is the harness used for the
+//! EXPERIMENTS.md §Perf before/after log.
 //!
 //! Run: `cargo bench --bench solver_hotpath`
 
 use goma::arch::{center_templates, edge_templates};
 use goma::energy::evaluate;
 use goma::mapping::GemmShape;
-use goma::solver::{solve, SolverOptions};
+use goma::solver::{default_solve_threads, solve_configured, SolverOptions};
 use goma::timeloop::score_unchecked;
 use goma::util::{geomean, percentile};
 use goma::workloads::{center_workloads, edge_workloads, Deployment};
+use std::io::Write;
 use std::time::Instant;
 
-fn time_solves(pairs: &[(GemmShape, goma::arch::Accelerator)]) -> Vec<f64> {
-    let mut out = Vec::new();
+/// One measured configuration: latency distribution plus the (summed,
+/// thread-count-deterministic) certificate counters.
+#[derive(Clone, Default)]
+struct Leg {
+    times: Vec<f64>,
+    nodes: u64,
+    combos_total: u64,
+    combos_pruned: u64,
+}
+
+fn time_solves(
+    pairs: &[(GemmShape, goma::arch::Accelerator)],
+    threads: usize,
+    dominance: bool,
+) -> Leg {
+    let mut leg = Leg::default();
     for (shape, arch) in pairs {
         let t = Instant::now();
-        let r = solve(*shape, arch, SolverOptions::default());
+        let r = solve_configured(*shape, arch, SolverOptions::default(), threads, dominance);
         let dt = t.elapsed().as_secs_f64();
-        if r.is_ok() {
-            out.push(dt);
+        if let Ok(r) = r {
+            leg.times.push(dt);
+            leg.nodes += r.certificate.nodes;
+            leg.combos_total += r.certificate.combos_total;
+            leg.combos_pruned += r.certificate.combos_pruned;
         }
     }
-    out
+    leg
 }
 
 fn report(label: &str, xs: &[f64]) {
     println!(
-        "{label:<28} n={:<4} geomean={:>9.4}s p50={:>9.4}s p95={:>9.4}s max={:>9.4}s",
+        "{label:<34} n={:<4} geomean={:>9.4}s p50={:>9.4}s p95={:>9.4}s max={:>9.4}s",
         xs.len(),
         geomean(xs),
         percentile(xs, 50.0),
         percentile(xs, 95.0),
         xs.iter().cloned().fold(0.0, f64::max)
     );
+}
+
+fn json_leg(leg: &Leg) -> String {
+    format!(
+        "{{\"n\": {}, \"geomean_s\": {}, \"p50_s\": {}, \"p95_s\": {}, \"nodes\": {}, \
+         \"combos_total\": {}, \"combos_pruned\": {}}}",
+        leg.times.len(),
+        geomean(&leg.times),
+        percentile(&leg.times, 50.0),
+        percentile(&leg.times, 95.0),
+        leg.nodes,
+        leg.combos_total,
+        leg.combos_pruned
+    )
 }
 
 fn main() {
@@ -47,45 +82,103 @@ fn main() {
     // counts so the harness exercises every code path in seconds.
     let smoke = std::env::var("GOMA_SMOKE").is_ok();
 
-    // Full-workload solve latency, edge and center.
-    let mut edge_pairs = Vec::new();
+    // Full-workload solve pairs, edge then center.
+    let mut pairs = Vec::new();
     for w in edge_workloads() {
         assert_eq!(w.deployment, Deployment::Edge);
         for arch in edge_templates() {
             for g in &w.gemms {
-                edge_pairs.push((g.shape, arch.clone()));
-            }
-        }
-    }
-    let mut center_pairs = Vec::new();
-    for w in center_workloads() {
-        for arch in center_templates() {
-            for g in &w.gemms {
-                center_pairs.push((g.shape, arch.clone()));
+                pairs.push((g.shape, arch.clone()));
             }
         }
     }
     if smoke {
-        edge_pairs.truncate(6);
-        center_pairs.truncate(2);
+        pairs.truncate(6);
     }
-    let edge_t = time_solves(&edge_pairs);
-    let center_t = time_solves(&center_pairs);
-    report(
-        &format!("edge solves ({} GEMMs)", edge_pairs.len()),
-        &edge_t,
+    let edge_count = pairs.len();
+    for w in center_workloads() {
+        for arch in center_templates() {
+            for g in &w.gemms {
+                pairs.push((g.shape, arch.clone()));
+            }
+        }
+    }
+    if smoke {
+        pairs.truncate(edge_count + 2);
+    }
+
+    // The measured legs: engine at 1 and 4 threads (dominance-pruned),
+    // the unpruned serial baseline the node savings are measured against,
+    // and — when `GOMA_SOLVE_THREADS` sets a different default — a leg at
+    // that default, so CI's env-varied smoke runs exercise distinct work.
+    let t1 = time_solves(&pairs, 1, true);
+    let t4 = time_solves(&pairs, 4, true);
+    let unpruned = time_solves(&pairs, 1, false);
+    report(&format!("solves ({} pairs), 1 thread", pairs.len()), &t1.times);
+    report(&format!("solves ({} pairs), 4 threads", pairs.len()), &t4.times);
+    report("unpruned baseline, 1 thread", &unpruned.times);
+    // The env-default leg, measured fresh only when it differs from the
+    // hard-coded 1/4-thread legs (re-timing an identical configuration
+    // would double the bench's wall clock for no new information).
+    let dflt = default_solve_threads();
+    let tdflt = match dflt {
+        1 => t1.clone(),
+        4 => t4.clone(),
+        _ => time_solves(&pairs, dflt, true),
+    };
+    report(&format!("env default leg ({dflt} thread(s))"), &tdflt.times);
+    assert_eq!(tdflt.nodes, t1.nodes, "default-leg counters must be thread-invariant");
+
+    // The engine's determinism guarantee, checked where it is cheapest:
+    // certificate counters must not depend on the thread count.
+    assert_eq!(t1.nodes, t4.nodes, "node counters must be thread-invariant");
+    assert_eq!(t1.combos_pruned, t4.combos_pruned, "combo counters must be thread-invariant");
+    println!(
+        "dominance pruning: {} -> {} nodes ({:.1}% saved), {} / {} combos pruned whole",
+        unpruned.nodes,
+        t1.nodes,
+        100.0 * (unpruned.nodes.saturating_sub(t1.nodes)) as f64 / unpruned.nodes.max(1) as f64,
+        t1.combos_pruned,
+        t1.combos_total
     );
-    report(
-        &format!("center solves ({} GEMMs)", center_pairs.len()),
-        &center_t,
+    println!(
+        "intra-solve speedup (4 threads vs 1): {:.2}x on geomean",
+        geomean(&t1.times) / geomean(&t4.times).max(1e-12)
     );
-    let all: Vec<f64> = edge_t.iter().chain(center_t.iter()).cloned().collect();
-    report("all solves", &all);
+
+    // Record the trajectory: geomean solve time, nodes, combos pruned at
+    // threads 1/4, and the dominance savings.
+    let json = format!(
+        "{{\n  \"bench\": \"solver_hotpath\",\n  \"smoke\": {},\n  \"pairs\": {},\n  \
+         \"threads_1\": {},\n  \"threads_4\": {},\n  \"unpruned_threads_1\": {},\n  \
+         \"default_threads\": {},\n  \"threads_default\": {},\n  \
+         \"speedup_threads_4\": {},\n  \"nodes_saved_by_dominance\": {}\n}}\n",
+        smoke,
+        pairs.len(),
+        json_leg(&t1),
+        json_leg(&t4),
+        json_leg(&unpruned),
+        dflt,
+        json_leg(&tdflt),
+        geomean(&t1.times) / geomean(&t4.times).max(1e-12),
+        unpruned.nodes.saturating_sub(t1.nodes)
+    );
+    // Anchored to the workspace root (CARGO_MANIFEST_DIR is `rust/`):
+    // cargo runs bench binaries with the *package* dir as cwd, and CI
+    // reads the record from the repository root.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_solver.json");
+    let written = std::fs::File::create(&out).and_then(|mut f| f.write_all(json.as_bytes()));
+    match written {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
 
     // O(1) objective evaluation latency (the paper's constant-time claim).
     let shape = GemmShape::mnk(131072, 28672, 8192);
     let arch = goma::arch::a100_like();
-    let m = solve(shape, &arch, SolverOptions::default()).unwrap().mapping;
+    let m = solve_configured(shape, &arch, SolverOptions::default(), 1, true)
+        .unwrap()
+        .mapping;
     let n = if smoke { 20_000 } else { 200_000 };
     let t = Instant::now();
     let mut acc = 0.0;
@@ -112,5 +205,5 @@ fn main() {
     println!(
         "\nshape check: per-GEMM optimal solve ≪ 1 s (paper: 0.65 s/GEMM geomean)."
     );
-    assert!(geomean(&all) < 1.0, "solver fell out of real-time range");
+    assert!(geomean(&t1.times) < 1.0, "solver fell out of real-time range");
 }

@@ -7,7 +7,7 @@
 
 use crate::arch;
 use crate::coordinator::MappingService;
-use crate::experiments::cases::{cached_jobs, normalize, summarize_normalized};
+use crate::experiments::cases::{cached_jobs_threads, normalize, summarize_normalized};
 use crate::experiments::Profile;
 use crate::mapping::GemmShape;
 use crate::solver::{solve, SolverOptions};
@@ -17,11 +17,12 @@ pub const USAGE: &str = "\
 goma — globally optimal GEMM mapping for spatial accelerators
 
 USAGE:
-    goma solve --m <M> --n <N> --k <K> [--arch eyeriss|gemmini|a100|tpu]
+    goma solve --m <M> --n <N> --k <K> [--arch eyeriss|gemmini|a100|tpu] [--solve-threads <N>]
     goma templates
     goma workloads
-    goma eval [--jobs <N>] [--profile fast|paper] [--refresh]
-    goma serve [--arch <name>] [--workload <0-11>] [--workers <N>] [--cache-dir <dir>]
+    goma eval [--jobs <N>] [--profile fast|paper] [--refresh] [--solve-threads <N>]
+    goma serve [--arch <name>] [--workload <0-11>] [--workers <N>] [--solve-threads <N>]
+               [--cache-dir <dir>]
     goma exec [--name <artifact>] [--dir <artifacts-dir>]
     goma conv [--arch eyeriss|gemmini|a100|tpu]
     goma help
@@ -71,6 +72,19 @@ fn req_u64(flags: &HashMap<String, String>, key: &str) -> u64 {
         .unwrap_or_else(|_| panic!("flag --{key} must be an integer"))
 }
 
+/// Parse `--solve-threads`: the engine's intra-solve thread count. `0`
+/// (the no-flag default) means auto (`GOMA_SOLVE_THREADS`, else serial);
+/// the solve result is bit-identical for every value.
+fn parse_solve_threads(flags: &HashMap<String, String>) -> anyhow::Result<usize> {
+    match flags.get("solve-threads") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => anyhow::bail!("--solve-threads must be a positive integer, got '{s}'"),
+        },
+        None => Ok(0),
+    }
+}
+
 fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let shape = GemmShape::mnk(
         req_u64(flags, "m"),
@@ -78,7 +92,11 @@ fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         req_u64(flags, "k"),
     );
     let acc = pick_arch(flags.get("arch").map(String::as_str).unwrap_or("eyeriss"));
-    let r = solve(shape, &acc, SolverOptions::default())?;
+    let opts = SolverOptions {
+        solve_threads: parse_solve_threads(flags)?,
+        ..SolverOptions::default()
+    };
+    let r = solve(shape, &acc, opts)?;
     println!("workload : {shape}");
     println!("arch     : {}", acc.name);
     println!("mapping  : {}", r.mapping.describe());
@@ -156,8 +174,13 @@ fn cmd_eval(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some("fast") | None => Profile::Fast,
         Some(other) => anyhow::bail!("unknown profile '{other}' (expected fast|paper)"),
     };
+    // Passed by value into the roster (never via the environment — `run`
+    // is driven in-process by the test suite, and setenv is not
+    // thread-safe). Results are bit-identical for every value — only
+    // GOMA's runtime column (and the wall clock) moves.
+    let solve_threads = parse_solve_threads(flags)?;
     eprintln!("[eval] 24-case sweep, profile {profile:?}, {jobs} worker(s)");
-    let records = cached_jobs(profile, jobs, flags.contains_key("refresh"));
+    let records = cached_jobs_threads(profile, jobs, flags.contains_key("refresh"), solve_threads);
     let edp = normalize(&records, |r| r.edp_case());
     let runtime = normalize(&records, |r| r.runtime_s());
     let edp_rows = summarize_normalized(&edp);
@@ -192,12 +215,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         },
         None => crate::util::parallel::default_jobs(),
     };
+    let solve_threads = parse_solve_threads(flags)?;
     let workloads = crate::workloads::all_workloads();
     let Some(w) = workloads.get(idx) else {
         anyhow::bail!("workload index {idx} out of range (0-{})", workloads.len() - 1);
     };
-    println!("serving {} on {} ({workers} worker(s))", w.name, acc.name);
-    let mut service = MappingService::default().with_workers(workers);
+    let solve_opts = SolverOptions { solve_threads, ..SolverOptions::default() };
+    let resolved = solve_opts.resolved_threads();
+    println!(
+        "serving {} on {} ({workers} worker(s) × {resolved} solve thread(s))",
+        w.name,
+        acc.name
+    );
+    let mut service = MappingService::default()
+        .with_workers(workers)
+        .with_solve_threads(solve_threads);
     if let Some(dir) = flags.get("cache-dir") {
         service = service.with_cache_dir(dir.as_str());
     }

@@ -7,12 +7,22 @@
 //! in-flight/coalescing table), cached keys — positive *and* negative —
 //! answer immediately, and the distinct uncached keys fan out to a
 //! [`crate::util::parallel::ordered_map`] scoped pool of `workers` threads.
-//! Each pooled solve builds its own `Rc`-based
-//! [`crate::solver::CandidateCache`] on its worker thread, so nothing
-//! non-`Send` ever crosses a thread boundary. Coalescing holds by
-//! construction: a key is grouped within its window and cached across
-//! windows, so at most one solve per in-flight key happens no matter how
-//! many duplicate requests race in from different client threads.
+//! Coalescing holds by construction: a key is grouped within its window
+//! and cached across windows, so at most one solve per in-flight key
+//! happens no matter how many duplicate requests race in from different
+//! client threads.
+//!
+//! **Thread-budget split.** The service's total solver concurrency is
+//! `workers × solve_threads` ([`MappingService::with_solve_threads`]):
+//! `workers` solves run concurrently across distinct keys, and each solve
+//! fans its own search space over `solve_threads` engine threads
+//! ([`crate::solver::solve_with_threads`]). When a window carries fewer
+//! distinct keys than workers, the idle share of the budget is handed to
+//! the keys actually in flight — a lone hot key gets the whole budget, up
+//! to the engine's per-wave parallelism cap
+//! ([`crate::solver::engine::WAVE_UNITS`] units in flight at once) —
+//! which is safe because the engine's result is bit-identical for every
+//! thread count, so the cache never observes the split.
 //!
 //! The cache is hash-sharded by fingerprint (`fp % shards`, one shard per
 //! worker) with per-shard hit metrics; with a `--cache-dir`, shards are
@@ -24,7 +34,7 @@
 use super::warm::{WarmOutcome, WarmStore};
 use crate::arch::Accelerator;
 use crate::mapping::GemmShape;
-use crate::solver::{solve, SolveError, SolveResult, SolverOptions};
+use crate::solver::{solve_with_threads, SolveError, SolveResult, SolverOptions};
 use crate::util::parallel::ordered_map;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -35,7 +45,10 @@ use std::thread::JoinHandle;
 
 /// Fingerprint/on-disk format version. Mixed into every fingerprint and
 /// into the warm-store header: bumping it cold-starts every cache.
-pub const CACHE_FORMAT_VERSION: u32 = 1;
+/// v2: the solver core was rebuilt (dominance pruning + wave-scheduled
+/// engine), which changes certificate counters — pre-split entries must
+/// never be replayed as the new solver's output.
+pub const CACHE_FORMAT_VERSION: u32 = 2;
 
 /// Stable 64-bit FNV-1a over a canonical little-endian byte encoding.
 /// `HashMap`'s SipHash is randomly keyed per process, so the persistent
@@ -107,6 +120,10 @@ pub fn solve_fingerprint(shape: GemmShape, arch: &Accelerator, opts: SolverOptio
             h.u64(d.as_nanos() as u64);
         }
     }
+    // `opts.solve_threads` is deliberately NOT hashed: the engine's result
+    // is bit-identical for every thread count (property-tested), so two
+    // services with different thread budgets must share cache entries —
+    // hashing the knob would split the warm store by deployment size.
     h.0
 }
 
@@ -341,6 +358,16 @@ impl MappingService {
         self
     }
 
+    /// Intra-solve engine threads per pooled solve (the other factor of
+    /// the `workers × solve_threads` budget split — see the module docs).
+    /// `0` restores the auto default (`GOMA_SOLVE_THREADS`, else serial).
+    /// Results are bit-identical for every value, so this knob never
+    /// enters the solve fingerprint.
+    pub fn with_solve_threads(mut self, solve_threads: usize) -> Self {
+        self.options.solve_threads = solve_threads;
+        self
+    }
+
     /// Enable the persistent warm-start cache rooted at `dir` (see
     /// [`super::warm`] for the format and invalidation rules).
     pub fn with_cache_dir<P: Into<PathBuf>>(mut self, dir: P) -> Self {
@@ -459,10 +486,10 @@ fn service_loop(
         }
         // Fan the distinct misses out to the scoped solve pool, answering
         // each key's waiters the moment its *own* solve finishes — no
-        // barrier on the rest of the window. Each worker's solve builds its
-        // own Rc-based CandidateCache thread-locally, and the waiters hand
-        // over through per-key Mutex slots so only `Send` data crosses
-        // threads (the reply senders never need to be `Sync`).
+        // barrier on the rest of the window. Each pooled solve builds its
+        // own Arc-held SearchSpace on its worker thread, and the waiters
+        // hand over through per-key Mutex slots so only `Send` data
+        // crosses threads (the reply senders never need to be `Sync`).
         let mut keys: Vec<u64> = Vec::with_capacity(misses.len());
         let mut inputs: Vec<(GemmShape, Accelerator)> = Vec::with_capacity(misses.len());
         let mut slots: Vec<Mutex<Vec<Request>>> = Vec::with_capacity(misses.len());
@@ -471,8 +498,20 @@ fn service_loop(
             inputs.push((waiters[0].shape, waiters[0].arch.clone()));
             slots.push(Mutex::new(waiters));
         }
+        // The workers × solve_threads budget split: a window with fewer
+        // distinct keys than workers spreads the idle workers' thread
+        // budget across the solves actually in flight, remainder to the
+        // earliest keys (results are bit-identical for every thread
+        // count, so this is invisible to the cache). With ≥ workers keys
+        // the share floors at the configured per-solve count, keeping the
+        // concurrent total within the budget.
+        let base_threads = options.resolved_threads();
+        let budget = workers * base_threads;
+        let share = budget / inputs.len().max(1);
+        let extra = budget % inputs.len().max(1);
         let solved = ordered_map(&inputs, workers, |i, inp| {
-            let result: WarmOutcome = match solve(inp.0, &inp.1, options) {
+            let per_solve = (share + usize::from(i < extra)).max(base_threads);
+            let result: WarmOutcome = match solve_with_threads(inp.0, &inp.1, options, per_solve) {
                 Ok(r) => {
                     m.solves.fetch_add(1, Ordering::Relaxed);
                     Ok(Arc::new(r))
@@ -487,14 +526,17 @@ fn service_loop(
             result
         });
         for (fp, result) in keys.into_iter().zip(solved) {
-            // Cache only *proved* outcomes. Under a wall-clock cap both a
-            // NoFeasibleMapping bailout and an unproven incumbent
-            // (`proved_optimal == false`) are load-dependent — caching or
-            // persisting either would pin a machine-load artifact onto the
-            // key forever. With no time limit every outcome is a proof.
+            // Cache only *proved* outcomes. Under a wall-clock cap a
+            // NoFeasibleMapping bailout, an Interrupted (timed out with no
+            // incumbent), and an unproven incumbent
+            // (`proved_optimal == false`) are all load-dependent — caching
+            // or persisting any of them would pin a machine-load artifact
+            // onto the key forever. With no time limit NoFeasibleMapping
+            // is a proof; Interrupted never is (and cannot occur uncapped).
             let proved = match &result {
                 Ok(r) => r.certificate.proved_optimal,
-                Err(_) => options.time_limit.is_none(),
+                Err(SolveError::NoFeasibleMapping) => options.time_limit.is_none(),
+                Err(_) => false,
             };
             if proved {
                 let sid = (fp % nshards) as usize;
@@ -525,6 +567,7 @@ fn service_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solver::solve;
 
     fn arch() -> Accelerator {
         Accelerator::custom("svc", 1 << 16, 16, 64)
@@ -608,8 +651,8 @@ mod tests {
         // bailout on a feasible key, or an unproven incumbent — so neither
         // may poison the cache: every submission re-attempts the solve.
         let opts = SolverOptions {
-            exact_pe: true,
             time_limit: Some(std::time::Duration::from_nanos(1)),
+            ..SolverOptions::default()
         };
         let handle = MappingService::new(opts).spawn();
         let big = Accelerator::custom("cap", 1 << 20, 256, 64);
@@ -620,6 +663,58 @@ mod tests {
         let (_, solves, hits, _, errs) = handle.metrics().snapshot();
         assert_eq!(hits, 0, "a capped bailout must not be served from cache");
         assert_eq!(solves + errs, 2, "every submission must re-attempt the solve");
+    }
+
+    #[test]
+    fn interrupted_bailout_is_answered_but_never_cached() {
+        // Regression for the load-artifact-as-proof bug: a timed-out solve
+        // with no incumbent surfaces as Interrupted (the key is perfectly
+        // feasible), is answered, and is never cached — every submission
+        // re-attempts the solve.
+        let opts = SolverOptions {
+            time_limit: Some(std::time::Duration::from_nanos(1)),
+            ..SolverOptions::default()
+        };
+        let handle = MappingService::new(opts).spawn();
+        let big = Accelerator::custom("cap", 1 << 20, 256, 64);
+        let shape = GemmShape::new(1 << 10, 1 << 10, 1 << 10);
+        for _ in 0..3 {
+            let err = handle.map(shape, big.clone()).unwrap_err();
+            assert_eq!(err, SolveError::Interrupted, "feasible key must not be proved out");
+        }
+        let (req, solves, hits, _, errs) = handle.metrics().snapshot();
+        assert_eq!(req, 3);
+        assert_eq!(hits, 0, "an Interrupted bailout must never be served from cache");
+        assert_eq!(handle.metrics().negative_hits(), 0);
+        assert_eq!(solves + errs, 3, "every submission must re-attempt the solve");
+    }
+
+    #[test]
+    fn solve_threads_budget_split_is_invisible_to_results() {
+        // A lone in-flight key receives the whole workers × solve_threads
+        // budget; the answer must still be bit-identical to the serial
+        // single-worker service.
+        let shape = GemmShape::new(128, 64, 32);
+        let serial = MappingService::default().spawn();
+        let wide = MappingService::default().with_workers(4).with_solve_threads(2).spawn();
+        let a = serial.map(shape, arch()).unwrap();
+        let b = wide.map(shape, arch()).unwrap();
+        assert_eq!(a.mapping, b.mapping);
+        assert_eq!(a.energy.normalized.to_bits(), b.energy.normalized.to_bits());
+        assert_eq!(a.certificate.nodes, b.certificate.nodes);
+        assert_eq!(a.certificate.combos_pruned, b.certificate.combos_pruned);
+    }
+
+    #[test]
+    fn fingerprint_ignores_solve_threads() {
+        // Thread budgets must share cache entries: the engine's result is
+        // bit-identical for every thread count, so the knob never splits
+        // the warm store.
+        let shape = GemmShape::new(8, 8, 8);
+        let a = Accelerator::custom("t", 4096, 8, 32);
+        let one = SolverOptions { solve_threads: 1, ..SolverOptions::default() };
+        let four = SolverOptions { solve_threads: 4, ..SolverOptions::default() };
+        assert_eq!(solve_fingerprint(shape, &a, one), solve_fingerprint(shape, &a, four));
     }
 
     #[test]
@@ -659,11 +754,11 @@ mod tests {
             solve_fingerprint(shape, &a, o),
             solve_fingerprint(GemmShape::new(8, 8, 16), &a, o)
         );
-        let relaxed = SolverOptions { exact_pe: false, time_limit: None };
+        let relaxed = SolverOptions { exact_pe: false, ..SolverOptions::default() };
         assert_ne!(solve_fingerprint(shape, &a, o), solve_fingerprint(shape, &a, relaxed));
         let capped = SolverOptions {
-            exact_pe: true,
             time_limit: Some(std::time::Duration::from_secs(1)),
+            ..SolverOptions::default()
         };
         assert_ne!(solve_fingerprint(shape, &a, o), solve_fingerprint(shape, &a, capped));
     }

@@ -5,7 +5,7 @@
 //! runs against the same `--cache-dir` answer without re-solving — the
 //! "same (workload, hardware) pairs recur across runs" serving pattern.
 //!
-//! **Format v1** (`warm_cache_v1.tsv` inside the cache dir): a header line
+//! **Format v2** (`warm_cache_v2.tsv` inside the cache dir): a header line
 //! ([`WARM_CACHE_HEADER`]) followed by one TSV entry per solve key. Keys
 //! are the 64-bit solve fingerprints of
 //! [`super::service::solve_fingerprint`] — shape, *full* architecture
@@ -33,11 +33,15 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// First line of every store file; the version must match exactly.
-pub const WARM_CACHE_HEADER: &str = "# goma-warm-cache v1";
+/// First line of every store file; the version must match exactly. Kept in
+/// lockstep with [`super::service::CACHE_FORMAT_VERSION`] so a version
+/// bump really does reject old files wholesale (v2: the solver-core split
+/// changed certificate counters).
+pub const WARM_CACHE_HEADER: &str = "# goma-warm-cache v2";
 
-/// File name of the store inside a service's `--cache-dir`.
-pub const WARM_CACHE_FILE: &str = "warm_cache_v1.tsv";
+/// File name of the store inside a service's `--cache-dir` (versioned in
+/// lockstep with the header: a pre-bump file is simply never opened).
+pub const WARM_CACHE_FILE: &str = "warm_cache_v2.tsv";
 
 /// One persisted outcome: the solve succeeded (full result) or proved the
 /// key infeasible (negative entry).

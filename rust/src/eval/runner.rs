@@ -94,6 +94,14 @@ pub fn run_case(mapper: &dyn Mapper, case: &Case) -> CaseOutcome {
 /// sweep fans out the full grid itself, see
 /// [`crate::experiments::cases::run_all_jobs`]).
 ///
+/// `jobs` is the *outer* parallelism knob (GEMMs per case); GOMA's *inner*
+/// knob — engine threads per solve — travels in the mapper itself
+/// ([`crate::mappers::GomaMapper::with_solve_threads`] or the
+/// `GOMA_SOLVE_THREADS` default). The two compose: `jobs × solve_threads`
+/// is the case's total thread budget, and since the engine is
+/// bit-identical for every thread count, neither knob perturbs the Eq. 35
+/// aggregates.
+///
 /// Each GEMM instance is mapped and scored independently (the solver and
 /// oracle are pure functions of `(shape, arch)`), then the outcomes are
 /// aggregated in workload order — so for any mapper with a deterministic
@@ -256,6 +264,28 @@ mod tests {
                 assert_eq!(p.ty, s.ty);
                 assert_eq!(p.mapping, s.mapping);
                 assert_eq!(p.oracle.edp.to_bits(), s.oracle.edp.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn case_aggregates_invariant_to_solve_threads() {
+        // The inner-parallelism knob must be invisible to every recorded
+        // number except wall-clock runtime: mappings and Eq. 35 aggregates
+        // are bit-identical at any engine thread count.
+        let case = tiny_case();
+        let serial = run_case(&GomaMapper::with_solve_threads(1), &case);
+        for threads in [2, 4] {
+            let par = run_case(&GomaMapper::with_solve_threads(threads), &case);
+            assert_eq!(par.edp_case.to_bits(), serial.edp_case.to_bits(), "threads={threads}");
+            assert_eq!(
+                par.energy_case.to_bits(),
+                serial.energy_case.to_bits(),
+                "threads={threads}"
+            );
+            for (p, s) in par.gemms.iter().zip(serial.gemms.iter()) {
+                assert_eq!(p.mapping, s.mapping);
+                assert_eq!(p.evaluations, s.evaluations, "node counters must match too");
             }
         }
     }

@@ -31,9 +31,22 @@ pub const MAPPER_ORDER: [&str; 6] = [
 /// published defaults while shrinking absolute work ~8× so the whole sweep
 /// fits in minutes on one vCPU (see DESIGN.md §2 testbed substitution).
 pub fn mappers_for(profile: Profile, seed: u64) -> Vec<Box<dyn Mapper>> {
+    mappers_for_threads(profile, seed, 0)
+}
+
+/// [`mappers_for`] with an explicit GOMA intra-solve thread count (`0` =
+/// auto: `GOMA_SOLVE_THREADS`, else serial). Only the GOMA entry is
+/// affected — baselines run their own (serial) searches — and GOMA's
+/// mappings and certificates are bit-identical for every value, so the
+/// knob only moves the measured runtime column.
+pub fn mappers_for_threads(
+    profile: Profile,
+    seed: u64,
+    solve_threads: usize,
+) -> Vec<Box<dyn Mapper>> {
     match profile {
         Profile::Paper => vec![
-            Box::new(GomaMapper::default()),
+            Box::new(GomaMapper::with_solve_threads(solve_threads)),
             Box::new(Cosa {
                 max_nodes: 20_000_000,
                 time_limit: Duration::from_secs(10),
@@ -44,7 +57,7 @@ pub fn mappers_for(profile: Profile, seed: u64) -> Vec<Box<dyn Mapper>> {
             Box::new(TimeloopHybrid::seeded(seed)),
         ],
         Profile::Fast => vec![
-            Box::new(GomaMapper::default()),
+            Box::new(GomaMapper::with_solve_threads(solve_threads)),
             Box::new(Cosa {
                 max_nodes: 2_000_000,
                 time_limit: Duration::from_millis(1500),
@@ -134,11 +147,25 @@ pub fn run_all(profile: Profile) -> Vec<CaseRecord> {
 /// `search_s` fields are wall-clock and vary under contention for
 /// everyone.
 pub fn run_all_jobs(profile: Profile, jobs: usize) -> Vec<CaseRecord> {
+    run_all_jobs_threads(profile, jobs, 0)
+}
+
+/// [`run_all_jobs`] with an explicit GOMA intra-solve thread count (the
+/// `goma eval --solve-threads` knob; `0` = auto). Passed by value rather
+/// than via the environment so in-process callers (the CLI test suite,
+/// embedding code) never mutate process-global state.
+pub fn run_all_jobs_threads(
+    profile: Profile,
+    jobs: usize,
+    solve_threads: usize,
+) -> Vec<CaseRecord> {
     let cases = all_cases();
     // One roster per case; a mapper instance is shared read-only across its
     // case's eight GEMMs.
-    let rosters: Vec<Vec<Box<dyn Mapper>>> =
-        cases.iter().map(|_| mappers_for(profile, 0xC0FFEE)).collect();
+    let rosters: Vec<Vec<Box<dyn Mapper>>> = cases
+        .iter()
+        .map(|_| mappers_for_threads(profile, 0xC0FFEE, solve_threads))
+        .collect();
     // The grid in serial sweep order: case-major, then mapper, then GEMM.
     let mut units: Vec<(usize, usize, usize)> = Vec::new();
     for (ci, case) in cases.iter().enumerate() {
@@ -274,6 +301,19 @@ pub fn cached(profile: Profile) -> Vec<CaseRecord> {
 /// regardless of the worker count, and `search_s` timings are only
 /// comparable when the cache was written serially.
 pub fn cached_jobs(profile: Profile, jobs: usize, refresh: bool) -> Vec<CaseRecord> {
+    cached_jobs_threads(profile, jobs, refresh, 0)
+}
+
+/// [`cached_jobs`] with an explicit GOMA intra-solve thread count (`0` =
+/// auto). The cache rows are thread-count-independent for everything but
+/// the measured `search_s` column, so a cache written at any setting
+/// answers every setting.
+pub fn cached_jobs_threads(
+    profile: Profile,
+    jobs: usize,
+    refresh: bool,
+    solve_threads: usize,
+) -> Vec<CaseRecord> {
     let path = cache_path(profile);
     let refresh = refresh || std::env::var("GOMA_REFRESH").is_ok();
     if !refresh {
@@ -282,7 +322,7 @@ pub fn cached_jobs(profile: Profile, jobs: usize, refresh: bool) -> Vec<CaseReco
             return r;
         }
     }
-    let records = run_all_jobs(profile, jobs);
+    let records = run_all_jobs_threads(profile, jobs, solve_threads);
     if let Err(e) = save(&records, &path) {
         eprintln!("[cases] cache write failed: {e}");
     }

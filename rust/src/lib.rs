@@ -11,7 +11,11 @@
 //! update counts*, giving an exact closed-form energy objective with O(1)
 //! evaluation ([`energy`]), which an exact branch-and-bound ([`solver`])
 //! minimizes under capacity/parallelism/divisibility constraints with a
-//! verifiable optimality certificate.
+//! verifiable optimality certificate. The solver is layered
+//! ([`solver::space`] enumerates the dominance-pruned search space,
+//! [`solver::engine`] scans it in parallel) and is bit-identical for every
+//! `solve_threads` value, so intra-solve parallelism is a pure latency
+//! knob (DESIGN.md §3–§4).
 //!
 //! The crate also contains everything the paper's evaluation depends on:
 //! a Timeloop-lite reference oracle ([`timeloop`]), an Accelergy-lite ERT
@@ -44,3 +48,7 @@ pub mod solver;
 pub mod timeloop;
 pub mod util;
 pub mod workloads;
+
+// Crate-root conveniences for the hot entry points (the long paths remain
+// canonical; these exist so embedding code can `use goma::{solve, ...}`).
+pub use solver::{solve, solve_with_threads, SolveError, SolveResult, SolverOptions};

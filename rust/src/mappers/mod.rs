@@ -63,6 +63,21 @@ pub struct GomaMapper {
     pub options: crate::solver::SolverOptions,
 }
 
+impl GomaMapper {
+    /// GOMA with an explicit intra-solve thread count (`solve_threads` in
+    /// [`crate::solver::SolverOptions`]). Mappings, energies, and
+    /// certificates are bit-identical for every value — threads only move
+    /// the measured `runtime` column.
+    pub fn with_solve_threads(solve_threads: usize) -> Self {
+        GomaMapper {
+            options: crate::solver::SolverOptions {
+                solve_threads,
+                ..Default::default()
+            },
+        }
+    }
+}
+
 impl Mapper for GomaMapper {
     fn name(&self) -> &'static str {
         "GOMA"

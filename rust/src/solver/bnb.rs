@@ -1,307 +1,44 @@
-//! The branch-and-bound search over the folded mapping space.
+//! Compatibility wrapper over the split solver core.
 //!
-//! Outer enumeration: spatial fanout triples (Eq. 29) × walking-axis pairs
-//! (Eq. 6) × bypass combinations (Eq. 8) — the "explicitly folded
-//! low-dimensional integer decision variables" of §V-C1. Inner search: three
-//! sorted per-axis candidate lists with
+//! The monolithic branch-and-bound that used to live here was split into
+//! two layers (DESIGN.md §3–§4):
 //!
-//! * **objective pruning** — partial objective + per-axis minima of the
-//!   unassigned axes is an admissible lower bound (separability);
-//! * **capacity pruning** — minimal achievable residency of the unassigned
-//!   axes (all tile lengths at their minima) bounds Eqs. (31)–(32) from
-//!   below;
-//! * **first-feasible-is-optimal** on the last axis: its list is sorted, so
-//!   the first candidate passing both capacity checks is the best
-//!   completion of the current prefix.
+//! * [`super::space`] — combo enumeration (Ŝ triples × walking pairs ×
+//!   bypass combos) as a prefetched, Pareto-pruned [`SearchSpace`];
+//! * [`super::engine`] — the parallel branch-and-bound that scans it under
+//!   a shared atomic incumbent with a deterministic reduction.
 //!
-//! Every pruned subtree is discarded only when its lower bound is ≥ the
-//! incumbent upper bound, so the returned mapping is a *proved* global
-//! optimum (gap 0) when the search runs to completion.
+//! [`solve`] keeps the historical entry point (`solver::solve`) alive by
+//! delegating to the engine at the options' resolved thread count; the
+//! legacy behavioral test suite stays here and pins the wrapper.
+//!
+//! [`SearchSpace`]: super::space::SearchSpace
 
-use super::candidates::{spatial_triples, AxisCandidate, CandidateCache};
-use super::Certificate;
+use super::engine;
+pub use super::engine::{SolveError, SolveResult, SolverOptions};
 use crate::arch::Accelerator;
-use crate::energy::{evaluate, EnergyBreakdown};
-use crate::mapping::{Axis, Bypass, GemmShape, Mapping, Tile, AXES};
-use std::fmt;
-use std::time::{Duration, Instant};
-
-/// Solver configuration.
-#[derive(Debug, Clone, Copy)]
-pub struct SolverOptions {
-    /// Enforce Eq. 29 as an equality (GOMA's constraint → 100 % PE
-    /// utilization → minimizing E ⇔ minimizing EDP, §V-A4).
-    pub exact_pe: bool,
-    /// Optional wall-clock budget; on expiry the incumbent is returned with
-    /// an honest non-zero gap.
-    pub time_limit: Option<Duration>,
-}
-
-impl Default for SolverOptions {
-    fn default() -> Self {
-        SolverOptions {
-            exact_pe: true,
-            time_limit: None,
-        }
-    }
-}
-
-/// Solve failure modes.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum SolveError {
-    /// No mapping satisfies the hard constraints (e.g. the PE count cannot
-    /// be factored over the workload extents, or capacities are too small).
-    NoFeasibleMapping,
-    /// The mapping service's worker pool went away (shut down or crashed)
-    /// before answering. Distinct from [`SolveError::NoFeasibleMapping`] on
-    /// purpose: a dead service says nothing about feasibility, and callers
-    /// must be able to retry elsewhere instead of mis-reporting "no mapping
-    /// exists". Never produced by [`solve`] itself.
-    ServiceUnavailable,
-}
-
-impl fmt::Display for SolveError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            SolveError::NoFeasibleMapping => write!(f, "no feasible mapping exists"),
-            SolveError::ServiceUnavailable => {
-                write!(f, "mapping service unavailable (worker pool shut down)")
-            }
-        }
-    }
-}
-
-impl std::error::Error for SolveError {}
-
-/// A solved instance: the optimal mapping, its closed-form energy, and the
-/// optimality certificate.
-#[derive(Debug, Clone)]
-pub struct SolveResult {
-    pub mapping: Mapping,
-    pub energy: EnergyBreakdown,
-    pub certificate: Certificate,
-    pub solve_time: Duration,
-}
-
-/// Minimal residency contribution of an axis at the regfile (all-minimal
-/// tile lengths): used for capacity pruning before the axis is assigned.
-fn min_l3(list: &[AxisCandidate]) -> u64 {
-    list.iter().map(|c| c.l3).min().unwrap_or(u64::MAX)
-}
-
-fn min_l1(list: &[AxisCandidate]) -> u64 {
-    list.iter().map(|c| c.l1).min().unwrap_or(u64::MAX)
-}
-
-/// Bypass-gated SRAM words (Eq. 32 LHS) for concrete per-axis `L^(1)`.
-fn sram_need(b1: Bypass, l1: [u64; 3]) -> u64 {
-    let mut s = 0;
-    if b1.x {
-        s += l1[1] * l1[2];
-    }
-    if b1.y {
-        s += l1[0] * l1[2];
-    }
-    if b1.z {
-        s += l1[0] * l1[1];
-    }
-    s
-}
-
-/// Bypass-gated regfile words (Eq. 31 LHS).
-fn rf_need(b3: Bypass, l3: [u64; 3]) -> u64 {
-    let mut s = 0;
-    if b3.x {
-        s += l3[1] * l3[2];
-    }
-    if b3.y {
-        s += l3[0] * l3[2];
-    }
-    if b3.z {
-        s += l3[0] * l3[1];
-    }
-    s
-}
+use crate::mapping::GemmShape;
 
 /// Compute the globally optimal mapping for `(shape, arch)` (Eq. 34).
+///
+/// Thin wrapper over [`engine::solve`]: the intra-solve thread count comes
+/// from [`SolverOptions::resolved_threads`] (explicit `solve_threads`,
+/// else `GOMA_SOLVE_THREADS`, else serial). The result is bit-identical
+/// for every thread count.
 pub fn solve(
     shape: GemmShape,
     arch: &Accelerator,
     opts: SolverOptions,
 ) -> Result<SolveResult, SolveError> {
-    let start = Instant::now();
-    let mut cache = CandidateCache::new(arch);
-    let triples = spatial_triples(shape, arch.num_pe, opts.exact_pe);
-    if triples.is_empty() {
-        return Err(SolveError::NoFeasibleMapping);
-    }
-    // NOTE(§Perf iteration log): balanced-first triple ordering was tried
-    // and *regressed* geomean solve time by ~35% — the optimum frequently
-    // sits at unbalanced splits (e.g. (1, 256, 256)), so reordering delays
-    // the incumbent. Natural divisor order kept.
-
-    let mut ub = f64::INFINITY;
-    let mut best: Option<Mapping> = None;
-    let mut nodes: u64 = 0;
-    let mut combos_total: u64 = 0;
-    let mut combos_pruned: u64 = 0;
-    let mut timed_out = false;
-
-    // All-resident bypass combos first: they are feasible most often and
-    // establish a strong incumbent early, letting the LB pruning bite.
-    let mut bypass_order: Vec<Bypass> = Bypass::all_combos().to_vec();
-    bypass_order.reverse();
-
-    'outer: for &(sx, sy, sz) in &triples {
-        let s = [sx, sy, sz];
-        // Prefetch the 16 per-axis candidate lists this triple can touch
-        // (walking-membership × residency bits) once, instead of hashing
-        // into the cache for every one of the 576 (α, B) combos below.
-        let prefetched: Vec<[std::rc::Rc<Vec<super::candidates::AxisCandidate>>; 16]> = AXES
-            .iter()
-            .map(|&d| {
-                std::array::from_fn(|bits| {
-                    cache.get(
-                        shape.get(d),
-                        s[d.index()],
-                        bits & 1 != 0,
-                        bits & 2 != 0,
-                        bits & 4 != 0,
-                        bits & 8 != 0,
-                        d == Axis::Z,
-                    )
-                })
-            })
-            .collect();
-        let pick = |d: Axis, a01: Axis, a12: Axis, b1: Bypass, b3: Bypass| {
-            let bits = (d == a01) as usize
-                | ((d == a12) as usize) << 1
-                | (b1.get(d) as usize) << 2
-                | (b3.get(d) as usize) << 3;
-            &prefetched[d.index()][bits]
-        };
-        for &a01 in &AXES {
-            for &a12 in &AXES {
-                for &b1 in &bypass_order {
-                    for &b3 in &bypass_order {
-                        combos_total += 1;
-                        if let Some(limit) = opts.time_limit {
-                            if start.elapsed() > limit {
-                                timed_out = true;
-                                break 'outer;
-                            }
-                        }
-                        // Combo-level capacity precheck with all-minimal
-                        // tile lengths (cheap necessary condition).
-                        let lists = [
-                            pick(Axis::X, a01, a12, b1, b3),
-                            pick(Axis::Y, a01, a12, b1, b3),
-                            pick(Axis::Z, a01, a12, b1, b3),
-                        ];
-                        if lists.iter().any(|l| l.is_empty()) {
-                            combos_pruned += 1;
-                            continue;
-                        }
-                        let min1 = [min_l1(&lists[0]), min_l1(&lists[1]), min_l1(&lists[2])];
-                        let min3 = [min_l3(&lists[0]), min_l3(&lists[1]), min_l3(&lists[2])];
-                        if sram_need(b1, min1) > arch.sram_words
-                            || rf_need(b3, min3) > arch.regfile_words
-                        {
-                            combos_pruned += 1;
-                            continue;
-                        }
-                        // Objective lower bound of the whole combo.
-                        let mins = [lists[0][0].f, lists[1][0].f, lists[2][0].f];
-                        if mins.iter().sum::<f64>() >= ub {
-                            combos_pruned += 1;
-                            continue;
-                        }
-
-                        // Depth-wise branch: x, then y, then the sorted
-                        // first-feasible scan on z.
-                        for cx in lists[0].iter() {
-                            if cx.f + mins[1] + mins[2] >= ub {
-                                break; // sorted ⇒ all later cx worse
-                            }
-                            // Capacity precheck with y/z minimal.
-                            if sram_need(b1, [cx.l1, min1[1], min1[2]]) > arch.sram_words
-                                || rf_need(b3, [cx.l3, min3[1], min3[2]]) > arch.regfile_words
-                            {
-                                continue;
-                            }
-                            for cy in lists[1].iter() {
-                                nodes += 1;
-                                let base = cx.f + cy.f;
-                                if base + mins[2] >= ub {
-                                    break;
-                                }
-                                if sram_need(b1, [cx.l1, cy.l1, min1[2]]) > arch.sram_words
-                                    || rf_need(b3, [cx.l3, cy.l3, min3[2]])
-                                        > arch.regfile_words
-                                {
-                                    continue;
-                                }
-                                for cz in lists[2].iter() {
-                                    if base + cz.f >= ub {
-                                        break;
-                                    }
-                                    if sram_need(b1, [cx.l1, cy.l1, cz.l1]) <= arch.sram_words
-                                        && rf_need(b3, [cx.l3, cy.l3, cz.l3])
-                                            <= arch.regfile_words
-                                    {
-                                        ub = base + cz.f;
-                                        best = Some(Mapping {
-                                            l1: Tile::new(cx.l1, cy.l1, cz.l1),
-                                            l2: Tile::new(cx.l3 * sx, cy.l3 * sy, cz.l3 * sz),
-                                            l3: Tile::new(cx.l3, cy.l3, cz.l3),
-                                            alpha01: a01,
-                                            alpha12: a12,
-                                            b1,
-                                            b3,
-                                        });
-                                        break; // sorted ⇒ first feasible is best
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
-
-    let mapping = best.ok_or(SolveError::NoFeasibleMapping)?;
-    let energy = evaluate(&mapping, shape, arch);
-    // `ub` tracks the axis-term sum; report in `normalized` units (which
-    // additionally include the constant compute term).
-    let upper = energy.normalized;
-    let lower = if timed_out {
-        // Trivial but honest bound: every mapping pays at least the MACs.
-        energy.compute
-    } else {
-        upper
-    };
-    Ok(SolveResult {
-        mapping,
-        energy,
-        certificate: Certificate {
-            upper_bound: upper,
-            lower_bound: lower,
-            gap: if upper > 0.0 { (upper - lower) / upper } else { 0.0 },
-            nodes,
-            combos_total,
-            combos_pruned,
-            proved_optimal: !timed_out,
-        },
-        solve_time: start.elapsed(),
-    })
+    engine::solve(shape, arch, opts)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::Accelerator;
+    use crate::energy::evaluate;
     use crate::mapping::validate;
+    use std::time::Duration;
 
     fn arch() -> Accelerator {
         Accelerator::custom("t", 16 * 1024, 16, 64)
@@ -352,30 +89,35 @@ mod tests {
         let shape = GemmShape::new(64, 64, 64);
         let a = Accelerator::custom("t4", 64 * 1024, 16, 1);
         let r = solve(shape, &a, SolverOptions::default()).unwrap();
-        let resident =
-            r.mapping.b3.x as u32 + r.mapping.b3.y as u32 + r.mapping.b3.z as u32;
+        let resident = r.mapping.b3.x as u32 + r.mapping.b3.y as u32 + r.mapping.b3.z as u32;
         assert!(resident <= 1, "rf can hold at most one unit tile");
         assert!(r.certificate.proved_optimal);
     }
 
     #[test]
-    fn time_limit_yields_honest_gap() {
+    fn time_limit_yields_interrupted_or_honest_gap() {
+        // Regression for the load-artifact-as-proof bug: a timed-out solve
+        // with no incumbent must report Interrupted, never
+        // NoFeasibleMapping — the instance is perfectly feasible.
         let shape = GemmShape::new(1 << 10, 1 << 10, 1 << 10);
         let a = Accelerator::custom("t5", 1 << 20, 256, 64);
-        let r = solve(
-            shape,
-            &a,
-            SolverOptions {
-                exact_pe: true,
-                time_limit: Some(Duration::from_nanos(1)),
-            },
-        );
-        // Either it finished within the first combo check (unlikely) or it
-        // timed out; a timeout must still return an error (no incumbent yet)
-        // or a result with gap > 0.
-        if let Ok(r) = r {
-            assert!(!r.certificate.proved_optimal);
-            assert!(r.certificate.gap > 0.0);
+        let opts = SolverOptions {
+            time_limit: Some(Duration::from_nanos(1)),
+            ..SolverOptions::default()
+        };
+        assert_eq!(solve(shape, &a, opts).unwrap_err(), SolveError::Interrupted);
+        // With a budget that can expire mid-search, the only acceptable
+        // outcomes are a proved optimum (fast machine), an honest non-zero
+        // gap, or Interrupted — never an infeasibility claim.
+        let mid = SolverOptions {
+            time_limit: Some(Duration::from_millis(20)),
+            ..SolverOptions::default()
+        };
+        match solve(shape, &a, mid) {
+            Ok(r) => {
+                assert!(r.certificate.proved_optimal || r.certificate.gap > 0.0);
+            }
+            Err(e) => assert_eq!(e, SolveError::Interrupted),
         }
     }
 

@@ -1,4 +1,4 @@
-//! Per-axis candidate generation with memoization.
+//! Per-axis candidate generation with memoization and dominance pruning.
 //!
 //! For a fixed axis configuration — global extent `L^(0)`, spatial fanout
 //! `Ŝ`, walking-axis membership flags, bypass bits — the axis's feasible
@@ -8,15 +8,26 @@
 //! ([`crate::energy::axis_term`]); lists are sorted ascending so index 0 is
 //! the per-axis lower bound.
 //!
+//! On top of the sort, lists are **Pareto-pruned** (DESIGN.md §3): a
+//! candidate `(f, l1, l3)` is dropped when an earlier candidate has
+//! `f' ≤ f`, `l1' ≤ l1`, `l3' ≤ l3`. The objective is separable in the
+//! per-axis `f` terms and both capacity constraints (Eqs. 31–32) are
+//! monotone in the per-axis `l1`/`l3`, so any completion feasible for the
+//! dominated candidate is feasible — and no more expensive — via its
+//! dominator: pruning never removes every optimal mapping, it only shrinks
+//! the lists the branch-and-bound scans.
+//!
 //! Lists depend only on `(L^(0), Ŝ, flags)` and are shared across the
-//! thousands of (α, B, Ŝ) combinations a solve visits — the memoization
-//! that keeps whole-space search in the milliseconds (§V-C).
+//! thousands of (α, B, Ŝ) combinations a solve visits; they are `Arc`-held
+//! so [`super::space::SearchSpace`] can build each list once and share it
+//! across the engine's worker threads — the memoization that keeps
+//! whole-space search in the milliseconds (§V-C).
 
 use crate::arch::Accelerator;
 use crate::energy::{axis_term, AxisTermInput};
 use crate::util::divisors;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// One feasible per-axis tiling decision and its objective contribution.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -45,32 +56,71 @@ fn flags(is_alpha01: bool, is_alpha12: bool, b1: bool, b3: bool, is_z: bool) -> 
         | (is_z as u8) << 4
 }
 
+/// Keep-first Pareto filter over an `f`-ascending list: a candidate is
+/// dropped iff an already-kept candidate (hence with `f' ≤ f`) also has
+/// `l1' ≤ l1` and `l3' ≤ l3`. Ties resolve to the earlier candidate, so
+/// the output is a deterministic subsequence of the input and index 0 is
+/// always kept (it is processed against an empty front).
+fn pareto_filter(sorted: Vec<AxisCandidate>) -> Vec<AxisCandidate> {
+    // `front` is a compacted staircase of kept (l1, l3) pairs: a point
+    // dominated by a newer kept point in the (l1, l3) plane can never
+    // reject a candidate the newer point would not, so it is dropped from
+    // the front (the candidate itself stays kept in the output).
+    let mut front: Vec<(u64, u64)> = Vec::new();
+    let mut out = Vec::with_capacity(sorted.len());
+    'cand: for c in sorted {
+        for &(l1, l3) in &front {
+            if l1 <= c.l1 && l3 <= c.l3 {
+                continue 'cand;
+            }
+        }
+        front.retain(|&(l1, l3)| !(c.l1 <= l1 && c.l3 <= l3));
+        front.push((c.l1, c.l3));
+        out.push(c);
+    }
+    out
+}
+
 /// Memoizing candidate-list factory, scoped to one `(shape, arch)` solve.
 pub struct CandidateCache<'a> {
     arch: &'a Accelerator,
-    lists: HashMap<Key, Rc<Vec<AxisCandidate>>>,
+    /// Apply the Pareto dominance filter to every list (`false` only for
+    /// A/B node-count baselines; the optimum is identical either way).
+    dominance: bool,
+    lists: HashMap<Key, Arc<Vec<AxisCandidate>>>,
     /// Divisor lists memoized per extent (shared across axes and fanouts).
-    divs: HashMap<u64, Rc<Vec<u64>>>,
+    divs: HashMap<u64, Arc<Vec<u64>>>,
+    raw_candidates: u64,
+    kept_candidates: u64,
 }
 
 impl<'a> CandidateCache<'a> {
     pub fn new(arch: &'a Accelerator) -> Self {
+        Self::with_dominance(arch, true)
+    }
+
+    /// A cache with the dominance filter switched on or off.
+    pub fn with_dominance(arch: &'a Accelerator, dominance: bool) -> Self {
         CandidateCache {
             arch,
+            dominance,
             lists: HashMap::new(),
             divs: HashMap::new(),
+            raw_candidates: 0,
+            kept_candidates: 0,
         }
     }
 
-    fn divisors_of(&mut self, n: u64) -> Rc<Vec<u64>> {
+    fn divisors_of(&mut self, n: u64) -> Arc<Vec<u64>> {
         self.divs
             .entry(n)
-            .or_insert_with(|| Rc::new(divisors(n)))
+            .or_insert_with(|| Arc::new(divisors(n)))
             .clone()
     }
 
-    /// Sorted candidate list for one axis configuration. Empty when the
-    /// fanout does not divide the extent (configuration infeasible).
+    /// Sorted (and, by default, dominance-pruned) candidate list for one
+    /// axis configuration. Empty when the fanout does not divide the
+    /// extent (configuration infeasible).
     #[allow(clippy::too_many_arguments)]
     pub fn get(
         &mut self,
@@ -81,7 +131,7 @@ impl<'a> CandidateCache<'a> {
         b1: bool,
         b3: bool,
         is_z: bool,
-    ) -> Rc<Vec<AxisCandidate>> {
+    ) -> Arc<Vec<AxisCandidate>> {
         let key = Key {
             l0,
             fanout,
@@ -117,7 +167,12 @@ impl<'a> CandidateCache<'a> {
             }
             out.sort_by(|a, b| a.f.partial_cmp(&b.f).unwrap());
         }
-        let rc = Rc::new(out);
+        self.raw_candidates += out.len() as u64;
+        if self.dominance {
+            out = pareto_filter(out);
+        }
+        self.kept_candidates += out.len() as u64;
+        let rc = Arc::new(out);
         self.lists.insert(key, rc.clone());
         rc
     }
@@ -125,6 +180,12 @@ impl<'a> CandidateCache<'a> {
     /// Number of distinct lists materialized (search-space telemetry).
     pub fn lists_built(&self) -> usize {
         self.lists.len()
+    }
+
+    /// `(raw, kept)` candidate totals across every list built so far —
+    /// `raw - kept` is the number of dominance-pruned candidates.
+    pub fn pruning_stats(&self) -> (u64, u64) {
+        (self.raw_candidates, self.kept_candidates)
     }
 }
 
@@ -188,8 +249,82 @@ mod tests {
         let mut cache = CandidateCache::new(&a);
         let l1 = cache.get(64, 4, false, true, true, true, false);
         let l2 = cache.get(64, 4, false, true, true, true, false);
-        assert!(Rc::ptr_eq(&l1, &l2));
+        assert!(Arc::ptr_eq(&l1, &l2));
         assert_eq!(cache.lists_built(), 1);
+    }
+
+    fn cand(f: f64, l1: u64, l3: u64) -> AxisCandidate {
+        AxisCandidate { l1, l3, f }
+    }
+
+    #[test]
+    fn pareto_filter_drops_dominated_only() {
+        let input = vec![
+            cand(1.0, 8, 2),
+            cand(2.0, 4, 4),  // incomparable with (8, 2): kept
+            cand(3.0, 8, 4),  // dominated by both: dropped
+            cand(4.0, 2, 1),  // smaller tiles than everything: kept
+            cand(5.0, 16, 8), // dominated by (2, 1): dropped
+        ];
+        let kept = pareto_filter(input);
+        assert_eq!(kept, vec![cand(1.0, 8, 2), cand(2.0, 4, 4), cand(4.0, 2, 1)]);
+    }
+
+    #[test]
+    fn pareto_filter_keeps_first_of_identical_pair() {
+        let input = vec![cand(1.0, 4, 2), cand(1.0, 4, 2)];
+        assert_eq!(pareto_filter(input), vec![cand(1.0, 4, 2)]);
+    }
+
+    #[test]
+    fn pareto_filter_matches_quadratic_definition() {
+        // The staircase compaction must reject exactly the candidates the
+        // O(n²) textbook definition rejects, on an awkward shuffled-tile
+        // input (f stays sorted; tiles deliberately zig-zag).
+        let mut input = Vec::new();
+        let mut state = 0x9E37u64;
+        for i in 0..40u64 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            input.push(cand(i as f64 * 0.5, 1 + (state >> 7) % 16, 1 + (state >> 23) % 16));
+        }
+        let fast = pareto_filter(input.clone());
+        let mut slow: Vec<AxisCandidate> = Vec::new();
+        for c in &input {
+            if !slow.iter().any(|k| k.l1 <= c.l1 && k.l3 <= c.l3) {
+                slow.push(*c);
+            }
+        }
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn dominance_pruned_list_is_subsequence_with_same_minimum() {
+        let a = Accelerator::custom("t", 1 << 20, 16, 256);
+        let mut pruned = CandidateCache::new(&a);
+        let mut raw = CandidateCache::with_dominance(&a, false);
+        let p = pruned.get(64, 4, false, true, true, true, false);
+        let r = raw.get(64, 4, false, true, true, true, false);
+        assert!(p.len() <= r.len());
+        // Subsequence check + the per-axis lower bound (index 0) survives.
+        let mut it = r.iter();
+        for c in p.iter() {
+            assert!(it.any(|rc| rc == c), "pruned list is not a subsequence");
+        }
+        assert_eq!(p[0], r[0]);
+        // Every dropped candidate has a dominator among the kept ones.
+        for c in r.iter() {
+            if !p.contains(c) {
+                assert!(
+                    p.iter().any(|k| k.f <= c.f && k.l1 <= c.l1 && k.l3 <= c.l3),
+                    "dropped candidate {c:?} has no dominator"
+                );
+            }
+        }
+        let (praw, pkept) = pruned.pruning_stats();
+        assert_eq!(praw, r.len() as u64);
+        assert_eq!(pkept, p.len() as u64);
+        let (rraw, rkept) = raw.pruning_stats();
+        assert_eq!(rraw, rkept, "unpruned cache must keep everything");
     }
 
     #[test]

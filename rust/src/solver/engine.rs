@@ -1,0 +1,625 @@
+//! The parallel, dominance-pruned branch-and-bound engine (DESIGN.md §4).
+//!
+//! [`super::space::SearchSpace`] hands the engine an ordered list of
+//! *units* (spatial fanout triples with prefetched, Pareto-pruned
+//! candidate lists); the engine fans them over
+//! [`crate::util::parallel::ordered_map`]'s scoped worker pool in
+//! fixed-size **waves** of [`WAVE_UNITS`] units, under a shared atomic
+//! incumbent (relaxed reads, CAS-tighten on improvement).
+//!
+//! **Determinism rule** (the reason `solve()` is bit-identical for every
+//! thread count): incumbent *reads* are quantized to wave boundaries —
+//! every unit in a wave scans against the same incumbent bits, taken once
+//! before the wave launches, so each unit's outcome (local best, expanded
+//! nodes, pruned combos) is a pure function of `(unit, wave incumbent)`
+//! and never of thread scheduling. Workers CAS-tighten the incumbent the
+//! moment they find a better mapping, but the tightened bound is only
+//! *observed* at the next wave boundary. The final reduction walks unit
+//! outcomes in enumeration order taking strict improvements, which is
+//! exactly the serial scan's first-best-wins rule, so the returned
+//! mapping, energy, and [`Certificate`] carry no trace of the thread
+//! count. `solve_serial_reference` re-implements the same semantics as a
+//! plain sequential loop (no pool, no atomics); the property suite pins
+//! the engine against it at 1/2/4 threads.
+//!
+//! Inner search per unit (unchanged from the classic branch-and-bound):
+//! sorted per-axis candidate lists give admissible lower bounds (sum of
+//! per-axis minima), capacity prechecks bound Eqs. (31)–(32) from below,
+//! and the last axis is a first-feasible-is-optimal scan. Every pruned
+//! subtree is discarded only when its lower bound is ≥ the incumbent, so
+//! a run to completion returns a *proved* global optimum (gap 0).
+
+use super::candidates::AxisCandidate;
+use super::space::{SearchSpace, TripleUnit};
+use super::Certificate;
+use crate::arch::Accelerator;
+use crate::energy::{evaluate, EnergyBreakdown};
+use crate::mapping::{Axis, Bypass, GemmShape, Mapping, Tile};
+use crate::util::parallel::ordered_map;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Units per scheduling wave: the incumbent-synchronization granularity
+/// (and therefore the intra-solve parallelism cap). Thread-count
+/// *independent* on purpose — it is part of the engine's deterministic
+/// semantics, not a tuning knob (DESIGN.md §4).
+pub const WAVE_UNITS: usize = 8;
+
+/// Wall-clock re-check period inside the x/y scan loops, in expanded
+/// nodes. Power of two: the check is `nodes & (PERIOD - 1) == 0`.
+const TIME_CHECK_PERIOD: u64 = 4096;
+
+/// Solver configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SolverOptions {
+    /// Enforce Eq. 29 as an equality (GOMA's constraint → 100 % PE
+    /// utilization → minimizing E ⇔ minimizing EDP, §V-A4).
+    pub exact_pe: bool,
+    /// Optional wall-clock budget; on expiry the incumbent is returned with
+    /// an honest non-zero gap, or [`SolveError::Interrupted`] when no
+    /// incumbent exists yet.
+    pub time_limit: Option<Duration>,
+    /// Intra-solve worker threads fanned over the search space's units.
+    /// `0` means auto: the `GOMA_SOLVE_THREADS` env override when set,
+    /// otherwise 1 (serial). The solve result is bit-identical for every
+    /// value — this knob trades cores for single-solve latency only.
+    /// Effective parallelism tops out at [`WAVE_UNITS`] (at most one wave
+    /// of units is in flight at a time), so values above it add nothing.
+    pub solve_threads: usize,
+}
+
+impl Default for SolverOptions {
+    fn default() -> Self {
+        SolverOptions {
+            exact_pe: true,
+            time_limit: None,
+            solve_threads: 0,
+        }
+    }
+}
+
+impl SolverOptions {
+    /// The effective intra-solve thread count: `solve_threads` when ≥ 1,
+    /// otherwise [`default_solve_threads`].
+    pub fn resolved_threads(&self) -> usize {
+        if self.solve_threads >= 1 {
+            self.solve_threads
+        } else {
+            default_solve_threads()
+        }
+    }
+}
+
+/// Default intra-solve thread count: the `GOMA_SOLVE_THREADS` env override
+/// when set, otherwise 1. Serial is the default on purpose: the evaluation
+/// sweeps *time* mapper searches, and those wall-clock measurements are
+/// only comparable without self-inflicted contention — parallel solves are
+/// opt-in via `--solve-threads` / `GOMA_SOLVE_THREADS`.
+pub fn default_solve_threads() -> usize {
+    if let Ok(v) = std::env::var("GOMA_SOLVE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    1
+}
+
+/// Solve failure modes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SolveError {
+    /// No mapping satisfies the hard constraints (e.g. the PE count cannot
+    /// be factored over the workload extents, or capacities are too small).
+    /// With no time limit this is a *proof* of infeasibility.
+    NoFeasibleMapping,
+    /// The wall-clock budget expired before *any* feasible mapping was
+    /// found. Deliberately distinct from
+    /// [`SolveError::NoFeasibleMapping`]: an interrupted search proves
+    /// nothing about the space, and reporting it as infeasibility would
+    /// turn a machine-load artifact into a (cacheable, persistable)
+    /// proof. Callers treat it like any capped bailout — answer the
+    /// request, never cache it.
+    Interrupted,
+    /// The mapping service's worker pool went away (shut down or crashed)
+    /// before answering. Distinct from [`SolveError::NoFeasibleMapping`] on
+    /// purpose: a dead service says nothing about feasibility, and callers
+    /// must be able to retry elsewhere instead of mis-reporting "no mapping
+    /// exists". Never produced by [`solve`] itself.
+    ServiceUnavailable,
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolveError::NoFeasibleMapping => write!(f, "no feasible mapping exists"),
+            SolveError::Interrupted => write!(
+                f,
+                "search interrupted by the time limit before any feasible mapping was found"
+            ),
+            SolveError::ServiceUnavailable => {
+                write!(f, "mapping service unavailable (worker pool shut down)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+/// A solved instance: the optimal mapping, its closed-form energy, and the
+/// optimality certificate.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub mapping: Mapping,
+    pub energy: EnergyBreakdown,
+    pub certificate: Certificate,
+    pub solve_time: Duration,
+}
+
+/// Minimal residency contribution of an axis at the regfile (all-minimal
+/// tile lengths): used for capacity pruning before the axis is assigned.
+fn min_l3(list: &[AxisCandidate]) -> u64 {
+    list.iter().map(|c| c.l3).min().unwrap_or(u64::MAX)
+}
+
+fn min_l1(list: &[AxisCandidate]) -> u64 {
+    list.iter().map(|c| c.l1).min().unwrap_or(u64::MAX)
+}
+
+/// Bypass-gated SRAM words (Eq. 32 LHS) for concrete per-axis `L^(1)`.
+fn sram_need(b1: Bypass, l1: [u64; 3]) -> u64 {
+    let mut s = 0;
+    if b1.x {
+        s += l1[1] * l1[2];
+    }
+    if b1.y {
+        s += l1[0] * l1[2];
+    }
+    if b1.z {
+        s += l1[0] * l1[1];
+    }
+    s
+}
+
+/// Bypass-gated regfile words (Eq. 31 LHS).
+fn rf_need(b3: Bypass, l3: [u64; 3]) -> u64 {
+    let mut s = 0;
+    if b3.x {
+        s += l3[1] * l3[2];
+    }
+    if b3.y {
+        s += l3[0] * l3[2];
+    }
+    if b3.z {
+        s += l3[0] * l3[1];
+    }
+    s
+}
+
+/// Search-effort counters, summed across units into the [`Certificate`].
+#[derive(Debug, Clone, Copy, Default)]
+struct Tally {
+    nodes: u64,
+    combos_total: u64,
+    combos_pruned: u64,
+}
+
+impl Tally {
+    fn absorb(&mut self, o: &UnitOutcome) {
+        self.nodes += o.nodes;
+        self.combos_total += o.combos_total;
+        self.combos_pruned += o.combos_pruned;
+    }
+}
+
+/// What one unit scan reports back: a pure function of
+/// `(unit, incumbent-at-wave-start, deadline)`.
+struct UnitOutcome {
+    /// The unit's best feasible completion strictly below the wave
+    /// incumbent, as `(axis-term sum, mapping)`.
+    best: Option<(f64, Mapping)>,
+    nodes: u64,
+    combos_total: u64,
+    combos_pruned: u64,
+    timed_out: bool,
+}
+
+/// Exhaustive branch-and-bound over one unit's 576 combos, against a fixed
+/// incoming incumbent. This is the engine's only search loop; both the
+/// parallel path and the serial reference call it.
+fn scan_unit(
+    unit: &TripleUnit,
+    combos: &[(Axis, Axis, Bypass, Bypass)],
+    arch: &Accelerator,
+    ub_in: f64,
+    deadline: Option<Instant>,
+) -> UnitOutcome {
+    let [sx, sy, sz] = unit.s;
+    let mut ub = ub_in;
+    let mut best: Option<(f64, Mapping)> = None;
+    let mut nodes: u64 = 0;
+    let mut combos_total: u64 = 0;
+    let mut combos_pruned: u64 = 0;
+    let mut timed_out = false;
+
+    'combos: for &(a01, a12, b1, b3) in combos {
+        combos_total += 1;
+        if deadline.is_some_and(|d| Instant::now() > d) {
+            timed_out = true;
+            break 'combos;
+        }
+        let lists = [
+            unit.list(Axis::X, a01, a12, b1, b3),
+            unit.list(Axis::Y, a01, a12, b1, b3),
+            unit.list(Axis::Z, a01, a12, b1, b3),
+        ];
+        if lists.iter().any(|l| l.is_empty()) {
+            combos_pruned += 1;
+            continue;
+        }
+        // Combo-level capacity precheck with all-minimal tile lengths
+        // (cheap necessary condition).
+        let min1 = [min_l1(lists[0]), min_l1(lists[1]), min_l1(lists[2])];
+        let min3 = [min_l3(lists[0]), min_l3(lists[1]), min_l3(lists[2])];
+        if sram_need(b1, min1) > arch.sram_words || rf_need(b3, min3) > arch.regfile_words {
+            combos_pruned += 1;
+            continue;
+        }
+        // Objective lower bound of the whole combo.
+        let mins = [lists[0][0].f, lists[1][0].f, lists[2][0].f];
+        if mins.iter().sum::<f64>() >= ub {
+            combos_pruned += 1;
+            continue;
+        }
+
+        // Depth-wise branch: x, then y, then the sorted first-feasible
+        // scan on z.
+        for cx in lists[0] {
+            if cx.f + mins[1] + mins[2] >= ub {
+                break; // sorted ⇒ all later cx worse
+            }
+            // Capacity precheck with y/z minimal.
+            if sram_need(b1, [cx.l1, min1[1], min1[2]]) > arch.sram_words
+                || rf_need(b3, [cx.l3, min3[1], min3[2]]) > arch.regfile_words
+            {
+                continue;
+            }
+            for cy in lists[1] {
+                nodes += 1;
+                // One combo with huge candidate lists must not blow the
+                // wall-clock budget between the per-combo checks.
+                if nodes & (TIME_CHECK_PERIOD - 1) == 0
+                    && deadline.is_some_and(|d| Instant::now() > d)
+                {
+                    timed_out = true;
+                    break 'combos;
+                }
+                let base = cx.f + cy.f;
+                if base + mins[2] >= ub {
+                    break;
+                }
+                if sram_need(b1, [cx.l1, cy.l1, min1[2]]) > arch.sram_words
+                    || rf_need(b3, [cx.l3, cy.l3, min3[2]]) > arch.regfile_words
+                {
+                    continue;
+                }
+                for cz in lists[2] {
+                    if base + cz.f >= ub {
+                        break;
+                    }
+                    if sram_need(b1, [cx.l1, cy.l1, cz.l1]) <= arch.sram_words
+                        && rf_need(b3, [cx.l3, cy.l3, cz.l3]) <= arch.regfile_words
+                    {
+                        ub = base + cz.f;
+                        best = Some((
+                            ub,
+                            Mapping {
+                                l1: Tile::new(cx.l1, cy.l1, cz.l1),
+                                l2: Tile::new(cx.l3 * sx, cy.l3 * sy, cz.l3 * sz),
+                                l3: Tile::new(cx.l3, cy.l3, cz.l3),
+                                alpha01: a01,
+                                alpha12: a12,
+                                b1,
+                                b3,
+                            },
+                        ));
+                        break; // sorted ⇒ first feasible is best
+                    }
+                }
+            }
+        }
+    }
+    UnitOutcome {
+        best,
+        nodes,
+        combos_total,
+        combos_pruned,
+        timed_out,
+    }
+}
+
+/// CAS-tighten the shared incumbent (stored as `f64` bits) to `v` if `v`
+/// is an improvement. Relaxed ordering throughout: the value is a pruning
+/// hint, and the wave barrier (the scoped pool join) is the only
+/// synchronization the determinism rule relies on.
+fn tighten(incumbent: &AtomicU64, v: f64) {
+    let mut cur = incumbent.load(Ordering::Relaxed);
+    while v < f64::from_bits(cur) {
+        match incumbent.compare_exchange_weak(
+            cur,
+            v.to_bits(),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => break,
+            Err(observed) => cur = observed,
+        }
+    }
+}
+
+/// Assemble the [`SolveResult`] from the winning mapping and the summed
+/// search-effort counters.
+fn finish(
+    start: Instant,
+    shape: GemmShape,
+    arch: &Accelerator,
+    mapping: Mapping,
+    tally: Tally,
+    timed_out: bool,
+) -> SolveResult {
+    let energy = evaluate(&mapping, shape, arch);
+    // The scans track the axis-term sum; report in `normalized` units
+    // (which additionally include the constant compute term).
+    let upper = energy.normalized;
+    let lower = if timed_out {
+        // Trivial but honest bound: every mapping pays at least the MACs.
+        energy.compute
+    } else {
+        upper
+    };
+    SolveResult {
+        mapping,
+        energy,
+        certificate: Certificate {
+            upper_bound: upper,
+            lower_bound: lower,
+            gap: if upper > 0.0 { (upper - lower) / upper } else { 0.0 },
+            nodes: tally.nodes,
+            combos_total: tally.combos_total,
+            combos_pruned: tally.combos_pruned,
+            proved_optimal: !timed_out,
+        },
+        solve_time: start.elapsed(),
+    }
+}
+
+/// Compute the globally optimal mapping for `(shape, arch)` (Eq. 34) with
+/// the thread count resolved from `opts` ([`SolverOptions::resolved_threads`]).
+pub fn solve(
+    shape: GemmShape,
+    arch: &Accelerator,
+    opts: SolverOptions,
+) -> Result<SolveResult, SolveError> {
+    solve_with_threads(shape, arch, opts, opts.resolved_threads())
+}
+
+/// [`solve`] with an explicit intra-solve thread count. The result —
+/// mapping, energy, and certificate down to the node counters — is
+/// bit-identical for every `threads` value (see the module docs for the
+/// determinism rule); only `solve_time` varies.
+pub fn solve_with_threads(
+    shape: GemmShape,
+    arch: &Accelerator,
+    opts: SolverOptions,
+    threads: usize,
+) -> Result<SolveResult, SolveError> {
+    solve_configured(shape, arch, opts, threads, true)
+}
+
+/// [`solve_with_threads`] with the dominance filter switched on or off —
+/// `dominance = false` is the A/B baseline used by the node-count property
+/// tests and the `solver_hotpath` bench; the optimum is identical either
+/// way (DESIGN.md §3).
+pub fn solve_configured(
+    shape: GemmShape,
+    arch: &Accelerator,
+    opts: SolverOptions,
+    threads: usize,
+    dominance: bool,
+) -> Result<SolveResult, SolveError> {
+    let start = Instant::now();
+    let deadline = opts.time_limit.and_then(|l| start.checked_add(l));
+    let space = SearchSpace::build_bounded(shape, arch, opts.exact_pe, dominance, deadline);
+    // A truncated space is already a timeout: an empty one proves nothing
+    // (the deadline may have expired before any unit was enumerated), and
+    // a partial one can never prove optimality.
+    let mut timed_out = space.truncated;
+    if space.is_empty() {
+        return Err(if timed_out {
+            SolveError::Interrupted
+        } else {
+            SolveError::NoFeasibleMapping
+        });
+    }
+    let threads = threads.max(1);
+    let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
+    let mut best: Option<(f64, Mapping)> = None;
+    let mut tally = Tally::default();
+
+    for wave in space.units.chunks(WAVE_UNITS) {
+        if deadline.is_some_and(|d| Instant::now() > d) {
+            timed_out = true;
+            break;
+        }
+        // The determinism rule: one incumbent read per wave, shared by
+        // every unit in it.
+        let ub_wave = f64::from_bits(incumbent.load(Ordering::Relaxed));
+        let outcomes = ordered_map(wave, threads, |_, unit| {
+            let o = scan_unit(unit, &space.combos, arch, ub_wave, deadline);
+            if let Some((v, _)) = o.best {
+                tighten(&incumbent, v);
+            }
+            o
+        });
+        // Deterministic reduction: strict first-best-wins in unit order —
+        // the serial scan's rule, independent of which worker ran what.
+        for o in outcomes {
+            tally.absorb(&o);
+            timed_out |= o.timed_out;
+            if let Some((v, m)) = o.best {
+                let better = match &best {
+                    Some((bv, _)) => v < *bv,
+                    None => true,
+                };
+                if better {
+                    best = Some((v, m));
+                }
+            }
+        }
+        if timed_out {
+            break;
+        }
+    }
+
+    match best {
+        Some((_, mapping)) => Ok(finish(start, shape, arch, mapping, tally, timed_out)),
+        None if timed_out => Err(SolveError::Interrupted),
+        None => Err(SolveError::NoFeasibleMapping),
+    }
+}
+
+/// A plain sequential implementation of the engine's exact semantics — no
+/// worker pool, no atomics, same wave-quantized incumbent schedule. This
+/// is the "serial path" the property suite pins [`solve_with_threads`]
+/// against at 1/2/4 threads: any scheduling, reduction, or
+/// incumbent-sharing bug in the parallel machinery shows up as a bit
+/// difference against this function.
+pub fn solve_serial_reference(
+    shape: GemmShape,
+    arch: &Accelerator,
+    opts: SolverOptions,
+) -> Result<SolveResult, SolveError> {
+    let start = Instant::now();
+    let deadline = opts.time_limit.and_then(|l| start.checked_add(l));
+    let space = SearchSpace::build_bounded(shape, arch, opts.exact_pe, true, deadline);
+    let mut timed_out = space.truncated;
+    if space.is_empty() {
+        return Err(if timed_out {
+            SolveError::Interrupted
+        } else {
+            SolveError::NoFeasibleMapping
+        });
+    }
+    let mut ub = f64::INFINITY;
+    let mut best: Option<(f64, Mapping)> = None;
+    let mut tally = Tally::default();
+
+    for wave in space.units.chunks(WAVE_UNITS) {
+        if deadline.is_some_and(|d| Instant::now() > d) {
+            timed_out = true;
+            break;
+        }
+        let ub_wave = ub;
+        for unit in wave {
+            let o = scan_unit(unit, &space.combos, arch, ub_wave, deadline);
+            tally.absorb(&o);
+            timed_out |= o.timed_out;
+            if let Some((v, m)) = o.best {
+                if v < ub {
+                    ub = v;
+                }
+                let better = match &best {
+                    Some((bv, _)) => v < *bv,
+                    None => true,
+                };
+                if better {
+                    best = Some((v, m));
+                }
+            }
+        }
+        if timed_out {
+            break;
+        }
+    }
+
+    match best {
+        Some((_, mapping)) => Ok(finish(start, shape, arch, mapping, tally, timed_out)),
+        None if timed_out => Err(SolveError::Interrupted),
+        None => Err(SolveError::NoFeasibleMapping),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> Accelerator {
+        Accelerator::custom("eng", 16 * 1024, 16, 64)
+    }
+
+    fn assert_bit_identical(a: &SolveResult, b: &SolveResult, label: &str) {
+        let (ca, cb) = (&a.certificate, &b.certificate);
+        assert_eq!(a.mapping, b.mapping, "{label}: mapping");
+        let (ea, eb) = (a.energy.normalized, b.energy.normalized);
+        assert_eq!(ea.to_bits(), eb.to_bits(), "{label}: energy");
+        assert_eq!(ca.upper_bound.to_bits(), cb.upper_bound.to_bits(), "{label}: ub");
+        assert_eq!(ca.lower_bound.to_bits(), cb.lower_bound.to_bits(), "{label}: lb");
+        assert_eq!(ca.nodes, cb.nodes, "{label}: nodes");
+        assert_eq!(ca.combos_total, cb.combos_total, "{label}: combos_total");
+        assert_eq!(ca.combos_pruned, cb.combos_pruned, "{label}: combos_pruned");
+        assert_eq!(ca.proved_optimal, cb.proved_optimal, "{label}: proved");
+    }
+
+    #[test]
+    fn engine_is_bit_identical_across_thread_counts() {
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let opts = SolverOptions::default();
+        let reference = solve_serial_reference(shape, &a, opts).unwrap();
+        for threads in [1, 2, 4] {
+            let r = solve_with_threads(shape, &a, opts, threads).unwrap();
+            assert_bit_identical(&r, &reference, &format!("threads={threads}"));
+        }
+    }
+
+    #[test]
+    fn timeout_without_incumbent_is_interrupted_not_infeasible() {
+        // A 1 ns budget expires before the first wave launches: the engine
+        // must say "interrupted", not fabricate an infeasibility proof.
+        let shape = GemmShape::new(1 << 10, 1 << 10, 1 << 10);
+        let a = Accelerator::custom("cap", 1 << 20, 256, 64);
+        let opts = SolverOptions {
+            time_limit: Some(Duration::from_nanos(1)),
+            ..SolverOptions::default()
+        };
+        assert_eq!(solve(shape, &a, opts).unwrap_err(), SolveError::Interrupted);
+        assert_eq!(solve_serial_reference(shape, &a, opts).unwrap_err(), SolveError::Interrupted);
+    }
+
+    #[test]
+    fn dominance_pruning_preserves_the_optimum_and_never_adds_nodes() {
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let opts = SolverOptions::default();
+        let pruned = solve_configured(shape, &a, opts, 1, true).unwrap();
+        let raw = solve_configured(shape, &a, opts, 1, false).unwrap();
+        let (po, ro) = (pruned.energy.normalized, raw.energy.normalized);
+        assert!((po - ro).abs() / ro < 1e-9, "pruning changed the optimum");
+        assert!(
+            pruned.certificate.nodes <= raw.certificate.nodes,
+            "pruning must never expand more nodes ({} > {})",
+            pruned.certificate.nodes,
+            raw.certificate.nodes
+        );
+    }
+
+    #[test]
+    fn resolved_threads_prefers_explicit_over_env() {
+        let explicit = SolverOptions {
+            solve_threads: 3,
+            ..SolverOptions::default()
+        };
+        assert_eq!(explicit.resolved_threads(), 3);
+        let auto = SolverOptions::default();
+        assert!(auto.resolved_threads() >= 1);
+    }
+}

@@ -17,16 +17,29 @@
 //!    lists then give admissible lower bounds (sum of per-axis minima) and
 //!    a first-feasible-is-optimal scan on the last axis.
 //!
-//! The solver tracks a provable lower bound and the best feasible upper
-//! bound and emits a [`Certificate`]; `gap == 0` unless a time limit is hit.
+//! The implementation is layered (DESIGN.md §3–§4): [`space`] enumerates
+//! the folded space — spatial-fanout units with prefetched,
+//! **Pareto-pruned** candidate lists — and [`engine`] runs the parallel
+//! branch-and-bound over it, fanning units across a scoped worker pool
+//! under a shared atomic incumbent with a wave-quantized determinism rule,
+//! so `solve()` is bit-identical for every `solve_threads` value. The
+//! solver tracks a provable lower bound and the best feasible upper bound
+//! and emits a [`Certificate`]; `gap == 0` unless a time limit is hit.
 
 mod bnb;
 mod candidates;
+pub mod engine;
 mod exhaustive;
+pub mod space;
 
-pub use bnb::{solve, SolveError, SolveResult, SolverOptions};
+pub use bnb::solve;
 pub use candidates::{spatial_triples, AxisCandidate, CandidateCache};
+pub use engine::{
+    default_solve_threads, solve_configured, solve_serial_reference, solve_with_threads,
+    SolveError, SolveResult, SolverOptions,
+};
 pub use exhaustive::{enumerate_all, exhaustive_best, MappingVisitor};
+pub use space::{SearchSpace, SpaceStats, TripleUnit};
 
 /// Verifiable optimality certificate (paper contribution 3).
 ///
@@ -42,7 +55,8 @@ pub struct Certificate {
     pub lower_bound: f64,
     /// `(ub − lb)/ub`; 0 means proved optimal.
     pub gap: f64,
-    /// Branch-and-bound nodes expanded.
+    /// Branch-and-bound nodes expanded. Deterministic: identical for every
+    /// `solve_threads` value (the engine's wave-quantized incumbent rule).
     pub nodes: u64,
     /// Total (α, B, Ŝ) configurations considered.
     pub combos_total: u64,

@@ -1,0 +1,228 @@
+//! The enumerable search space of one `(shape, arch)` solve (DESIGN.md §3).
+//!
+//! §V-C1's "explicitly folded low-dimensional integer decision variables"
+//! materialize here as a two-level product:
+//!
+//! * **units** — the spatial fanout triples `(Ŝ_x, Ŝ_y, Ŝ_z)` of Eq. 29,
+//!   each carrying its 3 × 16 prefetched per-axis candidate lists (every
+//!   walking-membership × residency flag combination an axis can take
+//!   under that triple);
+//! * **combos** — the 9 walking-axis pairs × 8 × 8 bypass combinations
+//!   ([`COMBOS_PER_UNIT`] = 576), identical for every unit and shared as
+//!   one canonical order so every consumer scans the space identically.
+//!
+//! Candidate lists are built once (memoized across units — most lists are
+//! shared) through [`CandidateCache`], Pareto-pruned by default, and held
+//! in `Arc`s, so [`super::engine`]'s worker threads scan the same
+//! allocations instead of rebuilding per-thread copies. The space is plain
+//! data: building it does no search, and iterating it is side-effect-free.
+
+use super::candidates::{spatial_triples, AxisCandidate, CandidateCache};
+use crate::arch::Accelerator;
+use crate::mapping::{Axis, Bypass, GemmShape, AXES};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Walking-pair × bypass combinations per unit: 3 × 3 × 8 × 8.
+pub const COMBOS_PER_UNIT: usize = 576;
+
+/// Per-axis lists indexed by the 4-bit flag key
+/// `is_alpha01 | is_alpha12 << 1 | b1 << 2 | b3 << 3`.
+type AxisLists = [[Arc<Vec<AxisCandidate>>; 16]; 3];
+
+/// One engine work unit: a spatial fanout triple plus every candidate list
+/// its 576 combos can touch.
+pub struct TripleUnit {
+    /// `(Ŝ_x, Ŝ_y, Ŝ_z)` with `Ŝ_x · Ŝ_y · Ŝ_z` = (a divisor of) `num_pe`.
+    pub s: [u64; 3],
+    lists: AxisLists,
+}
+
+impl TripleUnit {
+    /// The candidate list axis `d` scans under the given combo.
+    #[inline]
+    pub fn list(&self, d: Axis, a01: Axis, a12: Axis, b1: Bypass, b3: Bypass) -> &[AxisCandidate] {
+        let bits = (d == a01) as usize
+            | ((d == a12) as usize) << 1
+            | (b1.get(d) as usize) << 2
+            | (b3.get(d) as usize) << 3;
+        self.lists[d.index()][bits].as_slice()
+    }
+}
+
+/// Search-space telemetry (list construction and dominance pruning).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpaceStats {
+    /// Distinct candidate lists materialized.
+    pub lists_built: usize,
+    /// Candidates generated before dominance pruning.
+    pub candidates_raw: u64,
+    /// Candidates surviving dominance pruning (== raw when disabled).
+    pub candidates_kept: u64,
+}
+
+/// The fully enumerated, prefetched search space of one solve.
+pub struct SearchSpace {
+    pub units: Vec<TripleUnit>,
+    /// The canonical combo order shared by every unit scan (all-resident
+    /// bypass combos first — they are feasible most often and establish a
+    /// strong incumbent early, letting the lower-bound pruning bite).
+    pub combos: Vec<(Axis, Axis, Bypass, Bypass)>,
+    pub stats: SpaceStats,
+    /// List construction hit the build deadline and stopped early: the
+    /// space is a prefix of the full enumeration, so nothing searched over
+    /// it can claim optimality (the engine treats this as a timeout).
+    pub truncated: bool,
+}
+
+impl SearchSpace {
+    /// Build the dominance-pruned space (the default the solver uses).
+    pub fn build(shape: GemmShape, arch: &Accelerator, exact_pe: bool) -> SearchSpace {
+        Self::build_with_dominance(shape, arch, exact_pe, true)
+    }
+
+    /// [`SearchSpace::build`] with the Pareto filter switched on or off
+    /// (`false` is the A/B baseline for node-count comparisons; the
+    /// optimum is provably identical either way, see DESIGN.md §3).
+    pub fn build_with_dominance(
+        shape: GemmShape,
+        arch: &Accelerator,
+        exact_pe: bool,
+        dominance: bool,
+    ) -> SearchSpace {
+        Self::build_bounded(shape, arch, exact_pe, dominance, None)
+    }
+
+    /// [`SearchSpace::build_with_dominance`] under a wall-clock deadline:
+    /// list construction is the expensive phase of a solve on big
+    /// divisor-rich shapes, so a latency-capped solve must be able to bail
+    /// out *during* enumeration, not only between search waves. The
+    /// deadline is checked once per unit; on expiry the space is returned
+    /// as-is with [`SearchSpace::truncated`] set.
+    pub fn build_bounded(
+        shape: GemmShape,
+        arch: &Accelerator,
+        exact_pe: bool,
+        dominance: bool,
+        deadline: Option<Instant>,
+    ) -> SearchSpace {
+        let mut cache = CandidateCache::with_dominance(arch, dominance);
+        let mut truncated = false;
+        let mut units: Vec<TripleUnit> = Vec::new();
+        for (sx, sy, sz) in spatial_triples(shape, arch.num_pe, exact_pe) {
+            if deadline.is_some_and(|d| Instant::now() > d) {
+                truncated = true;
+                break;
+            }
+            let s = [sx, sy, sz];
+            let lists: AxisLists = std::array::from_fn(|di| {
+                let d = AXES[di];
+                std::array::from_fn(|bits| {
+                    cache.get(
+                        shape.get(d),
+                        s[di],
+                        bits & 1 != 0,
+                        bits & 2 != 0,
+                        bits & 4 != 0,
+                        bits & 8 != 0,
+                        d == Axis::Z,
+                    )
+                })
+            });
+            units.push(TripleUnit { s, lists });
+        }
+        let (candidates_raw, candidates_kept) = cache.pruning_stats();
+        SearchSpace {
+            units,
+            combos: combo_order(),
+            stats: SpaceStats {
+                lists_built: cache.lists_built(),
+                candidates_raw,
+                candidates_kept,
+            },
+            truncated,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+}
+
+/// The canonical `(α01, α12, B1, B3)` scan order ([`COMBOS_PER_UNIT`]
+/// entries). Bypass combinations run all-resident first (see
+/// [`SearchSpace::combos`]); walking pairs run in `AXES` order.
+pub fn combo_order() -> Vec<(Axis, Axis, Bypass, Bypass)> {
+    let mut residency_first: Vec<Bypass> = Bypass::all_combos().to_vec();
+    residency_first.reverse();
+    let mut out = Vec::with_capacity(COMBOS_PER_UNIT);
+    for &a01 in &AXES {
+        for &a12 in &AXES {
+            for &b1 in &residency_first {
+                for &b3 in &residency_first {
+                    out.push((a01, a12, b1, b3));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> Accelerator {
+        Accelerator::custom("space", 16 * 1024, 16, 64)
+    }
+
+    #[test]
+    fn combo_order_covers_the_full_product_once() {
+        let combos = combo_order();
+        assert_eq!(combos.len(), COMBOS_PER_UNIT);
+        let mut seen = std::collections::HashSet::new();
+        for &(a01, a12, b1, b3) in &combos {
+            assert!(seen.insert((a01, a12, b1.bits(), b3.bits())));
+        }
+        // All-resident first: the very first combo keeps everything.
+        assert_eq!(combos[0], (Axis::X, Axis::X, Bypass::ALL, Bypass::ALL));
+    }
+
+    #[test]
+    fn units_mirror_spatial_triples() {
+        let shape = GemmShape::new(64, 64, 64);
+        let a = arch();
+        let space = SearchSpace::build(shape, &a, true);
+        let triples = spatial_triples(shape, a.num_pe, true);
+        assert_eq!(space.units.len(), triples.len());
+        for (u, t) in space.units.iter().zip(&triples) {
+            assert_eq!(u.s, [t.0, t.1, t.2]);
+        }
+        assert!(!space.is_empty());
+        assert!(space.stats.lists_built > 0);
+    }
+
+    #[test]
+    fn dominance_stats_and_unpruned_baseline_agree() {
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let pruned = SearchSpace::build(shape, &a, true);
+        let raw = SearchSpace::build_with_dominance(shape, &a, true, false);
+        assert_eq!(pruned.stats.candidates_raw, raw.stats.candidates_raw);
+        assert_eq!(raw.stats.candidates_raw, raw.stats.candidates_kept);
+        assert!(pruned.stats.candidates_kept <= pruned.stats.candidates_raw);
+        // Pruned lists are subsets of the raw ones, combo by combo.
+        for (pu, ru) in pruned.units.iter().zip(&raw.units) {
+            for &(a01, a12, b1, b3) in &pruned.combos {
+                for &d in &AXES {
+                    let pl = pu.list(d, a01, a12, b1, b3);
+                    let rl = ru.list(d, a01, a12, b1, b3);
+                    assert!(pl.len() <= rl.len());
+                    if !pl.is_empty() {
+                        assert_eq!(pl[0], rl[0], "per-axis minimum must survive pruning");
+                    }
+                }
+            }
+        }
+    }
+}

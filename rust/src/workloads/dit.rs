@@ -101,7 +101,7 @@ mod tests {
                         &arch,
                         SolverOptions {
                             exact_pe: false,
-                            time_limit: None,
+                            ..SolverOptions::default()
                         },
                     )
                     .unwrap_or_else(|e| panic!("{name} relaxed ({shape}): {e}"))

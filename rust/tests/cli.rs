@@ -74,6 +74,8 @@ fn eval_rejects_bad_flags_before_running() {
     assert!(run(&args(&["eval", "--jobs", "0"])).is_err());
     assert!(run(&args(&["eval", "--jobs", "nope"])).is_err());
     assert!(run(&args(&["eval", "--profile", "warp-speed"])).is_err());
+    assert!(run(&args(&["eval", "--solve-threads", "0"])).is_err());
+    assert!(run(&args(&["eval", "--solve-threads", "lots"])).is_err());
 }
 
 #[test]
@@ -82,6 +84,20 @@ fn serve_rejects_bad_flags_before_running() {
     assert!(run(&args(&["serve", "--workers", "many"])).is_err());
     assert!(run(&args(&["serve", "--workload", "abc"])).is_err());
     assert!(run(&args(&["serve", "--workload", "99"])).is_err());
+    assert!(run(&args(&["serve", "--solve-threads", "0"])).is_err());
+}
+
+#[test]
+fn solve_rejects_bad_solve_threads_before_running() {
+    let a = args(&["solve", "--m", "8", "--n", "8", "--k", "8", "--solve-threads", "0"]);
+    assert!(run(&a).is_err());
+}
+
+#[test]
+fn solve_accepts_explicit_solve_threads() {
+    // A real multi-threaded certified solve end-to-end through the CLI.
+    let a = args(&["solve", "--m", "64", "--n", "64", "--k", "64", "--solve-threads", "2"]);
+    assert_eq!(run(&a).unwrap(), 0);
 }
 
 #[test]
