@@ -2,11 +2,14 @@
 //!
 //! Drives the coordinator with a 24-distinct-key batch at increasing
 //! worker-pool sizes and reports wall-clock, solves/s, and the speedup vs.
-//! the single-worker serial service; then exercises the persistent
-//! warm-start path on the `goma serve --workload 1` key set (identical
-//! fingerprints, so a cache dir populated by that CLI in another process —
-//! CI carries one across jobs — genuinely warms the first spawn): the
-//! second spawn must answer with **zero solves**.
+//! the single-worker serial service; runs a **seeded-vs-unseeded A/B leg**
+//! at batch sizes 8 and 24 (asserting bit-identical answers, per-key node
+//! counts that never grow, and recording the bound acceptance rate into
+//! `BENCH_seeding.json`); then exercises the persistent warm-start path on
+//! the `goma serve --workload 1` key set (identical fingerprints, so a
+//! cache dir populated by that CLI in another process — CI carries one
+//! across jobs — genuinely warms the first spawn): the second spawn must
+//! answer with **zero solves**.
 //!
 //! Run:   `cargo bench --bench coordinator_throughput`
 //! Smoke: `GOMA_SMOKE=1 cargo bench --bench coordinator_throughput`
@@ -16,7 +19,10 @@
 use goma::arch::Accelerator;
 use goma::coordinator::MappingService;
 use goma::mapping::GemmShape;
+use goma::solver::SolveResult;
+use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// 24 distinct solve keys: 4 × 3 × 2 extent combinations.
@@ -55,6 +61,68 @@ fn run_once(
     (dt, solves, hits)
 }
 
+/// One A/B service lifetime at a fixed seeding setting: per-key results in
+/// input order plus `(seconds, seeded_solves, accepted, rejected)`.
+fn run_ab(
+    seeding: bool,
+    arch: &Accelerator,
+    shapes: &[GemmShape],
+) -> (Vec<Arc<SolveResult>>, f64, u64, u64, u64) {
+    let handle = MappingService::default().with_workers(4).with_seed_bounds(seeding).spawn();
+    let t = Instant::now();
+    let results: Vec<Arc<SolveResult>> = handle
+        .submit_batch(arch, shapes)
+        .into_iter()
+        .map(|p| p.wait().expect("bench instances are feasible"))
+        .collect();
+    let dt = t.elapsed().as_secs_f64();
+    let m = handle.metrics();
+    let (seeded, accepted, rejected) = (m.seeded_solves(), m.seed_accepted(), m.seed_rejected());
+    handle.shutdown();
+    (results, dt, seeded, accepted, rejected)
+}
+
+/// The seeded-vs-unseeded A/B leg at one batch size: asserts the
+/// metamorphic guarantees and returns one `BENCH_seeding.json` record.
+fn seeding_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
+    let (off, off_s, ..) = run_ab(false, arch, shapes);
+    let (on, on_s, seeded, accepted, rejected) = run_ab(true, arch, shapes);
+    let mut nodes_on: u64 = 0;
+    let mut nodes_off: u64 = 0;
+    for ((shape, a), b) in shapes.iter().zip(&on).zip(&off) {
+        assert_eq!(a.mapping, b.mapping, "seeding changed the mapping for {shape}");
+        assert_eq!(
+            a.energy.normalized.to_bits(),
+            b.energy.normalized.to_bits(),
+            "seeding changed the energy for {shape}"
+        );
+        assert!(
+            a.certificate.nodes <= b.certificate.nodes,
+            "seeding expanded more nodes for {shape} ({} > {})",
+            a.certificate.nodes,
+            b.certificate.nodes
+        );
+        nodes_on += a.certificate.nodes;
+        nodes_off += b.certificate.nodes;
+    }
+    let accept_rate = accepted as f64 / (accepted + rejected).max(1) as f64;
+    println!(
+        "seeding A/B (batch {}): off {off_s:.4}s / {nodes_off} nodes -> \
+         on {on_s:.4}s / {nodes_on} nodes ({seeded} seeded, accept rate {:.2})",
+        shapes.len(),
+        accept_rate
+    );
+    format!(
+        "{{\"batch\": {}, \"solve_time_off_s\": {off_s}, \"solve_time_on_s\": {on_s}, \
+         \"nodes_off\": {nodes_off}, \"nodes_on\": {nodes_on}, \
+         \"nodes_saved\": {}, \"seeded_solves\": {seeded}, \
+         \"bounds_accepted\": {accepted}, \"bounds_rejected\": {rejected}, \
+         \"accept_rate\": {accept_rate}}}",
+        shapes.len(),
+        nodes_off.saturating_sub(nodes_on)
+    )
+}
+
 fn main() {
     let smoke = std::env::var("GOMA_SMOKE").is_ok();
     let arch = Accelerator::custom("bench-pool", 1 << 17, 64, 64);
@@ -87,6 +155,32 @@ fn main() {
             solves as f64 / best,
             serial_best / best
         );
+    }
+
+    // Seeded-vs-unseeded A/B: same keys, same arch, only the warm-bound
+    // planner toggled. The batch sizes bracket the paper's prefill-window
+    // scenario (8 GEMMs ≈ one model block, 24 ≈ the full distinct-key
+    // batch above); the smoke run keeps the 8-key leg only.
+    let full = batch();
+    let ab_sizes: &[usize] = if smoke { &[8] } else { &[8, 24] };
+    let mut ab_records = Vec::new();
+    for &n in ab_sizes {
+        ab_records.push(seeding_leg(&arch, &full[..n]));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"coordinator_seeding\",\n  \"smoke\": {},\n  \
+         \"legs\": [\n    {}\n  ]\n}}\n",
+        smoke,
+        ab_records.join(",\n    ")
+    );
+    // Anchored to the workspace root (CARGO_MANIFEST_DIR is `rust/`), like
+    // BENCH_solver.json: cargo runs bench binaries with the package dir as
+    // cwd, and CI uploads the record from the repository root.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_seeding.json");
+    let written = std::fs::File::create(&out).and_then(|mut f| f.write_all(json.as_bytes()));
+    match written {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
     }
 
     // Warm-start path, keyed IDENTICALLY to `goma serve --workload 1

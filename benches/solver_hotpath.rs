@@ -38,7 +38,7 @@ fn time_solves(
     let mut leg = Leg::default();
     for (shape, arch) in pairs {
         let t = Instant::now();
-        let r = solve_configured(*shape, arch, SolverOptions::default(), threads, dominance);
+        let r = solve_configured(*shape, arch, SolverOptions::default(), threads, dominance, None);
         let dt = t.elapsed().as_secs_f64();
         if let Ok(r) = r {
             leg.times.push(dt);
@@ -176,7 +176,7 @@ fn main() {
     // O(1) objective evaluation latency (the paper's constant-time claim).
     let shape = GemmShape::mnk(131072, 28672, 8192);
     let arch = goma::arch::a100_like();
-    let m = solve_configured(shape, &arch, SolverOptions::default(), 1, true)
+    let m = solve_configured(shape, &arch, SolverOptions::default(), 1, true, None)
         .unwrap()
         .mapping;
     let n = if smoke { 20_000 } else { 200_000 };

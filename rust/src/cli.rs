@@ -18,11 +18,13 @@ goma — globally optimal GEMM mapping for spatial accelerators
 
 USAGE:
     goma solve --m <M> --n <N> --k <K> [--arch eyeriss|gemmini|a100|tpu] [--solve-threads <N>]
+               [--seed-bounds on|off]
     goma templates
     goma workloads
     goma eval [--jobs <N>] [--profile fast|paper] [--refresh] [--solve-threads <N>]
+              [--seed-bounds on|off]
     goma serve [--arch <name>] [--workload <0-11>] [--workers <N>] [--solve-threads <N>]
-               [--cache-dir <dir>]
+               [--cache-dir <dir>] [--seed-bounds on|off]
     goma exec [--name <artifact>] [--dir <artifacts-dir>]
     goma conv [--arch eyeriss|gemmini|a100|tpu]
     goma help
@@ -85,6 +87,21 @@ fn parse_solve_threads(flags: &HashMap<String, String>) -> anyhow::Result<usize>
     }
 }
 
+/// Parse `--seed-bounds on|off`: the cross-shape warm-bound switch for
+/// batch solving layers. `None` (the no-flag default) resolves through
+/// `GOMA_SEED_BOUNDS`, else on. Mappings and energies are bit-identical
+/// either way (DESIGN.md §6), so for a single cold `goma solve` — which
+/// has no donor context — the flag is validated but changes nothing.
+fn parse_seed_bounds(flags: &HashMap<String, String>) -> anyhow::Result<Option<bool>> {
+    match flags.get("seed-bounds") {
+        Some(s) => match crate::solver::parse_seed_bounds_value(s) {
+            Some(b) => Ok(Some(b)),
+            None => anyhow::bail!("--seed-bounds must be on|off, got '{s}'"),
+        },
+        None => Ok(None),
+    }
+}
+
 fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let shape = GemmShape::mnk(
         req_u64(flags, "m"),
@@ -94,6 +111,7 @@ fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let acc = pick_arch(flags.get("arch").map(String::as_str).unwrap_or("eyeriss"));
     let opts = SolverOptions {
         solve_threads: parse_solve_threads(flags)?,
+        seed_bounds: parse_seed_bounds(flags)?,
         ..SolverOptions::default()
     };
     let r = solve(shape, &acc, opts)?;
@@ -179,6 +197,10 @@ fn cmd_eval(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     // thread-safe). Results are bit-identical for every value — only
     // GOMA's runtime column (and the wall clock) moves.
     let solve_threads = parse_solve_threads(flags)?;
+    // Validated for a consistent CLI surface; the sweep drives mappers
+    // directly (no batch service), so there is no donor context and the
+    // aggregates are bit-identical either way.
+    let _ = parse_seed_bounds(flags)?;
     eprintln!("[eval] 24-case sweep, profile {profile:?}, {jobs} worker(s)");
     let records = cached_jobs_threads(profile, jobs, flags.contains_key("refresh"), solve_threads);
     let edp = normalize(&records, |r| r.edp_case());
@@ -216,20 +238,24 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         None => crate::util::parallel::default_jobs(),
     };
     let solve_threads = parse_solve_threads(flags)?;
+    let seed_bounds = parse_seed_bounds(flags)?;
     let workloads = crate::workloads::all_workloads();
     let Some(w) = workloads.get(idx) else {
         anyhow::bail!("workload index {idx} out of range (0-{})", workloads.len() - 1);
     };
-    let solve_opts = SolverOptions { solve_threads, ..SolverOptions::default() };
+    let solve_opts = SolverOptions { solve_threads, seed_bounds, ..SolverOptions::default() };
     let resolved = solve_opts.resolved_threads();
+    let seeding = if solve_opts.resolved_seed_bounds() {
+        "on"
+    } else {
+        "off"
+    };
     println!(
-        "serving {} on {} ({workers} worker(s) × {resolved} solve thread(s))",
+        "serving {} on {} ({workers} worker(s) × {resolved} solve thread(s), seeding {seeding})",
         w.name,
         acc.name
     );
-    let mut service = MappingService::default()
-        .with_workers(workers)
-        .with_solve_threads(solve_threads);
+    let mut service = MappingService::new(solve_opts).with_workers(workers);
     if let Some(dir) = flags.get("cache-dir") {
         service = service.with_cache_dir(dir.as_str());
     }
@@ -262,6 +288,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "shards : hits/shard {:?}, queue depth {}",
         metrics.per_shard_hits(),
         metrics.queue_depth()
+    );
+    println!(
+        "seeding: {} seeded solves, {} bounds accepted, {} rejected",
+        metrics.seeded_solves(),
+        metrics.seed_accepted(),
+        metrics.seed_rejected()
     );
     // Deterministic flush of the warm-start store (no-op without a dir).
     handle.shutdown();

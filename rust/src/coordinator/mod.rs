@@ -26,7 +26,14 @@
 //!   processes;
 //! * **batch submission** — [`ServiceHandle::submit_batch`] /
 //!   [`ServiceHandle::map_workload`] push a whole workload's GEMMs in one
-//!   call, the request-path pattern a compiler or serving stack would use.
+//!   call, the request-path pattern a compiler or serving stack would use;
+//! * **cross-shape warm bounds** — batch misses are ordered by shape
+//!   similarity and solved in waves, each seeded with the tightest valid
+//!   re-costed bound from already-solved mappings on the same architecture
+//!   (earlier waves of the batch, plus warm-store entries under *other*
+//!   fingerprints — grouped by [`arch_options_fingerprint`]). Provably
+//!   harmless: mappings and energies stay bit-identical, node counts only
+//!   shrink (DESIGN.md §6; `--seed-bounds` / `GOMA_SEED_BOUNDS` to toggle).
 //!
 //! The compiled-artifact execution path ([`crate::runtime`]) hangs off the
 //! same process, so a request can go mapping → (optionally) execution
@@ -36,7 +43,7 @@ mod service;
 mod warm;
 
 pub use service::{
-    solve_fingerprint, MappingService, Pending, ServiceHandle, ServiceMetrics,
-    CACHE_FORMAT_VERSION,
+    arch_options_fingerprint, shape_fingerprint, solve_fingerprint, MappingService, Pending,
+    ServiceHandle, ServiceMetrics, CACHE_FORMAT_VERSION,
 };
-pub use warm::{WarmOutcome, WarmStore, WARM_CACHE_FILE, WARM_CACHE_HEADER};
+pub use warm::{WarmEntry, WarmOutcome, WarmStore, WARM_CACHE_FILE, WARM_CACHE_HEADER};

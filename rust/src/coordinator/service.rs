@@ -30,11 +30,26 @@
 //! back + flushed when the pool exits, making repeated runs warm across
 //! processes. Handles are cheap clones; the service exits when every handle
 //! is dropped, or deterministically via [`ServiceHandle::shutdown`].
+//!
+//! **Cross-shape warm bounds** (DESIGN.md §6). With seeding on
+//! ([`MappingService::with_seed_bounds`], `--seed-bounds`,
+//! `GOMA_SEED_BOUNDS`; default on), each window's misses are grouped by
+//! architecture ([`arch_options_fingerprint`]), ordered by shape
+//! similarity, and fanned out in *waves* of `workers` keys. Every miss is
+//! seeded with the tightest valid bound [`crate::solver::plan_seed`] can
+//! extract from a per-arch **donor registry** of winning mappings — fed by
+//! (a) earlier waves of the same batch and (b) warm-store entries for the
+//! same arch under *other* fingerprints (which is why the store persists
+//! each entry's arch fingerprint, [`super::warm::WarmEntry`]). A valid
+//! bound leaves mapping and energy bit-identical and only shrinks search
+//! effort, so seeding — like `solve_threads` — never enters the solve
+//! fingerprint; certificate *effort counters* in cached entries record the
+//! work the producing solve actually did under whatever bounds it had.
 
-use super::warm::{WarmOutcome, WarmStore};
+use super::warm::{WarmEntry, WarmOutcome, WarmStore};
 use crate::arch::Accelerator;
-use crate::mapping::GemmShape;
-use crate::solver::{solve_with_threads, SolveError, SolveResult, SolverOptions};
+use crate::mapping::{GemmShape, Mapping};
+use crate::solver::{plan_seed, solve_seeded, SeedBound, SolveError, SolveResult, SolverOptions};
 use crate::util::parallel::ordered_map;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -45,10 +60,15 @@ use std::thread::JoinHandle;
 
 /// Fingerprint/on-disk format version. Mixed into every fingerprint and
 /// into the warm-store header: bumping it cold-starts every cache.
-/// v2: the solver core was rebuilt (dominance pruning + wave-scheduled
-/// engine), which changes certificate counters — pre-split entries must
-/// never be replayed as the new solver's output.
-pub const CACHE_FORMAT_VERSION: u32 = 2;
+/// v3: warm-store entries now carry the arch/options fingerprint (donor
+/// grouping for cross-shape seeding) and certificate effort counters
+/// became seed-dependent — v2 files are cold-started wholesale as before.
+pub const CACHE_FORMAT_VERSION: u32 = 3;
+
+/// Donor mappings kept per architecture for seed planning. Bounds the
+/// O(donors) re-cost work per miss; once full, the oldest entry is
+/// replaced ring-buffer style (see [`DonorPool`]).
+const MAX_DONORS_PER_ARCH: usize = 128;
 
 /// Stable 64-bit FNV-1a over a canonical little-endian byte encoding.
 /// `HashMap`'s SipHash is randomly keyed per process, so the persistent
@@ -82,18 +102,17 @@ impl Fnv {
     }
 }
 
-/// The cache/coalescing/persistence key: a stable fingerprint of everything
-/// a solve's outcome depends on — the GEMM shape, the **full** architecture
-/// parameter set (capacities, PE count, node, DRAM kind, ERT, bandwidths,
-/// residency preset — deliberately *not* `arch.name`, which two different
-/// `Accelerator::custom` instances can share), the solver options, and
-/// [`CACHE_FORMAT_VERSION`].
-pub fn solve_fingerprint(shape: GemmShape, arch: &Accelerator, opts: SolverOptions) -> u64 {
+/// The shape-independent half of the solve key: a stable fingerprint of
+/// the **full** architecture parameter set (capacities, PE count, node,
+/// DRAM kind, ERT, bandwidths, residency preset — deliberately *not*
+/// `arch.name`, which two different `Accelerator::custom` instances can
+/// share), the solver options, and [`CACHE_FORMAT_VERSION`]. The seeding
+/// planner groups donor mappings by this value: a mapping solved on one
+/// shape is a seed candidate exactly for other shapes under the same
+/// arch/options fingerprint.
+pub fn arch_options_fingerprint(arch: &Accelerator, opts: SolverOptions) -> u64 {
     let mut h = Fnv(FNV_OFFSET_BASIS);
     h.u32(CACHE_FORMAT_VERSION);
-    h.u64(shape.x);
-    h.u64(shape.y);
-    h.u64(shape.z);
     h.u64(arch.sram_words);
     h.u64(arch.num_pe);
     h.u64(arch.regfile_words);
@@ -120,15 +139,37 @@ pub fn solve_fingerprint(shape: GemmShape, arch: &Accelerator, opts: SolverOptio
             h.u64(d.as_nanos() as u64);
         }
     }
-    // `opts.solve_threads` is deliberately NOT hashed: the engine's result
-    // is bit-identical for every thread count (property-tested), so two
-    // services with different thread budgets must share cache entries —
-    // hashing the knob would split the warm store by deployment size.
+    // `opts.solve_threads` and `opts.seed_bounds` are deliberately NOT
+    // hashed: the engine's result is bit-identical for every thread count,
+    // and a seeded solve's mapping/energy are bit-identical to the
+    // unseeded one (both property-tested) — so services with different
+    // thread budgets or seeding switches must share cache entries; hashing
+    // either knob would split the warm store by deployment configuration.
+    h.0
+}
+
+/// The cache/coalescing/persistence key: [`arch_options_fingerprint`] with
+/// the GEMM shape folded in.
+pub fn solve_fingerprint(shape: GemmShape, arch: &Accelerator, opts: SolverOptions) -> u64 {
+    shape_fingerprint(arch_options_fingerprint(arch, opts), shape)
+}
+
+/// Fold a GEMM shape into an arch/options fingerprint — the second half of
+/// [`solve_fingerprint`], split out so the request path (which carries the
+/// arch half for donor grouping) derives the key without rehashing the
+/// whole architecture.
+pub fn shape_fingerprint(arch_fp: u64, shape: GemmShape) -> u64 {
+    let mut h = Fnv(arch_fp);
+    h.u64(shape.x);
+    h.u64(shape.y);
+    h.u64(shape.z);
     h.0
 }
 
 struct Request {
     fp: u64,
+    /// [`arch_options_fingerprint`] — the donor-registry grouping key.
+    arch_fp: u64,
     shape: GemmShape,
     arch: Accelerator,
     reply: Sender<WarmOutcome>,
@@ -154,7 +195,13 @@ enum Msg {
 /// quiescent, `requests == cache_hits + coalesced + solves + errors`.
 /// `warm_hits` and `negative_hits` are overlays counting the subset of
 /// `cache_hits` served from the on-disk store / from a cached
-/// infeasibility; they do not enter the sum.
+/// infeasibility; they do not enter the sum. The seeding counters are
+/// overlays too: `seeded_solves` counts the subset of `solves + errors`
+/// whose search was launched with a warm bound (so
+/// `seeded_solves ≤ solves + errors` once quiescent), and
+/// `seed_accepted`/`seed_rejected` tally donor re-costs during planning
+/// (every seeded solve required ≥ 1 accepted donor, so
+/// `seed_accepted ≥ seeded_solves`). None of the three enter the sum.
 ///
 /// One narrow caveat: a submission racing the pool's final teardown
 /// instants (after the dispatcher's exit drain, before its receiver
@@ -171,6 +218,9 @@ pub struct ServiceMetrics {
     errors: AtomicU64,
     warm_hits: AtomicU64,
     negative_hits: AtomicU64,
+    seeded_solves: AtomicU64,
+    seed_accepted: AtomicU64,
+    seed_rejected: AtomicU64,
     queue_depth: AtomicU64,
     per_shard_hits: Vec<AtomicU64>,
 }
@@ -185,6 +235,9 @@ impl ServiceMetrics {
             errors: AtomicU64::new(0),
             warm_hits: AtomicU64::new(0),
             negative_hits: AtomicU64::new(0),
+            seeded_solves: AtomicU64::new(0),
+            seed_accepted: AtomicU64::new(0),
+            seed_rejected: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             per_shard_hits: (0..shards).map(|_| AtomicU64::new(0)).collect(),
         }
@@ -209,6 +262,23 @@ impl ServiceMetrics {
     /// Cache hits answered by a cached infeasibility (negative cache).
     pub fn negative_hits(&self) -> u64 {
         self.negative_hits.load(Ordering::Relaxed)
+    }
+
+    /// Solves launched with a cross-shape warm bound (overlay on
+    /// `solves + errors`).
+    pub fn seeded_solves(&self) -> u64 {
+        self.seeded_solves.load(Ordering::Relaxed)
+    }
+
+    /// Donor re-costs accepted during seed planning (the donor was
+    /// feasible on the target shape, so its bound was valid).
+    pub fn seed_accepted(&self) -> u64 {
+        self.seed_accepted.load(Ordering::Relaxed)
+    }
+
+    /// Donor re-costs rejected by the target-feasibility check.
+    pub fn seed_rejected(&self) -> u64 {
+        self.seed_rejected.load(Ordering::Relaxed)
     }
 
     /// Requests submitted but not yet answered (gauge; 0 when quiescent).
@@ -254,9 +324,10 @@ impl ServiceHandle {
     pub fn submit(&self, shape: GemmShape, arch: Accelerator) -> Pending {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        let fp = solve_fingerprint(shape, &arch, self.options);
+        let arch_fp = arch_options_fingerprint(&arch, self.options);
+        let fp = shape_fingerprint(arch_fp, shape);
         let (reply, rx) = channel();
-        let msg = Msg::Solve(Box::new(Request { fp, shape, arch, reply }));
+        let msg = Msg::Solve(Box::new(Request { fp, arch_fp, shape, arch, reply }));
         if self.tx.send(msg).is_err() {
             // Dispatcher gone: the reply sender travelled inside the failed
             // message and was dropped with it, so `wait` sees a closed
@@ -368,6 +439,16 @@ impl MappingService {
         self
     }
 
+    /// Switch cross-shape warm bounds on or off for batch misses (see the
+    /// module docs). Mappings and energies are bit-identical either way —
+    /// seeding only shrinks search effort — so, like `solve_threads`, the
+    /// knob never enters the solve fingerprint. The unset default resolves
+    /// through `GOMA_SEED_BOUNDS`, else on.
+    pub fn with_seed_bounds(mut self, on: bool) -> Self {
+        self.options.seed_bounds = Some(on);
+        self
+    }
+
     /// Enable the persistent warm-start cache rooted at `dir` (see
     /// [`super::warm`] for the format and invalidation rules).
     pub fn with_cache_dir<P: Into<PathBuf>>(mut self, dir: P) -> Self {
@@ -386,8 +467,8 @@ impl MappingService {
         // is worker-count-independent).
         let mut shards: Vec<HashMap<u64, CacheEntry>> =
             (0..workers).map(|_| HashMap::new()).collect();
-        for (fp, outcome) in store.loaded() {
-            let entry = CacheEntry { result: outcome, warm: true };
+        for (fp, e) in store.loaded() {
+            let entry = CacheEntry { result: e.outcome, arch_fp: e.arch_fp, warm: true };
             shards[(fp % workers as u64) as usize].insert(fp, entry);
         }
         let (tx, rx) = channel::<Msg>();
@@ -407,8 +488,43 @@ impl MappingService {
 
 struct CacheEntry {
     result: WarmOutcome,
+    /// [`arch_options_fingerprint`] of the producing solve: groups entries
+    /// by accelerator for donor harvesting and travels into the warm store.
+    arch_fp: u64,
     /// Loaded from the persistent store (so hits discriminate warm/cold).
     warm: bool,
+}
+
+/// One architecture's seed-donor pool: a deduplicated ring of the most
+/// recent [`MAX_DONORS_PER_ARCH`] winning mappings. A ring (not
+/// insert-only) on purpose — on long-lived services and large batches the
+/// freshest winners are the most shape-similar donors for the very next
+/// wave, so once full the oldest entry is replaced rather than the newest
+/// dropped. Deterministic for a given insertion order.
+#[derive(Default)]
+struct DonorPool {
+    items: Vec<Mapping>,
+    /// Next replacement slot once the ring is full.
+    cursor: usize,
+}
+
+impl DonorPool {
+    fn insert(&mut self, mapping: Mapping) {
+        if self.items.contains(&mapping) {
+            return;
+        }
+        if self.items.len() < MAX_DONORS_PER_ARCH {
+            self.items.push(mapping);
+        } else {
+            self.items[self.cursor] = mapping;
+            self.cursor = (self.cursor + 1) % MAX_DONORS_PER_ARCH;
+        }
+    }
+}
+
+/// Record `mapping` as a seed donor for its architecture.
+fn push_donor(donors: &mut HashMap<u64, DonorPool>, arch_fp: u64, mapping: Mapping) {
+    donors.entry(arch_fp).or_default().insert(mapping);
 }
 
 fn reply_all(waiters: Vec<Request>, result: &WarmOutcome, m: &ServiceMetrics) {
@@ -430,6 +546,29 @@ fn service_loop(
     store: Arc<WarmStore>,
 ) {
     let nshards = shards.len() as u64;
+    let seed_on = options.resolved_seed_bounds();
+    // The donor registry: per arch/options fingerprint, winning mappings
+    // usable as cross-shape warm bounds. Seeded from the warm store (other
+    // fingerprints, same arch — the cross-process donor path) and fed by
+    // every proved solve from then on. The harvest is sorted by
+    // fingerprint before insertion: shard iteration order is SipHash- and
+    // worker-count-dependent, and an unsorted walk would make which
+    // entries survive the pool cap vary between identical runs.
+    let mut donors: HashMap<u64, DonorPool> = HashMap::new();
+    if seed_on {
+        let mut harvest: Vec<(u64, u64, Mapping)> = Vec::new();
+        for shard in &shards {
+            for (fp, e) in shard.iter() {
+                if let Ok(r) = &e.result {
+                    harvest.push((e.arch_fp, *fp, r.mapping));
+                }
+            }
+        }
+        harvest.sort_by_key(|&(afp, fp, _)| (afp, fp));
+        for (afp, _, mapping) in harvest {
+            push_donor(&mut donors, afp, mapping);
+        }
+    }
     let mut quit = false;
     while !quit {
         let first = match rx.recv() {
@@ -463,7 +602,7 @@ fn service_loop(
         }
         // Split cached keys (positive or negative) from misses, and answer
         // the hits before starting any (possibly slow) solve.
-        let mut misses: Vec<(u64, Vec<Request>)> = Vec::new();
+        let mut misses: Vec<(u64, u64, Vec<Request>)> = Vec::new();
         for (fp, waiters) in groups {
             if waiters.len() > 1 {
                 m.coalesced.fetch_add(waiters.len() as u64 - 1, Ordering::Relaxed);
@@ -481,76 +620,116 @@ fn service_loop(
                     }
                     reply_all(waiters, &e.result, &m);
                 }
-                None => misses.push((fp, waiters)),
+                None => {
+                    let afp = waiters[0].arch_fp;
+                    misses.push((fp, afp, waiters));
+                }
             }
         }
         // Fan the distinct misses out to the scoped solve pool, answering
-        // each key's waiters the moment its *own* solve finishes — no
-        // barrier on the rest of the window. Each pooled solve builds its
-        // own Arc-held SearchSpace on its worker thread, and the waiters
-        // hand over through per-key Mutex slots so only `Send` data
-        // crosses threads (the reply senders never need to be `Sync`).
-        let mut keys: Vec<u64> = Vec::with_capacity(misses.len());
-        let mut inputs: Vec<(GemmShape, Accelerator)> = Vec::with_capacity(misses.len());
-        let mut slots: Vec<Mutex<Vec<Request>>> = Vec::with_capacity(misses.len());
-        for (fp, waiters) in misses {
-            keys.push(fp);
-            inputs.push((waiters[0].shape, waiters[0].arch.clone()));
-            slots.push(Mutex::new(waiters));
+        // each key's waiters the moment its *own* solve finishes. With
+        // seeding on, the misses are grouped by arch and ordered by shape
+        // similarity, then chunked into waves of `workers` keys: each
+        // wave's winners enter the donor registry before the next wave
+        // plans its bounds, so a batch of related shapes tightens itself
+        // as it drains (the wave barrier is the price of fresher donors;
+        // with seeding off the whole window is one wave, the pre-seeding
+        // behavior). Each pooled solve builds its own Arc-held SearchSpace
+        // on its worker thread, and the waiters hand over through per-key
+        // Mutex slots so only `Send` data crosses threads (the reply
+        // senders never need to be `Sync`).
+        if seed_on {
+            misses.sort_by_key(|(_, afp, w)| (*afp, crate::solver::similarity_key(w[0].shape)));
         }
-        // The workers × solve_threads budget split: a window with fewer
-        // distinct keys than workers spreads the idle workers' thread
-        // budget across the solves actually in flight, remainder to the
-        // earliest keys (results are bit-identical for every thread
-        // count, so this is invisible to the cache). With ≥ workers keys
-        // the share floors at the configured per-solve count, keeping the
-        // concurrent total within the budget.
-        let base_threads = options.resolved_threads();
-        let budget = workers * base_threads;
-        let share = budget / inputs.len().max(1);
-        let extra = budget % inputs.len().max(1);
-        let solved = ordered_map(&inputs, workers, |i, inp| {
-            let per_solve = (share + usize::from(i < extra)).max(base_threads);
-            let result: WarmOutcome = match solve_with_threads(inp.0, &inp.1, options, per_solve) {
-                Ok(r) => {
-                    m.solves.fetch_add(1, Ordering::Relaxed);
-                    Ok(Arc::new(r))
+        let wave_size = if seed_on {
+            workers.max(1)
+        } else {
+            misses.len().max(1)
+        };
+        for wave in misses.chunks_mut(wave_size) {
+            let mut keys: Vec<(u64, u64)> = Vec::with_capacity(wave.len());
+            let mut inputs: Vec<(GemmShape, Accelerator, Option<SeedBound>)> =
+                Vec::with_capacity(wave.len());
+            let mut slots: Vec<Mutex<Vec<Request>>> = Vec::with_capacity(wave.len());
+            for (fp, afp, waiters) in wave.iter_mut() {
+                let shape = waiters[0].shape;
+                let arch = waiters[0].arch.clone();
+                let seed = if seed_on {
+                    let pool = donors.get(afp).map(|p| p.items.as_slice()).unwrap_or(&[]);
+                    let plan = plan_seed(pool, shape, &arch, options.exact_pe);
+                    m.seed_accepted.fetch_add(plan.accepted, Ordering::Relaxed);
+                    m.seed_rejected.fetch_add(plan.rejected, Ordering::Relaxed);
+                    if plan.bound.is_some() {
+                        m.seeded_solves.fetch_add(1, Ordering::Relaxed);
+                    }
+                    plan.bound
+                } else {
+                    None
+                };
+                keys.push((*fp, *afp));
+                inputs.push((shape, arch, seed));
+                slots.push(Mutex::new(std::mem::take(waiters)));
+            }
+            // The workers × solve_threads budget split: a wave with fewer
+            // distinct keys than workers spreads the idle workers' thread
+            // budget across the solves actually in flight, remainder to
+            // the earliest keys (results are bit-identical for every
+            // thread count, so this is invisible to the cache). With
+            // ≥ workers keys the share floors at the configured per-solve
+            // count, keeping the concurrent total within the budget.
+            let base_threads = options.resolved_threads();
+            let budget = workers * base_threads;
+            let share = budget / inputs.len().max(1);
+            let extra = budget % inputs.len().max(1);
+            let solved = ordered_map(&inputs, workers, |i, inp| {
+                let per_solve = (share + usize::from(i < extra)).max(base_threads);
+                let result: WarmOutcome =
+                    match solve_seeded(inp.0, &inp.1, options, per_solve, inp.2) {
+                        Ok(r) => {
+                            m.solves.fetch_add(1, Ordering::Relaxed);
+                            Ok(Arc::new(r))
+                        }
+                        Err(e) => {
+                            m.errors.fetch_add(1, Ordering::Relaxed);
+                            Err(e)
+                        }
+                    };
+                let waiters = std::mem::take(&mut *slots[i].lock().unwrap());
+                reply_all(waiters, &result, &m);
+                result
+            });
+            for ((fp, afp), result) in keys.into_iter().zip(solved) {
+                // Cache only *proved* outcomes. Under a wall-clock cap a
+                // NoFeasibleMapping bailout, an Interrupted (timed out
+                // with no incumbent), and an unproven incumbent
+                // (`proved_optimal == false`) are all load-dependent —
+                // caching or persisting any of them would pin a
+                // machine-load artifact onto the key forever. With no time
+                // limit NoFeasibleMapping is a proof; Interrupted never is
+                // (and cannot occur uncapped).
+                let proved = match &result {
+                    Ok(r) => r.certificate.proved_optimal,
+                    Err(SolveError::NoFeasibleMapping) => options.time_limit.is_none(),
+                    Err(_) => false,
+                };
+                if proved {
+                    if seed_on {
+                        if let Ok(r) = &result {
+                            push_donor(&mut donors, afp, r.mapping);
+                        }
+                    }
+                    let sid = (fp % nshards) as usize;
+                    let entry = CacheEntry { result, arch_fp: afp, warm: false };
+                    shards[sid].insert(fp, entry);
                 }
-                Err(e) => {
-                    m.errors.fetch_add(1, Ordering::Relaxed);
-                    Err(e)
-                }
-            };
-            let waiters = std::mem::take(&mut *slots[i].lock().unwrap());
-            reply_all(waiters, &result, &m);
-            result
-        });
-        for (fp, result) in keys.into_iter().zip(solved) {
-            // Cache only *proved* outcomes. Under a wall-clock cap a
-            // NoFeasibleMapping bailout, an Interrupted (timed out with no
-            // incumbent), and an unproven incumbent
-            // (`proved_optimal == false`) are all load-dependent — caching
-            // or persisting any of them would pin a machine-load artifact
-            // onto the key forever. With no time limit NoFeasibleMapping
-            // is a proof; Interrupted never is (and cannot occur uncapped).
-            let proved = match &result {
-                Ok(r) => r.certificate.proved_optimal,
-                Err(SolveError::NoFeasibleMapping) => options.time_limit.is_none(),
-                Err(_) => false,
-            };
-            if proved {
-                let sid = (fp % nshards) as usize;
-                let entry = CacheEntry { result, warm: false };
-                shards[sid].insert(fp, entry);
             }
         }
     }
     // Pool exit: merge every shard into the shared store and flush...
-    store.merge_and_flush(
-        shards
-            .into_iter()
-            .flat_map(|s| s.into_iter().map(|(fp, e)| (fp, e.result))),
-    );
+    store.merge_and_flush(shards.into_iter().flat_map(|s| {
+        s.into_iter()
+            .map(|(fp, e)| (fp, WarmEntry { arch_fp: e.arch_fp, outcome: e.result }))
+    }));
     // ...then, as the dispatcher's very last act before the receiver drops,
     // drain anything still queued so the gauges stay honest: those waiters
     // get ServiceUnavailable from their dropped reply senders and are
@@ -715,6 +894,88 @@ mod tests {
         let one = SolverOptions { solve_threads: 1, ..SolverOptions::default() };
         let four = SolverOptions { solve_threads: 4, ..SolverOptions::default() };
         assert_eq!(solve_fingerprint(shape, &a, one), solve_fingerprint(shape, &a, four));
+    }
+
+    #[test]
+    fn fingerprint_ignores_seed_bounds() {
+        // Seeded and unseeded deployments must share cache entries:
+        // mappings and energies are bit-identical either way, so the knob
+        // never splits the warm store.
+        let shape = GemmShape::new(8, 8, 8);
+        let a = Accelerator::custom("t", 4096, 8, 32);
+        let on = SolverOptions { seed_bounds: Some(true), ..SolverOptions::default() };
+        let off = SolverOptions { seed_bounds: Some(false), ..SolverOptions::default() };
+        assert_eq!(solve_fingerprint(shape, &a, on), solve_fingerprint(shape, &a, off));
+        assert_eq!(
+            arch_options_fingerprint(&a, on),
+            arch_options_fingerprint(&a, off)
+        );
+    }
+
+    #[test]
+    fn fingerprint_composes_from_the_arch_half() {
+        let shape = GemmShape::new(16, 8, 8);
+        let a = Accelerator::custom("t", 4096, 8, 32);
+        let o = SolverOptions::default();
+        assert_eq!(
+            solve_fingerprint(shape, &a, o),
+            shape_fingerprint(arch_options_fingerprint(&a, o), shape)
+        );
+    }
+
+    #[test]
+    fn donor_pool_dedups_and_replaces_oldest_when_full() {
+        use crate::mapping::{Axis, Bypass, Tile};
+        let mk = |x: u64| Mapping {
+            l1: Tile::new(x, 1, 1),
+            l2: Tile::new(1, 1, 1),
+            l3: Tile::new(1, 1, 1),
+            alpha01: Axis::X,
+            alpha12: Axis::Y,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        };
+        let mut pool = DonorPool::default();
+        for x in 0..MAX_DONORS_PER_ARCH as u64 {
+            pool.insert(mk(x));
+            pool.insert(mk(x)); // duplicate: must not double-insert
+        }
+        assert_eq!(pool.items.len(), MAX_DONORS_PER_ARCH);
+        // Full: the next fresh donor replaces the oldest slot, not nothing.
+        let fresh = mk(MAX_DONORS_PER_ARCH as u64);
+        pool.insert(fresh);
+        assert_eq!(pool.items.len(), MAX_DONORS_PER_ARCH);
+        assert!(pool.items.contains(&fresh), "a full pool must admit fresh donors");
+        assert!(!pool.items.contains(&mk(0)), "the oldest donor is the one replaced");
+    }
+
+    #[test]
+    fn sequential_related_solves_seed_and_stay_bit_identical() {
+        // A solved first; its winning mapping is a valid donor for the
+        // doubled shape B (tiles of 32 divide 64), so B's solve runs
+        // seeded — and must still return exactly the unseeded service's
+        // answer, with node counters only shrinking.
+        let a_shape = GemmShape::new(32, 32, 32);
+        let b_shape = GemmShape::new(64, 64, 64);
+        let on = MappingService::default().with_seed_bounds(true).spawn();
+        let off = MappingService::default().with_seed_bounds(false).spawn();
+        let (a_on, b_on) = (on.map(a_shape, arch()).unwrap(), on.map(b_shape, arch()).unwrap());
+        let a_off = off.map(a_shape, arch()).unwrap();
+        let b_off = off.map(b_shape, arch()).unwrap();
+        assert_eq!(on.metrics().seeded_solves(), 1, "B must have been seeded");
+        assert!(on.metrics().seed_accepted() >= 1);
+        assert_eq!(off.metrics().seeded_solves(), 0);
+        assert_eq!(a_on.mapping, a_off.mapping);
+        assert_eq!(b_on.mapping, b_off.mapping);
+        assert_eq!(b_on.energy.normalized.to_bits(), b_off.energy.normalized.to_bits());
+        assert_eq!(b_on.energy.total_pj.to_bits(), b_off.energy.total_pj.to_bits());
+        assert!(
+            b_on.certificate.nodes <= b_off.certificate.nodes,
+            "seeding expanded more nodes ({} > {})",
+            b_on.certificate.nodes,
+            b_off.certificate.nodes
+        );
+        assert!(b_on.certificate.proved_optimal);
     }
 
     #[test]

@@ -5,15 +5,20 @@
 //! runs against the same `--cache-dir` answer without re-solving — the
 //! "same (workload, hardware) pairs recur across runs" serving pattern.
 //!
-//! **Format v2** (`warm_cache_v2.tsv` inside the cache dir): a header line
+//! **Format v3** (`warm_cache_v3.tsv` inside the cache dir): a header line
 //! ([`WARM_CACHE_HEADER`]) followed by one TSV entry per solve key. Keys
 //! are the 64-bit solve fingerprints of
 //! [`super::service::solve_fingerprint`] — shape, *full* architecture
 //! parameter set, solver options, and format version; never an arch name.
-//! Every `f64` is serialized as its IEEE-754 bit pattern in hex
-//! (`to_bits`), so a warm result is **bit-identical** to the original
-//! solve. Infeasible outcomes persist too (`err` lines): the negative
-//! cache is as warm as the positive one.
+//! Every entry additionally records its
+//! [`super::service::arch_options_fingerprint`] (the shape-independent
+//! half of the key), so a fresh service can harvest the persisted winning
+//! mappings as cross-shape seed **donors** for other fingerprints on the
+//! same architecture (DESIGN.md §6) — the reason v2 was bumped. Every
+//! `f64` is serialized as its IEEE-754 bit pattern in hex (`to_bits`), so
+//! a warm result is **bit-identical** to the original solve. Infeasible
+//! outcomes persist too (`err` lines): the negative cache is as warm as
+//! the positive one.
 //!
 //! **Invalidation rules** are by construction, not by deletion:
 //! * any change to the shape, arch parameters, or solver options changes
@@ -35,17 +40,28 @@ use std::time::Duration;
 
 /// First line of every store file; the version must match exactly. Kept in
 /// lockstep with [`super::service::CACHE_FORMAT_VERSION`] so a version
-/// bump really does reject old files wholesale (v2: the solver-core split
-/// changed certificate counters).
-pub const WARM_CACHE_HEADER: &str = "# goma-warm-cache v2";
+/// bump really does reject old files wholesale (v3: entries carry the
+/// arch/options fingerprint for cross-shape seed-donor harvesting, and
+/// certificate effort counters became seed-dependent).
+pub const WARM_CACHE_HEADER: &str = "# goma-warm-cache v3";
 
 /// File name of the store inside a service's `--cache-dir` (versioned in
 /// lockstep with the header: a pre-bump file is simply never opened).
-pub const WARM_CACHE_FILE: &str = "warm_cache_v2.tsv";
+pub const WARM_CACHE_FILE: &str = "warm_cache_v3.tsv";
 
 /// One persisted outcome: the solve succeeded (full result) or proved the
 /// key infeasible (negative entry).
 pub type WarmOutcome = Result<Arc<SolveResult>, SolveError>;
+
+/// One persisted store entry: the outcome plus the shape-independent
+/// [`super::service::arch_options_fingerprint`] of the solve that produced
+/// it — the grouping key the seeding planner uses to collect donor
+/// mappings for *other* shapes on the same architecture.
+#[derive(Clone)]
+pub struct WarmEntry {
+    pub arch_fp: u64,
+    pub outcome: WarmOutcome,
+}
 
 /// The shared on-disk store: loaded once at service spawn; at pool exit
 /// the dispatcher merges every cache shard back in (warm entries included,
@@ -53,8 +69,8 @@ pub type WarmOutcome = Result<Arc<SolveResult>, SolveError>;
 /// (unique tmp file + rename).
 pub struct WarmStore {
     path: Option<PathBuf>,
-    loaded: HashMap<u64, WarmOutcome>,
-    merged: Mutex<HashMap<u64, WarmOutcome>>,
+    loaded: HashMap<u64, WarmEntry>,
+    merged: Mutex<HashMap<u64, WarmEntry>>,
 }
 
 impl WarmStore {
@@ -75,7 +91,7 @@ impl WarmStore {
     }
 
     /// Entries present on disk at open time (handed to the cache shards).
-    pub fn loaded(&self) -> impl Iterator<Item = (u64, WarmOutcome)> + '_ {
+    pub fn loaded(&self) -> impl Iterator<Item = (u64, WarmEntry)> + '_ {
         self.loaded.iter().map(|(&fp, v)| (fp, v.clone()))
     }
 
@@ -88,7 +104,7 @@ impl WarmStore {
     /// calls this once at pool exit with every shard's entries (the loaded
     /// warm set flows back through the shards, so the flush carries the
     /// full union). A store without a path merges in memory only.
-    pub fn merge_and_flush(&self, entries: impl IntoIterator<Item = (u64, WarmOutcome)>) {
+    pub fn merge_and_flush(&self, entries: impl IntoIterator<Item = (u64, WarmEntry)>) {
         let mut merged = self.merged.lock().unwrap();
         for (fp, v) in entries {
             merged.insert(fp, v);
@@ -101,7 +117,7 @@ impl WarmStore {
     }
 }
 
-fn load_file(path: &Path) -> HashMap<u64, WarmOutcome> {
+fn load_file(path: &Path) -> HashMap<u64, WarmEntry> {
     let Ok(text) = std::fs::read_to_string(path) else {
         return HashMap::new();
     };
@@ -123,7 +139,7 @@ fn load_file(path: &Path) -> HashMap<u64, WarmOutcome> {
     out
 }
 
-fn write_file(path: &Path, entries: &HashMap<u64, WarmOutcome>) -> std::io::Result<()> {
+fn write_file(path: &Path, entries: &HashMap<u64, WarmEntry>) -> std::io::Result<()> {
     use std::sync::atomic::{AtomicU64, Ordering};
     // Unique per writer: concurrent flushes into one shared cache dir (two
     // processes, or two services in one process) must not interleave on a
@@ -144,9 +160,13 @@ fn write_file(path: &Path, entries: &HashMap<u64, WarmOutcome>) -> std::io::Resu
         let mut keys: Vec<u64> = entries.keys().copied().collect();
         keys.sort_unstable();
         for fp in keys {
-            match &entries[&fp] {
-                Err(_) => writeln!(f, "{fp:016x}\terr\tinfeasible")?,
-                Ok(r) => writeln!(f, "{fp:016x}\tok\t{}", format_result(r.as_ref()))?,
+            let e = &entries[&fp];
+            let afp = e.arch_fp;
+            match &e.outcome {
+                Err(_) => writeln!(f, "{fp:016x}\terr\t{afp:016x}\tinfeasible")?,
+                Ok(r) => {
+                    writeln!(f, "{fp:016x}\tok\t{afp:016x}\t{}", format_result(r.as_ref()))?
+                }
             }
         }
     }
@@ -179,9 +199,11 @@ fn bypass_of(s: &str) -> Option<Bypass> {
     Bypass::from_bits(s.parse::<u8>().ok()?)
 }
 
-/// The 28 payload fields of an `ok` line, tab-joined: 9 tile lengths, the
-/// two walking axes, the two bypass bitmasks, the 7 energy terms, the
-/// certificate (3 bounds, 3 counters, proved bit), and the solve time.
+/// The 28 payload fields of an `ok` line (following the fingerprint, the
+/// kind tag, and the arch/options fingerprint), tab-joined: 9 tile
+/// lengths, the two walking axes, the two bypass bitmasks, the 7 energy
+/// terms, the certificate (3 bounds, 3 counters, proved bit), and the
+/// solve time.
 fn format_result(r: &SolveResult) -> String {
     let m = &r.mapping;
     let e = &r.energy;
@@ -222,61 +244,66 @@ fn format_result(r: &SolveResult) -> String {
 }
 
 /// Parse one entry line; `None` on any malformation (the caller skips it).
-fn parse_line(line: &str) -> Option<(u64, WarmOutcome)> {
+fn parse_line(line: &str) -> Option<(u64, WarmEntry)> {
     let f: Vec<&str> = line.split('\t').collect();
     let fp = hex_u64(f.first()?)?;
-    match *f.get(1)? {
+    let kind = *f.get(1)?;
+    let arch_fp = hex_u64(f.get(2)?)?;
+    match kind {
         "err" => {
-            if f.len() != 3 || f[2] != "infeasible" {
+            if f.len() != 4 || f[3] != "infeasible" {
                 return None;
             }
-            Some((fp, Err(SolveError::NoFeasibleMapping)))
+            Some((fp, WarmEntry { arch_fp, outcome: Err(SolveError::NoFeasibleMapping) }))
         }
         "ok" => {
-            if f.len() != 30 {
+            if f.len() != 31 {
                 return None;
             }
-            let t = |i: usize| f[2 + i].parse::<u64>().ok();
+            let t = |i: usize| f[3 + i].parse::<u64>().ok();
             let mapping = Mapping {
                 l1: Tile::new(t(0)?, t(1)?, t(2)?),
                 l2: Tile::new(t(3)?, t(4)?, t(5)?),
                 l3: Tile::new(t(6)?, t(7)?, t(8)?),
-                alpha01: axis_of(f[11])?,
-                alpha12: axis_of(f[12])?,
-                b1: bypass_of(f[13])?,
-                b3: bypass_of(f[14])?,
+                alpha01: axis_of(f[12])?,
+                alpha12: axis_of(f[13])?,
+                b1: bypass_of(f[14])?,
+                b3: bypass_of(f[15])?,
             };
             let energy = crate::energy::EnergyBreakdown {
-                src1: hex_f64(f[15])?,
-                src3: hex_f64(f[16])?,
-                src4: hex_f64(f[17])?,
-                compute: hex_f64(f[18])?,
-                leakage: hex_f64(f[19])?,
-                normalized: hex_f64(f[20])?,
-                total_pj: hex_f64(f[21])?,
+                src1: hex_f64(f[16])?,
+                src3: hex_f64(f[17])?,
+                src4: hex_f64(f[18])?,
+                compute: hex_f64(f[19])?,
+                leakage: hex_f64(f[20])?,
+                normalized: hex_f64(f[21])?,
+                total_pj: hex_f64(f[22])?,
             };
             let certificate = Certificate {
-                upper_bound: hex_f64(f[22])?,
-                lower_bound: hex_f64(f[23])?,
-                gap: hex_f64(f[24])?,
-                nodes: f[25].parse().ok()?,
-                combos_total: f[26].parse().ok()?,
-                combos_pruned: f[27].parse().ok()?,
-                proved_optimal: match f[28] {
+                upper_bound: hex_f64(f[23])?,
+                lower_bound: hex_f64(f[24])?,
+                gap: hex_f64(f[25])?,
+                nodes: f[26].parse().ok()?,
+                combos_total: f[27].parse().ok()?,
+                combos_pruned: f[28].parse().ok()?,
+                proved_optimal: match f[29] {
                     "1" => true,
                     "0" => false,
                     _ => return None,
                 },
             };
-            let solve_time = Duration::try_from_secs_f64(hex_f64(f[29])?).ok()?;
+            let solve_time = Duration::try_from_secs_f64(hex_f64(f[30])?).ok()?;
             Some((
                 fp,
-                Ok(Arc::new(SolveResult {
-                    mapping,
-                    energy,
-                    certificate,
-                    solve_time,
-                })),
+                WarmEntry {
+                    arch_fp,
+                    outcome: Ok(Arc::new(SolveResult {
+                        mapping,
+                        energy,
+                        certificate,
+                        solve_time,
+                    })),
+                },
             ))
         }
         _ => None,
@@ -298,9 +325,10 @@ mod tests {
     #[test]
     fn line_round_trip_is_bit_exact() {
         let r = solved();
-        let line = format!("{:016x}\tok\t{}", 0xDEADBEEFu64, format_result(&r));
+        let line = format!("{:016x}\tok\t{:016x}\t{}", 0xDEADBEEFu64, 0xA5C4u64, format_result(&r));
         let (fp, back) = parse_line(&line).expect("own format must parse");
-        let back = back.unwrap();
+        assert_eq!(back.arch_fp, 0xA5C4);
+        let back = back.outcome.unwrap();
         assert_eq!(fp, 0xDEADBEEF);
         assert_eq!(back.mapping, r.mapping);
         assert_eq!(back.energy.normalized.to_bits(), r.energy.normalized.to_bits());
@@ -319,26 +347,35 @@ mod tests {
 
     #[test]
     fn err_line_round_trips() {
-        let (fp, v) = parse_line("00000000000000aa\terr\tinfeasible").unwrap();
+        let (fp, v) = parse_line("00000000000000aa\terr\t00000000000000bb\tinfeasible").unwrap();
         assert_eq!(fp, 0xaa);
-        assert_eq!(v.unwrap_err(), SolveError::NoFeasibleMapping);
+        assert_eq!(v.arch_fp, 0xbb);
+        assert_eq!(v.outcome.unwrap_err(), SolveError::NoFeasibleMapping);
     }
 
     #[test]
     fn malformed_lines_are_rejected_not_panicked() {
         let r = solved();
-        let good = format!("{:016x}\tok\t{}", 1u64, format_result(&r));
+        let good = format!("{:016x}\tok\t{:016x}\t{}", 1u64, 2u64, format_result(&r));
         // Overflowing integer field + field count off by one.
         let overflow = good.replace("\tok\t", "\tok\t99999999999999999999\t");
+        // A corrupt mapping field (non-numeric tile length).
+        let corrupt_mapping = {
+            let mut f: Vec<&str> = good.split('\t').collect();
+            f[3] = "x9";
+            f.join("\t")
+        };
         for bad in [
             "",
             "garbage",
-            "zz\terr\tinfeasible",
-            "01\terr\tsomething-else",
-            "01\tok\tnot-enough-fields",
-            "01\twat\tinfeasible",
+            "zz\terr\t00bb\tinfeasible",
+            "01\terr\t00bb\tsomething-else",
+            "01\terr\tinfeasible",                      // v2-shaped err line: no arch fp
+            "01\tok\t00bb\tnot-enough-fields",
+            "01\twat\t00bb\tinfeasible",
             &good[..good.len() / 2], // truncated mid write
             overflow.as_str(),
+            corrupt_mapping.as_str(),
         ] {
             assert!(parse_line(bad).is_none(), "accepted malformed line: {bad:?}");
         }
@@ -350,9 +387,15 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("goma_warm_unit_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join(WARM_CACHE_FILE);
-        std::fs::write(&path, "# goma-warm-cache v0\n00aa\terr\tinfeasible\n").unwrap();
-        let store = WarmStore::open(Some(dir.clone()));
-        assert_eq!(store.loaded_len(), 0, "v0 file must be ignored wholesale");
+        for old in [
+            "# goma-warm-cache v0\n00aa\terr\tinfeasible\n",
+            // A v2-era store: rejected by its header before any line parse.
+            "# goma-warm-cache v2\n00aa\terr\tinfeasible\n",
+        ] {
+            std::fs::write(&path, old).unwrap();
+            let store = WarmStore::open(Some(dir.clone()));
+            assert_eq!(store.loaded_len(), 0, "pre-v3 file must be ignored wholesale: {old:?}");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

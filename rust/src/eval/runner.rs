@@ -148,8 +148,13 @@ fn aggregate_case(mapper: &str, case_name: String, gemms: Vec<GemmOutcome>) -> C
 /// This is the serving-stack variant of [`run_case`] for GOMA-optimal
 /// mappings: the solver is deterministic, so the Eq. 35 aggregates are
 /// bit-identical to `run_case(&GomaMapper::default(), case)` for any
-/// worker count — while duplicate shapes coalesce, repeats hit the
-/// (optionally persistent) cache, and distinct keys solve concurrently.
+/// worker count *and any seeding setting* (a seeded service warm-bounds
+/// related shapes against each other, which provably leaves every mapping
+/// and energy unchanged, DESIGN.md §6) — while duplicate shapes coalesce,
+/// repeats hit the (optionally persistent) cache, and distinct keys solve
+/// concurrently. The recorded `evaluations` (certificate node counts) are
+/// *effort* counters: a seeded solve may record fewer than the mapper
+/// path's unseeded solve for the same key, never more.
 /// The service must have been spawned with the same [`SolverOptions`] the
 /// comparison path uses. Note that `search_runtime` aggregates each
 /// result's *originally recorded* solve time (a cache hit replays the cost

@@ -23,7 +23,8 @@
 //! ([`mappers`]), the LLM prefill workload suite ([`workloads`]), the
 //! 24-case pipeline ([`eval`]), a PJRT runtime for executing AOT-compiled
 //! mapped-GEMM kernels ([`runtime`]), and a sharded mapping service with a
-//! persistent warm-start cache ([`coordinator`]).
+//! persistent warm-start cache and cross-shape incumbent seeding for
+//! batch solves ([`coordinator`], [`solver::seed`]).
 //!
 //! ```no_run
 //! use goma::{arch, solver, mapping::GemmShape};
@@ -51,4 +52,6 @@ pub mod workloads;
 
 // Crate-root conveniences for the hot entry points (the long paths remain
 // canonical; these exist so embedding code can `use goma::{solve, ...}`).
-pub use solver::{solve, solve_with_threads, SolveError, SolveResult, SolverOptions};
+pub use solver::{
+    solve, solve_seeded, solve_with_threads, SeedBound, SolveError, SolveResult, SolverOptions,
+};

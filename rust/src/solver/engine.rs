@@ -22,6 +22,18 @@
 //! plain sequential loop (no pool, no atomics); the property suite pins
 //! the engine against it at 1/2/4 threads.
 //!
+//! **Seeded solves** (DESIGN.md §6): [`solve_configured`] accepts an
+//! optional [`SeedBound`] — the re-costed objective of a mapping known
+//! feasible on *this* `(shape, arch)` (see [`super::seed`]) — whose only
+//! effect is a tighter *starting* incumbent. The incumbent is initialized
+//! strictly above the bound ([`strictly_above`]), so a donor that ties the
+//! optimum still lets the search discover and return the optimum itself:
+//! the returned mapping and energy are bit-identical to the unseeded
+//! solve, and the node counters can only shrink (a valid upper bound only
+//! prunes suboptimal subtrees). The determinism rule extends verbatim —
+//! for a fixed seed the solve stays bit-identical at every thread count;
+//! only the certificate's *effort* counters depend on the seed.
+//!
 //! Inner search per unit (unchanged from the classic branch-and-bound):
 //! sorted per-axis candidate lists give admissible lower bounds (sum of
 //! per-axis minima), capacity prechecks bound Eqs. (31)–(32) from below,
@@ -67,6 +79,14 @@ pub struct SolverOptions {
     /// Effective parallelism tops out at [`WAVE_UNITS`] (at most one wave
     /// of units is in flight at a time), so values above it add nothing.
     pub solve_threads: usize,
+    /// Whether batch-solving layers (the mapping service) may warm-start
+    /// solves with cross-shape incumbent seeds (DESIGN.md §6). `None`
+    /// means auto: the `GOMA_SEED_BOUNDS` env override when set, otherwise
+    /// on. The engine itself ignores this — seeds reach it explicitly via
+    /// [`solve_configured`] — and mappings/energies are bit-identical
+    /// either way (property-tested), so the knob never enters the solve
+    /// fingerprint.
+    pub seed_bounds: Option<bool>,
 }
 
 impl Default for SolverOptions {
@@ -75,6 +95,7 @@ impl Default for SolverOptions {
             exact_pe: true,
             time_limit: None,
             solve_threads: 0,
+            seed_bounds: None,
         }
     }
 }
@@ -88,6 +109,12 @@ impl SolverOptions {
         } else {
             default_solve_threads()
         }
+    }
+
+    /// The effective seeding switch: the explicit `seed_bounds` value when
+    /// set, otherwise [`default_seed_bounds`].
+    pub fn resolved_seed_bounds(&self) -> bool {
+        self.seed_bounds.unwrap_or_else(default_seed_bounds)
     }
 }
 
@@ -103,6 +130,61 @@ pub fn default_solve_threads() -> usize {
         }
     }
     1
+}
+
+/// Parse one `on|off` seeding value (the shared vocabulary of the
+/// `--seed-bounds` flag and the `GOMA_SEED_BOUNDS` env var). `None` for
+/// anything unrecognized.
+pub fn parse_seed_bounds_value(s: &str) -> Option<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" | "yes" => Some(true),
+        "off" | "false" | "0" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+/// Default seeding switch: the `GOMA_SEED_BOUNDS` env override when it
+/// parses ([`parse_seed_bounds_value`]), otherwise on. On by default
+/// because seeding is provably invisible in mappings and energies
+/// (DESIGN.md §6) and only ever shrinks search effort.
+pub fn default_seed_bounds() -> bool {
+    std::env::var("GOMA_SEED_BOUNDS")
+        .ok()
+        .and_then(|v| parse_seed_bounds_value(&v))
+        .unwrap_or(true)
+}
+
+/// A cross-shape warm bound for the incumbent (DESIGN.md §6).
+///
+/// `objective` is the axis-term-sum objective `(f_x + f_y) + f_z` — the
+/// scan's internal units, i.e. `normalized − compute` — of a mapping that
+/// is **feasible on the target `(shape, arch)`**. Validity is
+/// load-bearing: an objective no feasible mapping attains makes the
+/// seeded search prune away the true optimum (exercised by the property
+/// suite). Construct through [`super::seed::recost`], which re-checks
+/// feasibility on the target shape and reproduces the scan's arithmetic
+/// bit-for-bit, never by hand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeedBound {
+    /// Axis-term-sum objective of a target-feasible mapping.
+    pub objective: f64,
+}
+
+/// The smallest `f64` strictly greater than `v`, for the positive finite
+/// objectives the scans produce. Seeding the incumbent *strictly above*
+/// the bound is what keeps seeded solves bit-identical: a donor whose
+/// re-costed value ties the optimum must not prune the optimum's own
+/// strict-improvement acceptance (`value < incumbent`) out of the search.
+fn strictly_above(v: f64) -> f64 {
+    if !v.is_finite() {
+        return f64::INFINITY;
+    }
+    if v <= 0.0 {
+        // Objectives are positive (every mapping pays DRAM reads);
+        // degenerate seeds clamp to the smallest positive bound.
+        return f64::MIN_POSITIVE;
+    }
+    f64::from_bits(v.to_bits() + 1)
 }
 
 /// Solve failure modes.
@@ -412,19 +494,37 @@ pub fn solve_with_threads(
     opts: SolverOptions,
     threads: usize,
 ) -> Result<SolveResult, SolveError> {
-    solve_configured(shape, arch, opts, threads, true)
+    solve_configured(shape, arch, opts, threads, true, None)
+}
+
+/// [`solve_with_threads`] with a warm starting bound: the batch-solving
+/// entry point used by the mapping service. Given the same `seed`, the
+/// result is still bit-identical for every thread count; a *valid* seed
+/// (see [`SeedBound`]) additionally leaves the mapping and energy
+/// bit-identical to the unseeded solve while the node counters can only
+/// shrink (DESIGN.md §6).
+pub fn solve_seeded(
+    shape: GemmShape,
+    arch: &Accelerator,
+    opts: SolverOptions,
+    threads: usize,
+    seed: Option<SeedBound>,
+) -> Result<SolveResult, SolveError> {
+    solve_configured(shape, arch, opts, threads, true, seed)
 }
 
 /// [`solve_with_threads`] with the dominance filter switched on or off —
 /// `dominance = false` is the A/B baseline used by the node-count property
 /// tests and the `solver_hotpath` bench; the optimum is identical either
-/// way (DESIGN.md §3).
+/// way (DESIGN.md §3) — and an optional starting incumbent
+/// ([`SeedBound`], DESIGN.md §6).
 pub fn solve_configured(
     shape: GemmShape,
     arch: &Accelerator,
     opts: SolverOptions,
     threads: usize,
     dominance: bool,
+    seed: Option<SeedBound>,
 ) -> Result<SolveResult, SolveError> {
     let start = Instant::now();
     let deadline = opts.time_limit.and_then(|l| start.checked_add(l));
@@ -441,7 +541,7 @@ pub fn solve_configured(
         });
     }
     let threads = threads.max(1);
-    let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
+    let incumbent = AtomicU64::new(initial_incumbent(seed).to_bits());
     let mut best: Option<(f64, Mapping)> = None;
     let mut tally = Tally::default();
 
@@ -487,6 +587,16 @@ pub fn solve_configured(
     }
 }
 
+/// Starting incumbent for a (possibly seeded) solve: strictly above the
+/// seed bound so ties with the optimum survive (see [`strictly_above`]),
+/// `+∞` when unseeded.
+fn initial_incumbent(seed: Option<SeedBound>) -> f64 {
+    match seed {
+        Some(s) => strictly_above(s.objective),
+        None => f64::INFINITY,
+    }
+}
+
 /// A plain sequential implementation of the engine's exact semantics — no
 /// worker pool, no atomics, same wave-quantized incumbent schedule. This
 /// is the "serial path" the property suite pins [`solve_with_threads`]
@@ -497,6 +607,18 @@ pub fn solve_serial_reference(
     shape: GemmShape,
     arch: &Accelerator,
     opts: SolverOptions,
+) -> Result<SolveResult, SolveError> {
+    solve_serial_reference_seeded(shape, arch, opts, None)
+}
+
+/// [`solve_serial_reference`] with a warm starting bound — the sequential
+/// pin for seeded solves: `solve_configured(…, seed)` must be bit-identical
+/// to this at every thread count for the same `seed`.
+pub fn solve_serial_reference_seeded(
+    shape: GemmShape,
+    arch: &Accelerator,
+    opts: SolverOptions,
+    seed: Option<SeedBound>,
 ) -> Result<SolveResult, SolveError> {
     let start = Instant::now();
     let deadline = opts.time_limit.and_then(|l| start.checked_add(l));
@@ -509,7 +631,7 @@ pub fn solve_serial_reference(
             SolveError::NoFeasibleMapping
         });
     }
-    let mut ub = f64::INFINITY;
+    let mut ub = initial_incumbent(seed);
     let mut best: Option<(f64, Mapping)> = None;
     let mut tally = Tally::default();
 
@@ -600,8 +722,8 @@ mod tests {
         let shape = GemmShape::new(64, 96, 32);
         let a = arch();
         let opts = SolverOptions::default();
-        let pruned = solve_configured(shape, &a, opts, 1, true).unwrap();
-        let raw = solve_configured(shape, &a, opts, 1, false).unwrap();
+        let pruned = solve_configured(shape, &a, opts, 1, true, None).unwrap();
+        let raw = solve_configured(shape, &a, opts, 1, false, None).unwrap();
         let (po, ro) = (pruned.energy.normalized, raw.energy.normalized);
         assert!((po - ro).abs() / ro < 1e-9, "pruning changed the optimum");
         assert!(
@@ -621,5 +743,65 @@ mod tests {
         assert_eq!(explicit.resolved_threads(), 3);
         let auto = SolverOptions::default();
         assert!(auto.resolved_threads() >= 1);
+    }
+
+    #[test]
+    fn strictly_above_is_the_next_float_up() {
+        for v in [1e-12, 0.7, 3.0, 1e9] {
+            let up = strictly_above(v);
+            assert!(up > v);
+            // Nothing fits between them.
+            assert_eq!(f64::from_bits(up.to_bits() - 1), v);
+        }
+        assert_eq!(strictly_above(f64::INFINITY), f64::INFINITY);
+        assert!(strictly_above(0.0) > 0.0);
+        assert!(strictly_above(-1.0) > 0.0);
+    }
+
+    #[test]
+    fn seed_bounds_value_vocabulary() {
+        for s in ["on", "ON", "true", "1", "yes"] {
+            assert_eq!(parse_seed_bounds_value(s), Some(true), "{s}");
+        }
+        for s in ["off", "Off", "false", "0", "no"] {
+            assert_eq!(parse_seed_bounds_value(s), Some(false), "{s}");
+        }
+        assert_eq!(parse_seed_bounds_value("banana"), None);
+        // Explicit option beats whatever the environment says.
+        let on = SolverOptions { seed_bounds: Some(true), ..SolverOptions::default() };
+        let off = SolverOptions { seed_bounds: Some(false), ..SolverOptions::default() };
+        assert!(on.resolved_seed_bounds());
+        assert!(!off.resolved_seed_bounds());
+    }
+
+    #[test]
+    fn self_seeded_solve_is_bit_identical_with_fewer_or_equal_nodes() {
+        // The hardest valid seed: the optimum's own objective (the bound
+        // ties the optimum exactly). Strictly-above seeding must still
+        // return the identical mapping with node counters only shrinking.
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let opts = SolverOptions::default();
+        let unseeded = solve_configured(shape, &a, opts, 1, true, None).unwrap();
+        let bound = super::super::seed::recost(&unseeded.mapping, shape, &a, opts.exact_pe)
+            .expect("the optimum must re-cost on its own instance");
+        for threads in [1usize, 2, 4] {
+            let seeded = solve_configured(shape, &a, opts, threads, true, Some(bound)).unwrap();
+            assert_eq!(seeded.mapping, unseeded.mapping, "threads={threads}");
+            assert_eq!(
+                seeded.energy.normalized.to_bits(),
+                unseeded.energy.normalized.to_bits(),
+                "threads={threads}"
+            );
+            assert!(seeded.certificate.proved_optimal);
+            assert!(
+                seeded.certificate.nodes <= unseeded.certificate.nodes,
+                "threads={threads}: seeding expanded more nodes"
+            );
+        }
+        // And the seeded serial reference pins the seeded engine.
+        let serial = solve_serial_reference_seeded(shape, &a, opts, Some(bound)).unwrap();
+        let engine = solve_configured(shape, &a, opts, 4, true, Some(bound)).unwrap();
+        assert_bit_identical(&engine, &serial, "seeded engine vs seeded serial");
     }
 }

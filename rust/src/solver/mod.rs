@@ -25,20 +25,30 @@
 //! so `solve()` is bit-identical for every `solve_threads` value. The
 //! solver tracks a provable lower bound and the best feasible upper bound
 //! and emits a [`Certificate`]; `gap == 0` unless a time limit is hit.
+//!
+//! Because the objective is O(1) to evaluate, solved mappings can be
+//! re-costed on *other* shapes for free: [`seed`] turns such donors into
+//! valid starting incumbents (feasibility-gated), which the engine accepts
+//! via [`engine::solve_configured`] — mapping and energy provably
+//! unchanged, search effort only shrinking (DESIGN.md §6). The mapping
+//! service uses this to warm-bound batch solves across related shapes.
 
 mod bnb;
 mod candidates;
 pub mod engine;
 mod exhaustive;
+pub mod seed;
 pub mod space;
 
 pub use bnb::solve;
 pub use candidates::{spatial_triples, AxisCandidate, CandidateCache};
 pub use engine::{
-    default_solve_threads, solve_configured, solve_serial_reference, solve_with_threads,
-    SolveError, SolveResult, SolverOptions,
+    default_seed_bounds, default_solve_threads, parse_seed_bounds_value, solve_configured,
+    solve_seeded, solve_serial_reference, solve_serial_reference_seeded, solve_with_threads,
+    SeedBound, SolveError, SolveResult, SolverOptions,
 };
 pub use exhaustive::{enumerate_all, exhaustive_best, MappingVisitor};
+pub use seed::{plan_seed, recost, similarity_key, SeedPlan};
 pub use space::{SearchSpace, SpaceStats, TripleUnit};
 
 /// Verifiable optimality certificate (paper contribution 3).
@@ -56,7 +66,10 @@ pub struct Certificate {
     /// `(ub − lb)/ub`; 0 means proved optimal.
     pub gap: f64,
     /// Branch-and-bound nodes expanded. Deterministic: identical for every
-    /// `solve_threads` value (the engine's wave-quantized incumbent rule).
+    /// `solve_threads` value (the engine's wave-quantized incumbent rule)
+    /// given the same seed bound. A valid [`SeedBound`] can only shrink
+    /// it — effort counters record search work actually done, while the
+    /// mapping/energy/bounds above are seed-invariant (DESIGN.md §6).
     pub nodes: u64,
     /// Total (α, B, Ŝ) configurations considered.
     pub combos_total: u64,

@@ -1,0 +1,215 @@
+//! Cross-shape warm-bound planning (DESIGN.md §6).
+//!
+//! GOMA's objective is an exact closed form with O(1) evaluation, so any
+//! already-solved mapping can be *re-costed* on a different GEMM shape for
+//! free. If that "donor" mapping is feasible on the target `(shape, arch)`
+//! — divisibility nesting, the Eq. 29 PE constraint, both capacities —
+//! its re-costed objective is a valid upper bound on the target's optimum,
+//! which the branch-and-bound can start from instead of `+∞`
+//! ([`super::engine::solve_configured`] with a [`SeedBound`]). Batches of
+//! related shapes (the paper's Table II prefill workloads: dozens of GEMMs
+//! per model on one arch) are exactly this scenario, and the mapping
+//! service uses this module to seed every batch miss from earlier results
+//! on the same architecture.
+//!
+//! Two properties carry the whole scheme (argued in DESIGN.md §6,
+//! property-tested in `rust/tests/seeding.rs`):
+//!
+//! * **Validity gate.** [`recost`] accepts a donor only after
+//!   [`crate::mapping::validate`] passes on the *target* shape; a donor
+//!   whose tiles do not divide the target, overflows a capacity, or
+//!   misses the PE constraint yields `None` and never touches the bound.
+//!   An invalid (too-tight) bound is not a slower search — it prunes the
+//!   true optimum away, which is why the gate is load-bearing.
+//! * **Exact arithmetic.** The returned objective is computed with the
+//!   scan's own operations in the scan's own order
+//!   (`(f_x + f_y) + f_z` over [`crate::energy::axis_term`] sums), so a
+//!   donor that *is* the target's optimum produces exactly the value the
+//!   engine's scan would compute for it, bit for bit — the precondition
+//!   for the engine's strictly-above seeding to preserve bit-identical
+//!   results.
+
+use super::engine::SeedBound;
+use crate::arch::Accelerator;
+use crate::energy::{axis_input, axis_term};
+use crate::mapping::{validate, Axis, GemmShape, Mapping};
+
+/// Re-cost `donor` on the target `(shape, arch)`: `None` when the donor is
+/// infeasible there (the validity gate), otherwise the exact axis-term-sum
+/// objective the engine's scan would compute for it.
+///
+/// `exact_pe` must match the solve's [`super::SolverOptions::exact_pe`]:
+/// the bound is only valid over the space the solve actually searches.
+pub fn recost(
+    donor: &Mapping,
+    shape: GemmShape,
+    arch: &Accelerator,
+    exact_pe: bool,
+) -> Option<SeedBound> {
+    validate(donor, shape, arch, exact_pe).ok()?;
+    // The bound must be *attained inside the searched space*, not merely
+    // by some feasible mapping. With `exact_pe` the PE constraint is an
+    // equality and validation already pins the donor into the enumeration;
+    // relaxed solves only enumerate fanout products that divide `num_pe`,
+    // while relaxed validation accepts any product ≤ num_pe — reject the
+    // gap rather than seed with a value the search could never reach.
+    if !exact_pe && arch.num_pe % donor.pes_used().max(1) != 0 {
+        return None;
+    }
+    let f = |d: Axis| {
+        let (s1, s3, s4) = axis_term(arch, &axis_input(donor, shape, d));
+        s1 + s3 + s4
+    };
+    // The scan's exact reduction order: `base = f_x + f_y; base + f_z`.
+    let objective = (f(Axis::X) + f(Axis::Y)) + f(Axis::Z);
+    Some(SeedBound { objective })
+}
+
+/// What planning a seed over a donor pool produced: the tightest valid
+/// bound plus the accept/reject tallies the service folds into its
+/// metrics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeedPlan {
+    /// The tightest bound among the accepted donors, if any.
+    pub bound: Option<SeedBound>,
+    /// Donors that passed the target-feasibility re-cost check.
+    pub accepted: u64,
+    /// Donors rejected by the re-cost check (infeasible on the target).
+    pub rejected: u64,
+}
+
+/// Plan a warm bound for `(shape, arch)` from `donors`: re-cost every
+/// donor, keep the tightest valid bound. Rejected donors are counted, not
+/// errors — cross-shape donors routinely fail divisibility on the target.
+pub fn plan_seed(
+    donors: &[Mapping],
+    shape: GemmShape,
+    arch: &Accelerator,
+    exact_pe: bool,
+) -> SeedPlan {
+    let mut plan = SeedPlan::default();
+    for donor in donors {
+        match recost(donor, shape, arch, exact_pe) {
+            Some(b) => {
+                plan.accepted += 1;
+                let tighter = match plan.bound {
+                    Some(cur) => b.objective < cur.objective,
+                    None => true,
+                };
+                if tighter {
+                    plan.bound = Some(b);
+                }
+            }
+            None => plan.rejected += 1,
+        }
+    }
+    plan
+}
+
+/// Canonical batch ordering key: sorting miss keys by
+/// `(volume, x, y, z)` places similar shapes next to each other, so each
+/// wave's winners are the most plausible donors for the next wave's keys
+/// (a mapping tuned for a shape tends to stay feasible — and tight — on
+/// its near neighbors).
+pub fn similarity_key(shape: GemmShape) -> (u64, u64, u64, u64) {
+    (shape.volume(), shape.x, shape.y, shape.z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::{Bypass, Tile};
+    use crate::solver::{solve, SolverOptions};
+
+    fn arch() -> Accelerator {
+        Accelerator::custom("seed", 1 << 16, 16, 64)
+    }
+
+    #[test]
+    fn recost_accepts_the_own_instance_optimum() {
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let r = solve(shape, &a, SolverOptions::default()).unwrap();
+        let bound = recost(&r.mapping, shape, &a, true).expect("optimum must re-cost");
+        // Scan units exclude the constant compute term.
+        let expect = r.energy.normalized - r.energy.compute;
+        assert!(
+            (bound.objective - expect).abs() <= 1e-9 * expect,
+            "re-cost {} vs closed form {expect}",
+            bound.objective
+        );
+    }
+
+    #[test]
+    fn recost_rejects_a_target_infeasible_donor() {
+        let a = arch();
+        // Feasible on 48³ (validated below), but its SRAM tiles (24) do
+        // not divide the 32³ target: the gate must reject it.
+        let donor = Mapping {
+            l1: Tile::new(24, 24, 24),
+            l2: Tile::new(8, 8, 4),
+            l3: Tile::new(2, 4, 2),
+            alpha01: Axis::X,
+            alpha12: Axis::Y,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        };
+        assert!(recost(&donor, GemmShape::new(48, 48, 48), &a, true).is_some());
+        assert!(recost(&donor, GemmShape::new(32, 32, 32), &a, true).is_none());
+    }
+
+    #[test]
+    fn plan_seed_keeps_the_tightest_valid_bound_and_counts() {
+        let shape = GemmShape::new(64, 64, 64);
+        let a = arch();
+        let optimal = solve(shape, &a, SolverOptions::default()).unwrap().mapping;
+        // A deliberately bad-but-feasible donor: the optimum of a much
+        // smaller shape, which stays feasible on 64³ (tiles divide) but
+        // costs more than the 64³ optimum.
+        let weak = solve(GemmShape::new(16, 16, 16), &a, SolverOptions::default()).unwrap().mapping;
+        let infeasible = Mapping { l1: Tile::new(24, 24, 24), ..optimal };
+        let donors = [weak, infeasible, optimal];
+        let plan = plan_seed(&donors, shape, &a, true);
+        // 24 ∤ 64, so the mutated donor is rejected; the other two accept.
+        assert_eq!(plan.accepted, 2);
+        assert_eq!(plan.rejected, 1);
+        let best = recost(&optimal, shape, &a, true).unwrap();
+        assert_eq!(
+            plan.bound.unwrap().objective.to_bits(),
+            best.objective.to_bits(),
+            "the optimum's bound is the tightest"
+        );
+    }
+
+    #[test]
+    fn relaxed_recost_rejects_donors_outside_the_enumerated_fanouts() {
+        // 3 PEs used on a 4-PE array passes relaxed validation (3 ≤ 4) but
+        // the relaxed space only enumerates products dividing 4 — seeding
+        // with an unattainable value would corrupt the search.
+        let a = Accelerator::custom("gap", 1 << 16, 4, 64);
+        let shape = GemmShape::new(12, 12, 12);
+        let donor = Mapping {
+            l1: Tile::new(12, 12, 12),
+            l2: Tile::new(3, 1, 1),
+            l3: Tile::new(1, 1, 1),
+            alpha01: Axis::X,
+            alpha12: Axis::Y,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        };
+        assert_eq!(donor.pes_used(), 3);
+        assert!(validate(&donor, shape, &a, false).is_ok(), "relaxed validation accepts it");
+        assert!(recost(&donor, shape, &a, false).is_none(), "recost must reject the gap");
+        // A dividing product (2 PEs) is accepted under relaxed re-cost.
+        let ok = Mapping { l2: Tile::new(2, 1, 1), ..donor };
+        assert_eq!(ok.pes_used(), 2);
+        assert!(recost(&ok, shape, &a, false).is_some());
+    }
+
+    #[test]
+    fn similarity_key_orders_by_volume_first() {
+        let small = GemmShape::new(8, 8, 8);
+        let big = GemmShape::new(64, 64, 64);
+        assert!(similarity_key(small) < similarity_key(big));
+    }
+}

@@ -16,6 +16,18 @@
 //! in `Arc`s, so [`super::engine`]'s worker threads scan the same
 //! allocations instead of rebuilding per-thread copies. The space is plain
 //! data: building it does no search, and iterating it is side-effect-free.
+//!
+//! **Completeness** (load-bearing for cross-shape seeding, DESIGN.md §6):
+//! every mapping that passes [`crate::mapping::validate`] for
+//! `(shape, arch)` with `exact_pe` lies in this enumeration — its fanout
+//! triple satisfies Eq. 29 and per-axis divisibility (so a unit exists
+//! for it), and its `(L^(1), L^(3))` pair is a divisor-chain candidate of
+//! the matching per-axis list. (Relaxed solves enumerate only fanout
+//! products *dividing* `num_pe`, while relaxed validation accepts any
+//! product ≤ `num_pe`; [`crate::solver::seed::recost`] closes that gap
+//! itself.) A re-costed donor bound is therefore always attained by some
+//! enumerated mapping, which is what makes it a *valid* starting
+//! incumbent for the engine's scan.
 
 use super::candidates::{spatial_triples, AxisCandidate, CandidateCache};
 use crate::arch::Accelerator;

@@ -248,6 +248,77 @@ fn property_coordinator_bookkeeping() {
 }
 
 #[test]
+fn property_queue_depth_drains_to_zero_on_an_all_interrupted_batch() {
+    // Error-path regression: a batch whose every solve bails out with
+    // `Interrupted` (1 ns budget on huge-but-feasible keys) must still
+    // drain the queue-depth gauge to zero and keep the accounting
+    // invariant exact — nothing is cached, so nothing short-circuits the
+    // bookkeeping.
+    use goma::coordinator::MappingService;
+    use goma::solver::{SolveError, SolverOptions};
+    let opts = SolverOptions {
+        time_limit: Some(std::time::Duration::from_nanos(1)),
+        ..SolverOptions::default()
+    };
+    let handle = MappingService::new(opts).with_workers(test_workers()).spawn();
+    let big = Accelerator::custom("drain", 1 << 20, 256, 64);
+    let shapes: Vec<GemmShape> = (0..6)
+        .map(|i| GemmShape::new(1 << 10, 1 << 10, (1 << 10) + i * (1 << 10)))
+        .collect();
+    for p in handle.submit_batch(&big, &shapes) {
+        assert_eq!(p.wait().unwrap_err(), SolveError::Interrupted);
+    }
+    let metrics = handle.metrics();
+    let (req, solves, hits, coalesced, errs) = metrics.snapshot();
+    assert_eq!(req, shapes.len() as u64);
+    assert_eq!(hits, 0, "capped bailouts must never be cached");
+    assert_eq!(req, hits + coalesced + solves + errs, "accounting must sum after the drain");
+    assert_eq!(metrics.queue_depth(), 0, "gauge must return to zero on the error path");
+    handle.shutdown();
+}
+
+#[test]
+fn property_accounting_invariant_holds_with_seeding_counters() {
+    // The documented invariant `requests == cache_hits + coalesced +
+    // solves + errors` must be untouched by the seeding overlays, and the
+    // overlays themselves must stay internally consistent.
+    use goma::coordinator::MappingService;
+    let workers = test_workers();
+    let handle = MappingService::default().with_workers(workers).with_seed_bounds(true).spawn();
+    let arch = Accelerator::custom("seedacct", 1 << 14, 8, 64);
+    // Related shapes (so seeding actually fires), duplicates (so
+    // coalescing/hits fire), and one infeasible key (so errors fire:
+    // no factor triple of 8 divides 5×5×5).
+    let shapes = [
+        GemmShape::new(8, 8, 8),
+        GemmShape::new(16, 8, 8),
+        GemmShape::new(16, 16, 8),
+        GemmShape::new(8, 8, 8),
+        GemmShape::new(16, 16, 16),
+        GemmShape::new(5, 5, 5),
+        GemmShape::new(16, 8, 8),
+    ];
+    for p in handle.submit_batch(&arch, &shapes) {
+        let _ = p.wait(); // Ok or infeasible — both are answers
+    }
+    // Sequential repeats after quiescence: pure cache hits.
+    let _ = handle.map(GemmShape::new(16, 16, 16), arch.clone());
+    let _ = handle.map(GemmShape::new(5, 5, 5), arch.clone());
+    let metrics = handle.metrics();
+    let (req, solves, hits, coalesced, errs) = metrics.snapshot();
+    assert_eq!(req, shapes.len() as u64 + 2);
+    assert_eq!(req, hits + coalesced + solves + errs, "invariant must hold with seeding on");
+    assert!(errs >= 1, "the infeasible key must be counted as an error");
+    assert_eq!(metrics.queue_depth(), 0);
+    assert!(metrics.seeded_solves() <= solves + errs, "overlay exceeds solve attempts");
+    assert!(
+        metrics.seed_accepted() >= metrics.seeded_solves(),
+        "every seeded solve needs at least one accepted donor"
+    );
+    handle.shutdown();
+}
+
+#[test]
 fn property_sharded_service_stress() {
     use goma::coordinator::MappingService;
     use goma::solver::SolveError;

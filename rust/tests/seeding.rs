@@ -1,0 +1,263 @@
+//! Metamorphic property suite for cross-shape incumbent seeding
+//! (DESIGN.md §6): a valid warm bound must be *invisible* in everything
+//! the solver promises — mapping and energy bit-identical to the unseeded
+//! solve — while search effort (the node counters) can only shrink; and
+//! the validity gate (`solver::seed::recost`'s target-feasibility check)
+//! must be what stands between that guarantee and a corrupted search.
+//!
+//! Hand-rolled generators (the offline registry has no proptest); every
+//! property sweeps seeded random draws and prints the failing instance.
+
+use goma::arch::Accelerator;
+use goma::coordinator::MappingService;
+use goma::mapping::{Bypass, GemmShape, Mapping, Tile};
+use goma::solver::{recost, solve_configured, SeedBound, SolveError, SolverOptions};
+use goma::util::Rng;
+
+mod common;
+use common::test_workers;
+
+/// Random small-but-composite extent.
+fn rand_extent(rng: &mut Rng) -> u64 {
+    let choices = [4u64, 6, 8, 12, 16, 24, 32];
+    *rng.choose(&choices).unwrap()
+}
+
+fn rand_shape(rng: &mut Rng) -> GemmShape {
+    GemmShape::new(rand_extent(rng), rand_extent(rng), rand_extent(rng))
+}
+
+/// Random small accelerator, same pool as the engine property suite —
+/// including the 1-/2-word bypass-forcing regfiles.
+fn rand_arch(rng: &mut Rng, i: u64) -> Accelerator {
+    let pes = [2u64, 4, 8, 16];
+    let rf = [1u64, 2, 8, 64, 256];
+    let sram = [1u64 << 10, 1 << 12, 1 << 14];
+    Accelerator::custom(
+        &format!("seedprop{i}"),
+        *rng.choose(&sram).unwrap(),
+        *rng.choose(&pes).unwrap(),
+        *rng.choose(&rf).unwrap(),
+    )
+}
+
+/// The headline metamorphic property: over ≥ 100 seeded random
+/// `(shape, arch)` instances, a seeded solve is bit-identical to the
+/// unseeded one in mapping and energy (optimality invariance) and never
+/// expands more nodes. Donors are (a) the instance's own optimum — the
+/// tie-with-the-optimum worst case for strictly-above seeding — and
+/// (b) the optimum of a related (x-doubled) shape re-costed across.
+#[test]
+fn property_seeded_solve_is_bit_identical_with_fewer_or_equal_nodes() {
+    let mut rng = Rng::seed_from_u64(0x5EED_2026);
+    let opts = SolverOptions::default();
+    let mut seeded_runs: u64 = 0;
+    let mut draws: u64 = 0;
+    while seeded_runs < 100 && draws < 600 {
+        draws += 1;
+        let shape = rand_shape(&mut rng);
+        let arch = rand_arch(&mut rng, draws);
+        let Ok(unseeded) = solve_configured(shape, &arch, opts, 1, true, None) else {
+            continue;
+        };
+        let mut donors: Vec<Mapping> = vec![unseeded.mapping];
+        let related = GemmShape::new(shape.x * 2, shape.y, shape.z);
+        if let Ok(r) = solve_configured(related, &arch, opts, 1, true, None) {
+            donors.push(r.mapping);
+        }
+        for donor in &donors {
+            let Some(bound) = recost(donor, shape, &arch, opts.exact_pe) else {
+                continue; // cross-shape donors may legitimately be infeasible here
+            };
+            seeded_runs += 1;
+            let label = format!("draw {draws} {shape} on {}", arch.name);
+            let seeded = solve_configured(shape, &arch, opts, 1, true, Some(bound))
+                .unwrap_or_else(|e| panic!("{label}: seeded solve failed: {e}"));
+            assert_eq!(seeded.mapping, unseeded.mapping, "{label}: mapping");
+            assert_eq!(
+                seeded.energy.normalized.to_bits(),
+                unseeded.energy.normalized.to_bits(),
+                "{label}: normalized energy"
+            );
+            assert_eq!(
+                seeded.energy.total_pj.to_bits(),
+                unseeded.energy.total_pj.to_bits(),
+                "{label}: total energy"
+            );
+            assert!(seeded.certificate.proved_optimal, "{label}: proved");
+            assert!(
+                seeded.certificate.nodes <= unseeded.certificate.nodes,
+                "{label}: seeding expanded more nodes ({} > {})",
+                seeded.certificate.nodes,
+                unseeded.certificate.nodes
+            );
+            // Every 8th seeded instance: the determinism rule extends to
+            // seeded solves — bit-identical at 2 and 4 threads too.
+            if seeded_runs % 8 == 0 {
+                for threads in [2usize, 4] {
+                    let t = solve_configured(shape, &arch, opts, threads, true, Some(bound))
+                        .unwrap_or_else(|e| panic!("{label} threads={threads}: {e}"));
+                    assert_eq!(t.mapping, seeded.mapping, "{label} threads={threads}");
+                    assert_eq!(
+                        t.certificate.nodes, seeded.certificate.nodes,
+                        "{label} threads={threads}: nodes"
+                    );
+                }
+            }
+        }
+    }
+    assert!(
+        seeded_runs >= 100,
+        "suite degenerated: only {seeded_runs} seeded instances in {draws} draws"
+    );
+}
+
+/// The validity gate in isolation: a donor that is feasible on its own
+/// shape but infeasible on the target (its tiles do not divide the target
+/// extents) must be rejected by the re-cost check, so it never touches
+/// the bound — and the seeded solve stays exactly the unseeded one.
+#[test]
+fn infeasible_donor_is_rejected_and_never_corrupts_the_bound() {
+    let arch = Accelerator::custom("gate", 1 << 16, 16, 64);
+    // Feasible on 48³, but 24 ∤ 32: infeasible on the 32³ target.
+    let donor = Mapping {
+        l1: Tile::new(24, 24, 24),
+        l2: Tile::new(8, 8, 4),
+        l3: Tile::new(2, 4, 2),
+        alpha01: goma::mapping::Axis::X,
+        alpha12: goma::mapping::Axis::Y,
+        b1: Bypass::ALL,
+        b3: Bypass::ALL,
+    };
+    let home = GemmShape::new(48, 48, 48);
+    let target = GemmShape::new(32, 32, 32);
+    assert!(recost(&donor, home, &arch, true).is_some(), "donor must be feasible at home");
+    assert!(
+        recost(&donor, target, &arch, true).is_none(),
+        "the re-cost check must reject a target-infeasible donor"
+    );
+}
+
+/// Why the validity gate is load-bearing: an artificially too-tight
+/// (invalid) bound — one no feasible mapping attains — makes the seeded
+/// search prune away the true optimum and "prove" infeasibility. This is
+/// the failure mode `recost`'s feasibility check exists to prevent.
+#[test]
+fn an_invalid_too_tight_bound_destroys_the_search() {
+    let shape = GemmShape::new(64, 96, 32);
+    let arch = Accelerator::custom("tight", 16 * 1024, 16, 64);
+    let opts = SolverOptions::default();
+    let honest = solve_configured(shape, &arch, opts, 1, true, None).unwrap();
+    let valid = recost(&honest.mapping, shape, &arch, opts.exact_pe).unwrap();
+    // Half the optimum's objective: below every feasible mapping's value.
+    let poison = SeedBound { objective: valid.objective * 0.5 };
+    assert_eq!(
+        solve_configured(shape, &arch, opts, 1, true, Some(poison)).unwrap_err(),
+        SolveError::NoFeasibleMapping,
+        "an invalid bound silently prunes the whole feasible space"
+    );
+    // Degenerate case: a zero bound wipes out everything too.
+    let zero = SeedBound { objective: 0.0 };
+    assert_eq!(
+        solve_configured(shape, &arch, opts, 1, true, Some(zero)).unwrap_err(),
+        SolveError::NoFeasibleMapping
+    );
+    // Whereas the *valid* bound — even though it ties the optimum exactly —
+    // leaves the result bit-identical.
+    let seeded = solve_configured(shape, &arch, opts, 1, true, Some(valid)).unwrap();
+    assert_eq!(seeded.mapping, honest.mapping);
+    assert_eq!(seeded.energy.normalized.to_bits(), honest.energy.normalized.to_bits());
+}
+
+/// End-to-end metamorphic check through the mapping service: a batch of
+/// related shapes answered by a seeding service is bit-identical (mapping
+/// and energy) to the same batch on a seeding-off service, per-key node
+/// counts never grow, and the metrics overlays stay consistent.
+#[test]
+fn service_batch_with_seeding_matches_unseeded_service_bit_for_bit() {
+    let arch = Accelerator::custom("svc-seed", 1 << 16, 16, 64);
+    // Power-of-two ladder on one arch: later shapes accept earlier
+    // winners as donors (divisibility holds up the ladder).
+    let shapes = [
+        GemmShape::new(16, 16, 16),
+        GemmShape::new(32, 16, 16),
+        GemmShape::new(32, 32, 16),
+        GemmShape::new(32, 32, 32),
+        GemmShape::new(64, 32, 32),
+        GemmShape::new(64, 64, 32),
+        GemmShape::new(64, 64, 64),
+        GemmShape::new(128, 64, 64),
+    ];
+    let workers = test_workers();
+    let on = MappingService::default().with_workers(workers).with_seed_bounds(true).spawn();
+    let off = MappingService::default().with_workers(workers).with_seed_bounds(false).spawn();
+    let res_on: Vec<_> = on
+        .submit_batch(&arch, &shapes)
+        .into_iter()
+        .map(|p| p.wait().expect("feasible"))
+        .collect();
+    let res_off: Vec<_> = off
+        .submit_batch(&arch, &shapes)
+        .into_iter()
+        .map(|p| p.wait().expect("feasible"))
+        .collect();
+    for ((s, a), b) in shapes.iter().zip(&res_on).zip(&res_off) {
+        assert_eq!(a.mapping, b.mapping, "{s}: mapping");
+        assert_eq!(
+            a.energy.normalized.to_bits(),
+            b.energy.normalized.to_bits(),
+            "{s}: energy"
+        );
+        assert!(
+            a.certificate.nodes <= b.certificate.nodes,
+            "{s}: seeded nodes grew ({} > {})",
+            a.certificate.nodes,
+            b.certificate.nodes
+        );
+        assert!(a.certificate.proved_optimal, "{s}: proved");
+    }
+    // Overlay consistency (exact counts depend on batch-window timing).
+    let m_on = on.metrics();
+    let (req, solves, hits, coalesced, errs) = m_on.snapshot();
+    assert_eq!(req, hits + coalesced + solves + errs, "accounting must sum");
+    assert!(m_on.seeded_solves() <= solves + errs, "seeded overlay exceeds solves");
+    assert!(m_on.seed_accepted() >= m_on.seeded_solves(), "every seed needs a donor");
+    assert_eq!(off.metrics().seeded_solves(), 0);
+    assert_eq!(off.metrics().seed_accepted() + off.metrics().seed_rejected(), 0);
+    on.shutdown();
+    off.shutdown();
+}
+
+/// Cross-process donor path: a warm store populated by one service run
+/// seeds a *different* fingerprint (another shape, same arch) in a fresh
+/// service — and the answer is still bit-identical to an unseeded solve.
+#[test]
+fn warm_store_donors_seed_new_shapes_across_processes() {
+    let dir = std::env::temp_dir().join(format!("goma_seed_xproc_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let arch = Accelerator::custom("xproc", 1 << 16, 16, 64);
+    let small = GemmShape::new(32, 32, 32);
+    let big = GemmShape::new(64, 64, 64);
+
+    // "Process" 1 solves the small shape and flushes the store.
+    let h1 = MappingService::default().with_seed_bounds(true).with_cache_dir(&dir).spawn();
+    let _ = h1.map(small, arch.clone()).unwrap();
+    h1.shutdown();
+
+    // "Process" 2: the big shape misses the cache (different fingerprint)
+    // but is seeded by the persisted small-shape mapping.
+    let h2 = MappingService::default().with_seed_bounds(true).with_cache_dir(&dir).spawn();
+    let seeded = h2.map(big, arch.clone()).unwrap();
+    assert_eq!(h2.metrics().seeded_solves(), 1, "warm donor must seed the new shape");
+    assert!(h2.metrics().seed_accepted() >= 1);
+    h2.shutdown();
+
+    // Ground truth: the unseeded service agrees bit for bit.
+    let cold = MappingService::default().with_seed_bounds(false).spawn();
+    let plain = cold.map(big, arch).unwrap();
+    assert_eq!(seeded.mapping, plain.mapping);
+    assert_eq!(seeded.energy.normalized.to_bits(), plain.energy.normalized.to_bits());
+    assert!(seeded.certificate.nodes <= plain.certificate.nodes);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -139,8 +139,8 @@ fn property_pruning_never_expands_more_nodes_or_moves_the_optimum() {
     for i in 0..8 {
         let shape = rand_shape(&mut rng);
         let arch = rand_arch(&mut rng, 200 + i);
-        let pruned = solve_configured(shape, &arch, opts, 1, true);
-        let raw = solve_configured(shape, &arch, opts, 1, false);
+        let pruned = solve_configured(shape, &arch, opts, 1, true, None);
+        let raw = solve_configured(shape, &arch, opts, 1, false, None);
         match (pruned, raw) {
             (Ok(p), Ok(r)) => {
                 let (po, ro) = (p.energy.normalized, r.energy.normalized);

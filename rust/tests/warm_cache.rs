@@ -116,22 +116,94 @@ fn infeasible_outcomes_persist_as_negative_entries() {
 #[test]
 fn version_mismatch_is_rejected_wholesale() {
     let dir = tmp_dir("version");
-    // A v0 store (or any foreign file) must be ignored, not misparsed.
-    std::fs::write(
-        dir.join(WARM_CACHE_FILE),
+    // Pre-v3 stores (and any foreign file) must be ignored, not misparsed —
+    // the v2 case is the live migration path of the v3 format bump.
+    for old in [
         "# goma-warm-cache v0\n00aa\terr\tinfeasible\n",
-    )
-    .unwrap();
-    let h = spawn_with(&dir);
-    let _ = solve_all(&h);
-    let metrics = h.metrics();
-    let (_, solves, ..) = metrics.snapshot();
-    assert_eq!(solves, shapes().len() as u64, "must start cold on mismatch");
-    assert_eq!(metrics.warm_hits(), 0);
-    h.shutdown();
+        "# goma-warm-cache v2\n00aa\terr\tinfeasible\n",
+    ] {
+        std::fs::write(dir.join(WARM_CACHE_FILE), old).unwrap();
+        let h = spawn_with(&dir);
+        let _ = solve_all(&h);
+        let metrics = h.metrics();
+        let (_, solves, ..) = metrics.snapshot();
+        assert_eq!(solves, shapes().len() as u64, "must start cold on mismatch: {old:?}");
+        assert_eq!(metrics.warm_hits(), 0, "{old:?}");
+        h.shutdown();
+    }
     // The flush self-heals the file to the current version.
     let text = std::fs::read_to_string(dir.join(WARM_CACHE_FILE)).unwrap();
     assert_eq!(text.lines().next(), Some(WARM_CACHE_HEADER));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_mapping_fields_skip_the_line_without_poisoning_neighbors() {
+    let dir = tmp_dir("corruptmap");
+    let h1 = spawn_with(&dir);
+    let _ = solve_all(&h1);
+    h1.shutdown();
+
+    // Corrupt one *mapping* field (a tile length) of the second entry; the
+    // other entries must load untouched and the bad line must re-solve.
+    let path = dir.join(WARM_CACHE_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut lines: Vec<String> = text.lines().map(String::from).collect();
+    assert_eq!(lines.len(), 1 + shapes().len());
+    let mut fields: Vec<String> = lines[2].split('\t').map(String::from).collect();
+    assert_eq!(fields[1], "ok", "test expects a positive entry");
+    fields[3] = "notatile".to_string();
+    lines[2] = fields.join("\t");
+    std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+
+    let h2 = spawn_with(&dir);
+    let _ = solve_all(&h2);
+    let metrics = h2.metrics();
+    let (_, solves, ..) = metrics.snapshot();
+    assert_eq!(
+        metrics.warm_hits(),
+        shapes().len() as u64 - 1,
+        "intact neighbors must survive a corrupt mapping field"
+    );
+    assert_eq!(solves, 1, "exactly the corrupted key re-solves");
+    h2.shutdown();
+    // The flush heals the store back to the full entry set.
+    let healed = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(healed.lines().count(), 1 + shapes().len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn warm_start_with_seeding_on_yields_zero_solves() {
+    // Seeding must never turn a warm hit into work: a populated dir
+    // answers a repeated workload with zero solves whether or not the
+    // second service plans seeds.
+    let dir = tmp_dir("seedwarm");
+    let h1 = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(true)
+        .with_cache_dir(&dir)
+        .spawn();
+    let first = solve_all(&h1);
+    h1.shutdown();
+
+    let h2 = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(true)
+        .with_cache_dir(&dir)
+        .spawn();
+    let second = solve_all(&h2);
+    let metrics = h2.metrics();
+    let (_, solves, hits, ..) = metrics.snapshot();
+    assert_eq!(solves, 0, "a populated warm cache must answer without solving");
+    assert_eq!(hits, shapes().len() as u64);
+    assert_eq!(metrics.seeded_solves(), 0, "no solves, so nothing to seed");
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.mapping, b.mapping);
+        assert_eq!(a.energy.normalized.to_bits(), b.energy.normalized.to_bits());
+        assert_eq!(a.certificate.nodes, b.certificate.nodes);
+    }
+    h2.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }
 
