@@ -5,7 +5,11 @@
 //! the single-worker serial service; runs a **seeded-vs-unseeded A/B leg**
 //! at batch sizes 8 and 24 (asserting bit-identical answers, per-key node
 //! counts that never grow, and recording the bound acceptance rate into
-//! `BENCH_seeding.json`); then exercises the persistent warm-start path on
+//! `BENCH_seeding.json`); runs a **cold-vs-shared-candidate-store leg**
+//! (DESIGN.md §8: the same batch solved with per-solve candidate lists
+//! vs. one `SharedCandidateStore` across the batch — bit-identical
+//! answers asserted, speedup and store hit counts recorded into the same
+//! JSON); then exercises the persistent warm-start path on
 //! the `goma serve --workload 1` key set (identical fingerprints, so a
 //! cache dir populated by that CLI in another process — CI carries one
 //! across jobs — genuinely warms the first spawn): the second spawn must
@@ -19,7 +23,9 @@
 use goma::arch::Accelerator;
 use goma::coordinator::MappingService;
 use goma::mapping::GemmShape;
-use goma::solver::SolveResult;
+use goma::solver::{
+    solve_shared, solve_with_threads, SharedCandidateStore, SolveResult, SolverOptions,
+};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -123,6 +129,59 @@ fn seeding_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
     )
 }
 
+/// The cold-vs-shared-candidate-store leg (DESIGN.md §8): solve the batch
+/// once with per-solve candidate lists (the pre-store behavior) and once
+/// against one shared store, assert every answer is bit-identical down to
+/// the node counters, and record the speedup + store telemetry.
+fn candidate_store_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
+    let opts = SolverOptions::default();
+    let t = Instant::now();
+    let cold: Vec<SolveResult> = shapes
+        .iter()
+        .map(|&s| solve_with_threads(s, arch, opts, 1).expect("bench instances are feasible"))
+        .collect();
+    let cold_s = t.elapsed().as_secs_f64();
+    let store = Arc::new(SharedCandidateStore::new());
+    let t = Instant::now();
+    let shared: Vec<SolveResult> = shapes
+        .iter()
+        .map(|&s| {
+            solve_shared(s, arch, opts, 1, None, &store).expect("bench instances are feasible")
+        })
+        .collect();
+    let shared_s = t.elapsed().as_secs_f64();
+    for ((shape, a), b) in shapes.iter().zip(&cold).zip(&shared) {
+        assert_eq!(a.mapping, b.mapping, "the store changed the mapping for {shape}");
+        assert_eq!(
+            a.energy.normalized.to_bits(),
+            b.energy.normalized.to_bits(),
+            "the store changed the energy for {shape}"
+        );
+        assert_eq!(
+            a.certificate.nodes, b.certificate.nodes,
+            "the store changed the node counter for {shape}"
+        );
+    }
+    println!(
+        "candidate store (batch {}): cold {cold_s:.4}s -> shared {shared_s:.4}s \
+         (x{:.2}; {} lists held, {} hits / {} misses)",
+        shapes.len(),
+        cold_s / shared_s.max(1e-12),
+        store.lists_held(),
+        store.hits(),
+        store.misses()
+    );
+    format!(
+        "{{\"batch\": {}, \"cold_s\": {cold_s}, \"shared_s\": {shared_s}, \
+         \"speedup\": {}, \"lists_held\": {}, \"store_hits\": {}, \"store_misses\": {}}}",
+        shapes.len(),
+        cold_s / shared_s.max(1e-12),
+        store.lists_held(),
+        store.hits(),
+        store.misses()
+    )
+}
+
 fn main() {
     let smoke = std::env::var("GOMA_SMOKE").is_ok();
     let arch = Accelerator::custom("bench-pool", 1 << 17, 64, 64);
@@ -167,11 +226,19 @@ fn main() {
     for &n in ab_sizes {
         ab_records.push(seeding_leg(&arch, &full[..n]));
     }
+
+    // Cold-vs-shared-candidate-store A/B: the same keys solved with
+    // per-solve candidate lists vs one cross-solve store (bit-identical
+    // answers asserted inside).
+    let store_n = if smoke { 8 } else { 24 };
+    let store_record = candidate_store_leg(&arch, &full[..store_n]);
+
     let json = format!(
         "{{\n  \"bench\": \"coordinator_seeding\",\n  \"smoke\": {},\n  \
-         \"legs\": [\n    {}\n  ]\n}}\n",
+         \"legs\": [\n    {}\n  ],\n  \"candidate_store\": {}\n}}\n",
         smoke,
-        ab_records.join(",\n    ")
+        ab_records.join(",\n    "),
+        store_record
     );
     // Anchored to the workspace root (CARGO_MANIFEST_DIR is `rust/`), like
     // BENCH_solver.json: cargo runs bench binaries with the package dir as

@@ -2,11 +2,19 @@
 //!
 //! Times `solver::solve` across every (workload GEMM × matching template)
 //! pair at engine thread counts 1 and 4, plus a dominance-pruning-off
-//! baseline leg and the O(1) energy evaluation itself, printing latency
-//! distributions. Emits `BENCH_solver.json` (geomean solve time, expanded
-//! nodes, combos pruned at threads 1/4, dominance savings) so the perf
-//! trajectory is recorded run over run; this is the harness used for the
+//! baseline leg, a **canonical-order baseline leg**
+//! (`solve_configured(…, bound_order = false, …)` — the A/B hook for the
+//! bound-ordered schedule of DESIGN.md §8) and the O(1) energy evaluation
+//! itself, printing latency distributions. Emits `BENCH_solver.json`
+//! (geomean solve time, expanded nodes, combos pruned, unit-skip rate,
+//! canonical-vs-bound-ordered node savings) so the perf trajectory is
+//! recorded run over run; this is the harness used for the
 //! EXPERIMENTS.md §Perf before/after log.
+//!
+//! **Perf-rot guard**: the run *asserts* that the bound-ordered engine
+//! expands no more nodes and scans no more units than the canonical-order
+//! baseline over the whole pair set — CI's `GOMA_SMOKE=1` run turns a
+//! bound-ordering regression into a red build.
 //!
 //! Run: `cargo bench --bench solver_hotpath`
 
@@ -28,23 +36,36 @@ struct Leg {
     nodes: u64,
     combos_total: u64,
     combos_pruned: u64,
+    units_total: u64,
+    units_skipped: u64,
 }
 
 fn time_solves(
     pairs: &[(GemmShape, goma::arch::Accelerator)],
     threads: usize,
     dominance: bool,
+    bound_order: bool,
 ) -> Leg {
     let mut leg = Leg::default();
     for (shape, arch) in pairs {
         let t = Instant::now();
-        let r = solve_configured(*shape, arch, SolverOptions::default(), threads, dominance, None);
+        let r = solve_configured(
+            *shape,
+            arch,
+            SolverOptions::default(),
+            threads,
+            dominance,
+            bound_order,
+            None,
+        );
         let dt = t.elapsed().as_secs_f64();
         if let Ok(r) = r {
             leg.times.push(dt);
             leg.nodes += r.certificate.nodes;
             leg.combos_total += r.certificate.combos_total;
             leg.combos_pruned += r.certificate.combos_pruned;
+            leg.units_total += r.certificate.units_total;
+            leg.units_skipped += r.certificate.units_skipped;
         }
     }
     leg
@@ -64,14 +85,17 @@ fn report(label: &str, xs: &[f64]) {
 fn json_leg(leg: &Leg) -> String {
     format!(
         "{{\"n\": {}, \"geomean_s\": {}, \"p50_s\": {}, \"p95_s\": {}, \"nodes\": {}, \
-         \"combos_total\": {}, \"combos_pruned\": {}}}",
+         \"combos_total\": {}, \"combos_pruned\": {}, \"units_total\": {}, \
+         \"units_skipped\": {}}}",
         leg.times.len(),
         geomean(&leg.times),
         percentile(&leg.times, 50.0),
         percentile(&leg.times, 95.0),
         leg.nodes,
         leg.combos_total,
-        leg.combos_pruned
+        leg.combos_pruned,
+        leg.units_total,
+        leg.units_skipped
     )
 }
 
@@ -107,15 +131,20 @@ fn main() {
         pairs.truncate(edge_count + 2);
     }
 
-    // The measured legs: engine at 1 and 4 threads (dominance-pruned),
-    // the unpruned serial baseline the node savings are measured against,
-    // and — when `GOMA_SOLVE_THREADS` sets a different default — a leg at
-    // that default, so CI's env-varied smoke runs exercise distinct work.
-    let t1 = time_solves(&pairs, 1, true);
-    let t4 = time_solves(&pairs, 4, true);
-    let unpruned = time_solves(&pairs, 1, false);
+    // The measured legs: engine at 1 and 4 threads (dominance-pruned,
+    // bound-ordered — the production configuration), the canonical-order
+    // baseline the bound-ordered node/unit savings are measured against,
+    // the unpruned serial baseline the dominance savings are measured
+    // against, and — when `GOMA_SOLVE_THREADS` sets a different default —
+    // a leg at that default, so CI's env-varied smoke runs exercise
+    // distinct work.
+    let t1 = time_solves(&pairs, 1, true, true);
+    let t4 = time_solves(&pairs, 4, true, true);
+    let canonical = time_solves(&pairs, 1, true, false);
+    let unpruned = time_solves(&pairs, 1, false, true);
     report(&format!("solves ({} pairs), 1 thread", pairs.len()), &t1.times);
     report(&format!("solves ({} pairs), 4 threads", pairs.len()), &t4.times);
+    report("canonical-order baseline", &canonical.times);
     report("unpruned baseline, 1 thread", &unpruned.times);
     // The env-default leg, measured fresh only when it differs from the
     // hard-coded 1/4-thread legs (re-timing an identical configuration
@@ -124,7 +153,7 @@ fn main() {
     let tdflt = match dflt {
         1 => t1.clone(),
         4 => t4.clone(),
-        _ => time_solves(&pairs, dflt, true),
+        _ => time_solves(&pairs, dflt, true, true),
     };
     report(&format!("env default leg ({dflt} thread(s))"), &tdflt.times);
     assert_eq!(tdflt.nodes, t1.nodes, "default-leg counters must be thread-invariant");
@@ -133,6 +162,32 @@ fn main() {
     // certificate counters must not depend on the thread count.
     assert_eq!(t1.nodes, t4.nodes, "node counters must be thread-invariant");
     assert_eq!(t1.combos_pruned, t4.combos_pruned, "combo counters must be thread-invariant");
+    assert_eq!(t1.units_skipped, t4.units_skipped, "unit counters must be thread-invariant");
+
+    // Perf-rot guard (DESIGN.md §8): over the whole pair set, the
+    // bound-ordered schedule must expand no more nodes and scan no more
+    // units than the canonical-order baseline. CI runs this in smoke mode,
+    // so a schedule regression fails the build.
+    assert!(
+        t1.nodes <= canonical.nodes,
+        "bound-ordered engine expanded more nodes than the canonical baseline ({} > {})",
+        t1.nodes,
+        canonical.nodes
+    );
+    assert_eq!(canonical.units_skipped, 0, "the canonical baseline must never unit-skip");
+    assert!(
+        t1.units_total - t1.units_skipped <= canonical.units_total,
+        "bound-ordered engine scanned more units than the canonical baseline"
+    );
+    println!(
+        "bound order: {} -> {} nodes ({:.1}% saved), {} / {} units skipped whole ({:.1}%)",
+        canonical.nodes,
+        t1.nodes,
+        100.0 * (canonical.nodes.saturating_sub(t1.nodes)) as f64 / canonical.nodes.max(1) as f64,
+        t1.units_skipped,
+        t1.units_total,
+        100.0 * t1.units_skipped as f64 / t1.units_total.max(1) as f64
+    );
     println!(
         "dominance pruning: {} -> {} nodes ({:.1}% saved), {} / {} combos pruned whole",
         unpruned.nodes,
@@ -147,21 +202,29 @@ fn main() {
     );
 
     // Record the trajectory: geomean solve time, nodes, combos pruned at
-    // threads 1/4, and the dominance savings.
+    // threads 1/4, the dominance savings, and the canonical-vs-bound-order
+    // savings (node delta + unit-skip rate).
     let json = format!(
         "{{\n  \"bench\": \"solver_hotpath\",\n  \"smoke\": {},\n  \"pairs\": {},\n  \
-         \"threads_1\": {},\n  \"threads_4\": {},\n  \"unpruned_threads_1\": {},\n  \
+         \"threads_1\": {},\n  \"threads_4\": {},\n  \"canonical_order\": {},\n  \
+         \"unpruned_threads_1\": {},\n  \
          \"default_threads\": {},\n  \"threads_default\": {},\n  \
-         \"speedup_threads_4\": {},\n  \"nodes_saved_by_dominance\": {}\n}}\n",
+         \"speedup_threads_4\": {},\n  \"speedup_vs_canonical\": {},\n  \
+         \"nodes_saved_by_dominance\": {},\n  \"nodes_saved_by_bound_order\": {},\n  \
+         \"unit_skip_rate\": {}\n}}\n",
         smoke,
         pairs.len(),
         json_leg(&t1),
         json_leg(&t4),
+        json_leg(&canonical),
         json_leg(&unpruned),
         dflt,
         json_leg(&tdflt),
         geomean(&t1.times) / geomean(&t4.times).max(1e-12),
-        unpruned.nodes.saturating_sub(t1.nodes)
+        geomean(&canonical.times) / geomean(&t1.times).max(1e-12),
+        unpruned.nodes.saturating_sub(t1.nodes),
+        canonical.nodes.saturating_sub(t1.nodes),
+        t1.units_skipped as f64 / t1.units_total.max(1) as f64
     );
     // Anchored to the workspace root (CARGO_MANIFEST_DIR is `rust/`):
     // cargo runs bench binaries with the *package* dir as cwd, and CI
@@ -176,7 +239,7 @@ fn main() {
     // O(1) objective evaluation latency (the paper's constant-time claim).
     let shape = GemmShape::mnk(131072, 28672, 8192);
     let arch = goma::arch::a100_like();
-    let m = solve_configured(shape, &arch, SolverOptions::default(), 1, true, None)
+    let m = solve_configured(shape, &arch, SolverOptions::default(), 1, true, true, None)
         .unwrap()
         .mapping;
     let n = if smoke { 20_000 } else { 200_000 };

@@ -73,6 +73,38 @@ impl Accelerator {
         }
     }
 
+    /// Stable 64-bit FNV-1a fingerprint of the **full parameter set** —
+    /// capacities, PE count, node, DRAM kind, clock, bandwidths, residency
+    /// preset, and every ERT entry — deliberately *not* `name`, which two
+    /// different [`Accelerator::custom`] instances can share. Two
+    /// accelerators with equal fingerprints produce bit-identical energy
+    /// models, so this is the key under which derived per-arch artifacts
+    /// (solver candidate lists, the service's donor registry and solve
+    /// fingerprints) may be shared. Run-to-run stable on purpose
+    /// (`HashMap`'s SipHash is randomly keyed per process).
+    pub fn param_fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.u64(self.sram_words);
+        h.u64(self.num_pe);
+        h.u64(self.regfile_words);
+        h.u32(self.tech_nm);
+        h.u8(self.dram as u8);
+        h.f64(self.clock_ghz);
+        h.f64(self.dram_bw_words_per_cycle);
+        h.f64(self.sram_bw_words_per_cycle);
+        h.u8(self.preset_rf_residency.bits());
+        h.f64(self.ert.dram_read);
+        h.f64(self.ert.dram_write);
+        h.f64(self.ert.sram_read);
+        h.f64(self.ert.sram_write);
+        h.f64(self.ert.rf_read);
+        h.f64(self.ert.rf_write);
+        h.f64(self.ert.macc);
+        h.f64(self.ert.sram_leak);
+        h.f64(self.ert.rf_leak);
+        h.finish()
+    }
+
     /// Peak MACs per cycle (all PEs active).
     pub fn peak_macs_per_cycle(&self) -> u64 {
         self.num_pe
@@ -125,6 +157,26 @@ mod tests {
         let names: Vec<&str> = ts.iter().map(|a| a.name.as_str()).collect();
         assert!(names.contains(&"eyeriss-like"));
         assert!(names.contains(&"tpu-v1-like"));
+    }
+
+    #[test]
+    fn param_fingerprint_covers_params_not_name() {
+        let a = Accelerator::custom("alpha", 4096, 8, 32);
+        let same_params = Accelerator::custom("beta", 4096, 8, 32);
+        assert_eq!(
+            a.param_fingerprint(),
+            same_params.param_fingerprint(),
+            "the name must not enter the fingerprint"
+        );
+        let bigger = Accelerator::custom("alpha", 8192, 8, 32);
+        assert_ne!(a.param_fingerprint(), bigger.param_fingerprint());
+        let mut tweaked = a.clone();
+        tweaked.ert.dram_read *= 1.5;
+        assert_ne!(a.param_fingerprint(), tweaked.param_fingerprint(), "ERT must be covered");
+        // Distinct templates must not collide with each other.
+        let fps: Vec<u64> = all_templates().iter().map(|t| t.param_fingerprint()).collect();
+        let distinct: std::collections::HashSet<u64> = fps.iter().copied().collect();
+        assert_eq!(distinct.len(), fps.len());
     }
 
     #[test]

@@ -124,13 +124,16 @@ fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         r.energy.total_pj / 1e6
     );
     println!(
-        "cert     : ub={:.6} lb={:.6} gap={:.1}% nodes={} ({} combos, {} pruned) in {:?}",
+        "cert     : ub={:.6} lb={:.6} gap={:.1}% nodes={} ({} combos, {} pruned; \
+         {}/{} units skipped) in {:?}",
         r.certificate.upper_bound,
         r.certificate.lower_bound,
         r.certificate.gap * 100.0,
         r.certificate.nodes,
         r.certificate.combos_total,
         r.certificate.combos_pruned,
+        r.certificate.units_skipped,
+        r.certificate.units_total,
         r.solve_time
     );
     println!("verified : {}", r.certificate.verify(&r.mapping, shape, &acc));

@@ -24,6 +24,14 @@
 //! which is safe because the engine's result is bit-identical for every
 //! thread count, so the cache never observes the split.
 //!
+//! **Cross-solve candidate memoization** (DESIGN.md §8). All of a
+//! window's solves draw their per-axis candidate lists from one
+//! `Arc`-shared [`crate::solver::SharedCandidateStore`] keyed by the
+//! accelerator's parameter fingerprint, so a batch of related shapes on
+//! one arch builds each list once in total rather than once per solve —
+//! invisible in results (store hits are bit-identical to local builds)
+//! and measured by `coordinator_throughput`'s cold-vs-shared leg.
+//!
 //! The cache is hash-sharded by fingerprint (`fp % shards`, one shard per
 //! worker) with per-shard hit metrics; with a `--cache-dir`, shards are
 //! seeded from the on-disk warm store ([`super::warm`]) at spawn and merged
@@ -49,7 +57,10 @@
 use super::warm::{WarmEntry, WarmOutcome, WarmStore};
 use crate::arch::Accelerator;
 use crate::mapping::{GemmShape, Mapping};
-use crate::solver::{plan_seed, solve_seeded, SeedBound, SolveError, SolveResult, SolverOptions};
+use crate::solver::{
+    plan_seed, solve_shared, SeedBound, SharedCandidateStore, SolveError, SolveResult,
+    SolverOptions,
+};
 use crate::util::parallel::ordered_map;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -60,47 +71,17 @@ use std::thread::JoinHandle;
 
 /// Fingerprint/on-disk format version. Mixed into every fingerprint and
 /// into the warm-store header: bumping it cold-starts every cache.
-/// v3: warm-store entries now carry the arch/options fingerprint (donor
-/// grouping for cross-shape seeding) and certificate effort counters
-/// became seed-dependent — v2 files are cold-started wholesale as before.
-pub const CACHE_FORMAT_VERSION: u32 = 3;
+/// v4: the bound-ordered engine (DESIGN.md §8) changed every certificate
+/// effort counter (`nodes`/`combos_*` record the reordered scan's work)
+/// and added the unit-level counters (`units_total`/`units_skipped`) to
+/// the persisted certificate — v3 files are cold-started wholesale, as
+/// every prior version was.
+pub const CACHE_FORMAT_VERSION: u32 = 4;
 
 /// Donor mappings kept per architecture for seed planning. Bounds the
 /// O(donors) re-cost work per miss; once full, the oldest entry is
 /// replaced ring-buffer style (see [`DonorPool`]).
 const MAX_DONORS_PER_ARCH: usize = 128;
-
-/// Stable 64-bit FNV-1a over a canonical little-endian byte encoding.
-/// `HashMap`'s SipHash is randomly keyed per process, so the persistent
-/// store needs its own run-to-run-stable hash.
-struct Fnv(u64);
-
-const FNV_OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
-
-impl Fnv {
-    fn bytes(&mut self, bs: &[u8]) {
-        for &b in bs {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x0100_0000_01b3);
-        }
-    }
-
-    fn u8(&mut self, v: u8) {
-        self.bytes(&[v]);
-    }
-
-    fn u32(&mut self, v: u32) {
-        self.bytes(&v.to_le_bytes());
-    }
-
-    fn u64(&mut self, v: u64) {
-        self.bytes(&v.to_le_bytes());
-    }
-
-    fn f64(&mut self, v: f64) {
-        self.u64(v.to_bits());
-    }
-}
 
 /// The shape-independent half of the solve key: a stable fingerprint of
 /// the **full** architecture parameter set (capacities, PE count, node,
@@ -111,26 +92,13 @@ impl Fnv {
 /// shape is a seed candidate exactly for other shapes under the same
 /// arch/options fingerprint.
 pub fn arch_options_fingerprint(arch: &Accelerator, opts: SolverOptions) -> u64 {
-    let mut h = Fnv(FNV_OFFSET_BASIS);
+    let mut h = crate::util::Fnv64::new();
     h.u32(CACHE_FORMAT_VERSION);
-    h.u64(arch.sram_words);
-    h.u64(arch.num_pe);
-    h.u64(arch.regfile_words);
-    h.u32(arch.tech_nm);
-    h.u8(arch.dram as u8);
-    h.f64(arch.clock_ghz);
-    h.f64(arch.dram_bw_words_per_cycle);
-    h.f64(arch.sram_bw_words_per_cycle);
-    h.u8(arch.preset_rf_residency.bits());
-    h.f64(arch.ert.dram_read);
-    h.f64(arch.ert.dram_write);
-    h.f64(arch.ert.sram_read);
-    h.f64(arch.ert.sram_write);
-    h.f64(arch.ert.rf_read);
-    h.f64(arch.ert.rf_write);
-    h.f64(arch.ert.macc);
-    h.f64(arch.ert.sram_leak);
-    h.f64(arch.ert.rf_leak);
+    // The architecture half is the accelerator's own parameter
+    // fingerprint — the same value that keys the solver's cross-solve
+    // candidate store, so "may share candidate lists" and "may share
+    // donors/cache entries on this arch" are one notion of arch identity.
+    h.u64(arch.param_fingerprint());
     h.u8(opts.exact_pe as u8);
     match opts.time_limit {
         None => h.u8(0),
@@ -145,7 +113,7 @@ pub fn arch_options_fingerprint(arch: &Accelerator, opts: SolverOptions) -> u64 
     // unseeded one (both property-tested) — so services with different
     // thread budgets or seeding switches must share cache entries; hashing
     // either knob would split the warm store by deployment configuration.
-    h.0
+    h.finish()
 }
 
 /// The cache/coalescing/persistence key: [`arch_options_fingerprint`] with
@@ -159,11 +127,11 @@ pub fn solve_fingerprint(shape: GemmShape, arch: &Accelerator, opts: SolverOptio
 /// arch half for donor grouping) derives the key without rehashing the
 /// whole architecture.
 pub fn shape_fingerprint(arch_fp: u64, shape: GemmShape) -> u64 {
-    let mut h = Fnv(arch_fp);
+    let mut h = crate::util::Fnv64::seeded(arch_fp);
     h.u64(shape.x);
     h.u64(shape.y);
     h.u64(shape.z);
-    h.0
+    h.finish()
 }
 
 struct Request {
@@ -547,6 +515,13 @@ fn service_loop(
 ) {
     let nshards = shards.len() as u64;
     let seed_on = options.resolved_seed_bounds();
+    // The cross-solve candidate store (DESIGN.md §8): per-axis candidate
+    // lists depend only on the architecture's parameters, so one
+    // `Arc`-shared store lets every pooled solve — across waves, batch
+    // windows, and worker threads — fetch each list instead of rebuilding
+    // it. Store hits are bit-identical to local builds, so the cache and
+    // warm store never observe the sharing.
+    let candidates = Arc::new(SharedCandidateStore::new());
     // The donor registry: per arch/options fingerprint, winning mappings
     // usable as cross-shape warm bounds. Seeded from the warm store (other
     // fingerprints, same arch — the cross-process donor path) and fed by
@@ -684,7 +659,7 @@ fn service_loop(
             let solved = ordered_map(&inputs, workers, |i, inp| {
                 let per_solve = (share + usize::from(i < extra)).max(base_threads);
                 let result: WarmOutcome =
-                    match solve_seeded(inp.0, &inp.1, options, per_solve, inp.2) {
+                    match solve_shared(inp.0, &inp.1, options, per_solve, inp.2, &candidates) {
                         Ok(r) => {
                             m.solves.fetch_add(1, Ordering::Relaxed);
                             Ok(Arc::new(r))

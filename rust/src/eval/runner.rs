@@ -274,6 +274,26 @@ mod tests {
     }
 
     #[test]
+    fn shared_candidate_store_case_is_bit_identical_to_plain() {
+        // The cross-solve candidate store (DESIGN.md §8) must be invisible
+        // in every recorded number: same mappings, same Eq. 35 aggregates,
+        // same node counters — while the second GEMM onward actually hits
+        // the store.
+        let case = tiny_case();
+        let serial = run_case(&GomaMapper::default(), &case);
+        let store = std::sync::Arc::new(crate::solver::SharedCandidateStore::new());
+        let mapper = GomaMapper::default().with_shared_candidates(store.clone());
+        let shared = run_case_jobs(&mapper, &case, 4);
+        assert_eq!(shared.edp_case.to_bits(), serial.edp_case.to_bits());
+        assert_eq!(shared.energy_case.to_bits(), serial.energy_case.to_bits());
+        for (p, s) in shared.gemms.iter().zip(serial.gemms.iter()) {
+            assert_eq!(p.mapping, s.mapping);
+            assert_eq!(p.evaluations, s.evaluations, "node counters must not move");
+        }
+        assert!(store.hits() > 0, "repeated shapes/archs must hit the store");
+    }
+
+    #[test]
     fn case_aggregates_invariant_to_solve_threads() {
         // The inner-parallelism knob must be invisible to every recorded
         // number except wall-clock runtime: mappings and Eq. 35 aggregates

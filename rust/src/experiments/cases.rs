@@ -44,9 +44,30 @@ pub fn mappers_for_threads(
     seed: u64,
     solve_threads: usize,
 ) -> Vec<Box<dyn Mapper>> {
+    mappers_for_shared(profile, seed, solve_threads, None)
+}
+
+/// [`mappers_for_threads`] with an optional cross-solve candidate store
+/// attached to the GOMA entry (DESIGN.md §8). The sweep hands one store to
+/// every roster so the grid's GOMA solves — 24 cases × 8 GEMMs, many on
+/// the same accelerator — build each per-axis candidate list once in
+/// total. Bit-identical either way; baselines are unaffected.
+pub fn mappers_for_shared(
+    profile: Profile,
+    seed: u64,
+    solve_threads: usize,
+    store: Option<&std::sync::Arc<crate::solver::SharedCandidateStore>>,
+) -> Vec<Box<dyn Mapper>> {
+    let goma = || -> Box<dyn Mapper> {
+        let m = GomaMapper::with_solve_threads(solve_threads);
+        match store {
+            Some(s) => Box::new(m.with_shared_candidates(s.clone())),
+            None => Box::new(m),
+        }
+    };
     match profile {
         Profile::Paper => vec![
-            Box::new(GomaMapper::with_solve_threads(solve_threads)),
+            goma(),
             Box::new(Cosa {
                 max_nodes: 20_000_000,
                 time_limit: Duration::from_secs(10),
@@ -57,7 +78,7 @@ pub fn mappers_for_threads(
             Box::new(TimeloopHybrid::seeded(seed)),
         ],
         Profile::Fast => vec![
-            Box::new(GomaMapper::with_solve_threads(solve_threads)),
+            goma(),
             Box::new(Cosa {
                 max_nodes: 2_000_000,
                 time_limit: Duration::from_millis(1500),
@@ -160,11 +181,17 @@ pub fn run_all_jobs_threads(
     solve_threads: usize,
 ) -> Vec<CaseRecord> {
     let cases = all_cases();
+    // One cross-solve candidate store for the whole grid (DESIGN.md §8):
+    // the 24 cases reuse a handful of accelerators, so GOMA's per-axis
+    // candidate lists are built once per (arch, list key) across the
+    // entire 24 × 6 × 8 sweep instead of once per solve. Store hits are
+    // bit-identical to local builds, so the Eq. 35 aggregates cannot move.
+    let store = std::sync::Arc::new(crate::solver::SharedCandidateStore::new());
     // One roster per case; a mapper instance is shared read-only across its
     // case's eight GEMMs.
     let rosters: Vec<Vec<Box<dyn Mapper>>> = cases
         .iter()
-        .map(|_| mappers_for_threads(profile, 0xC0FFEE, solve_threads))
+        .map(|_| mappers_for_shared(profile, 0xC0FFEE, solve_threads, Some(&store)))
         .collect();
     // The grid in serial sweep order: case-major, then mapper, then GEMM.
     let mut units: Vec<(usize, usize, usize)> = Vec::new();

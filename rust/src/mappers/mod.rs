@@ -61,6 +61,13 @@ pub trait Mapper: Send + Sync {
 #[derive(Default)]
 pub struct GomaMapper {
     pub options: crate::solver::SolverOptions,
+    /// Optional cross-solve candidate store (DESIGN.md §8): when the
+    /// mapper is used for many GEMMs on one architecture — the eval grid,
+    /// a workload sweep — sharing a store builds each per-axis candidate
+    /// list once in total instead of once per solve. Results are
+    /// bit-identical with and without it (store hits are pure-function
+    /// replays), so this is a latency knob only.
+    store: Option<std::sync::Arc<crate::solver::SharedCandidateStore>>,
 }
 
 impl GomaMapper {
@@ -74,7 +81,17 @@ impl GomaMapper {
                 solve_threads,
                 ..Default::default()
             },
+            store: None,
         }
+    }
+
+    /// Attach a cross-solve candidate store (builder style).
+    pub fn with_shared_candidates(
+        mut self,
+        store: std::sync::Arc<crate::solver::SharedCandidateStore>,
+    ) -> Self {
+        self.store = Some(store);
+        self
     }
 }
 
@@ -84,7 +101,14 @@ impl Mapper for GomaMapper {
     }
 
     fn map(&self, shape: GemmShape, arch: &Accelerator) -> Option<MapperResult> {
-        let r = crate::solver::solve(shape, arch, self.options).ok()?;
+        let threads = self.options.resolved_threads();
+        let r = match &self.store {
+            Some(store) => {
+                crate::solver::solve_shared(shape, arch, self.options, threads, None, store)
+            }
+            None => crate::solver::solve(shape, arch, self.options),
+        }
+        .ok()?;
         Some(MapperResult {
             mapping: r.mapping,
             evaluations: r.certificate.nodes,
@@ -110,6 +134,27 @@ mod tests {
     use crate::arch::Accelerator;
     use crate::mapping::validate;
     use crate::timeloop::score;
+
+    #[test]
+    fn shared_candidate_store_is_invisible_to_the_mapper() {
+        let shape = GemmShape::new(64, 96, 32);
+        let arch = Accelerator::custom("t", 32 * 1024, 16, 64);
+        let plain = GomaMapper::default().map(shape, &arch).unwrap();
+        let store = std::sync::Arc::new(crate::solver::SharedCandidateStore::new());
+        let cold = GomaMapper::default()
+            .with_shared_candidates(store.clone())
+            .map(shape, &arch)
+            .unwrap();
+        let warm = GomaMapper::default()
+            .with_shared_candidates(store.clone())
+            .map(shape, &arch)
+            .unwrap();
+        for r in [&cold, &warm] {
+            assert_eq!(r.mapping, plain.mapping);
+            assert_eq!(r.evaluations, plain.evaluations, "node counters must not move");
+        }
+        assert!(store.hits() > 0, "the second mapper run must hit the store");
+    }
 
     /// Every mapper must return a feasible mapping on a well-conditioned
     /// small instance, and none may beat the proved optimum.

@@ -17,17 +17,33 @@
 //! dominator: pruning never removes every optimal mapping, it only shrinks
 //! the lists the branch-and-bound scans.
 //!
-//! Lists depend only on `(L^(0), Ŝ, flags)` and are shared across the
-//! thousands of (α, B, Ŝ) combinations a solve visits; they are `Arc`-held
-//! so [`super::space::SearchSpace`] can build each list once and share it
-//! across the engine's worker threads — the memoization that keeps
-//! whole-space search in the milliseconds (§V-C).
+//! **Layout.** Finished lists are stored struct-of-arrays
+//! ([`CandidateList`]: `f`/`l1`/`l3` as three flat boxed slices) so the
+//! engine's hottest loops stream one homogeneous array per access pattern
+//! — the objective scan touches only `f`, the capacity checks only
+//! `l1`/`l3` — instead of striding over 24-byte structs. The per-list
+//! minima the scan's capacity prechecks need (`min_l1`, `min_l3`; `min_f`
+//! is `f[0]` by the sort) are baked in at construction, not recomputed per
+//! combo (DESIGN.md §8).
+//!
+//! **Sharing.** Lists depend only on `(L^(0), Ŝ, flags)` and the
+//! accelerator's parameters — not on the GEMM shape beyond `L^(0)`, and
+//! not on the solve. Within one solve they are memoized by
+//! [`CandidateCache`] and `Arc`-shared across the engine's worker threads;
+//! *across* solves they can be shared through a [`SharedCandidateStore`],
+//! keyed by [`crate::arch::Accelerator::param_fingerprint`], so a batch of
+//! related solves (the service's waves, the 24-case eval grid) builds each
+//! list once instead of once per solve. Store hits are bit-identical to a
+//! local build by construction — the list is a pure function of the key —
+//! so sharing is invisible in every solve result (property-tested in
+//! `rust/tests/bound_order.rs`).
 
 use crate::arch::Accelerator;
 use crate::energy::{axis_term, AxisTermInput};
 use crate::util::divisors;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// One feasible per-axis tiling decision and its objective contribution.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -38,6 +54,60 @@ pub struct AxisCandidate {
     pub l3: u64,
     /// Separable objective term `src1_d + src3_d + src4_d` (pJ/MAC).
     pub f: f64,
+}
+
+/// A finished per-axis candidate list in struct-of-arrays layout, sorted
+/// `f`-ascending (index 0 is the per-axis objective lower bound), with the
+/// capacity-precheck minima baked in at construction.
+#[derive(Debug)]
+pub struct CandidateList {
+    /// Objective terms, ascending.
+    pub f: Box<[f64]>,
+    /// SRAM tile lengths, parallel to `f`.
+    pub l1: Box<[u64]>,
+    /// Regfile tile lengths, parallel to `f`.
+    pub l3: Box<[u64]>,
+    /// `min(l1)` over the list (`u64::MAX` when empty): the axis's minimal
+    /// possible SRAM residency contribution, used by capacity prechecks.
+    pub min_l1: u64,
+    /// `min(l3)` over the list (`u64::MAX` when empty).
+    pub min_l3: u64,
+}
+
+impl CandidateList {
+    fn from_sorted(cands: &[AxisCandidate]) -> CandidateList {
+        CandidateList {
+            f: cands.iter().map(|c| c.f).collect(),
+            l1: cands.iter().map(|c| c.l1).collect(),
+            l3: cands.iter().map(|c| c.l3).collect(),
+            min_l1: cands.iter().map(|c| c.l1).min().unwrap_or(u64::MAX),
+            min_l3: cands.iter().map(|c| c.l3).min().unwrap_or(u64::MAX),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.f.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.f.is_empty()
+    }
+
+    /// The per-axis objective lower bound: `f[0]` (sorted), `+∞` when the
+    /// list is empty (an empty list means the configuration is infeasible,
+    /// and `+∞` makes every bound built from it prune).
+    pub fn min_f(&self) -> f64 {
+        self.f.first().copied().unwrap_or(f64::INFINITY)
+    }
+
+    /// The `i`-th candidate as a struct (tests and non-hot consumers).
+    pub fn at(&self, i: usize) -> AxisCandidate {
+        AxisCandidate {
+            l1: self.l1[i],
+            l3: self.l3[i],
+            f: self.f[i],
+        }
+    }
 }
 
 /// Memo key: everything the axis term depends on besides the accelerator.
@@ -81,17 +151,91 @@ fn pareto_filter(sorted: Vec<AxisCandidate>) -> Vec<AxisCandidate> {
     out
 }
 
-/// Memoizing candidate-list factory, scoped to one `(shape, arch)` solve.
+/// Lists a [`SharedCandidateStore`] holds at most. A long-running service
+/// seeing ever-new architectures/extents must not grow without bound (the
+/// donor registry next door is capped for the same reason), so once full
+/// the store stops admitting new lists — existing entries keep answering,
+/// and solves for uncached keys simply build locally, exactly as if no
+/// store were attached. Generous on purpose: a whole eval grid uses a few
+/// hundred distinct lists.
+const MAX_SHARED_LISTS: usize = 8192;
+
+/// Cross-solve candidate-list store, keyed by
+/// `(arch.param_fingerprint(), list key)`. `Arc`-share one instance across
+/// a batch of solves — the mapping service's worker pool, the eval grid's
+/// `GomaMapper`s — and every list is built exactly once per architecture
+/// instead of once per solve. Thread-safe (one coarse mutex: lookups are a
+/// hash probe, and the expensive list *construction* happens outside the
+/// lock); concurrent misses on one key may both build, in which case the
+/// later, bit-identical list wins the publish — contents never race.
+/// Capacity-capped at [`MAX_SHARED_LISTS`] (admission stops, nothing is
+/// evicted), so a long-lived service's memory is bounded.
+///
+/// Stored lists are always dominance-pruned; unpruned A/B baselines bypass
+/// the store (see [`CandidateCache::with_dominance`]).
+#[derive(Debug, Default)]
+pub struct SharedCandidateStore {
+    lists: Mutex<HashMap<(u64, Key), Arc<CandidateList>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SharedCandidateStore {
+    pub fn new() -> SharedCandidateStore {
+        SharedCandidateStore::default()
+    }
+
+    /// Distinct lists currently held (across every architecture).
+    pub fn lists_held(&self) -> usize {
+        self.lists.lock().unwrap().len()
+    }
+
+    /// Lookups answered from the store.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that fell through to a local build.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn lookup(&self, arch_fp: u64, key: Key) -> Option<Arc<CandidateList>> {
+        let got = self.lists.lock().unwrap().get(&(arch_fp, key)).cloned();
+        match &got {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    fn publish(&self, arch_fp: u64, key: Key, list: Arc<CandidateList>) {
+        let mut lists = self.lists.lock().unwrap();
+        // Admission-capped, never evicting: replacing an existing key is
+        // always fine (bit-identical contents), a new key only below cap.
+        if lists.len() < MAX_SHARED_LISTS || lists.contains_key(&(arch_fp, key)) {
+            lists.insert((arch_fp, key), list);
+        }
+    }
+}
+
+/// Memoizing candidate-list factory, scoped to one `(shape, arch)` solve —
+/// optionally backed by a cross-solve [`SharedCandidateStore`].
 pub struct CandidateCache<'a> {
     arch: &'a Accelerator,
     /// Apply the Pareto dominance filter to every list (`false` only for
     /// A/B node-count baselines; the optimum is identical either way).
     dominance: bool,
-    lists: HashMap<Key, Arc<Vec<AxisCandidate>>>,
+    /// Cross-solve backing store with the arch fingerprint it is keyed
+    /// under. Only consulted when `dominance` is on (stored lists are
+    /// always pruned).
+    shared: Option<(u64, Arc<SharedCandidateStore>)>,
+    lists: HashMap<Key, Arc<CandidateList>>,
     /// Divisor lists memoized per extent (shared across axes and fanouts).
     divs: HashMap<u64, Arc<Vec<u64>>>,
     raw_candidates: u64,
     kept_candidates: u64,
+    store_hits: u64,
 }
 
 impl<'a> CandidateCache<'a> {
@@ -104,11 +248,24 @@ impl<'a> CandidateCache<'a> {
         CandidateCache {
             arch,
             dominance,
+            shared: None,
             lists: HashMap::new(),
             divs: HashMap::new(),
             raw_candidates: 0,
             kept_candidates: 0,
+            store_hits: 0,
         }
+    }
+
+    /// A dominance-pruned cache backed by a cross-solve store: list misses
+    /// consult the store before building, and locally built lists are
+    /// published back. The fingerprint key is computed here, once per
+    /// solve.
+    pub fn with_store(arch: &'a Accelerator, store: Arc<SharedCandidateStore>) -> Self {
+        let fp = arch.param_fingerprint();
+        let mut cache = Self::with_dominance(arch, true);
+        cache.shared = Some((fp, store));
+        cache
     }
 
     fn divisors_of(&mut self, n: u64) -> Arc<Vec<u64>> {
@@ -131,7 +288,7 @@ impl<'a> CandidateCache<'a> {
         b1: bool,
         b3: bool,
         is_z: bool,
-    ) -> Arc<Vec<AxisCandidate>> {
+    ) -> Arc<CandidateList> {
         let key = Key {
             l0,
             fanout,
@@ -139,6 +296,13 @@ impl<'a> CandidateCache<'a> {
         };
         if let Some(list) = self.lists.get(&key) {
             return list.clone();
+        }
+        if let Some((fp, store)) = &self.shared {
+            if let Some(list) = store.lookup(*fp, key) {
+                self.store_hits += 1;
+                self.lists.insert(key, list.clone());
+                return list;
+            }
         }
         let mut out = Vec::new();
         if l0 % fanout == 0 {
@@ -172,18 +336,29 @@ impl<'a> CandidateCache<'a> {
             out = pareto_filter(out);
         }
         self.kept_candidates += out.len() as u64;
-        let rc = Arc::new(out);
+        let rc = Arc::new(CandidateList::from_sorted(&out));
+        if let Some((fp, store)) = &self.shared {
+            store.publish(*fp, key, rc.clone());
+        }
         self.lists.insert(key, rc.clone());
         rc
     }
 
-    /// Number of distinct lists materialized (search-space telemetry).
+    /// Number of distinct lists this solve references (search-space
+    /// telemetry; store hits count — the solve still uses the list).
     pub fn lists_built(&self) -> usize {
         self.lists.len()
     }
 
-    /// `(raw, kept)` candidate totals across every list built so far —
-    /// `raw - kept` is the number of dominance-pruned candidates.
+    /// Lists answered by the cross-solve store rather than built locally.
+    pub fn lists_shared(&self) -> usize {
+        self.store_hits as usize
+    }
+
+    /// `(raw, kept)` candidate totals across every list *built locally* so
+    /// far — `raw - kept` is the number of dominance-pruned candidates.
+    /// Store hits do not re-tally (their construction was tallied by the
+    /// solve that built them).
     pub fn pruning_stats(&self) -> (u64, u64) {
         (self.raw_candidates, self.kept_candidates)
     }
@@ -221,6 +396,7 @@ mod tests {
     use super::*;
     use crate::arch::Accelerator;
     use crate::mapping::GemmShape;
+    use crate::util::Rng;
 
     #[test]
     fn candidates_sorted_and_feasible() {
@@ -228,10 +404,13 @@ mod tests {
         let mut cache = CandidateCache::new(&a);
         let list = cache.get(64, 4, false, true, true, true, false);
         assert!(!list.is_empty());
-        assert!(list.windows(2).all(|w| w[0].f <= w[1].f));
-        for c in list.iter() {
-            assert_eq!(64 % c.l1, 0);
-            assert_eq!(c.l1 % (c.l3 * 4), 0);
+        assert!(list.f.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(list.min_f(), list.f[0]);
+        assert_eq!(list.min_l1, list.l1.iter().copied().min().unwrap());
+        assert_eq!(list.min_l3, list.l3.iter().copied().min().unwrap());
+        for i in 0..list.len() {
+            assert_eq!(64 % list.l1[i], 0);
+            assert_eq!(list.l1[i] % (list.l3[i] * 4), 0);
         }
     }
 
@@ -241,6 +420,8 @@ mod tests {
         let mut cache = CandidateCache::new(&a);
         let list = cache.get(63, 4, false, false, true, true, false);
         assert!(list.is_empty()); // 4 ∤ 63
+        assert_eq!(list.min_l1, u64::MAX);
+        assert!(list.min_f().is_infinite());
     }
 
     #[test]
@@ -251,6 +432,65 @@ mod tests {
         let l2 = cache.get(64, 4, false, true, true, true, false);
         assert!(Arc::ptr_eq(&l1, &l2));
         assert_eq!(cache.lists_built(), 1);
+    }
+
+    #[test]
+    fn shared_store_hands_one_allocation_across_caches() {
+        let a = Accelerator::custom("t", 1 << 20, 16, 256);
+        let store = Arc::new(SharedCandidateStore::new());
+        let first = {
+            let mut cache = CandidateCache::with_store(&a, store.clone());
+            cache.get(64, 4, false, true, true, true, false)
+        };
+        assert_eq!(store.lists_held(), 1);
+        assert_eq!(store.misses(), 1);
+        let mut cache2 = CandidateCache::with_store(&a, store.clone());
+        let second = cache2.get(64, 4, false, true, true, true, false);
+        assert!(
+            Arc::ptr_eq(&first, &second),
+            "the second cache must receive the stored allocation"
+        );
+        assert_eq!(store.hits(), 1);
+        assert_eq!(cache2.lists_shared(), 1);
+        // A different *architecture* with the same key must not alias.
+        let b = Accelerator::custom("t", 1 << 19, 16, 256);
+        let mut cache3 = CandidateCache::with_store(&b, store.clone());
+        let third = cache3.get(64, 4, false, true, true, true, false);
+        assert!(!Arc::ptr_eq(&first, &third), "different arch params must not share lists");
+        assert_eq!(store.lists_held(), 2);
+    }
+
+    #[test]
+    fn shared_store_admission_stops_at_the_cap() {
+        let store = SharedCandidateStore::new();
+        let empty = Arc::new(CandidateList::from_sorted(&[]));
+        for l0 in 0..(MAX_SHARED_LISTS as u64 + 10) {
+            store.publish(1, Key { l0, fanout: 1, flags: 0 }, empty.clone());
+        }
+        assert_eq!(store.lists_held(), MAX_SHARED_LISTS, "admission must stop at the cap");
+        // Existing keys may still be republished at cap (bit-identical).
+        store.publish(1, Key { l0: 0, fanout: 1, flags: 0 }, empty);
+        assert_eq!(store.lists_held(), MAX_SHARED_LISTS);
+    }
+
+    #[test]
+    fn store_backed_lists_are_bit_identical_to_local_builds() {
+        let a = Accelerator::custom("t", 1 << 20, 16, 256);
+        let store = Arc::new(SharedCandidateStore::new());
+        let mut warmer = CandidateCache::with_store(&a, store.clone());
+        let _ = warmer.get(64, 4, false, true, true, true, false);
+        let mut warm = CandidateCache::with_store(&a, store);
+        let shared = warm.get(64, 4, false, true, true, true, false);
+        let mut local = CandidateCache::new(&a);
+        let built = local.get(64, 4, false, true, true, true, false);
+        assert_eq!(shared.len(), built.len());
+        for i in 0..built.len() {
+            assert_eq!(shared.f[i].to_bits(), built.f[i].to_bits());
+            assert_eq!(shared.l1[i], built.l1[i]);
+            assert_eq!(shared.l3[i], built.l3[i]);
+        }
+        assert_eq!(shared.min_l1, built.min_l1);
+        assert_eq!(shared.min_l3, built.min_l3);
     }
 
     fn cand(f: f64, l1: u64, l3: u64) -> AxisCandidate {
@@ -297,6 +537,50 @@ mod tests {
         assert_eq!(fast, slow);
     }
 
+    /// Fuzz the staircase front against the O(n²) textbook filter: 1 000
+    /// seeded random `f`-sorted lists (duplicate tiles, tied objectives,
+    /// degenerate lengths included). Asserts output equality, that the
+    /// output is a subsequence of the input, and that index 0 survives.
+    #[test]
+    fn pareto_filter_fuzz_matches_naive_reference_on_1k_lists() {
+        let mut rng = Rng::seed_from_u64(0x9A12_E70F);
+        for case in 0..1000u64 {
+            let n = rng.gen_range(33) as usize; // 0..=32 candidates
+            let mut input: Vec<AxisCandidate> = (0..n)
+                .map(|_| {
+                    cand(
+                        // Small integer grid so exact f-ties occur often.
+                        rng.gen_range(6) as f64 * 0.25,
+                        1 << rng.gen_range(5),
+                        1 << rng.gen_range(5),
+                    )
+                })
+                .collect();
+            input.sort_by(|a, b| a.f.partial_cmp(&b.f).unwrap());
+            let fast = pareto_filter(input.clone());
+            // Naive keep-first reference: O(n²), definitionally correct.
+            let mut slow: Vec<AxisCandidate> = Vec::new();
+            for c in &input {
+                if !slow.iter().any(|k| k.l1 <= c.l1 && k.l3 <= c.l3) {
+                    slow.push(*c);
+                }
+            }
+            assert_eq!(fast, slow, "case {case}: staircase disagrees with naive filter");
+            // Subsequence of the input (same order, only deletions).
+            let mut it = input.iter();
+            for k in &fast {
+                assert!(
+                    it.any(|c| c == k),
+                    "case {case}: output is not a subsequence of the input"
+                );
+            }
+            // Index 0 is always kept on non-empty input.
+            if let Some(first) = input.first() {
+                assert_eq!(fast.first(), Some(first), "case {case}: index 0 dropped");
+            }
+        }
+    }
+
     #[test]
     fn dominance_pruned_list_is_subsequence_with_same_minimum() {
         let a = Accelerator::custom("t", 1 << 20, 16, 256);
@@ -306,16 +590,19 @@ mod tests {
         let r = raw.get(64, 4, false, true, true, true, false);
         assert!(p.len() <= r.len());
         // Subsequence check + the per-axis lower bound (index 0) survives.
-        let mut it = r.iter();
-        for c in p.iter() {
-            assert!(it.any(|rc| rc == c), "pruned list is not a subsequence");
+        let rc: Vec<AxisCandidate> = (0..r.len()).map(|i| r.at(i)).collect();
+        let mut it = rc.iter();
+        for i in 0..p.len() {
+            let c = p.at(i);
+            assert!(it.any(|x| *x == c), "pruned list is not a subsequence");
         }
-        assert_eq!(p[0], r[0]);
+        assert_eq!(p.at(0), r.at(0));
         // Every dropped candidate has a dominator among the kept ones.
-        for c in r.iter() {
-            if !p.contains(c) {
+        let pc: Vec<AxisCandidate> = (0..p.len()).map(|i| p.at(i)).collect();
+        for c in &rc {
+            if !pc.contains(c) {
                 assert!(
-                    p.iter().any(|k| k.f <= c.f && k.l1 <= c.l1 && k.l3 <= c.l3),
+                    pc.iter().any(|k| k.f <= c.f && k.l1 <= c.l1 && k.l3 <= c.l3),
                     "dropped candidate {c:?} has no dominator"
                 );
             }

@@ -1,47 +1,74 @@
-//! The parallel, dominance-pruned branch-and-bound engine (DESIGN.md §4).
+//! The parallel, bound-ordered, dominance-pruned branch-and-bound engine
+//! (DESIGN.md §4, §8).
 //!
-//! [`super::space::SearchSpace`] hands the engine an ordered list of
-//! *units* (spatial fanout triples with prefetched, Pareto-pruned
-//! candidate lists); the engine fans them over
-//! [`crate::util::parallel::ordered_map`]'s scoped worker pool in
-//! fixed-size **waves** of [`WAVE_UNITS`] units, under a shared atomic
-//! incumbent (relaxed reads, CAS-tighten on improvement).
+//! [`super::space::SearchSpace`] hands the engine *units* (spatial fanout
+//! triples with prefetched, Pareto-pruned, struct-of-arrays candidate
+//! lists, each carrying an exact precomputed objective lower bound); the
+//! engine walks them in the space's **static LB-ascending schedules** —
+//! units by [`SearchSpace::unit_sched`], combos within a unit by
+//! [`TripleUnit::sched`] — fanning each fixed-size **wave** of
+//! [`WAVE_UNITS`] units over [`crate::util::parallel::ordered_map`]'s
+//! scoped worker pool. Scanning cheap-lower-bound material first tightens
+//! the incumbent in the first wave, after which whole units die on a
+//! single `lb ≥ incumbent` comparison ([`Certificate::units_skipped`])
+//! before any candidate list is touched.
 //!
 //! **Determinism rule** (the reason `solve()` is bit-identical for every
-//! thread count): incumbent *reads* are quantized to wave boundaries —
-//! every unit in a wave scans against the same incumbent bits, taken once
-//! before the wave launches, so each unit's outcome (local best, expanded
-//! nodes, pruned combos) is a pure function of `(unit, wave incumbent)`
-//! and never of thread scheduling. Workers CAS-tighten the incumbent the
-//! moment they find a better mapping, but the tightened bound is only
-//! *observed* at the next wave boundary. The final reduction walks unit
-//! outcomes in enumeration order taking strict improvements, which is
-//! exactly the serial scan's first-best-wins rule, so the returned
-//! mapping, energy, and [`Certificate`] carry no trace of the thread
-//! count. `solve_serial_reference` re-implements the same semantics as a
-//! plain sequential loop (no pool, no atomics); the property suite pins
-//! the engine against it at 1/2/4 threads.
+//! thread count): the incumbent state — the bound `ub` *and* the canonical
+//! key of the mapping holding it — is read once per wave; every unit in a
+//! wave scans against that same wave-start state, so each unit's outcome
+//! (local best, expanded nodes, pruned combos) is a pure function of
+//! `(unit, wave state)` and never of thread scheduling. The reduction
+//! between waves is the lexicographic minimum over `(value, canonical
+//! key)` — commutative, so absorb order cannot leak either.
+//!
+//! **Canonical tie resolution** (DESIGN.md §8 — what makes the reordered
+//! scan return the *same mapping* as a canonical-order scan). The
+//! canonical scan's answer is characterized schedule-independently: the
+//! optimum value `v*` is attained first inside the lowest canonical
+//! `(unit, combo)` whose own minimum is `v*`, and within that combo by
+//! the first attaining `(x, y, z)` in list order. The engine therefore
+//! tracks the incumbent *holder's* canonical key next to the bound:
+//! a candidate that exactly ties the incumbent still wins when its key
+//! precedes the holder's, and every pruning comparison relaxes from
+//! `≥ incumbent` to `> incumbent` exactly when the material being pruned
+//! sits at a lower canonical key than the holder — so an exact tie at a
+//! lower key is never discarded, and anything else is pruned precisely as
+//! the canonical scan would. Under the canonical schedule keys only ever
+//! increase, the relaxation never triggers, and the engine degenerates to
+//! the historical scan — `solve_configured(…, bound_order = false, …)` is
+//! that A/B baseline, and the bound-ordered default provably returns the
+//! bit-identical `(mapping, energy)`, scanning no more units and — in
+//! aggregate — far fewer nodes (property-tested in
+//! `rust/tests/bound_order.rs`; per-instance node counts are not a
+//! theorem, see DESIGN.md §8).
 //!
 //! **Seeded solves** (DESIGN.md §6): [`solve_configured`] accepts an
 //! optional [`SeedBound`] — the re-costed objective of a mapping known
 //! feasible on *this* `(shape, arch)` (see [`super::seed`]) — whose only
-//! effect is a tighter *starting* incumbent. The incumbent is initialized
-//! strictly above the bound ([`strictly_above`]), so a donor that ties the
-//! optimum still lets the search discover and return the optimum itself:
-//! the returned mapping and energy are bit-identical to the unseeded
-//! solve, and the node counters can only shrink (a valid upper bound only
-//! prunes suboptimal subtrees). The determinism rule extends verbatim —
-//! for a fixed seed the solve stays bit-identical at every thread count;
-//! only the certificate's *effort* counters depend on the seed.
+//! effect is a tighter *starting* bound with **no holder key**: the
+//! incumbent is initialized strictly above the bound ([`strictly_above`])
+//! and ties against a holderless bound are never accepted, so a donor
+//! that ties the optimum still lets the search discover and return the
+//! optimum itself bit-identically, with node counters only shrinking.
 //!
-//! Inner search per unit (unchanged from the classic branch-and-bound):
-//! sorted per-axis candidate lists give admissible lower bounds (sum of
-//! per-axis minima), capacity prechecks bound Eqs. (31)–(32) from below,
-//! and the last axis is a first-feasible-is-optimal scan. Every pruned
-//! subtree is discarded only when its lower bound is ≥ the incumbent, so
-//! a run to completion returns a *proved* global optimum (gap 0).
+//! Inner search per unit (the flat SoA kernel): sorted per-axis candidate
+//! arrays give admissible lower bounds (sums of per-axis minima, in the
+//! scan's own reduction order), the bypass-gated capacity checks
+//! (Eqs. 31–32) are evaluated as per-level linear forms `c0 + l·c1` whose
+//! coefficients are hoisted out of each loop, and the last axis is a
+//! first-feasible-is-optimal scan. The wall clock is polled once per
+//! [`TIME_CHECK_PERIOD`] expanded nodes — never per combo — so deadline
+//! handling costs O(nodes / 4096) clock reads. Every pruned subtree is
+//! discarded only when its exact lower bound rules it out against the
+//! incumbent (with the tie relaxation above), so a run to completion
+//! returns a *proved* global optimum (gap 0).
+//!
+//! [`SearchSpace::unit_sched`]: super::space::SearchSpace::unit_sched
+//! [`TripleUnit::sched`]: super::space::TripleUnit::sched
+//! [`Certificate::units_skipped`]: super::Certificate::units_skipped
 
-use super::candidates::AxisCandidate;
+use super::candidates::SharedCandidateStore;
 use super::space::{SearchSpace, TripleUnit};
 use super::Certificate;
 use crate::arch::Accelerator;
@@ -49,7 +76,6 @@ use crate::energy::{evaluate, EnergyBreakdown};
 use crate::mapping::{Axis, Bypass, GemmShape, Mapping, Tile};
 use crate::util::parallel::ordered_map;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Units per scheduling wave: the incumbent-synchronization granularity
@@ -58,9 +84,22 @@ use std::time::{Duration, Instant};
 /// semantics, not a tuning knob (DESIGN.md §4).
 pub const WAVE_UNITS: usize = 8;
 
-/// Wall-clock re-check period inside the x/y scan loops, in expanded
-/// nodes. Power of two: the check is `nodes & (PERIOD - 1) == 0`.
-const TIME_CHECK_PERIOD: u64 = 4096;
+/// Wall-clock poll period inside the scan kernel, in expanded nodes.
+/// Power of two: the check is `nodes & (PERIOD - 1) == 0`. This is the
+/// *only* clock read in the kernel — the per-combo deadline check that
+/// used to sit at the top of the combo loop (576 clock reads per unit,
+/// each syscall-ish) is folded into it.
+pub(crate) const TIME_CHECK_PERIOD: u64 = 4096;
+
+/// Canonical identity of a scan find: `(unit, combo)` indices in the
+/// space's canonical enumeration order. Lexicographic `<` is the engine's
+/// tie-break: of two mappings with equal objective, the one whose key is
+/// smaller is the one the canonical-order scan would have returned.
+pub(crate) type CanonKey = (u32, u16);
+
+/// "No mapping holds the incumbent": sorts after every real key, so a
+/// holderless bound (`+∞`, or a seed) never wins a tie.
+pub(crate) const NO_HOLDER: CanonKey = (u32::MAX, u16::MAX);
 
 /// Solver configuration.
 #[derive(Debug, Clone, Copy)]
@@ -237,17 +276,9 @@ pub struct SolveResult {
     pub solve_time: Duration,
 }
 
-/// Minimal residency contribution of an axis at the regfile (all-minimal
-/// tile lengths): used for capacity pruning before the axis is assigned.
-fn min_l3(list: &[AxisCandidate]) -> u64 {
-    list.iter().map(|c| c.l3).min().unwrap_or(u64::MAX)
-}
-
-fn min_l1(list: &[AxisCandidate]) -> u64 {
-    list.iter().map(|c| c.l1).min().unwrap_or(u64::MAX)
-}
-
-/// Bypass-gated SRAM words (Eq. 32 LHS) for concrete per-axis `L^(1)`.
+/// Bypass-gated SRAM words (Eq. 32 LHS) for concrete per-axis `L^(1)` —
+/// the combo-level precheck form; the per-candidate loops use the
+/// equivalent hoisted linear forms inside [`scan_unit`].
 fn sram_need(b1: Bypass, l1: [u64; 3]) -> u64 {
     let mut s = 0;
     if b1.x {
@@ -283,6 +314,8 @@ struct Tally {
     nodes: u64,
     combos_total: u64,
     combos_pruned: u64,
+    units_total: u64,
+    units_skipped: u64,
 }
 
 impl Tally {
@@ -294,117 +327,226 @@ impl Tally {
 }
 
 /// What one unit scan reports back: a pure function of
-/// `(unit, incumbent-at-wave-start, deadline)`.
+/// `(unit, wave-start incumbent state, deadline)`.
 struct UnitOutcome {
-    /// The unit's best feasible completion strictly below the wave
-    /// incumbent, as `(axis-term sum, mapping)`.
-    best: Option<(f64, Mapping)>,
+    /// The unit's best acceptable completion — strictly below the wave
+    /// bound, or exactly on it at a lower canonical key — as
+    /// `(value, canonical combo index, mapping)`.
+    best: Option<(f64, u16, Mapping)>,
     nodes: u64,
     combos_total: u64,
     combos_pruned: u64,
     timed_out: bool,
 }
 
-/// Exhaustive branch-and-bound over one unit's 576 combos, against a fixed
-/// incoming incumbent. This is the engine's only search loop; both the
-/// parallel path and the serial reference call it.
+/// The wave-quantized incumbent state the reduction threads between waves:
+/// the bound, the canonical key of the mapping holding it
+/// ([`NO_HOLDER`] for `+∞`/seed bounds), and the mapping itself.
+struct Incumbent {
+    ub: f64,
+    holder: CanonKey,
+    best: Option<Mapping>,
+}
+
+impl Incumbent {
+    fn new(seed: Option<SeedBound>) -> Incumbent {
+        Incumbent {
+            ub: match seed {
+                Some(s) => strictly_above(s.objective),
+                None => f64::INFINITY,
+            },
+            holder: NO_HOLDER,
+            best: None,
+        }
+    }
+
+    /// Lexicographic-min reduction over `(value, canonical key)`:
+    /// commutative and associative, so the absorb order of a wave's
+    /// outcomes cannot leak into the result.
+    fn absorb(&mut self, unit_canon: u32, found: &Option<(f64, u16, Mapping)>) {
+        if let Some((v, ci, m)) = found {
+            let key = (unit_canon, *ci);
+            if *v < self.ub || (*v == self.ub && key < self.holder) {
+                self.ub = *v;
+                self.holder = key;
+                self.best = Some(*m);
+            }
+        }
+    }
+}
+
+/// The one cutoff predicate every pruning site shares (DESIGN.md §8):
+/// discard material whose exact lower bound `lb` rules it out against the
+/// incumbent `ub` — relaxing `≥` to strict `>` when `tie_ok` says the
+/// material sits at a canonical key below the incumbent holder's (an
+/// exact tie there may be the canonical winner and must be scanned). The
+/// §8 bit-identity argument depends on every cutoff using exactly this
+/// rule, which is why it exists once.
+#[inline]
+fn cuts(lb: f64, ub: f64, tie_ok: bool) -> bool {
+    if tie_ok {
+        lb > ub
+    } else {
+        lb >= ub
+    }
+}
+
+/// Exhaustive branch-and-bound over one unit's 576 combos against a fixed
+/// wave-start incumbent state. This is the engine's only search loop; both
+/// the parallel path and the serial reference call it.
+///
+/// The kernel streams the struct-of-arrays candidate lists
+/// ([`super::candidates::CandidateList`]): the objective scan touches only
+/// the flat `f` arrays, and each level's bypass-gated capacity check is a
+/// hoisted linear form `c0 + l · c1` over the flat `l1`/`l3` arrays —
+/// algebraically identical, integer for integer, to the Eq. 31/32 sums
+/// the combo-level precheck evaluates. List minima (`min_l1`/`min_l3`,
+/// `f[0]`) are baked into the lists at construction, never recomputed
+/// here.
+#[allow(clippy::too_many_arguments)]
 fn scan_unit(
     unit: &TripleUnit,
-    combos: &[(Axis, Axis, Bypass, Bypass)],
+    unit_canon: u32,
+    space: &SearchSpace,
     arch: &Accelerator,
     ub_in: f64,
+    holder_in: CanonKey,
+    bound_order: bool,
     deadline: Option<Instant>,
 ) -> UnitOutcome {
     let [sx, sy, sz] = unit.s;
     let mut ub = ub_in;
-    let mut best: Option<(f64, Mapping)> = None;
+    let mut holder = holder_in;
+    let mut best: Option<(f64, u16, Mapping)> = None;
     let mut nodes: u64 = 0;
     let mut combos_total: u64 = 0;
     let mut combos_pruned: u64 = 0;
     let mut timed_out = false;
+    let sram = arch.sram_words;
+    let rf = arch.regfile_words;
+    let sched: &[u16] = if bound_order {
+        unit.sched()
+    } else {
+        &space.canonical_sched
+    };
 
-    'combos: for &(a01, a12, b1, b3) in combos {
+    'combos: for &ci in sched {
         combos_total += 1;
-        if deadline.is_some_and(|d| Instant::now() > d) {
-            timed_out = true;
-            break 'combos;
-        }
-        let lists = [
-            unit.list(Axis::X, a01, a12, b1, b3),
-            unit.list(Axis::Y, a01, a12, b1, b3),
-            unit.list(Axis::Z, a01, a12, b1, b3),
-        ];
-        if lists.iter().any(|l| l.is_empty()) {
+        let key: CanonKey = (unit_canon, ci);
+        // Tie-aware combo prune: material at a key *below* the incumbent
+        // holder's may still contain the canonical winner when it exactly
+        // ties the bound, so its cutoff relaxes to strict `>`. Empty-list
+        // combos carry lb = +∞ and always die here.
+        let lb = unit.combo_lb(ci as usize);
+        let tie_ok = holder != NO_HOLDER && key < holder;
+        if cuts(lb, ub, tie_ok) {
             combos_pruned += 1;
             continue;
         }
+        let (a01, a12, b1, b3) = space.combos[ci as usize];
+        let lx = unit.list(Axis::X, a01, a12, b1, b3);
+        let ly = unit.list(Axis::Y, a01, a12, b1, b3);
+        let lz = unit.list(Axis::Z, a01, a12, b1, b3);
         // Combo-level capacity precheck with all-minimal tile lengths
-        // (cheap necessary condition).
-        let min1 = [min_l1(lists[0]), min_l1(lists[1]), min_l1(lists[2])];
-        let min3 = [min_l3(lists[0]), min_l3(lists[1]), min_l3(lists[2])];
-        if sram_need(b1, min1) > arch.sram_words || rf_need(b3, min3) > arch.regfile_words {
+        // (cheap necessary condition; minima are baked into the lists).
+        let min1 = [lx.min_l1, ly.min_l1, lz.min_l1];
+        let min3 = [lx.min_l3, ly.min_l3, lz.min_l3];
+        if sram_need(b1, min1) > sram || rf_need(b3, min3) > rf {
             combos_pruned += 1;
             continue;
         }
-        // Objective lower bound of the whole combo.
-        let mins = [lists[0][0].f, lists[1][0].f, lists[2][0].f];
-        if mins.iter().sum::<f64>() >= ub {
-            combos_pruned += 1;
-            continue;
-        }
+        // Hoisted x-level capacity coefficients: with y/z at their minima,
+        // Eq. 32's LHS is `s_x0 + l1x · s_x1` (g = residency gate ∈ {0,1}).
+        let g1 = [b1.x as u64, b1.y as u64, b1.z as u64];
+        let g3 = [b3.x as u64, b3.y as u64, b3.z as u64];
+        let s_x0 = g1[0] * min1[1] * min1[2];
+        let s_x1 = g1[1] * min1[2] + g1[2] * min1[1];
+        let r_x0 = g3[0] * min3[1] * min3[2];
+        let r_x1 = g3[1] * min3[2] + g3[2] * min3[1];
+        let (fx, l1x, l3x) = (&lx.f, &lx.l1, &lx.l3);
+        let (fy, l1y, l3y) = (&ly.f, &ly.l1, &ly.l3);
+        let (fz, l1z, l3z) = (&lz.f, &lz.l1, &lz.l3);
+        let miny = fy[0];
+        let minz = fz[0];
 
         // Depth-wise branch: x, then y, then the sorted first-feasible
         // scan on z.
-        for cx in lists[0] {
-            if cx.f + mins[1] + mins[2] >= ub {
-                break; // sorted ⇒ all later cx worse
+        for xi in 0..fx.len() {
+            let fx_i = fx[xi];
+            // Exact bound of the best completion of this x prefix, in the
+            // scan's own reduction order (sorted ⇒ all later x are worse).
+            let bx = (fx_i + miny) + minz;
+            let tie_ok = holder != NO_HOLDER && key < holder;
+            if cuts(bx, ub, tie_ok) {
+                break;
             }
-            // Capacity precheck with y/z minimal.
-            if sram_need(b1, [cx.l1, min1[1], min1[2]]) > arch.sram_words
-                || rf_need(b3, [cx.l3, min3[1], min3[2]]) > arch.regfile_words
-            {
+            let l1x_i = l1x[xi];
+            let l3x_i = l3x[xi];
+            if s_x0 + l1x_i * s_x1 > sram || r_x0 + l3x_i * r_x1 > rf {
                 continue;
             }
-            for cy in lists[1] {
+            // y-level linear-form coefficients for this fixed x.
+            let s_y0 = g1[1] * l1x_i * min1[2];
+            let s_y1 = g1[0] * min1[2] + g1[2] * l1x_i;
+            let r_y0 = g3[1] * l3x_i * min3[2];
+            let r_y1 = g3[0] * min3[2] + g3[2] * l3x_i;
+            for yi in 0..fy.len() {
                 nodes += 1;
-                // One combo with huge candidate lists must not blow the
-                // wall-clock budget between the per-combo checks.
+                // The only clock read in the kernel: one huge combo must
+                // not blow the wall-clock budget, so the deadline is
+                // polled every TIME_CHECK_PERIOD expanded nodes.
                 if nodes & (TIME_CHECK_PERIOD - 1) == 0
                     && deadline.is_some_and(|d| Instant::now() > d)
                 {
                     timed_out = true;
                     break 'combos;
                 }
-                let base = cx.f + cy.f;
-                if base + mins[2] >= ub {
+                let base = fx_i + fy[yi];
+                let by = base + minz;
+                let tie_ok = holder != NO_HOLDER && key < holder;
+                if cuts(by, ub, tie_ok) {
                     break;
                 }
-                if sram_need(b1, [cx.l1, cy.l1, min1[2]]) > arch.sram_words
-                    || rf_need(b3, [cx.l3, cy.l3, min3[2]]) > arch.regfile_words
-                {
+                let l1y_i = l1y[yi];
+                let l3y_i = l3y[yi];
+                if s_y0 + l1y_i * s_y1 > sram || r_y0 + l3y_i * r_y1 > rf {
                     continue;
                 }
-                for cz in lists[2] {
-                    if base + cz.f >= ub {
+                // z-level linear-form coefficients for this fixed (x, y):
+                // the full Eq. 31/32 check, factored.
+                let s_z0 = g1[2] * l1x_i * l1y_i;
+                let s_z1 = g1[0] * l1y_i + g1[1] * l1x_i;
+                let r_z0 = g3[2] * l3x_i * l3y_i;
+                let r_z1 = g3[0] * l3y_i + g3[1] * l3x_i;
+                for zi in 0..fz.len() {
+                    let v = base + fz[zi];
+                    let tie_ok = holder != NO_HOLDER && key < holder;
+                    if cuts(v, ub, tie_ok) {
                         break;
                     }
-                    if sram_need(b1, [cx.l1, cy.l1, cz.l1]) <= arch.sram_words
-                        && rf_need(b3, [cx.l3, cy.l3, cz.l3]) <= arch.regfile_words
-                    {
-                        ub = base + cz.f;
+                    if s_z0 + l1z[zi] * s_z1 <= sram && r_z0 + l3z[zi] * r_z1 <= rf {
+                        // Sorted ⇒ the first feasible z is this prefix's
+                        // best completion. Passing the break above means
+                        // it strictly improves the bound or claims an
+                        // exact tie at a lower canonical key.
+                        if v < ub {
+                            ub = v;
+                        }
+                        holder = key;
                         best = Some((
-                            ub,
+                            v,
+                            ci,
                             Mapping {
-                                l1: Tile::new(cx.l1, cy.l1, cz.l1),
-                                l2: Tile::new(cx.l3 * sx, cy.l3 * sy, cz.l3 * sz),
-                                l3: Tile::new(cx.l3, cy.l3, cz.l3),
+                                l1: Tile::new(l1x_i, l1y_i, l1z[zi]),
+                                l2: Tile::new(l3x_i * sx, l3y_i * sy, l3z[zi] * sz),
+                                l3: Tile::new(l3x_i, l3y_i, l3z[zi]),
                                 alpha01: a01,
                                 alpha12: a12,
                                 b1,
                                 b3,
                             },
                         ));
-                        break; // sorted ⇒ first feasible is best
+                        break;
                     }
                 }
             }
@@ -416,25 +558,6 @@ fn scan_unit(
         combos_total,
         combos_pruned,
         timed_out,
-    }
-}
-
-/// CAS-tighten the shared incumbent (stored as `f64` bits) to `v` if `v`
-/// is an improvement. Relaxed ordering throughout: the value is a pruning
-/// hint, and the wave barrier (the scoped pool join) is the only
-/// synchronization the determinism rule relies on.
-fn tighten(incumbent: &AtomicU64, v: f64) {
-    let mut cur = incumbent.load(Ordering::Relaxed);
-    while v < f64::from_bits(cur) {
-        match incumbent.compare_exchange_weak(
-            cur,
-            v.to_bits(),
-            Ordering::Relaxed,
-            Ordering::Relaxed,
-        ) {
-            Ok(_) => break,
-            Err(observed) => cur = observed,
-        }
     }
 }
 
@@ -468,6 +591,8 @@ fn finish(
             nodes: tally.nodes,
             combos_total: tally.combos_total,
             combos_pruned: tally.combos_pruned,
+            units_total: tally.units_total,
+            units_skipped: tally.units_skipped,
             proved_optimal: !timed_out,
         },
         solve_time: start.elapsed(),
@@ -494,7 +619,7 @@ pub fn solve_with_threads(
     opts: SolverOptions,
     threads: usize,
 ) -> Result<SolveResult, SolveError> {
-    solve_configured(shape, arch, opts, threads, true, None)
+    solve_configured(shape, arch, opts, threads, true, true, None)
 }
 
 /// [`solve_with_threads`] with a warm starting bound: the batch-solving
@@ -510,25 +635,61 @@ pub fn solve_seeded(
     threads: usize,
     seed: Option<SeedBound>,
 ) -> Result<SolveResult, SolveError> {
-    solve_configured(shape, arch, opts, threads, true, seed)
+    solve_configured(shape, arch, opts, threads, true, true, seed)
 }
 
-/// [`solve_with_threads`] with the dominance filter switched on or off —
-/// `dominance = false` is the A/B baseline used by the node-count property
-/// tests and the `solver_hotpath` bench; the optimum is identical either
-/// way (DESIGN.md §3) — and an optional starting incumbent
-/// ([`SeedBound`], DESIGN.md §6).
+/// [`solve_seeded`] with candidate lists fetched from / published to a
+/// cross-solve [`SharedCandidateStore`]: the batch entry point for layers
+/// solving many keys on one architecture (the mapping service's worker
+/// pool, the eval grid). Store hits are bit-identical to local builds, so
+/// every solve result is bit-identical to the storeless path.
+pub fn solve_shared(
+    shape: GemmShape,
+    arch: &Accelerator,
+    opts: SolverOptions,
+    threads: usize,
+    seed: Option<SeedBound>,
+    store: &std::sync::Arc<SharedCandidateStore>,
+) -> Result<SolveResult, SolveError> {
+    solve_engine(shape, arch, opts, threads, true, true, seed, Some(store))
+}
+
+/// [`solve_with_threads`] with the dominance filter and the bound-ordered
+/// schedule each switched on or off — `dominance = false` and
+/// `bound_order = false` are the A/B baselines used by the node-count
+/// property tests and the `solver_hotpath` bench (the optimum is
+/// provably identical for every combination, DESIGN.md §3/§8) — and an
+/// optional starting incumbent ([`SeedBound`], DESIGN.md §6).
+#[allow(clippy::too_many_arguments)]
 pub fn solve_configured(
     shape: GemmShape,
     arch: &Accelerator,
     opts: SolverOptions,
     threads: usize,
     dominance: bool,
+    bound_order: bool,
     seed: Option<SeedBound>,
+) -> Result<SolveResult, SolveError> {
+    solve_engine(shape, arch, opts, threads, dominance, bound_order, seed, None)
+}
+
+/// The fully configured engine: every knob, including the cross-solve
+/// candidate store. All other entry points delegate here.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_engine(
+    shape: GemmShape,
+    arch: &Accelerator,
+    opts: SolverOptions,
+    threads: usize,
+    dominance: bool,
+    bound_order: bool,
+    seed: Option<SeedBound>,
+    store: Option<&std::sync::Arc<SharedCandidateStore>>,
 ) -> Result<SolveResult, SolveError> {
     let start = Instant::now();
     let deadline = opts.time_limit.and_then(|l| start.checked_add(l));
-    let space = SearchSpace::build_bounded(shape, arch, opts.exact_pe, dominance, deadline);
+    let space =
+        SearchSpace::build_configured(shape, arch, opts.exact_pe, dominance, deadline, store);
     // A truncated space is already a timeout: an empty one proves nothing
     // (the deadline may have expired before any unit was enumerated), and
     // a partial one can never prove optimality.
@@ -541,68 +702,83 @@ pub fn solve_configured(
         });
     }
     let threads = threads.max(1);
-    let incumbent = AtomicU64::new(initial_incumbent(seed).to_bits());
-    let mut best: Option<(f64, Mapping)> = None;
+    let order: Vec<u32> = if bound_order {
+        space.unit_sched.clone()
+    } else {
+        (0..space.units.len() as u32).collect()
+    };
+    let mut inc = Incumbent::new(seed);
     let mut tally = Tally::default();
 
-    for wave in space.units.chunks(WAVE_UNITS) {
+    for wave in order.chunks(WAVE_UNITS) {
         if deadline.is_some_and(|d| Instant::now() > d) {
             timed_out = true;
             break;
         }
-        // The determinism rule: one incumbent read per wave, shared by
-        // every unit in it.
-        let ub_wave = f64::from_bits(incumbent.load(Ordering::Relaxed));
-        let outcomes = ordered_map(wave, threads, |_, unit| {
-            let o = scan_unit(unit, &space.combos, arch, ub_wave, deadline);
-            if let Some((v, _)) = o.best {
-                tighten(&incumbent, v);
+        // The determinism rule: one incumbent-state read per wave, shared
+        // by every unit in it — including the unit-skip decisions.
+        let ub_wave = inc.ub;
+        let holder_wave = inc.holder;
+        let mut dispatch: Vec<u32> = Vec::with_capacity(wave.len());
+        for &ui in wave {
+            tally.units_total += 1;
+            if bound_order && skip_unit(&space.units[ui as usize], ui, ub_wave, holder_wave) {
+                tally.units_skipped += 1;
+                continue;
             }
-            o
+            dispatch.push(ui);
+        }
+        let outcomes = ordered_map(&dispatch, threads, |_, &ui| {
+            scan_unit(
+                &space.units[ui as usize],
+                ui,
+                &space,
+                arch,
+                ub_wave,
+                holder_wave,
+                bound_order,
+                deadline,
+            )
         });
-        // Deterministic reduction: strict first-best-wins in unit order —
-        // the serial scan's rule, independent of which worker ran what.
-        for o in outcomes {
-            tally.absorb(&o);
+        // Deterministic reduction: lexicographic min over (value, key) —
+        // exactly the canonical scan's first-best-wins rule, independent
+        // of which worker ran what.
+        for (&ui, o) in dispatch.iter().zip(&outcomes) {
+            tally.absorb(o);
             timed_out |= o.timed_out;
-            if let Some((v, m)) = o.best {
-                let better = match &best {
-                    Some((bv, _)) => v < *bv,
-                    None => true,
-                };
-                if better {
-                    best = Some((v, m));
-                }
-            }
+            inc.absorb(ui, &o.best);
         }
         if timed_out {
             break;
         }
     }
 
-    match best {
-        Some((_, mapping)) => Ok(finish(start, shape, arch, mapping, tally, timed_out)),
+    match inc.best {
+        Some(mapping) => Ok(finish(start, shape, arch, mapping, tally, timed_out)),
         None if timed_out => Err(SolveError::Interrupted),
         None => Err(SolveError::NoFeasibleMapping),
     }
 }
 
-/// Starting incumbent for a (possibly seeded) solve: strictly above the
-/// seed bound so ties with the optimum survive (see [`strictly_above`]),
-/// `+∞` when unseeded.
-fn initial_incumbent(seed: Option<SeedBound>) -> f64 {
-    match seed {
-        Some(s) => strictly_above(s.objective),
-        None => f64::INFINITY,
-    }
+/// Unit-level skip test (bound-ordered schedules only): the unit's exact
+/// precomputed lower bound kills the whole unit against the wave-start
+/// incumbent before any candidate list is touched. Tie-aware like every
+/// other cutoff: a unit at a lower canonical index than the incumbent
+/// holder's is still scanned when its bound exactly ties the incumbent —
+/// it may contain the canonical winner. (`ui == holder.0` cannot occur:
+/// a unit is scanned at most once, so the holder's own unit is never
+/// re-considered.)
+fn skip_unit(unit: &TripleUnit, ui: u32, ub: f64, holder: CanonKey) -> bool {
+    let tie_ok = holder != NO_HOLDER && ui < holder.0;
+    cuts(unit.lb, ub, tie_ok)
 }
 
 /// A plain sequential implementation of the engine's exact semantics — no
-/// worker pool, no atomics, same wave-quantized incumbent schedule. This
-/// is the "serial path" the property suite pins [`solve_with_threads`]
-/// against at 1/2/4 threads: any scheduling, reduction, or
-/// incumbent-sharing bug in the parallel machinery shows up as a bit
-/// difference against this function.
+/// worker pool, same bound-ordered schedules, same wave-quantized
+/// incumbent state. This is the "serial path" the property suite pins
+/// [`solve_with_threads`] against at 1/2/4 threads: any scheduling,
+/// reduction, or incumbent-sharing bug in the parallel machinery shows up
+/// as a bit difference against this function.
 pub fn solve_serial_reference(
     shape: GemmShape,
     arch: &Accelerator,
@@ -631,40 +807,45 @@ pub fn solve_serial_reference_seeded(
             SolveError::NoFeasibleMapping
         });
     }
-    let mut ub = initial_incumbent(seed);
-    let mut best: Option<(f64, Mapping)> = None;
+    let mut inc = Incumbent::new(seed);
     let mut tally = Tally::default();
 
-    for wave in space.units.chunks(WAVE_UNITS) {
+    for wave in space.unit_sched.chunks(WAVE_UNITS) {
         if deadline.is_some_and(|d| Instant::now() > d) {
             timed_out = true;
             break;
         }
-        let ub_wave = ub;
-        for unit in wave {
-            let o = scan_unit(unit, &space.combos, arch, ub_wave, deadline);
+        // Wave-start state for every scan and skip decision in the wave
+        // (absorbing per unit below must not leak into the same wave).
+        let ub_wave = inc.ub;
+        let holder_wave = inc.holder;
+        for &ui in wave {
+            tally.units_total += 1;
+            if skip_unit(&space.units[ui as usize], ui, ub_wave, holder_wave) {
+                tally.units_skipped += 1;
+                continue;
+            }
+            let o = scan_unit(
+                &space.units[ui as usize],
+                ui,
+                &space,
+                arch,
+                ub_wave,
+                holder_wave,
+                true,
+                deadline,
+            );
             tally.absorb(&o);
             timed_out |= o.timed_out;
-            if let Some((v, m)) = o.best {
-                if v < ub {
-                    ub = v;
-                }
-                let better = match &best {
-                    Some((bv, _)) => v < *bv,
-                    None => true,
-                };
-                if better {
-                    best = Some((v, m));
-                }
-            }
+            inc.absorb(ui, &o.best);
         }
         if timed_out {
             break;
         }
     }
 
-    match best {
-        Some((_, mapping)) => Ok(finish(start, shape, arch, mapping, tally, timed_out)),
+    match inc.best {
+        Some(mapping) => Ok(finish(start, shape, arch, mapping, tally, timed_out)),
         None if timed_out => Err(SolveError::Interrupted),
         None => Err(SolveError::NoFeasibleMapping),
     }
@@ -688,6 +869,8 @@ mod tests {
         assert_eq!(ca.nodes, cb.nodes, "{label}: nodes");
         assert_eq!(ca.combos_total, cb.combos_total, "{label}: combos_total");
         assert_eq!(ca.combos_pruned, cb.combos_pruned, "{label}: combos_pruned");
+        assert_eq!(ca.units_total, cb.units_total, "{label}: units_total");
+        assert_eq!(ca.units_skipped, cb.units_skipped, "{label}: units_skipped");
         assert_eq!(ca.proved_optimal, cb.proved_optimal, "{label}: proved");
     }
 
@@ -700,6 +883,38 @@ mod tests {
         for threads in [1, 2, 4] {
             let r = solve_with_threads(shape, &a, opts, threads).unwrap();
             assert_bit_identical(&r, &reference, &format!("threads={threads}"));
+        }
+    }
+
+    #[test]
+    fn bound_order_returns_the_canonical_answer_with_fewer_or_equal_units() {
+        // Includes a fully symmetric instance (64³ on a symmetric arch),
+        // where distinct units/combos attain the optimum at exactly equal
+        // objective values — the tie case the canonical-key machinery
+        // exists for. (Aggregate node-count claims live in
+        // `rust/tests/bound_order.rs`; per-instance they are not a
+        // theorem, see DESIGN.md §8.)
+        let a = arch();
+        let opts = SolverOptions::default();
+        for shape in [GemmShape::new(64, 96, 32), GemmShape::new(64, 64, 64)] {
+            let canonical = solve_configured(shape, &a, opts, 1, true, false, None).unwrap();
+            let bound = solve_configured(shape, &a, opts, 1, true, true, None).unwrap();
+            assert_eq!(bound.mapping, canonical.mapping, "{shape}: the answer moved");
+            assert_eq!(
+                bound.energy.normalized.to_bits(),
+                canonical.energy.normalized.to_bits(),
+                "{shape}: energy"
+            );
+            assert_eq!(
+                canonical.certificate.units_skipped, 0,
+                "the canonical baseline never unit-skips"
+            );
+            assert_eq!(bound.certificate.units_total, canonical.certificate.units_total);
+            assert!(
+                bound.certificate.units_total - bound.certificate.units_skipped
+                    <= canonical.certificate.units_total,
+                "{shape}: bound order scanned more units"
+            );
         }
     }
 
@@ -718,12 +933,60 @@ mod tests {
     }
 
     #[test]
+    fn deadline_interrupts_inside_a_huge_scan_without_per_combo_polling() {
+        // Regression for the per-combo `Instant::now()` regression budget:
+        // the kernel polls the clock only every TIME_CHECK_PERIOD nodes,
+        // and that poll alone must be able to interrupt a unit whose scan
+        // dwarfs the period. Divisor-rich extents + the unpruned lists
+        // make a single unit expand far past one period.
+        let shape = GemmShape::new(7560, 7560, 7560);
+        let a = Accelerator::custom("huge", 1 << 20, 4, 64);
+        let space = SearchSpace::build_with_dominance(shape, &a, true, false);
+        let mut target = None;
+        for ui in 0..space.units.len() as u32 {
+            let free = scan_unit(
+                &space.units[ui as usize],
+                ui,
+                &space,
+                &a,
+                f64::INFINITY,
+                NO_HOLDER,
+                false,
+                None,
+            );
+            if free.nodes > TIME_CHECK_PERIOD {
+                target = Some((ui, free.nodes));
+                break;
+            }
+        }
+        let (ui, free_nodes) = target.expect("premise: no unit out-scans one poll period");
+        let d = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let cut = scan_unit(
+            &space.units[ui as usize],
+            ui,
+            &space,
+            &a,
+            f64::INFINITY,
+            NO_HOLDER,
+            false,
+            Some(d),
+        );
+        assert!(cut.timed_out, "an expired deadline must interrupt the scan");
+        assert_eq!(
+            cut.nodes, TIME_CHECK_PERIOD,
+            "the very first period poll must fire (free scan: {free_nodes} nodes)"
+        );
+        assert!(cut.nodes < free_nodes, "the interrupt must land mid-scan");
+    }
+
+    #[test]
     fn dominance_pruning_preserves_the_optimum_and_never_adds_nodes() {
         let shape = GemmShape::new(64, 96, 32);
         let a = arch();
         let opts = SolverOptions::default();
-        let pruned = solve_configured(shape, &a, opts, 1, true, None).unwrap();
-        let raw = solve_configured(shape, &a, opts, 1, false, None).unwrap();
+        let pruned = solve_configured(shape, &a, opts, 1, true, true, None).unwrap();
+        let raw = solve_configured(shape, &a, opts, 1, false, true, None).unwrap();
         let (po, ro) = (pruned.energy.normalized, raw.energy.normalized);
         assert!((po - ro).abs() / ro < 1e-9, "pruning changed the optimum");
         assert!(
@@ -782,11 +1045,12 @@ mod tests {
         let shape = GemmShape::new(64, 96, 32);
         let a = arch();
         let opts = SolverOptions::default();
-        let unseeded = solve_configured(shape, &a, opts, 1, true, None).unwrap();
+        let unseeded = solve_configured(shape, &a, opts, 1, true, true, None).unwrap();
         let bound = super::super::seed::recost(&unseeded.mapping, shape, &a, opts.exact_pe)
             .expect("the optimum must re-cost on its own instance");
         for threads in [1usize, 2, 4] {
-            let seeded = solve_configured(shape, &a, opts, threads, true, Some(bound)).unwrap();
+            let seeded = solve_configured(shape, &a, opts, threads, true, true, Some(bound))
+                .unwrap();
             assert_eq!(seeded.mapping, unseeded.mapping, "threads={threads}");
             assert_eq!(
                 seeded.energy.normalized.to_bits(),
@@ -801,7 +1065,21 @@ mod tests {
         }
         // And the seeded serial reference pins the seeded engine.
         let serial = solve_serial_reference_seeded(shape, &a, opts, Some(bound)).unwrap();
-        let engine = solve_configured(shape, &a, opts, 4, true, Some(bound)).unwrap();
+        let engine = solve_configured(shape, &a, opts, 4, true, true, Some(bound)).unwrap();
         assert_bit_identical(&engine, &serial, "seeded engine vs seeded serial");
+    }
+
+    #[test]
+    fn shared_store_solves_are_bit_identical_to_storeless() {
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let opts = SolverOptions::default();
+        let plain = solve_with_threads(shape, &a, opts, 1).unwrap();
+        let store = std::sync::Arc::new(SharedCandidateStore::new());
+        let cold = solve_shared(shape, &a, opts, 1, None, &store).unwrap();
+        let warm = solve_shared(shape, &a, opts, 2, None, &store).unwrap();
+        assert_bit_identical(&cold, &plain, "cold store vs storeless");
+        assert_bit_identical(&warm, &plain, "warm store vs storeless");
+        assert!(store.hits() > 0, "the second solve must hit the store");
     }
 }

@@ -17,12 +17,18 @@
 //!    lists then give admissible lower bounds (sum of per-axis minima) and
 //!    a first-feasible-is-optimal scan on the last axis.
 //!
-//! The implementation is layered (DESIGN.md §3–§4): [`space`] enumerates
-//! the folded space — spatial-fanout units with prefetched,
-//! **Pareto-pruned** candidate lists — and [`engine`] runs the parallel
-//! branch-and-bound over it, fanning units across a scoped worker pool
-//! under a shared atomic incumbent with a wave-quantized determinism rule,
-//! so `solve()` is bit-identical for every `solve_threads` value. The
+//! The implementation is layered (DESIGN.md §3–§4, §8): [`space`]
+//! enumerates the folded space — spatial-fanout units with prefetched,
+//! **Pareto-pruned**, struct-of-arrays candidate lists, each unit and
+//! combo carrying its *exact* precomputed objective lower bound plus a
+//! static LB-ascending scan schedule — and [`engine`] runs the parallel
+//! branch-and-bound over it in that bound order, fanning units across a
+//! scoped worker pool under a wave-quantized incumbent state (bound +
+//! canonical holder key) whose tie rule provably pins the answer to the
+//! canonical scan's, so `solve()` is bit-identical for every
+//! `solve_threads` value *and* for the scan reordering. Candidate lists
+//! can additionally be shared across solves ([`SharedCandidateStore`],
+//! keyed by the accelerator's parameter fingerprint). The
 //! solver tracks a provable lower bound and the best feasible upper bound
 //! and emits a [`Certificate`]; `gap == 0` unless a time limit is hit.
 //!
@@ -41,11 +47,13 @@ pub mod seed;
 pub mod space;
 
 pub use bnb::solve;
-pub use candidates::{spatial_triples, AxisCandidate, CandidateCache};
+pub use candidates::{
+    spatial_triples, AxisCandidate, CandidateCache, CandidateList, SharedCandidateStore,
+};
 pub use engine::{
     default_seed_bounds, default_solve_threads, parse_seed_bounds_value, solve_configured,
-    solve_seeded, solve_serial_reference, solve_serial_reference_seeded, solve_with_threads,
-    SeedBound, SolveError, SolveResult, SolverOptions,
+    solve_engine, solve_seeded, solve_serial_reference, solve_serial_reference_seeded,
+    solve_shared, solve_with_threads, SeedBound, SolveError, SolveResult, SolverOptions,
 };
 pub use exhaustive::{enumerate_all, exhaustive_best, MappingVisitor};
 pub use seed::{plan_seed, recost, similarity_key, SeedPlan};
@@ -75,6 +83,13 @@ pub struct Certificate {
     pub combos_total: u64,
     /// Configurations pruned whole by their lower bound.
     pub combos_pruned: u64,
+    /// Spatial-fanout units considered (skip-checked or scanned).
+    pub units_total: u64,
+    /// Of those, units discarded whole by their precomputed exact lower
+    /// bound before any candidate list was touched — the bound-ordered
+    /// schedule's unit-level kill counter (DESIGN.md §8; always 0 for the
+    /// canonical-order A/B baseline, which never unit-skips).
+    pub units_skipped: u64,
     /// Whether the search ran to completion (gap provably 0).
     pub proved_optimal: bool,
 }

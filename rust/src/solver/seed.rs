@@ -40,6 +40,15 @@ use crate::mapping::{validate, Axis, GemmShape, Mapping};
 ///
 /// `exact_pe` must match the solve's [`super::SolverOptions::exact_pe`]:
 /// the bound is only valid over the space the solve actually searches.
+///
+/// Bit-equality contract with the scan kernel: the reduction below —
+/// `base = f_x + f_y; base + f_z` — is the flat SoA kernel's own
+/// arithmetic (`scan_unit`'s `base` / `base + fz[zi]`), and the space
+/// layer's precomputed combo bounds use the same order
+/// (`(min_f_x + min_f_y) + min_f_z`). Change one and you must change all
+/// three, or a donor that ties the optimum stops re-costing to the exact
+/// value the scan computes and the strictly-above seeding guarantee
+/// (DESIGN.md §6) silently breaks.
 pub fn recost(
     donor: &Mapping,
     shape: GemmShape,

@@ -9,13 +9,27 @@
 //!   under that triple);
 //! * **combos** — the 9 walking-axis pairs × 8 × 8 bypass combinations
 //!   ([`COMBOS_PER_UNIT`] = 576), identical for every unit and shared as
-//!   one canonical order so every consumer scans the space identically.
+//!   one canonical order so every consumer names combos identically.
 //!
 //! Candidate lists are built once (memoized across units — most lists are
-//! shared) through [`CandidateCache`], Pareto-pruned by default, and held
-//! in `Arc`s, so [`super::engine`]'s worker threads scan the same
-//! allocations instead of rebuilding per-thread copies. The space is plain
-//! data: building it does no search, and iterating it is side-effect-free.
+//! shared) through [`CandidateCache`], Pareto-pruned by default, held in
+//! `Arc`s so [`super::engine`]'s worker threads scan the same allocations
+//! instead of rebuilding per-thread copies, and optionally backed by a
+//! cross-solve [`SharedCandidateStore`] so batches of solves on one
+//! architecture build each list once in total. The space is plain data:
+//! building it does no search, and iterating it is side-effect-free.
+//!
+//! **Bound-ordered schedules** (DESIGN.md §8). Because the objective is
+//! separable, each combo has an *exact* lower bound — the sum of its three
+//! lists' minima — and each unit the minimum of those over its combos.
+//! Both are precomputed here at build time, along with two *static*
+//! LB-ascending scan orders (ties broken by canonical index): a per-unit
+//! combo schedule ([`TripleUnit::sched`]) and a whole-space unit schedule
+//! ([`SearchSpace::unit_sched`]). The engine scans in these orders so the
+//! incumbent tightens in the first wave and later units/combos die on a
+//! single `lb ≥ incumbent` comparison — the orders are data-dependent but
+//! deterministic and thread-count-independent, which is what lets the
+//! engine stay bit-identical while scanning far fewer nodes.
 //!
 //! **Completeness** (load-bearing for cross-shape seeding, DESIGN.md §6):
 //! every mapping that passes [`crate::mapping::validate`] for
@@ -29,7 +43,7 @@
 //! enumerated mapping, which is what makes it a *valid* starting
 //! incumbent for the engine's scan.
 
-use super::candidates::{spatial_triples, AxisCandidate, CandidateCache};
+use super::candidates::{spatial_triples, CandidateCache, CandidateList, SharedCandidateStore};
 use crate::arch::Accelerator;
 use crate::mapping::{Axis, Bypass, GemmShape, AXES};
 use std::sync::Arc;
@@ -40,34 +54,62 @@ pub const COMBOS_PER_UNIT: usize = 576;
 
 /// Per-axis lists indexed by the 4-bit flag key
 /// `is_alpha01 | is_alpha12 << 1 | b1 << 2 | b3 << 3`.
-type AxisLists = [[Arc<Vec<AxisCandidate>>; 16]; 3];
+type AxisLists = [[Arc<CandidateList>; 16]; 3];
 
-/// One engine work unit: a spatial fanout triple plus every candidate list
-/// its 576 combos can touch.
+/// One engine work unit: a spatial fanout triple, every candidate list its
+/// 576 combos can touch, and the precomputed combo bounds + scan schedule.
 pub struct TripleUnit {
     /// `(Ŝ_x, Ŝ_y, Ŝ_z)` with `Ŝ_x · Ŝ_y · Ŝ_z` = (a divisor of) `num_pe`.
     pub s: [u64; 3],
+    /// Exact objective lower bound over the whole unit:
+    /// `min` over combos of [`TripleUnit::combo_lb`] (`+∞` when no combo
+    /// has three non-empty lists). The engine skips the entire unit on a
+    /// single comparison against the incumbent.
+    pub lb: f64,
     lists: AxisLists,
+    /// Per-combo exact objective lower bound, indexed by canonical combo
+    /// index: `(min_f_x + min_f_y) + min_f_z` — the scan's own reduction
+    /// order, so the bound is bit-equal to the value the scan would
+    /// compute at the per-axis minima. `+∞` when any list is empty.
+    combo_lb: Box<[f64]>,
+    /// The unit's combo scan schedule: canonical combo indices sorted
+    /// LB-ascending, ties by canonical index (deterministic, static).
+    sched: Box<[u16]>,
 }
 
 impl TripleUnit {
     /// The candidate list axis `d` scans under the given combo.
     #[inline]
-    pub fn list(&self, d: Axis, a01: Axis, a12: Axis, b1: Bypass, b3: Bypass) -> &[AxisCandidate] {
+    pub fn list(&self, d: Axis, a01: Axis, a12: Axis, b1: Bypass, b3: Bypass) -> &CandidateList {
         let bits = (d == a01) as usize
             | ((d == a12) as usize) << 1
             | (b1.get(d) as usize) << 2
             | (b3.get(d) as usize) << 3;
-        self.lists[d.index()][bits].as_slice()
+        &self.lists[d.index()][bits]
+    }
+
+    /// Exact objective lower bound of the canonical combo `ci`.
+    #[inline]
+    pub fn combo_lb(&self, ci: usize) -> f64 {
+        self.combo_lb[ci]
+    }
+
+    /// The LB-ascending combo schedule (canonical indices).
+    #[inline]
+    pub fn sched(&self) -> &[u16] {
+        &self.sched
     }
 }
 
 /// Search-space telemetry (list construction and dominance pruning).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SpaceStats {
-    /// Distinct candidate lists materialized.
+    /// Distinct candidate lists this space references.
     pub lists_built: usize,
-    /// Candidates generated before dominance pruning.
+    /// Of those, lists answered by the cross-solve store (not built here).
+    pub lists_shared: usize,
+    /// Candidates generated before dominance pruning (locally built lists
+    /// only — store hits were tallied by the solve that built them).
     pub candidates_raw: u64,
     /// Candidates surviving dominance pruning (== raw when disabled).
     pub candidates_kept: u64,
@@ -75,11 +117,21 @@ pub struct SpaceStats {
 
 /// The fully enumerated, prefetched search space of one solve.
 pub struct SearchSpace {
+    /// Units in canonical enumeration order ([`spatial_triples`] order) —
+    /// canonical indices into this vector are the tie-break identity the
+    /// engine's determinism rests on.
     pub units: Vec<TripleUnit>,
-    /// The canonical combo order shared by every unit scan (all-resident
-    /// bypass combos first — they are feasible most often and establish a
-    /// strong incumbent early, letting the lower-bound pruning bite).
+    /// The canonical combo naming shared by every unit ([`combo_order`]):
+    /// position in this vector is the canonical combo index.
     pub combos: Vec<(Axis, Axis, Bypass, Bypass)>,
+    /// Unit scan schedule: canonical unit indices sorted by
+    /// ([`TripleUnit::lb`], canonical index) ascending — the bound-ordered
+    /// engine's wave order.
+    pub unit_sched: Vec<u32>,
+    /// The identity combo schedule `0..576` (the canonical-order A/B
+    /// baseline scans combos with this instead of each unit's
+    /// [`TripleUnit::sched`]).
+    pub canonical_sched: Box<[u16]>,
     pub stats: SpaceStats,
     /// List construction hit the build deadline and stopped early: the
     /// space is a prefix of the full enumeration, so nothing searched over
@@ -118,7 +170,27 @@ impl SearchSpace {
         dominance: bool,
         deadline: Option<Instant>,
     ) -> SearchSpace {
-        let mut cache = CandidateCache::with_dominance(arch, dominance);
+        Self::build_configured(shape, arch, exact_pe, dominance, deadline, None)
+    }
+
+    /// The fully configured build: [`SearchSpace::build_bounded`] plus an
+    /// optional cross-solve [`SharedCandidateStore`] the candidate lists
+    /// are fetched from / published to. The store is only consulted for
+    /// dominance-pruned builds (stored lists are always pruned); an
+    /// unpruned A/B build with a store simply builds locally.
+    pub fn build_configured(
+        shape: GemmShape,
+        arch: &Accelerator,
+        exact_pe: bool,
+        dominance: bool,
+        deadline: Option<Instant>,
+        store: Option<&Arc<SharedCandidateStore>>,
+    ) -> SearchSpace {
+        let mut cache = match store {
+            Some(s) if dominance => CandidateCache::with_store(arch, s.clone()),
+            _ => CandidateCache::with_dominance(arch, dominance),
+        };
+        let combos = combo_order();
         let mut truncated = false;
         let mut units: Vec<TripleUnit> = Vec::new();
         for (sx, sy, sz) in spatial_triples(shape, arch.num_pe, exact_pe) {
@@ -141,14 +213,24 @@ impl SearchSpace {
                     )
                 })
             });
-            units.push(TripleUnit { s, lists });
+            units.push(finish_unit(s, lists, &combos));
         }
+        // Unit schedule: LB-ascending, ties by canonical index (stable
+        // sort over an index vector that starts canonical).
+        let mut unit_sched: Vec<u32> = (0..units.len() as u32).collect();
+        unit_sched.sort_by(|&a, &b| {
+            let (la, lb) = (units[a as usize].lb, units[b as usize].lb);
+            la.total_cmp(&lb).then(a.cmp(&b))
+        });
         let (candidates_raw, candidates_kept) = cache.pruning_stats();
         SearchSpace {
             units,
-            combos: combo_order(),
+            combos,
+            unit_sched,
+            canonical_sched: (0..COMBOS_PER_UNIT as u16).collect(),
             stats: SpaceStats {
                 lists_built: cache.lists_built(),
+                lists_shared: cache.lists_shared(),
                 candidates_raw,
                 candidates_kept,
             },
@@ -161,9 +243,51 @@ impl SearchSpace {
     }
 }
 
-/// The canonical `(α01, α12, B1, B3)` scan order ([`COMBOS_PER_UNIT`]
-/// entries). Bypass combinations run all-resident first (see
-/// [`SearchSpace::combos`]); walking pairs run in `AXES` order.
+/// Assemble one unit: compute the exact per-combo lower bounds against the
+/// canonical combo order, the LB-sorted combo schedule, and the unit bound.
+fn finish_unit(
+    s: [u64; 3],
+    lists: AxisLists,
+    combos: &[(Axis, Axis, Bypass, Bypass)],
+) -> TripleUnit {
+    let mut unit = TripleUnit {
+        s,
+        lb: f64::INFINITY,
+        lists,
+        combo_lb: Vec::new().into_boxed_slice(),
+        sched: Vec::new().into_boxed_slice(),
+    };
+    let mut combo_lb = Vec::with_capacity(combos.len());
+    let mut lb = f64::INFINITY;
+    for &(a01, a12, b1, b3) in combos {
+        let fx = unit.list(Axis::X, a01, a12, b1, b3).min_f();
+        let fy = unit.list(Axis::Y, a01, a12, b1, b3).min_f();
+        let fz = unit.list(Axis::Z, a01, a12, b1, b3).min_f();
+        // The scan's own reduction order — `(f_x + f_y) + f_z` — so the
+        // bound equals the value the scan computes at the per-axis minima
+        // bit for bit. Any empty list contributes +∞ and poisons the sum.
+        let v = (fx + fy) + fz;
+        if v < lb {
+            lb = v;
+        }
+        combo_lb.push(v);
+    }
+    let mut sched: Vec<u16> = (0..combos.len() as u16).collect();
+    sched.sort_by(|&a, &b| {
+        let (la, lb) = (combo_lb[a as usize], combo_lb[b as usize]);
+        la.total_cmp(&lb).then(a.cmp(&b))
+    });
+    unit.lb = lb;
+    unit.combo_lb = combo_lb.into_boxed_slice();
+    unit.sched = sched.into_boxed_slice();
+    unit
+}
+
+/// The canonical `(α01, α12, B1, B3)` combo naming ([`COMBOS_PER_UNIT`]
+/// entries). Bypass combinations run all-resident first — historically the
+/// canonical *scan* order (they are feasible most often), now primarily
+/// the canonical tie-break identity the LB-sorted schedules resolve
+/// against; walking pairs run in `AXES` order.
 pub fn combo_order() -> Vec<(Axis, Axis, Bypass, Bypass)> {
     let mut residency_first: Vec<Bypass> = Bypass::all_combos().to_vec();
     residency_first.reverse();
@@ -212,6 +336,60 @@ mod tests {
         }
         assert!(!space.is_empty());
         assert!(space.stats.lists_built > 0);
+        assert_eq!(space.stats.lists_shared, 0, "no store was attached");
+    }
+
+    #[test]
+    fn combo_bounds_are_exact_list_minima_sums() {
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let space = SearchSpace::build(shape, &a, true);
+        for u in &space.units {
+            let mut min_lb = f64::INFINITY;
+            for (ci, &(a01, a12, b1, b3)) in space.combos.iter().enumerate() {
+                let fx = u.list(Axis::X, a01, a12, b1, b3).min_f();
+                let fy = u.list(Axis::Y, a01, a12, b1, b3).min_f();
+                let fz = u.list(Axis::Z, a01, a12, b1, b3).min_f();
+                let expect = (fx + fy) + fz;
+                let got = u.combo_lb(ci);
+                assert_eq!(got.to_bits(), expect.to_bits(), "combo {ci} bound drifted");
+                if got < min_lb {
+                    min_lb = got;
+                }
+            }
+            assert_eq!(u.lb.to_bits(), min_lb.to_bits(), "unit bound must be the combo min");
+        }
+    }
+
+    #[test]
+    fn schedules_are_lb_sorted_permutations_with_canonical_tie_break() {
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let space = SearchSpace::build(shape, &a, true);
+        // Unit schedule: a permutation, sorted by (lb, canonical index).
+        let mut seen: Vec<u32> = space.unit_sched.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..space.units.len() as u32).collect::<Vec<_>>());
+        for w in space.unit_sched.windows(2) {
+            let (la, lb_) = (space.units[w[0] as usize].lb, space.units[w[1] as usize].lb);
+            assert!(la < lb_ || (la == lb_ && w[0] < w[1]), "unit schedule out of order");
+        }
+        // Combo schedules likewise, per unit.
+        for u in &space.units {
+            let mut seen: Vec<u16> = u.sched().to_vec();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..COMBOS_PER_UNIT as u16).collect::<Vec<_>>());
+            for w in u.sched().windows(2) {
+                let (la, lb_) = (u.combo_lb(w[0] as usize), u.combo_lb(w[1] as usize));
+                // `==` covers the +∞ ties of infeasible combos too.
+                assert!(la < lb_ || (la == lb_ && w[0] < w[1]), "combo schedule out of order");
+            }
+        }
+        // The canonical baseline schedule is the identity.
+        assert_eq!(
+            space.canonical_sched.as_ref(),
+            (0..COMBOS_PER_UNIT as u16).collect::<Vec<_>>().as_slice()
+        );
     }
 
     #[test]
@@ -231,10 +409,36 @@ mod tests {
                     let rl = ru.list(d, a01, a12, b1, b3);
                     assert!(pl.len() <= rl.len());
                     if !pl.is_empty() {
-                        assert_eq!(pl[0], rl[0], "per-axis minimum must survive pruning");
+                        assert_eq!(pl.at(0), rl.at(0), "per-axis minimum must survive pruning");
+                        assert!(pl.min_l1 >= rl.min_l1, "pruned minima can only grow");
+                        assert!(pl.min_l3 >= rl.min_l3);
                     }
                 }
             }
         }
+    }
+
+    #[test]
+    fn store_backed_space_matches_the_storeless_build() {
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let plain = SearchSpace::build(shape, &a, true);
+        let store = Arc::new(SharedCandidateStore::new());
+        let cold = SearchSpace::build_configured(shape, &a, true, true, None, Some(&store));
+        assert_eq!(cold.stats.lists_shared, 0, "first build populates the store");
+        let warm = SearchSpace::build_configured(shape, &a, true, true, None, Some(&store));
+        assert_eq!(
+            warm.stats.lists_shared, warm.stats.lists_built,
+            "second build must be answered entirely by the store"
+        );
+        for (pu, wu) in plain.units.iter().zip(&warm.units) {
+            assert_eq!(pu.s, wu.s);
+            assert_eq!(pu.lb.to_bits(), wu.lb.to_bits());
+            assert_eq!(pu.sched(), wu.sched());
+            for ci in 0..COMBOS_PER_UNIT {
+                assert_eq!(pu.combo_lb(ci).to_bits(), wu.combo_lb(ci).to_bits());
+            }
+        }
+        assert_eq!(plain.unit_sched, warm.unit_sched);
     }
 }

@@ -1,0 +1,95 @@
+//! The crate's one FNV-1a implementation.
+//!
+//! Both persistent-identity producers — the accelerator's parameter
+//! fingerprint ([`crate::arch::Accelerator::param_fingerprint`]) and the
+//! coordinator's solve fingerprints — must hash with byte-identical rules,
+//! or cache/store keys computed in one place stop agreeing with keys
+//! computed in the other. They therefore share this primitive instead of
+//! each rolling their own. Run-to-run stable on purpose: `HashMap`'s
+//! SipHash is randomly keyed per process, so anything persisted or
+//! compared across processes needs its own stable hash.
+
+/// Incremental 64-bit FNV-1a over a canonical little-endian encoding.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0100_0000_01b3;
+
+    /// Start from the standard offset basis.
+    pub fn new() -> Fnv64 {
+        Fnv64(Self::OFFSET_BASIS)
+    }
+
+    /// Start from an arbitrary state — used to fold additional material
+    /// into an existing fingerprint (e.g. a shape into an arch half).
+    pub fn seeded(state: u64) -> Fnv64 {
+        Fnv64(state)
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.bytes(&[v]);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// IEEE-754 bit pattern: the exact float encoding (no rounding, `-0.0`
+    /// and `0.0` distinct — fingerprints must not conflate them).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_reference_vectors() {
+        // Standard FNV-1a test vectors (64-bit).
+        let hash = |s: &str| {
+            let mut h = Fnv64::new();
+            h.bytes(s.as_bytes());
+            h.finish()
+        };
+        assert_eq!(hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(hash("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(hash("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn seeded_composes_incrementally() {
+        let mut whole = Fnv64::new();
+        whole.u64(7);
+        whole.u64(9);
+        let mut half = Fnv64::new();
+        half.u64(7);
+        let mut resumed = Fnv64::seeded(half.finish());
+        resumed.u64(9);
+        assert_eq!(whole.finish(), resumed.finish());
+    }
+}

@@ -4,11 +4,13 @@
 //! and the deterministic worker pool the eval fan-out runs on.
 
 pub mod divisors;
+pub mod fnv;
 pub mod parallel;
 pub mod rng;
 pub mod stats;
 
 pub use divisors::{divisors, divisors_up_to, factorize, gcd, num_divisors, ordered_factor_triples};
+pub use fnv::Fnv64;
 pub use parallel::{default_jobs, ordered_map};
 pub use rng::Rng;
 pub use stats::{geomean, median, percentile, Summary};

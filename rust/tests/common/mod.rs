@@ -1,15 +1,84 @@
 //! Helpers shared across the integration-test binaries (each test file is
 //! its own crate, so this lives in `tests/common/` — a directory module,
-//! which cargo does not treat as a test target itself).
+//! which cargo does not treat as a test target itself). Not every binary
+//! uses every helper, hence the `dead_code` allowances.
+
+use goma::arch::Accelerator;
+use goma::mapping::GemmShape;
+use goma::solver::SolveResult;
+use goma::util::Rng;
 
 /// Worker-pool size for the mapping service under test. CI runs the whole
 /// suite at both `GOMA_TEST_WORKERS=1` (serial degenerate pool) and `=4`
 /// (sharded), so shard/concurrency regressions cannot land green by only
 /// passing the single-worker path.
+#[allow(dead_code)]
 pub fn test_workers() -> usize {
     std::env::var("GOMA_TEST_WORKERS")
         .ok()
         .and_then(|v| v.parse::<usize>().ok())
         .filter(|&n| n >= 1)
         .unwrap_or(4)
+}
+
+/// Random small-but-composite extent for solver property suites. The pool
+/// is deliberately tie-rich: equal draws across axes produce symmetric
+/// shapes whose optimum is attained at exactly equal objective values in
+/// several units/combos — the case the engine's canonical-key tie
+/// resolution exists for.
+#[allow(dead_code)]
+pub fn rand_extent(rng: &mut Rng) -> u64 {
+    let choices = [4u64, 6, 8, 12, 16, 24, 32];
+    *rng.choose(&choices).unwrap()
+}
+
+#[allow(dead_code)]
+pub fn rand_shape(rng: &mut Rng) -> GemmShape {
+    GemmShape::new(rand_extent(rng), rand_extent(rng), rand_extent(rng))
+}
+
+/// Random small accelerator for solver property suites. The regfile pool
+/// deliberately includes the 1- and 2-word Gemmini-style cases where only
+/// bypass-heavy mappings are feasible — historically where list-pruning
+/// bugs would hide. `prefix` keeps instance names distinct per suite.
+#[allow(dead_code)]
+pub fn rand_arch(rng: &mut Rng, prefix: &str, i: u64) -> Accelerator {
+    let pes = [2u64, 4, 8, 16];
+    let rf = [1u64, 2, 8, 64, 256];
+    let sram = [1u64 << 10, 1 << 12, 1 << 14];
+    Accelerator::custom(
+        &format!("{prefix}{i}"),
+        *rng.choose(&sram).unwrap(),
+        *rng.choose(&pes).unwrap(),
+        *rng.choose(&rf).unwrap(),
+    )
+}
+
+/// The one bit-identity assertion the property suites share: every field
+/// the engine promises is thread-/schedule-/store-invariant, including
+/// the full certificate. Single-sourced so a new certificate field cannot
+/// be asserted in one suite and silently skipped in another.
+#[allow(dead_code)]
+pub fn assert_bit_identical(a: &SolveResult, b: &SolveResult, label: &str) {
+    let (ca, cb) = (&a.certificate, &b.certificate);
+    assert_eq!(a.mapping, b.mapping, "{label}: mapping");
+    assert_eq!(
+        a.energy.normalized.to_bits(),
+        b.energy.normalized.to_bits(),
+        "{label}: normalized energy"
+    );
+    assert_eq!(
+        a.energy.total_pj.to_bits(),
+        b.energy.total_pj.to_bits(),
+        "{label}: total energy"
+    );
+    assert_eq!(ca.upper_bound.to_bits(), cb.upper_bound.to_bits(), "{label}: upper bound");
+    assert_eq!(ca.lower_bound.to_bits(), cb.lower_bound.to_bits(), "{label}: lower bound");
+    assert_eq!(ca.gap.to_bits(), cb.gap.to_bits(), "{label}: gap");
+    assert_eq!(ca.nodes, cb.nodes, "{label}: nodes");
+    assert_eq!(ca.combos_total, cb.combos_total, "{label}: combos_total");
+    assert_eq!(ca.combos_pruned, cb.combos_pruned, "{label}: combos_pruned");
+    assert_eq!(ca.units_total, cb.units_total, "{label}: units_total");
+    assert_eq!(ca.units_skipped, cb.units_skipped, "{label}: units_skipped");
+    assert_eq!(ca.proved_optimal, cb.proved_optimal, "{label}: proved_optimal");
 }

@@ -15,31 +15,7 @@ use goma::solver::{recost, solve_configured, SeedBound, SolveError, SolverOption
 use goma::util::Rng;
 
 mod common;
-use common::test_workers;
-
-/// Random small-but-composite extent.
-fn rand_extent(rng: &mut Rng) -> u64 {
-    let choices = [4u64, 6, 8, 12, 16, 24, 32];
-    *rng.choose(&choices).unwrap()
-}
-
-fn rand_shape(rng: &mut Rng) -> GemmShape {
-    GemmShape::new(rand_extent(rng), rand_extent(rng), rand_extent(rng))
-}
-
-/// Random small accelerator, same pool as the engine property suite —
-/// including the 1-/2-word bypass-forcing regfiles.
-fn rand_arch(rng: &mut Rng, i: u64) -> Accelerator {
-    let pes = [2u64, 4, 8, 16];
-    let rf = [1u64, 2, 8, 64, 256];
-    let sram = [1u64 << 10, 1 << 12, 1 << 14];
-    Accelerator::custom(
-        &format!("seedprop{i}"),
-        *rng.choose(&sram).unwrap(),
-        *rng.choose(&pes).unwrap(),
-        *rng.choose(&rf).unwrap(),
-    )
-}
+use common::{rand_arch, rand_shape, test_workers};
 
 /// The headline metamorphic property: over ≥ 100 seeded random
 /// `(shape, arch)` instances, a seeded solve is bit-identical to the
@@ -56,13 +32,13 @@ fn property_seeded_solve_is_bit_identical_with_fewer_or_equal_nodes() {
     while seeded_runs < 100 && draws < 600 {
         draws += 1;
         let shape = rand_shape(&mut rng);
-        let arch = rand_arch(&mut rng, draws);
-        let Ok(unseeded) = solve_configured(shape, &arch, opts, 1, true, None) else {
+        let arch = rand_arch(&mut rng, "seedprop", draws);
+        let Ok(unseeded) = solve_configured(shape, &arch, opts, 1, true, true, None) else {
             continue;
         };
         let mut donors: Vec<Mapping> = vec![unseeded.mapping];
         let related = GemmShape::new(shape.x * 2, shape.y, shape.z);
-        if let Ok(r) = solve_configured(related, &arch, opts, 1, true, None) {
+        if let Ok(r) = solve_configured(related, &arch, opts, 1, true, true, None) {
             donors.push(r.mapping);
         }
         for donor in &donors {
@@ -71,7 +47,7 @@ fn property_seeded_solve_is_bit_identical_with_fewer_or_equal_nodes() {
             };
             seeded_runs += 1;
             let label = format!("draw {draws} {shape} on {}", arch.name);
-            let seeded = solve_configured(shape, &arch, opts, 1, true, Some(bound))
+            let seeded = solve_configured(shape, &arch, opts, 1, true, true, Some(bound))
                 .unwrap_or_else(|e| panic!("{label}: seeded solve failed: {e}"));
             assert_eq!(seeded.mapping, unseeded.mapping, "{label}: mapping");
             assert_eq!(
@@ -95,7 +71,7 @@ fn property_seeded_solve_is_bit_identical_with_fewer_or_equal_nodes() {
             // seeded solves — bit-identical at 2 and 4 threads too.
             if seeded_runs % 8 == 0 {
                 for threads in [2usize, 4] {
-                    let t = solve_configured(shape, &arch, opts, threads, true, Some(bound))
+                    let t = solve_configured(shape, &arch, opts, threads, true, true, Some(bound))
                         .unwrap_or_else(|e| panic!("{label} threads={threads}: {e}"));
                     assert_eq!(t.mapping, seeded.mapping, "{label} threads={threads}");
                     assert_eq!(
@@ -147,24 +123,24 @@ fn an_invalid_too_tight_bound_destroys_the_search() {
     let shape = GemmShape::new(64, 96, 32);
     let arch = Accelerator::custom("tight", 16 * 1024, 16, 64);
     let opts = SolverOptions::default();
-    let honest = solve_configured(shape, &arch, opts, 1, true, None).unwrap();
+    let honest = solve_configured(shape, &arch, opts, 1, true, true, None).unwrap();
     let valid = recost(&honest.mapping, shape, &arch, opts.exact_pe).unwrap();
     // Half the optimum's objective: below every feasible mapping's value.
     let poison = SeedBound { objective: valid.objective * 0.5 };
     assert_eq!(
-        solve_configured(shape, &arch, opts, 1, true, Some(poison)).unwrap_err(),
+        solve_configured(shape, &arch, opts, 1, true, true, Some(poison)).unwrap_err(),
         SolveError::NoFeasibleMapping,
         "an invalid bound silently prunes the whole feasible space"
     );
     // Degenerate case: a zero bound wipes out everything too.
     let zero = SeedBound { objective: 0.0 };
     assert_eq!(
-        solve_configured(shape, &arch, opts, 1, true, Some(zero)).unwrap_err(),
+        solve_configured(shape, &arch, opts, 1, true, true, Some(zero)).unwrap_err(),
         SolveError::NoFeasibleMapping
     );
     // Whereas the *valid* bound — even though it ties the optimum exactly —
     // leaves the result bit-identical.
-    let seeded = solve_configured(shape, &arch, opts, 1, true, Some(valid)).unwrap();
+    let seeded = solve_configured(shape, &arch, opts, 1, true, true, Some(valid)).unwrap();
     assert_eq!(seeded.mapping, honest.mapping);
     assert_eq!(seeded.energy.normalized.to_bits(), honest.energy.normalized.to_bits());
 }

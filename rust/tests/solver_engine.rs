@@ -14,54 +14,13 @@
 //! Hand-rolled generators (the offline registry has no proptest); every
 //! property sweeps seeded random draws and prints the failing instance.
 
-use goma::arch::Accelerator;
-use goma::mapping::GemmShape;
 use goma::solver::{
-    exhaustive_best, solve_configured, solve_serial_reference, solve_with_threads, SolveResult,
-    SolverOptions,
+    exhaustive_best, solve_configured, solve_serial_reference, solve_with_threads, SolverOptions,
 };
 use goma::util::Rng;
 
-/// Random small-but-composite extent.
-fn rand_extent(rng: &mut Rng) -> u64 {
-    let choices = [4u64, 6, 8, 12, 16, 24, 32];
-    *rng.choose(&choices).unwrap()
-}
-
-fn rand_shape(rng: &mut Rng) -> GemmShape {
-    GemmShape::new(rand_extent(rng), rand_extent(rng), rand_extent(rng))
-}
-
-/// Random small accelerator. The regfile pool deliberately includes the
-/// 1- and 2-word Gemmini-style cases where only bypass-heavy mappings are
-/// feasible — historically where list-pruning bugs would hide.
-fn rand_arch(rng: &mut Rng, i: u64) -> Accelerator {
-    let pes = [2u64, 4, 8, 16];
-    let rf = [1u64, 2, 8, 64, 256];
-    let sram = [1u64 << 10, 1 << 12, 1 << 14];
-    Accelerator::custom(
-        &format!("engprop{i}"),
-        *rng.choose(&sram).unwrap(),
-        *rng.choose(&pes).unwrap(),
-        *rng.choose(&rf).unwrap(),
-    )
-}
-
-fn assert_bit_identical(a: &SolveResult, b: &SolveResult, label: &str) {
-    let (ca, cb) = (&a.certificate, &b.certificate);
-    assert_eq!(a.mapping, b.mapping, "{label}: mapping");
-    let (ea, eb) = (a.energy.normalized, b.energy.normalized);
-    assert_eq!(ea.to_bits(), eb.to_bits(), "{label}: normalized energy");
-    let (ta, tb) = (a.energy.total_pj, b.energy.total_pj);
-    assert_eq!(ta.to_bits(), tb.to_bits(), "{label}: total energy");
-    assert_eq!(ca.upper_bound.to_bits(), cb.upper_bound.to_bits(), "{label}: upper bound");
-    assert_eq!(ca.lower_bound.to_bits(), cb.lower_bound.to_bits(), "{label}: lower bound");
-    assert_eq!(ca.gap.to_bits(), cb.gap.to_bits(), "{label}: gap");
-    assert_eq!(ca.nodes, cb.nodes, "{label}: nodes");
-    assert_eq!(ca.combos_total, cb.combos_total, "{label}: combos_total");
-    assert_eq!(ca.combos_pruned, cb.combos_pruned, "{label}: combos_pruned");
-    assert_eq!(ca.proved_optimal, cb.proved_optimal, "{label}: proved_optimal");
-}
+mod common;
+use common::{assert_bit_identical, rand_arch, rand_shape};
 
 #[test]
 fn property_engine_bit_identical_across_threads() {
@@ -70,7 +29,7 @@ fn property_engine_bit_identical_across_threads() {
     let mut solved = 0;
     for i in 0..14 {
         let shape = rand_shape(&mut rng);
-        let arch = rand_arch(&mut rng, i);
+        let arch = rand_arch(&mut rng, "engprop", i);
         let reference = solve_serial_reference(shape, &arch, opts);
         for threads in [1usize, 2, 4] {
             let engine = solve_with_threads(shape, &arch, opts, threads);
@@ -102,7 +61,7 @@ fn property_dominance_pruned_search_matches_exhaustive() {
     let mut verified = 0;
     for i in 0..10 {
         let shape = rand_shape(&mut rng);
-        let arch = rand_arch(&mut rng, 100 + i);
+        let arch = rand_arch(&mut rng, "engprop", 100 + i);
         // Threads = 2 so the pooled path (not just the inline degenerate
         // case) is what gets checked against ground truth.
         let engine = solve_with_threads(shape, &arch, opts, 2);
@@ -138,9 +97,9 @@ fn property_pruning_never_expands_more_nodes_or_moves_the_optimum() {
     let opts = SolverOptions::default();
     for i in 0..8 {
         let shape = rand_shape(&mut rng);
-        let arch = rand_arch(&mut rng, 200 + i);
-        let pruned = solve_configured(shape, &arch, opts, 1, true, None);
-        let raw = solve_configured(shape, &arch, opts, 1, false, None);
+        let arch = rand_arch(&mut rng, "engprop", 200 + i);
+        let pruned = solve_configured(shape, &arch, opts, 1, true, true, None);
+        let raw = solve_configured(shape, &arch, opts, 1, false, true, None);
         match (pruned, raw) {
             (Ok(p), Ok(r)) => {
                 let (po, ro) = (p.energy.normalized, r.energy.normalized);

@@ -116,11 +116,14 @@ fn infeasible_outcomes_persist_as_negative_entries() {
 #[test]
 fn version_mismatch_is_rejected_wholesale() {
     let dir = tmp_dir("version");
-    // Pre-v3 stores (and any foreign file) must be ignored, not misparsed —
-    // the v2 case is the live migration path of the v3 format bump.
+    // Pre-v4 stores (and any foreign file) must be ignored, not misparsed —
+    // the v3 case is the live migration path of the v4 format bump (the
+    // bound-ordered engine changed every effort counter and added the
+    // unit-level counters to the persisted certificate).
     for old in [
         "# goma-warm-cache v0\n00aa\terr\tinfeasible\n",
         "# goma-warm-cache v2\n00aa\terr\tinfeasible\n",
+        "# goma-warm-cache v3\n00aa\terr\t00bb\tinfeasible\n",
     ] {
         std::fs::write(dir.join(WARM_CACHE_FILE), old).unwrap();
         let h = spawn_with(&dir);
