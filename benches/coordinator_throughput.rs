@@ -9,7 +9,11 @@
 //! (DESIGN.md §8: the same batch solved with per-solve candidate lists
 //! vs. one `SharedCandidateStore` across the batch — bit-identical
 //! answers asserted, speedup and store hit counts recorded into the same
-//! JSON); then exercises the persistent warm-start path on
+//! JSON); runs a **wire front-door leg** (the same keys through a
+//! [`MappingServer`] over real HTTP — per-request p50/p99 latency and
+//! throughput recorded into the JSON's `wire` field, answers asserted
+//! bit-identical to the in-process path); then exercises the persistent
+//! warm-start path on
 //! the `goma serve --workload 1` key set (identical fingerprints, so a
 //! cache dir populated by that CLI in another process — CI carries one
 //! across jobs — genuinely warms the first spawn): the second spawn must
@@ -21,10 +25,11 @@
 //!        (default `target/goma_warm_bench`).
 
 use goma::arch::Accelerator;
-use goma::coordinator::MappingService;
+use goma::coordinator::wire::{self, ArchSpec, SolveSpec, WireReply};
+use goma::coordinator::{MappingServer, MappingService, ServeOptions};
 use goma::mapping::GemmShape;
 use goma::solver::{
-    solve_shared, solve_with_threads, SharedCandidateStore, SolveResult, SolverOptions,
+    solve_with_threads, SharedCandidateStore, SolveRequest, SolveResult, SolverOptions,
 };
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -146,7 +151,12 @@ fn candidate_store_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
     let shared: Vec<SolveResult> = shapes
         .iter()
         .map(|&s| {
-            solve_shared(s, arch, opts, 1, None, &store).expect("bench instances are feasible")
+            SolveRequest::new(s, arch)
+                .options(opts)
+                .threads(1)
+                .store(&store)
+                .solve()
+                .expect("bench instances are feasible")
         })
         .collect();
     let shared_s = t.elapsed().as_secs_f64();
@@ -179,6 +189,82 @@ fn candidate_store_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
         store.lists_held(),
         store.hits(),
         store.misses()
+    )
+}
+
+/// Nearest-rank percentile over an already-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+/// The network-front-door leg: the same keys pushed through a
+/// [`MappingServer`] over real HTTP — one cold pass, one cached pass —
+/// recording per-request latency percentiles and throughput, and
+/// asserting every wire answer bit-identical to the in-process path
+/// (certificate counters included).
+fn wire_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
+    let service = MappingService::default().with_workers(4).spawn();
+    let server = MappingServer::spawn(service, ServeOptions::default()).expect("bind");
+    let addr = server.addr();
+    let spec_for = |s: GemmShape| {
+        SolveSpec::new(
+            s,
+            ArchSpec::Custom {
+                name: arch.name.clone(),
+                sram_words: arch.sram_words,
+                num_pe: arch.num_pe,
+                regfile_words: arch.regfile_words,
+            },
+        )
+    };
+    let t = Instant::now();
+    let mut lats = Vec::new();
+    let mut wire_results = Vec::new();
+    for pass in 0..2 {
+        for &s in shapes {
+            let body = spec_for(s).to_json().to_text();
+            let t0 = Instant::now();
+            let (status, reply) =
+                wire::http_call(addr, "POST", "/solve", &[], &body).expect("wire call");
+            lats.push(t0.elapsed().as_secs_f64());
+            match wire::parse_reply(status, &reply).expect("well-formed reply") {
+                WireReply::Ok(r) => {
+                    if pass == 0 {
+                        wire_results.push(*r);
+                    }
+                }
+                other => panic!("unexpected wire reply: {other:?}"),
+            }
+        }
+    }
+    let total_s = t.elapsed().as_secs_f64();
+    for (s, w) in shapes.iter().zip(&wire_results) {
+        let local = server.service().map(*s, arch.clone()).expect("bench instances are feasible");
+        assert_eq!(w.mapping, local.mapping, "the wire changed the mapping for {s}");
+        assert_eq!(
+            w.energy.normalized.to_bits(),
+            local.energy.normalized.to_bits(),
+            "the wire changed the energy for {s}"
+        );
+        assert_eq!(w.certificate, local.certificate, "the wire changed the certificate for {s}");
+    }
+    let sheds = server.metrics().shed_overload() + server.metrics().shed_quota();
+    server.shutdown();
+    lats.sort_by(f64::total_cmp);
+    let (p50, p99) = (percentile(&lats, 0.50), percentile(&lats, 0.99));
+    let rps = lats.len() as f64 / total_s.max(1e-12);
+    println!(
+        "wire front door ({} requests over 2 passes): p50 {p50:.6}s  p99 {p99:.6}s  \
+         {rps:.1} req/s  ({sheds} shed)",
+        lats.len()
+    );
+    format!(
+        "{{\"requests\": {}, \"p50_s\": {p50}, \"p99_s\": {p99}, \
+         \"throughput_rps\": {rps}, \"shed\": {sheds}}}",
+        lats.len()
     )
 }
 
@@ -233,12 +319,18 @@ fn main() {
     let store_n = if smoke { 8 } else { 24 };
     let store_record = candidate_store_leg(&arch, &full[..store_n]);
 
+    // Wire front-door leg: latency percentiles + throughput over HTTP,
+    // answers asserted bit-identical to the in-process path.
+    let wire_record = wire_leg(&arch, &full[..store_n]);
+
     let json = format!(
         "{{\n  \"bench\": \"coordinator_seeding\",\n  \"smoke\": {},\n  \
-         \"legs\": [\n    {}\n  ],\n  \"candidate_store\": {}\n}}\n",
+         \"legs\": [\n    {}\n  ],\n  \"candidate_store\": {},\n  \
+         \"wire\": {}\n}}\n",
         smoke,
         ab_records.join(",\n    "),
-        store_record
+        store_record,
+        wire_record
     );
     // Anchored to the workspace root (CARGO_MANIFEST_DIR is `rust/`), like
     // BENCH_solver.json: cargo runs bench binaries with the package dir as

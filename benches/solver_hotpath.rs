@@ -3,7 +3,7 @@
 //! Times `solver::solve` across every (workload GEMM × matching template)
 //! pair at engine thread counts 1 and 4, plus a dominance-pruning-off
 //! baseline leg, a **canonical-order baseline leg**
-//! (`solve_configured(…, bound_order = false, …)` — the A/B hook for the
+//! (`SolveRequest::bound_order(false)` — the A/B hook for the
 //! bound-ordered schedule of DESIGN.md §8) and the O(1) energy evaluation
 //! itself, printing latency distributions. Emits `BENCH_solver.json`
 //! (geomean solve time, expanded nodes, combos pruned, unit-skip rate,
@@ -21,7 +21,7 @@
 use goma::arch::{center_templates, edge_templates};
 use goma::energy::evaluate;
 use goma::mapping::GemmShape;
-use goma::solver::{default_solve_threads, solve_configured, SolverOptions};
+use goma::solver::{default_solve_threads, SolveRequest, SolverOptions};
 use goma::timeloop::score_unchecked;
 use goma::util::{geomean, percentile};
 use goma::workloads::{center_workloads, edge_workloads, Deployment};
@@ -49,15 +49,11 @@ fn time_solves(
     let mut leg = Leg::default();
     for (shape, arch) in pairs {
         let t = Instant::now();
-        let r = solve_configured(
-            *shape,
-            arch,
-            SolverOptions::default(),
-            threads,
-            dominance,
-            bound_order,
-            None,
-        );
+        let r = SolveRequest::new(*shape, arch)
+            .threads(threads)
+            .dominance(dominance)
+            .bound_order(bound_order)
+            .solve();
         let dt = t.elapsed().as_secs_f64();
         if let Ok(r) = r {
             leg.times.push(dt);
@@ -239,9 +235,7 @@ fn main() {
     // O(1) objective evaluation latency (the paper's constant-time claim).
     let shape = GemmShape::mnk(131072, 28672, 8192);
     let arch = goma::arch::a100_like();
-    let m = solve_configured(shape, &arch, SolverOptions::default(), 1, true, true, None)
-        .unwrap()
-        .mapping;
+    let m = SolveRequest::new(shape, &arch).threads(1).solve().unwrap().mapping;
     let n = if smoke { 20_000 } else { 200_000 };
     let t = Instant::now();
     let mut acc = 0.0;

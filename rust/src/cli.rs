@@ -6,11 +6,11 @@
 //! has no clap.
 
 use crate::arch;
-use crate::coordinator::MappingService;
+use crate::coordinator::wire::SolveSpec;
+use crate::coordinator::{MappingServer, MappingService, ServeOptions};
 use crate::experiments::cases::{cached_jobs_threads, normalize, summarize_normalized};
 use crate::experiments::Profile;
-use crate::mapping::GemmShape;
-use crate::solver::{solve, SolverOptions};
+use crate::solver::{SolveRequest, SolverOptions};
 use std::collections::HashMap;
 
 pub const USAGE: &str = "\
@@ -18,11 +18,14 @@ goma — globally optimal GEMM mapping for spatial accelerators
 
 USAGE:
     goma solve --m <M> --n <N> --k <K> [--arch eyeriss|gemmini|a100|tpu] [--solve-threads <N>]
-               [--seed-bounds on|off]
+               [--seed-bounds on|off] [--deadline-ms <MS>]
     goma templates
     goma workloads
     goma eval [--jobs <N>] [--profile fast|paper] [--refresh] [--solve-threads <N>]
               [--seed-bounds on|off]
+    goma serve --listen <ADDR> [--workers <N>] [--solve-threads <N>] [--cache-dir <dir>]
+               [--seed-bounds on|off] [--conn-threads <N>] [--admission-threshold <N>]
+               [--client-quota <N>]
     goma serve [--arch <name>] [--workload <0-11>] [--workers <N>] [--solve-threads <N>]
                [--cache-dir <dir>] [--seed-bounds on|off]
     goma exec [--name <artifact>] [--dir <artifacts-dir>]
@@ -53,68 +56,44 @@ pub fn parse_flags(args: &[String]) -> HashMap<String, String> {
 }
 
 /// Resolve a template name, falling back to Eyeriss-like with a warning.
+/// The name table itself lives in [`crate::coordinator::wire`] — one
+/// source of truth with the wire protocol; the lenient fallback is
+/// CLI-only (the wire rejects unknown templates as a 400 instead).
 pub fn pick_arch(name: &str) -> crate::arch::Accelerator {
-    match name {
-        "eyeriss" | "eyeriss-like" => arch::eyeriss_like(),
-        "gemmini" | "gemmini-like" => arch::gemmini_like(),
-        "a100" | "a100-like" => arch::a100_like(),
-        "tpu" | "tpu-v1-like" => arch::tpu_v1_like(),
-        other => {
-            eprintln!("unknown arch '{other}', using eyeriss-like");
-            arch::eyeriss_like()
-        }
-    }
+    crate::coordinator::wire::lookup_template(name).unwrap_or_else(|| {
+        eprintln!("unknown arch '{name}', using eyeriss-like");
+        arch::eyeriss_like()
+    })
 }
 
-fn req_u64(flags: &HashMap<String, String>, key: &str) -> u64 {
-    flags
-        .get(key)
-        .unwrap_or_else(|| panic!("missing required flag --{key}"))
-        .parse()
-        .unwrap_or_else(|_| panic!("flag --{key} must be an integer"))
-}
-
-/// Parse `--solve-threads`: the engine's intra-solve thread count. `0`
-/// (the no-flag default) means auto (`GOMA_SOLVE_THREADS`, else serial);
-/// the solve result is bit-identical for every value.
+/// Parse `--solve-threads` (shared with the wire schema; `0` = auto).
 fn parse_solve_threads(flags: &HashMap<String, String>) -> anyhow::Result<usize> {
-    match flags.get("solve-threads") {
-        Some(s) => match s.parse::<usize>() {
-            Ok(n) if n >= 1 => Ok(n),
-            _ => anyhow::bail!("--solve-threads must be a positive integer, got '{s}'"),
-        },
-        None => Ok(0),
-    }
+    crate::coordinator::wire::parse_solve_threads_flag(flags).map_err(anyhow::Error::msg)
 }
 
-/// Parse `--seed-bounds on|off`: the cross-shape warm-bound switch for
-/// batch solving layers. `None` (the no-flag default) resolves through
-/// `GOMA_SEED_BOUNDS`, else on. Mappings and energies are bit-identical
+/// Parse `--seed-bounds on|off` (shared with the wire schema; absent =
+/// auto via `GOMA_SEED_BOUNDS`). Mappings and energies are bit-identical
 /// either way (DESIGN.md §6), so for a single cold `goma solve` — which
 /// has no donor context — the flag is validated but changes nothing.
 fn parse_seed_bounds(flags: &HashMap<String, String>) -> anyhow::Result<Option<bool>> {
-    match flags.get("seed-bounds") {
-        Some(s) => match crate::solver::parse_seed_bounds_value(s) {
-            Some(b) => Ok(Some(b)),
-            None => anyhow::bail!("--seed-bounds must be on|off, got '{s}'"),
-        },
-        None => Ok(None),
-    }
+    crate::coordinator::wire::parse_seed_bounds_flag(flags).map_err(anyhow::Error::msg)
 }
 
 fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let shape = GemmShape::mnk(
-        req_u64(flags, "m"),
-        req_u64(flags, "n"),
-        req_u64(flags, "k"),
-    );
-    let acc = pick_arch(flags.get("arch").map(String::as_str).unwrap_or("eyeriss"));
-    let opts = SolverOptions {
-        solve_threads: parse_solve_threads(flags)?,
-        seed_bounds: parse_seed_bounds(flags)?,
-        ..SolverOptions::default()
+    // The flag set and the wire's POST /solve body parse into the same
+    // SolveSpec — `goma solve` is the in-process execution of exactly the
+    // request a server would receive.
+    let spec = SolveSpec::from_flags(flags).map_err(anyhow::Error::msg)?;
+    let acc = match &spec.arch {
+        crate::coordinator::wire::ArchSpec::Template(name) => pick_arch(name),
+        custom => custom.resolve().map_err(anyhow::Error::msg)?,
     };
-    let r = solve(shape, &acc, opts)?;
+    let mut opts = spec.solver_options(SolverOptions::default());
+    if let Some(d) = spec.deadline() {
+        opts.time_limit = Some(opts.time_limit.map_or(d, |l| l.min(d)));
+    }
+    let shape = spec.shape;
+    let r = SolveRequest::new(shape, &acc).options(opts).solve()?;
     println!("workload : {shape}");
     println!("arch     : {}", acc.name);
     println!("mapping  : {}", r.mapping.describe());
@@ -220,11 +199,22 @@ fn cmd_eval(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The sharded mapping service on one workload: all GEMMs submitted as one
-/// batch (duplicates coalesce), distinct keys fanned across `--workers`
-/// solver threads, and — with `--cache-dir` — results persisted so the next
-/// process starts warm.
+/// `goma serve` in its two modes.
+///
+/// With `--listen ADDR`: the network front door — spawn the service
+/// behind a [`MappingServer`] speaking the wire protocol
+/// ([`crate::coordinator::wire`]) and block until killed. The bound
+/// address is printed (and flushed) as the first stdout line so wrappers
+/// can scrape the resolved port from `--listen 127.0.0.1:0`.
+///
+/// Without `--listen`: the original demo mode — one workload submitted as
+/// a batch (duplicates coalesce), distinct keys fanned across `--workers`
+/// solver threads, and — with `--cache-dir` — results persisted so the
+/// next process starts warm.
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    if flags.contains_key("listen") {
+        return cmd_serve_listen(flags);
+    }
     let acc = pick_arch(flags.get("arch").map(String::as_str).unwrap_or("eyeriss"));
     let idx: usize = match flags.get("workload") {
         Some(s) => match s.parse() {
@@ -303,6 +293,44 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The `--listen` half of [`cmd_serve`]: service + network front door.
+fn cmd_serve_listen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let workers = match flags.get("workers") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => anyhow::bail!("--workers must be a positive integer, got '{s}'"),
+        },
+        None => crate::util::parallel::default_jobs(),
+    };
+    let solve_opts = SolverOptions {
+        solve_threads: parse_solve_threads(flags)?,
+        seed_bounds: parse_seed_bounds(flags)?,
+        ..SolverOptions::default()
+    };
+    let serve_opts = ServeOptions::from_flags(flags).map_err(anyhow::Error::msg)?;
+    let mut service = MappingService::new(solve_opts).with_workers(workers);
+    if let Some(dir) = flags.get("cache-dir") {
+        service = service.with_cache_dir(dir.as_str());
+    }
+    let server = MappingServer::spawn(service.spawn(), serve_opts.clone())?;
+    // First stdout line is machine-readable (and flushed) so wrappers can
+    // scrape the resolved port out of `--listen 127.0.0.1:0`.
+    println!("listening on http://{}", server.addr());
+    println!(
+        "{} conn thread(s), admission threshold {}, client quota {}, {} solve worker(s)",
+        serve_opts.conn_threads,
+        serve_opts.admission_threshold,
+        serve_opts.client_quota,
+        workers
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    // Serve until the process is killed; the server threads own the work.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 fn cmd_exec(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let dir = flags
         .get("dir")
@@ -350,7 +378,7 @@ fn cmd_conv(flags: &HashMap<String, String>) {
     );
     for (name, conv) in crate::workloads::resnet50_layers() {
         let g = conv.to_gemm();
-        match solve(g, &acc, SolverOptions::default()) {
+        match SolveRequest::new(g, &acc).solve() {
             Ok(r) => println!(
                 "{:<12}{:>26}{:>14.4}{:>12.0}{:>11.1?}",
                 name,

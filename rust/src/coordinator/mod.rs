@@ -35,13 +35,26 @@
 //!   harmless: mappings and energies stay bit-identical, node counts only
 //!   shrink (DESIGN.md §6; `--seed-bounds` / `GOMA_SEED_BOUNDS` to toggle).
 //!
+//! * **a network front door** — [`MappingServer`] puts a dependency-free
+//!   HTTP/JSON wire protocol ([`wire`]) in front of the service:
+//!   admission control keyed off the `queue_depth` gauge (overload sheds
+//!   with a retryable `503` instead of queueing), per-client in-flight
+//!   quotas, per-request deadlines mapped onto the engine's wall-clock
+//!   budget net of queueing time, and a Prometheus `/metrics` endpoint.
+//!   Wire answers are bit-identical to in-process
+//!   [`ServiceHandle::submit_batch`] answers (the wire serializes floats
+//!   by bit pattern), proven by `rust/tests/server.rs`.
+//!
 //! The compiled-artifact execution path ([`crate::runtime`]) hangs off the
 //! same process, so a request can go mapping → (optionally) execution
 //! without Python anywhere on the path.
 
+mod server;
 mod service;
 mod warm;
+pub mod wire;
 
+pub use server::{MappingServer, ServeOptions, ServerHandle, ServerMetrics};
 pub use service::{
     arch_options_fingerprint, shape_fingerprint, solve_fingerprint, MappingService, Pending,
     ServiceHandle, ServiceMetrics, CACHE_FORMAT_VERSION,

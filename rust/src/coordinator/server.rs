@@ -1,0 +1,696 @@
+//! The network front door for the mapping service: a dependency-free
+//! HTTP/1.1 server over [`std::net::TcpListener`] in front of
+//! [`super::MappingService`].
+//!
+//! Three routes:
+//!
+//! * `POST /solve` — body is a [`super::wire::SolveSpec`]; the reply is a
+//!   bit-exact [`super::wire::result_to_json`] result (`200`), a
+//!   solver-level error (`422`), or a *shed* (`503`/`429`, see below).
+//! * `GET /metrics` — Prometheus text exposition: the service's counters,
+//!   the server's admission/shed counters, the queue-depth gauge, and an
+//!   answered-request latency histogram.
+//! * `GET /healthz` — liveness probe.
+//!
+//! **Admission control** (the load-shedding rule): a solve request is
+//! admitted only while the service's `queue_depth` gauge — requests
+//! submitted but not yet answered — is below
+//! [`ServeOptions::admission_threshold`]. Over threshold the request is
+//! answered `503 {"status":"shed","retryable":true}` *immediately*, without
+//! ever being queued: a shed request costs the server one gauge read, so
+//! overload degrades into fast honest refusals instead of a growing queue
+//! of deadline-doomed work. Before admission, a **per-client in-flight
+//! quota** ([`ServeOptions::client_quota`], keyed by the `X-Goma-Client`
+//! header or else the peer IP) bounds how much of the queue one client can
+//! own; over quota is `429`, also retryable. Sheds are refusals, not
+//! answers — nothing about the *key* is learned, so nothing is cached and
+//! a retry is always sound (DESIGN.md §9).
+//!
+//! **Deadlines**: `deadline_ms` is anchored at request arrival, *before*
+//! queueing, and handed to
+//! [`super::ServiceHandle::submit_with_deadline`] — so time spent queued
+//! counts against the budget and an expired-in-queue request is answered
+//! `422 interrupted` without burning a solve.
+//!
+//! The connection pool ([`ServeOptions::conn_threads`] keep-alive worker
+//! threads fed by the accept loop) is deliberately decoupled from the
+//! solve worker pool: slow clients hold connection threads, never solver
+//! threads, and the admission gauge stays the only coupling between the
+//! two.
+
+use super::service::{ServiceHandle, ServiceMetrics};
+use super::wire::{self, SolveSpec};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Largest accepted `POST /solve` body. A spec is a few hundred bytes;
+/// anything near this cap is garbage or abuse.
+const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Per-read socket timeout inside the keep-alive loop. Between requests a
+/// timeout just re-checks the shutdown flag; mid-request it drops the
+/// connection (a stalled sender, not a stalled server).
+const READ_TIMEOUT: Duration = Duration::from_millis(1000);
+
+/// Latency histogram bucket upper bounds, in seconds (`+Inf` implicit).
+const LATENCY_BUCKETS: [f64; 7] = [0.001, 0.005, 0.025, 0.1, 0.5, 2.5, 10.0];
+
+/// Server configuration; the CLI's `goma serve --listen` flag set is
+/// parsed by [`ServeOptions::from_flags`], so the flags and this struct
+/// cannot drift apart.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeOptions {
+    /// Bind address (`127.0.0.1:0` picks a free port; the bound address
+    /// is reported by [`ServerHandle::addr`]).
+    pub listen: String,
+    /// Connection-handling threads (decoupled from the solve pool).
+    pub conn_threads: usize,
+    /// Admit solves only while `queue_depth` is below this.
+    pub admission_threshold: u64,
+    /// Per-client in-flight request cap.
+    pub client_quota: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            listen: "127.0.0.1:0".to_string(),
+            conn_threads: 4,
+            admission_threshold: 64,
+            client_quota: 8,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Parse `--listen/--conn-threads/--admission-threshold/--client-quota`
+    /// (each optional, defaulting as [`ServeOptions::default`]).
+    pub fn from_flags(flags: &HashMap<String, String>) -> Result<ServeOptions, String> {
+        let mut opts = ServeOptions::default();
+        if let Some(addr) = flags.get("listen") {
+            if addr == "true" {
+                return Err("--listen needs an address (e.g. --listen 127.0.0.1:8080)".into());
+            }
+            opts.listen = addr.clone();
+        }
+        let pos = |key: &str, default: u64| -> Result<u64, String> {
+            match flags.get(key) {
+                Some(s) => match s.parse::<u64>() {
+                    Ok(n) if n >= 1 => Ok(n),
+                    _ => Err(format!("--{key} must be a positive integer, got '{s}'")),
+                },
+                None => Ok(default),
+            }
+        };
+        opts.conn_threads = pos("conn-threads", opts.conn_threads as u64)? as usize;
+        opts.admission_threshold = pos("admission-threshold", opts.admission_threshold)?;
+        opts.client_quota = pos("client-quota", opts.client_quota)?;
+        Ok(opts)
+    }
+}
+
+/// Answered-request latency histogram (Prometheus semantics: cumulative
+/// `le` buckets, `_sum`, `_count`). Stored non-cumulative and summed at
+/// export; the sum is tracked in integer microseconds so the counters
+/// stay lock-free `AtomicU64`s.
+struct Histogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS.len() + 1],
+    sum_micros: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram { buckets: Default::default(), sum_micros: AtomicU64::new(0) }
+    }
+
+    fn observe(&self, d: Duration) {
+        let secs = d.as_secs_f64();
+        let slot = LATENCY_BUCKETS
+            .iter()
+            .position(|&ub| secs <= ub)
+            .unwrap_or(LATENCY_BUCKETS.len());
+        self.buckets[slot].fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    fn render(&self, name: &str, out: &mut String) {
+        let mut cumulative = 0u64;
+        for (i, ub) in LATENCY_BUCKETS.iter().enumerate() {
+            cumulative += self.buckets[i].load(Ordering::Relaxed);
+            out.push_str(&format!("{name}_bucket{{le=\"{ub}\"}} {cumulative}\n"));
+        }
+        cumulative += self.buckets[LATENCY_BUCKETS.len()].load(Ordering::Relaxed);
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cumulative}\n"));
+        let sum = self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6;
+        out.push_str(&format!("{name}_sum {sum}\n"));
+        out.push_str(&format!("{name}_count {cumulative}\n"));
+    }
+}
+
+/// Wire-layer counters. The accounting invariant — every solve request is
+/// classified exactly once —
+///
+/// ```text
+/// solve_requests == answered_ok + answered_err
+///                 + shed_overload + shed_quota + bad_requests
+/// ```
+///
+/// is exact at quiescence and is asserted by the stress test and the CI
+/// smoke leg.
+pub struct ServerMetrics {
+    solve_requests: AtomicU64,
+    answered_ok: AtomicU64,
+    answered_err: AtomicU64,
+    shed_overload: AtomicU64,
+    shed_quota: AtomicU64,
+    bad_requests: AtomicU64,
+    latency: Histogram,
+}
+
+impl ServerMetrics {
+    fn new() -> Self {
+        ServerMetrics {
+            solve_requests: AtomicU64::new(0),
+            answered_ok: AtomicU64::new(0),
+            answered_err: AtomicU64::new(0),
+            shed_overload: AtomicU64::new(0),
+            shed_quota: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            latency: Histogram::new(),
+        }
+    }
+
+    pub fn solve_requests(&self) -> u64 {
+        self.solve_requests.load(Ordering::Relaxed)
+    }
+    pub fn answered_ok(&self) -> u64 {
+        self.answered_ok.load(Ordering::Relaxed)
+    }
+    pub fn answered_err(&self) -> u64 {
+        self.answered_err.load(Ordering::Relaxed)
+    }
+    pub fn shed_overload(&self) -> u64 {
+        self.shed_overload.load(Ordering::Relaxed)
+    }
+    pub fn shed_quota(&self) -> u64 {
+        self.shed_quota.load(Ordering::Relaxed)
+    }
+    pub fn bad_requests(&self) -> u64 {
+        self.bad_requests.load(Ordering::Relaxed)
+    }
+    /// Answered requests observed by the latency histogram
+    /// (`== answered_ok + answered_err` at quiescence).
+    pub fn latency_count(&self) -> u64 {
+        self.latency.count()
+    }
+}
+
+/// Everything a connection worker needs, shared across the pool.
+struct ServerCtx {
+    service: ServiceHandle,
+    metrics: Arc<ServerMetrics>,
+    opts: ServeOptions,
+    /// Per-client in-flight request counts (quota accounting).
+    in_flight: Mutex<HashMap<String, u64>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// A running server. Dropping the handle does *not* stop the server; call
+/// [`ServerHandle::shutdown`] (which also shuts the mapping service down,
+/// flushing its warm store).
+pub struct MappingServer {
+    addr: SocketAddr,
+    ctx: Arc<ServerCtx>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+/// Public alias kept descriptive at the call sites.
+pub type ServerHandle = MappingServer;
+
+impl MappingServer {
+    /// Bind `opts.listen` and start the accept loop plus
+    /// `opts.conn_threads` connection workers in front of `service`.
+    pub fn spawn(service: ServiceHandle, opts: ServeOptions) -> std::io::Result<MappingServer> {
+        let listener = TcpListener::bind(&opts.listen)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let ctx = Arc::new(ServerCtx {
+            service,
+            metrics: Arc::new(ServerMetrics::new()),
+            opts,
+            in_flight: Mutex::new(HashMap::new()),
+            stop: stop.clone(),
+        });
+        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut joins = Vec::new();
+        for _ in 0..ctx.opts.conn_threads.max(1) {
+            let rx = conn_rx.clone();
+            let ctx = ctx.clone();
+            joins.push(std::thread::spawn(move || connection_worker(&rx, &ctx)));
+        }
+        let accept_ctx = ctx.clone();
+        joins.push(std::thread::spawn(move || {
+            accept_loop(&listener, &conn_tx, &accept_ctx);
+            // conn_tx drops here; idle workers see the closed channel.
+        }));
+        Ok(MappingServer { addr, ctx, joins })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.ctx.metrics
+    }
+
+    /// The underlying service handle (the in-process path; the stress test
+    /// uses it to prove wire answers bit-identical to `submit_batch`).
+    pub fn service(&self) -> &ServiceHandle {
+        &self.ctx.service
+    }
+
+    /// Stop accepting, drain the connection workers, then shut the mapping
+    /// service down (deterministic warm-store flush). Blocks until every
+    /// thread has exited.
+    pub fn shutdown(mut self) {
+        self.ctx.stop.store(true, Ordering::SeqCst);
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+        self.ctx.service.clone().shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, conn_tx: &Sender<TcpStream>, ctx: &ServerCtx) {
+    while !ctx.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if conn_tx.send(stream).is_err() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn connection_worker(rx: &Mutex<Receiver<TcpStream>>, ctx: &ServerCtx) {
+    loop {
+        // Hold the lock only for the dequeue, never across a connection.
+        let next = {
+            let guard = rx.lock().unwrap();
+            guard.recv_timeout(Duration::from_millis(200))
+        };
+        match next {
+            Ok(stream) => serve_connection(stream, ctx),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// One parsed HTTP request.
+struct HttpRequest {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl HttpRequest {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+enum ReadOutcome {
+    Request(Box<HttpRequest>),
+    /// Clean EOF between requests (client closed the keep-alive socket).
+    Closed,
+    /// Timed out waiting for the *next* request; poll the stop flag.
+    Idle,
+    /// Malformed or stalled mid-request; drop the connection.
+    Broken,
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> ReadOutcome {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return ReadOutcome::Closed,
+        Ok(_) => {}
+        Err(e)
+            if line.is_empty()
+                && (e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut) =>
+        {
+            // Timed out *between* requests — a quiet keep-alive socket,
+            // not a broken one. A timeout mid-line falls through to
+            // Broken: the partial read cannot be resumed.
+            return ReadOutcome::Idle;
+        }
+        Err(_) => return ReadOutcome::Broken,
+    }
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(path)) = (parts.next(), parts.next()) else {
+        return ReadOutcome::Broken;
+    };
+    let (method, path) = (method.to_string(), path.to_string());
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        match reader.read_line(&mut h) {
+            Ok(0) => return ReadOutcome::Broken,
+            Ok(_) => {}
+            Err(_) => return ReadOutcome::Broken,
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let (k, v) = (k.trim().to_string(), v.trim().to_string());
+            if k.eq_ignore_ascii_case("content-length") {
+                let Ok(n) = v.parse::<usize>() else {
+                    return ReadOutcome::Broken;
+                };
+                if n > MAX_BODY_BYTES {
+                    return ReadOutcome::Broken;
+                }
+                content_length = n;
+            }
+            headers.push((k, v));
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if reader.read_exact(&mut body).is_err() {
+        return ReadOutcome::Broken;
+    }
+    let Ok(body) = String::from_utf8(body) else {
+        return ReadOutcome::Broken;
+    };
+    ReadOutcome::Request(Box::new(HttpRequest { method, path, headers, body }))
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes()).and_then(|()| stream.write_all(body.as_bytes()));
+    let _ = stream.flush();
+}
+
+fn serve_connection(stream: TcpStream, ctx: &ServerCtx) {
+    // Accepted sockets do not inherit the listener's non-blocking mode on
+    // every platform; force blocking + timeout explicitly.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let Ok(mut writer) = stream.try_clone() else {
+        return;
+    };
+    let peer_ip = stream.peer_addr().map(|a| a.ip().to_string()).unwrap_or_else(|_| "?".into());
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_request(&mut reader) {
+            ReadOutcome::Request(req) => {
+                let close = req
+                    .header("connection")
+                    .is_some_and(|v| v.eq_ignore_ascii_case("close"));
+                handle_request(&mut writer, &req, &peer_ip, ctx);
+                if close {
+                    return;
+                }
+            }
+            ReadOutcome::Idle => {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            ReadOutcome::Closed | ReadOutcome::Broken => return,
+        }
+    }
+}
+
+/// Decrements the client's in-flight count on drop, so a panic or an early
+/// return can never leak a quota slot.
+struct QuotaSlot<'a> {
+    ctx: &'a ServerCtx,
+    key: String,
+}
+
+impl Drop for QuotaSlot<'_> {
+    fn drop(&mut self) {
+        let mut map = self.ctx.in_flight.lock().unwrap();
+        if let Some(n) = map.get_mut(&self.key) {
+            *n -= 1;
+            if *n == 0 {
+                map.remove(&self.key);
+            }
+        }
+    }
+}
+
+fn handle_request(writer: &mut TcpStream, req: &HttpRequest, peer_ip: &str, ctx: &ServerCtx) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/solve") => handle_solve(writer, req, peer_ip, ctx),
+        ("GET", "/metrics") => {
+            write_response(writer, 200, "text/plain; version=0.0.4", &render_metrics(ctx));
+        }
+        ("GET", "/healthz") => write_response(writer, 200, "text/plain", "ok\n"),
+        ("GET", "/solve") | ("POST", "/metrics") | ("POST", "/healthz") => {
+            write_response(writer, 405, "text/plain", "method not allowed\n");
+        }
+        _ => write_response(writer, 404, "text/plain", "not found\n"),
+    }
+}
+
+fn shed_body(reason: &str) -> String {
+    crate::util::Json::obj(vec![
+        ("status", crate::util::Json::Str("shed".into())),
+        ("reason", crate::util::Json::Str(reason.into())),
+        ("retryable", crate::util::Json::Bool(true)),
+    ])
+    .to_text()
+}
+
+fn handle_solve(writer: &mut TcpStream, req: &HttpRequest, peer_ip: &str, ctx: &ServerCtx) {
+    let arrival = Instant::now();
+    let m = &ctx.metrics;
+    m.solve_requests.fetch_add(1, Ordering::Relaxed);
+
+    let bad = |writer: &mut TcpStream, msg: String| {
+        ctx.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+        let body = crate::util::Json::obj(vec![
+            ("status", crate::util::Json::Str("bad_request".into())),
+            ("error", crate::util::Json::Str(msg)),
+        ])
+        .to_text();
+        write_response(writer, 400, "application/json", &body);
+    };
+
+    let spec = match crate::util::Json::parse(&req.body)
+        .map_err(|e| e.to_string())
+        .and_then(|v| SolveSpec::from_json(&v))
+    {
+        Ok(s) => s,
+        Err(e) => return bad(writer, e),
+    };
+    let arch = match spec.arch.resolve() {
+        Ok(a) => a,
+        Err(e) => return bad(writer, e),
+    };
+
+    // Quota first (cheap, per-client fairness), then global admission.
+    let client = req.header("x-goma-client").unwrap_or(peer_ip).to_string();
+    let over_quota = {
+        let mut map = ctx.in_flight.lock().unwrap();
+        let n = map.entry(client.clone()).or_insert(0);
+        if *n >= ctx.opts.client_quota {
+            true
+        } else {
+            *n += 1;
+            false
+        }
+    };
+    if over_quota {
+        m.shed_quota.fetch_add(1, Ordering::Relaxed);
+        return write_response(writer, 429, "application/json", &shed_body("quota"));
+    }
+    let _slot = QuotaSlot { ctx, key: client };
+
+    // Admission control: never queue over threshold. A shed request is
+    // answered before it touches the service, so `queue_depth` cannot be
+    // inflated by the very requests being refused.
+    if ctx.service.metrics().queue_depth() >= ctx.opts.admission_threshold {
+        m.shed_overload.fetch_add(1, Ordering::Relaxed);
+        return write_response(writer, 503, "application/json", &shed_body("overloaded"));
+    }
+
+    let deadline = spec.deadline().map(|d| arrival + d);
+    let outcome = ctx.service.submit_with_deadline(spec.shape, arch, deadline).wait();
+    m.latency.observe(arrival.elapsed());
+    match outcome {
+        Ok(r) => {
+            m.answered_ok.fetch_add(1, Ordering::Relaxed);
+            let body = crate::util::Json::obj(vec![
+                ("status", crate::util::Json::Str("ok".into())),
+                ("result", wire::result_to_json(&r)),
+            ])
+            .to_text();
+            write_response(writer, 200, "application/json", &body);
+        }
+        Err(e) => {
+            m.answered_err.fetch_add(1, Ordering::Relaxed);
+            let body = crate::util::Json::obj(vec![
+                ("status", crate::util::Json::Str("error".into())),
+                ("error", crate::util::Json::Str(wire::error_code(&e).into())),
+            ])
+            .to_text();
+            write_response(writer, 422, "application/json", &body);
+        }
+    }
+}
+
+/// Render every counter in Prometheus text exposition format (version
+/// 0.0.4): `# HELP`/`# TYPE` preamble per family, counters suffixed
+/// `_total`, one gauge, one histogram.
+fn render_metrics(ctx: &ServerCtx) -> String {
+    let m = &ctx.metrics;
+    let s: &ServiceMetrics = ctx.service.metrics();
+    let (req, solves, hits, coalesced, errs) = s.snapshot();
+    let mut out = String::new();
+    let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+        ));
+    };
+    counter(
+        &mut out,
+        "goma_wire_solve_requests_total",
+        "Solve requests received over the wire.",
+        m.solve_requests(),
+    );
+    out.push_str("# HELP goma_wire_answered_total Wire requests answered with a solver outcome.\n");
+    out.push_str("# TYPE goma_wire_answered_total counter\n");
+    out.push_str(&format!("goma_wire_answered_total{{outcome=\"ok\"}} {}\n", m.answered_ok()));
+    out.push_str(&format!("goma_wire_answered_total{{outcome=\"error\"}} {}\n", m.answered_err()));
+    out.push_str("# HELP goma_wire_shed_total Requests refused by admission control.\n");
+    out.push_str("# TYPE goma_wire_shed_total counter\n");
+    out.push_str(&format!("goma_wire_shed_total{{reason=\"overload\"}} {}\n", m.shed_overload()));
+    out.push_str(&format!("goma_wire_shed_total{{reason=\"quota\"}} {}\n", m.shed_quota()));
+    counter(
+        &mut out,
+        "goma_wire_bad_requests_total",
+        "Wire requests rejected as malformed.",
+        m.bad_requests(),
+    );
+    counter(&mut out, "goma_service_requests_total", "Requests accepted by the service.", req);
+    counter(&mut out, "goma_service_solves_total", "Engine solves executed.", solves);
+    counter(&mut out, "goma_service_cache_hits_total", "Requests answered from cache.", hits);
+    counter(
+        &mut out,
+        "goma_service_coalesced_total",
+        "Requests coalesced onto in-flight solves.",
+        coalesced,
+    );
+    counter(&mut out, "goma_service_errors_total", "Requests answered with a solver error.", errs);
+    counter(
+        &mut out,
+        "goma_service_seeded_solves_total",
+        "Solves started from a warm bound.",
+        s.seeded_solves(),
+    );
+    out.push_str("# HELP goma_service_queue_depth Requests submitted but not yet answered.\n");
+    out.push_str("# TYPE goma_service_queue_depth gauge\n");
+    out.push_str(&format!("goma_service_queue_depth {}\n", s.queue_depth()));
+    out.push_str(
+        "# HELP goma_wire_request_duration_seconds \
+         Latency of answered solve requests (arrival to reply), queueing included.\n",
+    );
+    out.push_str("# TYPE goma_wire_request_duration_seconds histogram\n");
+    m.latency.render("goma_wire_request_duration_seconds", &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_options_parse_the_flag_set() {
+        let flags: HashMap<String, String> = [
+            ("listen", "127.0.0.1:9999"),
+            ("conn-threads", "2"),
+            ("admission-threshold", "3"),
+            ("client-quota", "1"),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+        let opts = ServeOptions::from_flags(&flags).unwrap();
+        assert_eq!(
+            opts,
+            ServeOptions {
+                listen: "127.0.0.1:9999".into(),
+                conn_threads: 2,
+                admission_threshold: 3,
+                client_quota: 1,
+            }
+        );
+        assert_eq!(ServeOptions::from_flags(&HashMap::new()).unwrap(), ServeOptions::default());
+        let bare: HashMap<String, String> =
+            [("listen".to_string(), "true".to_string())].into_iter().collect();
+        assert!(ServeOptions::from_flags(&bare).is_err(), "--listen without an address");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_sum_is_tracked() {
+        let h = Histogram::new();
+        h.observe(Duration::from_micros(500)); // ≤ 0.001
+        h.observe(Duration::from_millis(50)); // ≤ 0.1
+        h.observe(Duration::from_secs(60)); // +Inf
+        assert_eq!(h.count(), 3);
+        let mut text = String::new();
+        h.render("x", &mut text);
+        assert!(text.contains("x_bucket{le=\"0.001\"} 1\n"), "{text}");
+        assert!(text.contains("x_bucket{le=\"0.1\"} 2\n"), "{text}");
+        assert!(text.contains("x_bucket{le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("x_count 3\n"), "{text}");
+    }
+}

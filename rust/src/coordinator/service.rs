@@ -58,7 +58,7 @@ use super::warm::{WarmEntry, WarmOutcome, WarmStore};
 use crate::arch::Accelerator;
 use crate::mapping::{GemmShape, Mapping};
 use crate::solver::{
-    plan_seed, solve_shared, SeedBound, SharedCandidateStore, SolveError, SolveResult,
+    plan_seed, SeedBound, SharedCandidateStore, SolveError, SolveRequest, SolveResult,
     SolverOptions,
 };
 use crate::util::parallel::ordered_map;
@@ -68,6 +68,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Fingerprint/on-disk format version. Mixed into every fingerprint and
 /// into the warm-store header: bumping it cold-starts every cache.
@@ -140,6 +141,13 @@ struct Request {
     arch_fp: u64,
     shape: GemmShape,
     arch: Accelerator,
+    /// Per-request wall-clock deadline ([`ServiceHandle::submit_with_deadline`]):
+    /// the instant by which the *answer* is due. Mapped onto the engine's
+    /// `time_limit` at solve start — so queueing time already spent counts
+    /// against it — and deliberately NEVER part of the solve fingerprint:
+    /// a deadline shapes when a solve may be cut short, not what the key's
+    /// proved answer is (DESIGN.md §9).
+    deadline: Option<Instant>,
     reply: Sender<WarmOutcome>,
 }
 
@@ -290,12 +298,32 @@ impl ServiceHandle {
     /// Submit a request; returns a [`Pending`] so callers can batch many
     /// submissions before waiting (in-flight duplicates coalesce).
     pub fn submit(&self, shape: GemmShape, arch: Accelerator) -> Pending {
+        self.submit_with_deadline(shape, arch, None)
+    }
+
+    /// [`ServiceHandle::submit`] with a per-request answer deadline (the
+    /// wire path's entry point). At solve start the engine's wall-clock
+    /// budget becomes the *remaining* time to the deadline (capped by the
+    /// service-wide `time_limit`), so queueing time already spent counts
+    /// against the request; a request whose deadline expires while still
+    /// queued is answered [`SolveError::Interrupted`] without burning a
+    /// solve. Coalesced waiters on one key relax to the most generous
+    /// deadline among them (no deadline wins outright) — a tighter waiter
+    /// can never cut short an answer another waiter is owed. Deadlines
+    /// never enter the solve fingerprint, and no deadline-capped outcome
+    /// is ever cached unless it is a proof (DESIGN.md §9).
+    pub fn submit_with_deadline(
+        &self,
+        shape: GemmShape,
+        arch: Accelerator,
+        deadline: Option<Instant>,
+    ) -> Pending {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
         let arch_fp = arch_options_fingerprint(&arch, self.options);
         let fp = shape_fingerprint(arch_fp, shape);
         let (reply, rx) = channel();
-        let msg = Msg::Solve(Box::new(Request { fp, arch_fp, shape, arch, reply }));
+        let msg = Msg::Solve(Box::new(Request { fp, arch_fp, shape, arch, deadline, reply }));
         if self.tx.send(msg).is_err() {
             // Dispatcher gone: the reply sender travelled inside the failed
             // message and was dropped with it, so `wait` sees a closed
@@ -495,6 +523,27 @@ fn push_donor(donors: &mut HashMap<u64, DonorPool>, arch_fp: u64, mapping: Mappi
     donors.entry(arch_fp).or_default().insert(mapping);
 }
 
+/// Map a per-request deadline onto the engine's wall-clock budget at solve
+/// start: the budget is the *remaining* time to the deadline (so queueing
+/// time already spent counts against the request), capped by the
+/// service-wide `time_limit`. `None` means the deadline has already
+/// passed — the solve must not start at all.
+fn effective_options(options: SolverOptions, deadline: Option<Instant>) -> Option<SolverOptions> {
+    let Some(d) = deadline else {
+        return Some(options);
+    };
+    let now = Instant::now();
+    if d <= now {
+        return None;
+    }
+    let remaining = d - now;
+    let limit = match options.time_limit {
+        Some(l) => l.min(remaining),
+        None => remaining,
+    };
+    Some(SolverOptions { time_limit: Some(limit), ..options })
+}
+
 fn reply_all(waiters: Vec<Request>, result: &WarmOutcome, m: &ServiceMetrics) {
     for w in waiters {
         // Decrement BEFORE the send: the reply channel is the happens-before
@@ -622,13 +671,25 @@ fn service_loop(
             misses.len().max(1)
         };
         for wave in misses.chunks_mut(wave_size) {
-            let mut keys: Vec<(u64, u64)> = Vec::with_capacity(wave.len());
-            let mut inputs: Vec<(GemmShape, Accelerator, Option<SeedBound>)> =
+            let mut keys: Vec<(u64, u64, bool)> = Vec::with_capacity(wave.len());
+            let mut inputs: Vec<(GemmShape, Accelerator, Option<SeedBound>, Option<Instant>)> =
                 Vec::with_capacity(wave.len());
             let mut slots: Vec<Mutex<Vec<Request>>> = Vec::with_capacity(wave.len());
             for (fp, afp, waiters) in wave.iter_mut() {
                 let shape = waiters[0].shape;
                 let arch = waiters[0].arch.clone();
+                // Coalesced waiters relax to the most generous deadline:
+                // one waiter with no deadline means the solve runs
+                // uncapped (a tighter co-waiter must never cut short an
+                // answer another waiter is owed), otherwise the latest
+                // deadline wins.
+                let mut deadline = waiters[0].deadline;
+                for w in waiters.iter().skip(1) {
+                    deadline = match (deadline, w.deadline) {
+                        (Some(a), Some(b)) => Some(a.max(b)),
+                        _ => None,
+                    };
+                }
                 let seed = if seed_on {
                     let pool = donors.get(afp).map(|p| p.items.as_slice()).unwrap_or(&[]);
                     let plan = plan_seed(pool, shape, &arch, options.exact_pe);
@@ -641,8 +702,8 @@ fn service_loop(
                 } else {
                     None
                 };
-                keys.push((*fp, *afp));
-                inputs.push((shape, arch, seed));
+                keys.push((*fp, *afp, deadline.is_some()));
+                inputs.push((shape, arch, seed, deadline));
                 slots.push(Mutex::new(std::mem::take(waiters)));
             }
             // The workers × solve_threads budget split: a wave with fewer
@@ -658,33 +719,51 @@ fn service_loop(
             let extra = budget % inputs.len().max(1);
             let solved = ordered_map(&inputs, workers, |i, inp| {
                 let per_solve = (share + usize::from(i < extra)).max(base_threads);
-                let result: WarmOutcome =
-                    match solve_shared(inp.0, &inp.1, options, per_solve, inp.2, &candidates) {
-                        Ok(r) => {
-                            m.solves.fetch_add(1, Ordering::Relaxed);
-                            Ok(Arc::new(r))
-                        }
-                        Err(e) => {
-                            m.errors.fetch_add(1, Ordering::Relaxed);
-                            Err(e)
-                        }
-                    };
+                // A request whose deadline expired while queued is
+                // answered without burning a solve: Interrupted (counted
+                // in `errors`, so the accounting invariant stays exact),
+                // never NoFeasibleMapping — queueing delay proves nothing
+                // about the key.
+                let outcome = match effective_options(options, inp.3) {
+                    Some(opts) => SolveRequest::new(inp.0, &inp.1)
+                        .options(opts)
+                        .threads(per_solve)
+                        .seed(inp.2)
+                        .store(&candidates)
+                        .solve(),
+                    None => Err(SolveError::Interrupted),
+                };
+                let result: WarmOutcome = match outcome {
+                    Ok(r) => {
+                        m.solves.fetch_add(1, Ordering::Relaxed);
+                        Ok(Arc::new(r))
+                    }
+                    Err(e) => {
+                        m.errors.fetch_add(1, Ordering::Relaxed);
+                        Err(e)
+                    }
+                };
                 let waiters = std::mem::take(&mut *slots[i].lock().unwrap());
                 reply_all(waiters, &result, &m);
                 result
             });
-            for ((fp, afp), result) in keys.into_iter().zip(solved) {
-                // Cache only *proved* outcomes. Under a wall-clock cap a
-                // NoFeasibleMapping bailout, an Interrupted (timed out
-                // with no incumbent), and an unproven incumbent
-                // (`proved_optimal == false`) are all load-dependent —
+            for ((fp, afp, had_deadline), result) in keys.into_iter().zip(solved) {
+                // Cache only *proved* outcomes. Under a wall-clock cap —
+                // the service-wide `time_limit` or a per-request deadline
+                // — a NoFeasibleMapping bailout, an Interrupted (timed
+                // out with no incumbent), and an unproven incumbent
+                // (`proved_optimal == false`) are all load-dependent:
                 // caching or persisting any of them would pin a
-                // machine-load artifact onto the key forever. With no time
-                // limit NoFeasibleMapping is a proof; Interrupted never is
-                // (and cannot occur uncapped).
+                // machine-load artifact onto the key forever (DESIGN.md
+                // §9). With no cap of either kind NoFeasibleMapping is a
+                // proof; a proved-optimal Ok is a proof regardless of
+                // what cap it ran under (finishing early is not
+                // load-dependent); Interrupted never is.
                 let proved = match &result {
                     Ok(r) => r.certificate.proved_optimal,
-                    Err(SolveError::NoFeasibleMapping) => options.time_limit.is_none(),
+                    Err(SolveError::NoFeasibleMapping) => {
+                        options.time_limit.is_none() && !had_deadline
+                    }
                     Err(_) => false,
                 };
                 if proved {
@@ -841,6 +920,50 @@ mod tests {
         assert_eq!(hits, 0, "an Interrupted bailout must never be served from cache");
         assert_eq!(handle.metrics().negative_hits(), 0);
         assert_eq!(solves + errs, 3, "every submission must re-attempt the solve");
+    }
+
+    #[test]
+    fn expired_deadline_is_interrupted_and_never_cached() {
+        let handle = MappingService::default().spawn();
+        let shape = GemmShape::new(64, 64, 64);
+        // A deadline that is already due when the worker picks the request
+        // up: the solve must not start, and the waiter gets Interrupted —
+        // queueing delay proves nothing about the key.
+        let err = handle
+            .submit_with_deadline(shape, arch(), Some(Instant::now()))
+            .wait()
+            .unwrap_err();
+        assert_eq!(err, SolveError::Interrupted);
+        // The key is not poisoned: a fresh no-deadline submission solves.
+        let ok = handle.map(shape, arch()).unwrap();
+        assert!(ok.certificate.proved_optimal);
+        let (req, solves, hits, _, errs) = handle.metrics().snapshot();
+        assert_eq!(req, 2);
+        assert_eq!(errs, 1, "the expired request counts as an error");
+        assert_eq!(solves, 1);
+        assert_eq!(hits, 0, "an expired-deadline outcome must never be cached");
+    }
+
+    #[test]
+    fn generous_deadline_answer_is_bit_identical_and_cached_as_a_proof() {
+        let shape = GemmShape::new(64, 96, 32);
+        let plain = MappingService::default().spawn().map(shape, arch()).unwrap();
+        let handle = MappingService::default().spawn();
+        let deadline = Instant::now() + std::time::Duration::from_secs(300);
+        let capped = handle
+            .submit_with_deadline(shape, arch(), Some(deadline))
+            .wait()
+            .unwrap();
+        assert_eq!(capped.mapping, plain.mapping);
+        assert_eq!(capped.energy.normalized.to_bits(), plain.energy.normalized.to_bits());
+        assert!(capped.certificate.proved_optimal);
+        // A proved optimum is a proof no matter what cap it ran under, so
+        // it is cacheable even though a deadline applied (DESIGN.md §9).
+        let again = handle.map(shape, arch()).unwrap();
+        assert!(Arc::ptr_eq(&capped, &again), "the proof must be served from cache");
+        let (_, solves, hits, ..) = handle.metrics().snapshot();
+        assert_eq!(solves, 1);
+        assert_eq!(hits, 1);
     }
 
     #[test]

@@ -1,0 +1,587 @@
+//! The wire schema for `goma serve --listen` — and the *same* surface the
+//! CLI flags parse into (one source of truth, so the network protocol and
+//! the command line cannot drift apart).
+//!
+//! [`SolveSpec`] is the request: the same fields as the solver's
+//! [`crate::solver::SolveRequest`] builder exposes, minus the in-process
+//! knobs that cannot cross a socket (a borrowed candidate store) plus the
+//! one knob that only makes sense across one (`deadline_ms`).
+//! [`SolveSpec::from_json`] parses the HTTP body; [`SolveSpec::from_flags`]
+//! parses `goma solve` / `goma serve` command lines; both produce the same
+//! struct and share the same template table ([`lookup_template`]) and
+//! validation.
+//!
+//! Results cross the wire **bit-exactly**: every `f64` is serialized as
+//! its `to_bits()` value in a decimal string (a JSON number is an `f64`
+//! and cannot carry a `u64` above 2^53, and a formatted float re-parsed on
+//! the far side is a bug waiting for a rounding corner). `u64` counters
+//! use the same string encoding. The server-side guarantee — a wire answer
+//! is bit-identical to an in-process [`super::ServiceHandle::submit_batch`]
+//! answer — is only provable because this layer never touches a float's
+//! value, and `rust/tests/server.rs` pins it.
+
+use crate::arch::Accelerator;
+use crate::mapping::{Axis, Bypass, GemmShape, Mapping, Tile};
+use crate::solver::{Certificate, SolveError, SolveResult, SolverOptions};
+use crate::util::Json;
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// The canonical template table. `goma solve --arch`, `goma serve --arch`,
+/// and the wire's `{"arch": {"template": …}}` all resolve through here;
+/// [`crate::cli::pick_arch`]'s lenient fallback is CLI-only.
+pub fn lookup_template(name: &str) -> Option<Accelerator> {
+    match name {
+        "eyeriss" | "eyeriss-like" => Some(crate::arch::eyeriss_like()),
+        "gemmini" | "gemmini-like" => Some(crate::arch::gemmini_like()),
+        "a100" | "a100-like" => Some(crate::arch::a100_like()),
+        "tpu" | "tpu-v1-like" => Some(crate::arch::tpu_v1_like()),
+        _ => None,
+    }
+}
+
+/// Architecture half of a request: a named Table-I template, or the
+/// custom-instance parameters [`Accelerator::custom`] takes (the
+/// generated-ERT constructor is deterministic, so both sides of the wire
+/// reconstruct the identical accelerator — fingerprint and all).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArchSpec {
+    Template(String),
+    Custom { name: String, sram_words: u64, num_pe: u64, regfile_words: u64 },
+}
+
+impl ArchSpec {
+    pub fn resolve(&self) -> Result<Accelerator, String> {
+        match self {
+            ArchSpec::Template(name) => {
+                lookup_template(name).ok_or_else(|| format!("unknown arch template '{name}'"))
+            }
+            ArchSpec::Custom { name, sram_words, num_pe, regfile_words } => {
+                if *sram_words == 0 || *num_pe == 0 || *regfile_words == 0 {
+                    return Err("custom arch parameters must be positive".into());
+                }
+                Ok(Accelerator::custom(name, *sram_words, *num_pe, *regfile_words))
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ArchSpec::Template(name) => Json::obj(vec![("template", Json::Str(name.clone()))]),
+            ArchSpec::Custom { name, sram_words, num_pe, regfile_words } => Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("sram_words", Json::u64(*sram_words)),
+                ("num_pe", Json::u64(*num_pe)),
+                ("regfile_words", Json::u64(*regfile_words)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<ArchSpec, String> {
+        if let Some(t) = v.get("template") {
+            let name = t.as_str().ok_or("arch.template must be a string")?;
+            return Ok(ArchSpec::Template(name.to_string()));
+        }
+        let field = |k: &str| {
+            v.get(k).and_then(Json::as_u64).ok_or_else(|| format!("arch.{k} must be an integer"))
+        };
+        Ok(ArchSpec::Custom {
+            name: v.get("name").and_then(Json::as_str).unwrap_or("wire-custom").to_string(),
+            sram_words: field("sram_words")?,
+            num_pe: field("num_pe")?,
+            regfile_words: field("regfile_words")?,
+        })
+    }
+}
+
+/// One solve request, as it exists on the wire and on the command line.
+///
+/// `solve_threads` and `seed_bounds` are *latency* knobs: the solve result
+/// is provably bit-identical for every value (DESIGN.md §4, §6), which is
+/// why a server is free to answer with its own configured values — the
+/// fields are validated and honored by in-process execution (`goma
+/// solve`), while `goma serve` applies its service-wide settings without
+/// changing any answer. `deadline_ms` is the one per-request field the
+/// server always honors (relative milliseconds from arrival; see
+/// [`super::ServiceHandle::submit_with_deadline`] for the semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveSpec {
+    pub shape: GemmShape,
+    pub arch: ArchSpec,
+    /// Intra-solve threads; `0` = auto (`GOMA_SOLVE_THREADS`, else serial).
+    pub solve_threads: usize,
+    /// Cross-shape warm-bound switch; `None` = auto (`GOMA_SEED_BOUNDS`).
+    pub seed_bounds: Option<bool>,
+    /// Answer deadline in milliseconds from request arrival.
+    pub deadline_ms: Option<u64>,
+}
+
+impl SolveSpec {
+    pub fn new(shape: GemmShape, arch: ArchSpec) -> Self {
+        SolveSpec { shape, arch, solve_threads: 0, seed_bounds: None, deadline_ms: None }
+    }
+
+    /// Parse the `POST /solve` body.
+    pub fn from_json(v: &Json) -> Result<SolveSpec, String> {
+        let shape = v.get("shape").ok_or("missing field 'shape'")?;
+        let ext = |k: &str| {
+            shape
+                .get(k)
+                .and_then(Json::as_u64)
+                .filter(|&e| e >= 1)
+                .ok_or_else(|| format!("shape.{k} must be a positive integer"))
+        };
+        let shape = GemmShape::new(ext("x")?, ext("y")?, ext("z")?);
+        let arch = ArchSpec::from_json(v.get("arch").ok_or("missing field 'arch'")?)?;
+        let mut spec = SolveSpec::new(shape, arch);
+        if let Some(t) = v.get("solve_threads") {
+            spec.solve_threads =
+                t.as_u64().ok_or("solve_threads must be a non-negative integer")? as usize;
+        }
+        if let Some(s) = v.get("seed_bounds") {
+            spec.seed_bounds = Some(s.as_bool().ok_or("seed_bounds must be a boolean")?);
+        }
+        if let Some(d) = v.get("deadline_ms") {
+            let ms = d.as_u64().filter(|&ms| ms >= 1).ok_or("deadline_ms must be ≥ 1")?;
+            spec.deadline_ms = Some(ms);
+        }
+        Ok(spec)
+    }
+
+    /// Parse the shared CLI flag set (`goma solve`): `--m/--n/--k`
+    /// (GEMM convention, mapped onto the internal x/y/z grid by
+    /// [`GemmShape::mnk`]), `--arch`, `--solve-threads`, `--seed-bounds`,
+    /// `--deadline-ms`. The flag names and the JSON field names are two
+    /// spellings of this one struct.
+    pub fn from_flags(flags: &HashMap<String, String>) -> Result<SolveSpec, String> {
+        let ext = |k: &str| {
+            flags
+                .get(k)
+                .ok_or_else(|| format!("missing required flag --{k}"))?
+                .parse::<u64>()
+                .ok()
+                .filter(|&e| e >= 1)
+                .ok_or_else(|| format!("flag --{k} must be a positive integer"))
+        };
+        let shape = GemmShape::mnk(ext("m")?, ext("n")?, ext("k")?);
+        let arch_name = flags.get("arch").map(String::as_str).unwrap_or("eyeriss");
+        let mut spec = SolveSpec::new(shape, ArchSpec::Template(arch_name.to_string()));
+        spec.solve_threads = parse_solve_threads_flag(flags)?;
+        spec.seed_bounds = parse_seed_bounds_flag(flags)?;
+        if let Some(s) = flags.get("deadline-ms") {
+            let ms = s.parse::<u64>().ok().filter(|&ms| ms >= 1);
+            spec.deadline_ms = Some(ms.ok_or(format!("--deadline-ms must be ≥ 1, got '{s}'"))?);
+        }
+        Ok(spec)
+    }
+
+    /// Serialize as the `POST /solve` body (the exact inverse of
+    /// [`SolveSpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            (
+                "shape".to_string(),
+                Json::obj(vec![
+                    ("x", Json::u64(self.shape.x)),
+                    ("y", Json::u64(self.shape.y)),
+                    ("z", Json::u64(self.shape.z)),
+                ]),
+            ),
+            ("arch".to_string(), self.arch.to_json()),
+        ];
+        if self.solve_threads != 0 {
+            fields.push(("solve_threads".to_string(), Json::Num(self.solve_threads as f64)));
+        }
+        if let Some(s) = self.seed_bounds {
+            fields.push(("seed_bounds".to_string(), Json::Bool(s)));
+        }
+        if let Some(ms) = self.deadline_ms {
+            fields.push(("deadline_ms".to_string(), Json::u64(ms)));
+        }
+        Json::Obj(fields)
+    }
+
+    /// The [`SolverOptions`] this spec asks for, over `base` (the
+    /// process-wide defaults).
+    pub fn solver_options(&self, base: SolverOptions) -> SolverOptions {
+        SolverOptions {
+            solve_threads: self.solve_threads,
+            seed_bounds: self.seed_bounds.or(base.seed_bounds),
+            ..base
+        }
+    }
+
+    /// The relative deadline as a [`Duration`] (the server anchors it at
+    /// request arrival).
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline_ms.map(Duration::from_millis)
+    }
+}
+
+/// Shared `--solve-threads` parsing (`goma solve`, `goma eval`,
+/// `goma serve`): absent means `0` = auto.
+pub fn parse_solve_threads_flag(flags: &HashMap<String, String>) -> Result<usize, String> {
+    match flags.get("solve-threads") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(format!("--solve-threads must be a positive integer, got '{s}'")),
+        },
+        None => Ok(0),
+    }
+}
+
+/// Shared `--seed-bounds on|off` parsing: absent means `None` = auto.
+pub fn parse_seed_bounds_flag(flags: &HashMap<String, String>) -> Result<Option<bool>, String> {
+    match flags.get("seed-bounds") {
+        Some(s) => match crate::solver::parse_seed_bounds_value(s) {
+            Some(b) => Ok(Some(b)),
+            None => Err(format!("--seed-bounds must be on|off, got '{s}'")),
+        },
+        None => Ok(None),
+    }
+}
+
+fn f64_bits(v: f64) -> Json {
+    Json::u64(v.to_bits())
+}
+
+fn bits_f64(v: &Json, key: &str) -> Result<f64, String> {
+    let bits = v
+        .get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("missing f64-bits field '{key}'"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing u64 field '{key}'"))
+}
+
+fn axis_name(a: Axis) -> &'static str {
+    match a {
+        Axis::X => "x",
+        Axis::Y => "y",
+        Axis::Z => "z",
+    }
+}
+
+fn axis_from(name: &str) -> Result<Axis, String> {
+    match name {
+        "x" => Ok(Axis::X),
+        "y" => Ok(Axis::Y),
+        "z" => Ok(Axis::Z),
+        other => Err(format!("bad axis '{other}'")),
+    }
+}
+
+fn tile_json(t: Tile) -> Json {
+    Json::obj(vec![("x", Json::u64(t.x)), ("y", Json::u64(t.y)), ("z", Json::u64(t.z))])
+}
+
+fn tile_from(v: &Json, key: &str) -> Result<Tile, String> {
+    let t = v.get(key).ok_or_else(|| format!("missing tile '{key}'"))?;
+    Ok(Tile::new(get_u64(t, "x")?, get_u64(t, "y")?, get_u64(t, "z")?))
+}
+
+/// Serialize a full [`SolveResult`] losslessly (see the module docs for
+/// the f64-bits convention).
+pub fn result_to_json(r: &SolveResult) -> Json {
+    let m = &r.mapping;
+    let c = &r.certificate;
+    let e = &r.energy;
+    Json::obj(vec![
+        (
+            "mapping",
+            Json::obj(vec![
+                ("l1", tile_json(m.l1)),
+                ("l2", tile_json(m.l2)),
+                ("l3", tile_json(m.l3)),
+                ("alpha01", Json::Str(axis_name(m.alpha01).into())),
+                ("alpha12", Json::Str(axis_name(m.alpha12).into())),
+                ("b1", Json::Num(m.b1.bits() as f64)),
+                ("b3", Json::Num(m.b3.bits() as f64)),
+            ]),
+        ),
+        (
+            "energy",
+            Json::obj(vec![
+                ("src1", f64_bits(e.src1)),
+                ("src3", f64_bits(e.src3)),
+                ("src4", f64_bits(e.src4)),
+                ("compute", f64_bits(e.compute)),
+                ("leakage", f64_bits(e.leakage)),
+                ("normalized", f64_bits(e.normalized)),
+                ("total_pj", f64_bits(e.total_pj)),
+            ]),
+        ),
+        (
+            "certificate",
+            Json::obj(vec![
+                ("upper_bound", f64_bits(c.upper_bound)),
+                ("lower_bound", f64_bits(c.lower_bound)),
+                ("gap", f64_bits(c.gap)),
+                ("nodes", Json::u64(c.nodes)),
+                ("combos_total", Json::u64(c.combos_total)),
+                ("combos_pruned", Json::u64(c.combos_pruned)),
+                ("units_total", Json::u64(c.units_total)),
+                ("units_skipped", Json::u64(c.units_skipped)),
+                ("proved_optimal", Json::Bool(c.proved_optimal)),
+            ]),
+        ),
+        ("solve_time_ns", Json::u64(r.solve_time.as_nanos() as u64)),
+    ])
+}
+
+/// Exact inverse of [`result_to_json`].
+pub fn result_from_json(v: &Json) -> Result<SolveResult, String> {
+    let m = v.get("mapping").ok_or("missing 'mapping'")?;
+    let bypass = |key: &str| {
+        get_u64(m, key).and_then(|b| {
+            Bypass::from_bits(b as u8).ok_or_else(|| format!("bad bypass bits in '{key}'"))
+        })
+    };
+    let axis = |key: &str| {
+        m.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("missing axis '{key}'"))
+            .and_then(axis_from)
+    };
+    let mapping = Mapping {
+        l1: tile_from(m, "l1")?,
+        l2: tile_from(m, "l2")?,
+        l3: tile_from(m, "l3")?,
+        alpha01: axis("alpha01")?,
+        alpha12: axis("alpha12")?,
+        b1: bypass("b1")?,
+        b3: bypass("b3")?,
+    };
+    let e = v.get("energy").ok_or("missing 'energy'")?;
+    let energy = crate::energy::EnergyBreakdown {
+        src1: bits_f64(e, "src1")?,
+        src3: bits_f64(e, "src3")?,
+        src4: bits_f64(e, "src4")?,
+        compute: bits_f64(e, "compute")?,
+        leakage: bits_f64(e, "leakage")?,
+        normalized: bits_f64(e, "normalized")?,
+        total_pj: bits_f64(e, "total_pj")?,
+    };
+    let c = v.get("certificate").ok_or("missing 'certificate'")?;
+    let certificate = Certificate {
+        upper_bound: bits_f64(c, "upper_bound")?,
+        lower_bound: bits_f64(c, "lower_bound")?,
+        gap: bits_f64(c, "gap")?,
+        nodes: get_u64(c, "nodes")?,
+        combos_total: get_u64(c, "combos_total")?,
+        combos_pruned: get_u64(c, "combos_pruned")?,
+        units_total: get_u64(c, "units_total")?,
+        units_skipped: get_u64(c, "units_skipped")?,
+        proved_optimal: c
+            .get("proved_optimal")
+            .and_then(Json::as_bool)
+            .ok_or("missing 'proved_optimal'")?,
+    };
+    Ok(SolveResult {
+        mapping,
+        energy,
+        certificate,
+        solve_time: Duration::from_nanos(get_u64(v, "solve_time_ns")?),
+    })
+}
+
+/// Stable wire codes for [`SolveError`] (the `Display` strings are prose
+/// and free to change; these are protocol).
+pub fn error_code(e: &SolveError) -> &'static str {
+    match e {
+        SolveError::NoFeasibleMapping => "no_feasible_mapping",
+        SolveError::Interrupted => "interrupted",
+        SolveError::ServiceUnavailable => "service_unavailable",
+    }
+}
+
+pub fn error_from_code(code: &str) -> Result<SolveError, String> {
+    match code {
+        "no_feasible_mapping" => Ok(SolveError::NoFeasibleMapping),
+        "interrupted" => Ok(SolveError::Interrupted),
+        "service_unavailable" => Ok(SolveError::ServiceUnavailable),
+        other => Err(format!("unknown error code '{other}'")),
+    }
+}
+
+/// A parsed `POST /solve` reply, as seen by a wire client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireReply {
+    /// `200` with a full result.
+    Ok(Box<SolveResult>),
+    /// `422` with a solver-level error (infeasible / deadline expired).
+    Solve(SolveError),
+    /// `503` (admission control) or `429` (per-client quota): not an
+    /// answer — the request was never queued and should be retried.
+    Shed { reason: String, retryable: bool },
+}
+
+/// Interpret an HTTP `(status, body)` pair from `POST /solve`.
+pub fn parse_reply(status: u16, body: &str) -> Result<WireReply, String> {
+    let v = Json::parse(body).map_err(|e| format!("bad reply JSON: {e}"))?;
+    let kind = v.get("status").and_then(Json::as_str).ok_or("reply missing 'status'")?;
+    match (status, kind) {
+        (200, "ok") => {
+            let r = result_from_json(v.get("result").ok_or("ok reply missing 'result'")?)?;
+            Ok(WireReply::Ok(Box::new(r)))
+        }
+        (422, "error") => {
+            let code = v.get("error").and_then(Json::as_str).ok_or("error reply missing code")?;
+            Ok(WireReply::Solve(error_from_code(code)?))
+        }
+        (503 | 429, "shed") => Ok(WireReply::Shed {
+            reason: v.get("reason").and_then(Json::as_str).unwrap_or("").to_string(),
+            retryable: v.get("retryable").and_then(Json::as_bool).unwrap_or(false),
+        }),
+        _ => Err(format!("unexpected reply: HTTP {status} with status '{kind}'")),
+    }
+}
+
+/// Minimal blocking HTTP/1.1 client call — enough protocol for the tests,
+/// the bench, and the CI smoke leg to drive a [`super::MappingServer`]
+/// without any dependency. One request per call over a fresh connection
+/// unless `stream` reuse is handled by the caller.
+pub fn http_call(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    let stream = std::net::TcpStream::connect(addr)?;
+    http_call_on(&stream, method, path, headers, body)
+}
+
+/// [`http_call`] over an existing connection (keep-alive reuse; the
+/// stress test uses this to hold per-client connections open).
+pub fn http_call_on(
+    mut stream: &std::net::TcpStream,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    use std::io::{BufRead, BufReader, Read, Write};
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: goma\r\n");
+    for (k, v) in headers {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str(&format!("Content-Length: {}\r\n\r\n{body}", body.len()));
+    stream.write_all(req.as_bytes())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status line"))?;
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body)
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "non-utf8 body"))?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::SolveRequest;
+
+    #[test]
+    fn spec_round_trips_through_json_and_matches_the_flag_parse() {
+        let mut spec =
+            SolveSpec::new(GemmShape::new(64, 96, 32), ArchSpec::Template("eyeriss".into()));
+        spec.solve_threads = 2;
+        spec.seed_bounds = Some(false);
+        spec.deadline_ms = Some(1500);
+        let back = SolveSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+
+        let flags: HashMap<String, String> = [
+            ("m", "64"),
+            ("n", "96"),
+            ("k", "32"),
+            ("arch", "eyeriss"),
+            ("solve-threads", "2"),
+            ("seed-bounds", "off"),
+            ("deadline-ms", "1500"),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+        let from_flags = SolveSpec::from_flags(&flags).unwrap();
+        assert_eq!(from_flags, spec, "flags and JSON must parse to the same spec");
+    }
+
+    #[test]
+    fn custom_arch_resolves_to_the_identical_fingerprint() {
+        let spec = ArchSpec::Custom {
+            name: "t".into(),
+            sram_words: 1 << 14,
+            num_pe: 16,
+            regfile_words: 64,
+        };
+        let a = spec.resolve().unwrap();
+        let b = Accelerator::custom("t", 1 << 14, 16, 64);
+        assert_eq!(a.param_fingerprint(), b.param_fingerprint());
+        assert!(ArchSpec::Template("not-a-template".into()).resolve().is_err());
+    }
+
+    #[test]
+    fn result_round_trip_is_bit_exact() {
+        let shape = GemmShape::new(64, 96, 32);
+        let arch = Accelerator::custom("wire", 1 << 14, 16, 64);
+        let r = SolveRequest::new(shape, &arch).threads(1).solve().unwrap();
+        let back = result_from_json(&result_to_json(&r)).unwrap();
+        assert_eq!(back.mapping, r.mapping);
+        assert_eq!(back.energy.normalized.to_bits(), r.energy.normalized.to_bits());
+        assert_eq!(back.energy.total_pj.to_bits(), r.energy.total_pj.to_bits());
+        assert_eq!(back.certificate, r.certificate);
+        assert_eq!(back.solve_time, r.solve_time);
+        // The serialized form itself is deterministic bytes.
+        assert_eq!(result_to_json(&back).to_text(), result_to_json(&r).to_text());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            r#"{}"#,
+            r#"{"shape":{"x":0,"y":1,"z":1},"arch":{"template":"eyeriss"}}"#,
+            r#"{"shape":{"x":4,"y":4,"z":4}}"#,
+            r#"{"shape":{"x":4,"y":4,"z":4},"arch":{"template":"eyeriss"},"deadline_ms":0}"#,
+            r#"{"shape":{"x":4,"y":4,"z":4},"arch":{"sram_words":"1024"}}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(SolveSpec::from_json(&v).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn error_codes_round_trip() {
+        for e in
+            [SolveError::NoFeasibleMapping, SolveError::Interrupted, SolveError::ServiceUnavailable]
+        {
+            assert_eq!(error_from_code(error_code(&e)).unwrap(), e);
+        }
+        assert!(error_from_code("nope").is_err());
+    }
+}

@@ -53,6 +53,6 @@ pub mod workloads;
 // Crate-root conveniences for the hot entry points (the long paths remain
 // canonical; these exist so embedding code can `use goma::{solve, ...}`).
 pub use solver::{
-    solve, solve_seeded, solve_shared, solve_with_threads, SeedBound, SharedCandidateStore,
-    SolveError, SolveResult, SolverOptions,
+    solve, solve_with_threads, SeedBound, SharedCandidateStore, SolveError, SolveRequest,
+    SolveResult, SolverOptions,
 };

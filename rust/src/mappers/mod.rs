@@ -101,14 +101,11 @@ impl Mapper for GomaMapper {
     }
 
     fn map(&self, shape: GemmShape, arch: &Accelerator) -> Option<MapperResult> {
-        let threads = self.options.resolved_threads();
-        let r = match &self.store {
-            Some(store) => {
-                crate::solver::solve_shared(shape, arch, self.options, threads, None, store)
-            }
-            None => crate::solver::solve(shape, arch, self.options),
+        let mut req = crate::solver::SolveRequest::new(shape, arch).options(self.options);
+        if let Some(store) = &self.store {
+            req = req.store(store);
         }
-        .ok()?;
+        let r = req.solve().ok()?;
         Some(MapperResult {
             mapping: r.mapping,
             evaluations: r.certificate.nodes,

@@ -36,14 +36,14 @@
 //! lower key is never discarded, and anything else is pruned precisely as
 //! the canonical scan would. Under the canonical schedule keys only ever
 //! increase, the relaxation never triggers, and the engine degenerates to
-//! the historical scan — `solve_configured(…, bound_order = false, …)` is
+//! the historical scan — [`SolveRequest::bound_order`]`(false)` is
 //! that A/B baseline, and the bound-ordered default provably returns the
 //! bit-identical `(mapping, energy)`, scanning no more units and — in
 //! aggregate — far fewer nodes (property-tested in
 //! `rust/tests/bound_order.rs`; per-instance node counts are not a
 //! theorem, see DESIGN.md §8).
 //!
-//! **Seeded solves** (DESIGN.md §6): [`solve_configured`] accepts an
+//! **Seeded solves** (DESIGN.md §6): [`SolveRequest::seed`] accepts an
 //! optional [`SeedBound`] — the re-costed objective of a mapping known
 //! feasible on *this* `(shape, arch)` (see [`super::seed`]) — whose only
 //! effect is a tighter *starting* bound with **no holder key**: the
@@ -122,7 +122,7 @@ pub struct SolverOptions {
     /// solves with cross-shape incumbent seeds (DESIGN.md §6). `None`
     /// means auto: the `GOMA_SEED_BOUNDS` env override when set, otherwise
     /// on. The engine itself ignores this — seeds reach it explicitly via
-    /// [`solve_configured`] — and mappings/energies are bit-identical
+    /// [`SolveRequest::seed`] — and mappings/energies are bit-identical
     /// either way (property-tested), so the knob never enters the solve
     /// fingerprint.
     pub seed_bounds: Option<bool>,
@@ -339,6 +339,17 @@ struct UnitOutcome {
     timed_out: bool,
 }
 
+/// The wave-start incumbent state every scan and skip decision in one
+/// wave shares (the determinism rule in the module docs): the bound and
+/// the canonical key of the mapping holding it. Snapshotted out of
+/// [`Incumbent`] exactly once per wave and passed by value, so a unit's
+/// outcome cannot observe mid-wave updates.
+#[derive(Clone, Copy)]
+struct WaveState {
+    ub: f64,
+    holder: CanonKey,
+}
+
 /// The wave-quantized incumbent state the reduction threads between waves:
 /// the bound, the canonical key of the mapping holding it
 /// ([`NO_HOLDER`] for `+∞`/seed bounds), and the mapping itself.
@@ -358,6 +369,11 @@ impl Incumbent {
             holder: NO_HOLDER,
             best: None,
         }
+    }
+
+    /// The per-wave snapshot of the bound + holder key.
+    fn wave_state(&self) -> WaveState {
+        WaveState { ub: self.ub, holder: self.holder }
     }
 
     /// Lexicographic-min reduction over `(value, canonical key)`:
@@ -403,20 +419,18 @@ fn cuts(lb: f64, ub: f64, tie_ok: bool) -> bool {
 /// the combo-level precheck evaluates. List minima (`min_l1`/`min_l3`,
 /// `f[0]`) are baked into the lists at construction, never recomputed
 /// here.
-#[allow(clippy::too_many_arguments)]
 fn scan_unit(
     unit: &TripleUnit,
     unit_canon: u32,
     space: &SearchSpace,
     arch: &Accelerator,
-    ub_in: f64,
-    holder_in: CanonKey,
+    wave: WaveState,
     bound_order: bool,
     deadline: Option<Instant>,
 ) -> UnitOutcome {
     let [sx, sy, sz] = unit.s;
-    let mut ub = ub_in;
-    let mut holder = holder_in;
+    let mut ub = wave.ub;
+    let mut holder = wave.holder;
     let mut best: Option<(f64, u16, Mapping)> = None;
     let mut nodes: u64 = 0;
     let mut combos_total: u64 = 0;
@@ -601,95 +615,158 @@ fn finish(
 
 /// Compute the globally optimal mapping for `(shape, arch)` (Eq. 34) with
 /// the thread count resolved from `opts` ([`SolverOptions::resolved_threads`]).
+/// Thin shim over [`SolveRequest`] in its production configuration.
 pub fn solve(
     shape: GemmShape,
     arch: &Accelerator,
     opts: SolverOptions,
 ) -> Result<SolveResult, SolveError> {
-    solve_with_threads(shape, arch, opts, opts.resolved_threads())
+    SolveRequest::new(shape, arch).options(opts).solve()
 }
 
 /// [`solve`] with an explicit intra-solve thread count. The result —
 /// mapping, energy, and certificate down to the node counters — is
 /// bit-identical for every `threads` value (see the module docs for the
-/// determinism rule); only `solve_time` varies.
+/// determinism rule); only `solve_time` varies. Thin shim over
+/// [`SolveRequest::threads`].
 pub fn solve_with_threads(
     shape: GemmShape,
     arch: &Accelerator,
     opts: SolverOptions,
     threads: usize,
 ) -> Result<SolveResult, SolveError> {
-    solve_configured(shape, arch, opts, threads, true, true, None)
+    SolveRequest::new(shape, arch).options(opts).threads(threads).solve()
 }
 
-/// [`solve_with_threads`] with a warm starting bound: the batch-solving
-/// entry point used by the mapping service. Given the same `seed`, the
-/// result is still bit-identical for every thread count; a *valid* seed
-/// (see [`SeedBound`]) additionally leaves the mapping and energy
-/// bit-identical to the unseeded solve while the node counters can only
-/// shrink (DESIGN.md §6).
-pub fn solve_seeded(
+/// One fully described solve — the engine's single entry point.
+///
+/// Every caller builds one of these: the thin [`solve`] /
+/// [`solve_with_threads`] shims, the mapping service's worker pool, the
+/// wire protocol (`coordinator::wire` derives its JSON schema from this
+/// surface), the benches, and the property suites. The builder replaces
+/// the former sprawl of positional-argument entry points
+/// (`solve_seeded` / `solve_shared` / `solve_configured` /
+/// `solve_engine`), whose boolean pairs were unreadable at call sites.
+///
+/// Every knob defaults to the production configuration: dominance
+/// pruning on, bound-ordered schedule on, no seed, no shared store,
+/// thread count resolved from the options.
+///
+/// ```no_run
+/// use goma::mapping::GemmShape;
+/// use goma::solver::SolveRequest;
+/// let arch = goma::arch::eyeriss_like();
+/// let r = SolveRequest::new(GemmShape::new(64, 64, 64), &arch)
+///     .threads(4)
+///     .solve()
+///     .unwrap();
+/// assert!(r.certificate.proved_optimal);
+/// ```
+///
+/// The result is bit-identical for every `threads` value, for either
+/// schedule (`bound_order`), with or without a *valid* [`SeedBound`], and
+/// with or without a [`SharedCandidateStore`] — all property-tested. The
+/// knobs trade latency and search effort only, never the answer.
+#[derive(Clone, Copy)]
+pub struct SolveRequest<'a> {
     shape: GemmShape,
-    arch: &Accelerator,
+    arch: &'a Accelerator,
     opts: SolverOptions,
-    threads: usize,
-    seed: Option<SeedBound>,
-) -> Result<SolveResult, SolveError> {
-    solve_configured(shape, arch, opts, threads, true, true, seed)
-}
-
-/// [`solve_seeded`] with candidate lists fetched from / published to a
-/// cross-solve [`SharedCandidateStore`]: the batch entry point for layers
-/// solving many keys on one architecture (the mapping service's worker
-/// pool, the eval grid). Store hits are bit-identical to local builds, so
-/// every solve result is bit-identical to the storeless path.
-pub fn solve_shared(
-    shape: GemmShape,
-    arch: &Accelerator,
-    opts: SolverOptions,
-    threads: usize,
-    seed: Option<SeedBound>,
-    store: &std::sync::Arc<SharedCandidateStore>,
-) -> Result<SolveResult, SolveError> {
-    solve_engine(shape, arch, opts, threads, true, true, seed, Some(store))
-}
-
-/// [`solve_with_threads`] with the dominance filter and the bound-ordered
-/// schedule each switched on or off — `dominance = false` and
-/// `bound_order = false` are the A/B baselines used by the node-count
-/// property tests and the `solver_hotpath` bench (the optimum is
-/// provably identical for every combination, DESIGN.md §3/§8) — and an
-/// optional starting incumbent ([`SeedBound`], DESIGN.md §6).
-#[allow(clippy::too_many_arguments)]
-pub fn solve_configured(
-    shape: GemmShape,
-    arch: &Accelerator,
-    opts: SolverOptions,
-    threads: usize,
+    threads: Option<usize>,
     dominance: bool,
     bound_order: bool,
     seed: Option<SeedBound>,
-) -> Result<SolveResult, SolveError> {
-    solve_engine(shape, arch, opts, threads, dominance, bound_order, seed, None)
+    store: Option<&'a std::sync::Arc<SharedCandidateStore>>,
 }
 
-/// The fully configured engine: every knob, including the cross-solve
-/// candidate store. All other entry points delegate here.
-#[allow(clippy::too_many_arguments)]
-pub fn solve_engine(
-    shape: GemmShape,
-    arch: &Accelerator,
-    opts: SolverOptions,
-    threads: usize,
-    dominance: bool,
-    bound_order: bool,
-    seed: Option<SeedBound>,
-    store: Option<&std::sync::Arc<SharedCandidateStore>>,
-) -> Result<SolveResult, SolveError> {
+impl<'a> SolveRequest<'a> {
+    /// A request for `(shape, arch)` in the production configuration.
+    pub fn new(shape: GemmShape, arch: &'a Accelerator) -> Self {
+        SolveRequest {
+            shape,
+            arch,
+            opts: SolverOptions::default(),
+            threads: None,
+            dominance: true,
+            bound_order: true,
+            seed: None,
+            store: None,
+        }
+    }
+
+    /// Replace the solver options wholesale (`exact_pe`, time limit, and
+    /// the auto-resolved thread/seeding defaults).
+    pub fn options(mut self, opts: SolverOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Wall-clock budget for this request — shorthand for setting
+    /// [`SolverOptions::time_limit`] on [`SolveRequest::options`].
+    pub fn time_limit(mut self, limit: Duration) -> Self {
+        self.opts.time_limit = Some(limit);
+        self
+    }
+
+    /// Explicit intra-solve thread count (clamped to ≥ 1), overriding the
+    /// options' resolution ([`SolverOptions::resolved_threads`]).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    /// Switch the dominance filter (DESIGN.md §3); `false` is the
+    /// unpruned A/B baseline of the node-count property tests and the
+    /// `solver_hotpath` bench. The optimum is provably identical.
+    pub fn dominance(mut self, on: bool) -> Self {
+        self.dominance = on;
+        self
+    }
+
+    /// Switch the bound-ordered schedule (DESIGN.md §8); `false` is the
+    /// canonical-order A/B baseline. The answer is provably identical.
+    pub fn bound_order(mut self, on: bool) -> Self {
+        self.bound_order = on;
+        self
+    }
+
+    /// Warm starting bound (DESIGN.md §6). Accepts a bare [`SeedBound`]
+    /// or an `Option`, so seed planners can pass their result through
+    /// unchanged. A *valid* bound leaves mapping and energy bit-identical
+    /// and only shrinks the effort counters.
+    pub fn seed(mut self, seed: impl Into<Option<SeedBound>>) -> Self {
+        self.seed = seed.into();
+        self
+    }
+
+    /// Fetch/publish candidate lists through a cross-solve
+    /// [`SharedCandidateStore`] (DESIGN.md §8). Store hits are
+    /// bit-identical to local builds.
+    pub fn store(mut self, store: &'a std::sync::Arc<SharedCandidateStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Run the engine over this request.
+    pub fn solve(&self) -> Result<SolveResult, SolveError> {
+        run_engine(self)
+    }
+}
+
+/// The engine proper; every [`SolveRequest`] lands here.
+fn run_engine(req: &SolveRequest<'_>) -> Result<SolveResult, SolveError> {
+    let (shape, arch, opts) = (req.shape, req.arch, req.opts);
+    let bound_order = req.bound_order;
     let start = Instant::now();
     let deadline = opts.time_limit.and_then(|l| start.checked_add(l));
-    let space =
-        SearchSpace::build_configured(shape, arch, opts.exact_pe, dominance, deadline, store);
+    let space = SearchSpace::build_configured(
+        shape,
+        arch,
+        opts.exact_pe,
+        req.dominance,
+        deadline,
+        req.store,
+    );
     // A truncated space is already a timeout: an empty one proves nothing
     // (the deadline may have expired before any unit was enumerated), and
     // a partial one can never prove optimality.
@@ -701,13 +778,13 @@ pub fn solve_engine(
             SolveError::NoFeasibleMapping
         });
     }
-    let threads = threads.max(1);
+    let threads = req.threads.unwrap_or_else(|| opts.resolved_threads()).max(1);
     let order: Vec<u32> = if bound_order {
         space.unit_sched.clone()
     } else {
         (0..space.units.len() as u32).collect()
     };
-    let mut inc = Incumbent::new(seed);
+    let mut inc = Incumbent::new(req.seed);
     let mut tally = Tally::default();
 
     for wave in order.chunks(WAVE_UNITS) {
@@ -717,28 +794,18 @@ pub fn solve_engine(
         }
         // The determinism rule: one incumbent-state read per wave, shared
         // by every unit in it — including the unit-skip decisions.
-        let ub_wave = inc.ub;
-        let holder_wave = inc.holder;
+        let ws = inc.wave_state();
         let mut dispatch: Vec<u32> = Vec::with_capacity(wave.len());
         for &ui in wave {
             tally.units_total += 1;
-            if bound_order && skip_unit(&space.units[ui as usize], ui, ub_wave, holder_wave) {
+            if bound_order && skip_unit(&space.units[ui as usize], ui, ws) {
                 tally.units_skipped += 1;
                 continue;
             }
             dispatch.push(ui);
         }
         let outcomes = ordered_map(&dispatch, threads, |_, &ui| {
-            scan_unit(
-                &space.units[ui as usize],
-                ui,
-                &space,
-                arch,
-                ub_wave,
-                holder_wave,
-                bound_order,
-                deadline,
-            )
+            scan_unit(&space.units[ui as usize], ui, &space, arch, ws, bound_order, deadline)
         });
         // Deterministic reduction: lexicographic min over (value, key) —
         // exactly the canonical scan's first-best-wins rule, independent
@@ -768,9 +835,9 @@ pub fn solve_engine(
 /// it may contain the canonical winner. (`ui == holder.0` cannot occur:
 /// a unit is scanned at most once, so the holder's own unit is never
 /// re-considered.)
-fn skip_unit(unit: &TripleUnit, ui: u32, ub: f64, holder: CanonKey) -> bool {
-    let tie_ok = holder != NO_HOLDER && ui < holder.0;
-    cuts(unit.lb, ub, tie_ok)
+fn skip_unit(unit: &TripleUnit, ui: u32, wave: WaveState) -> bool {
+    let tie_ok = wave.holder != NO_HOLDER && ui < wave.holder.0;
+    cuts(unit.lb, wave.ub, tie_ok)
 }
 
 /// A plain sequential implementation of the engine's exact semantics — no
@@ -788,7 +855,7 @@ pub fn solve_serial_reference(
 }
 
 /// [`solve_serial_reference`] with a warm starting bound — the sequential
-/// pin for seeded solves: `solve_configured(…, seed)` must be bit-identical
+/// pin for seeded solves: [`SolveRequest::seed`] must be bit-identical
 /// to this at every thread count for the same `seed`.
 pub fn solve_serial_reference_seeded(
     shape: GemmShape,
@@ -817,24 +884,14 @@ pub fn solve_serial_reference_seeded(
         }
         // Wave-start state for every scan and skip decision in the wave
         // (absorbing per unit below must not leak into the same wave).
-        let ub_wave = inc.ub;
-        let holder_wave = inc.holder;
+        let ws = inc.wave_state();
         for &ui in wave {
             tally.units_total += 1;
-            if skip_unit(&space.units[ui as usize], ui, ub_wave, holder_wave) {
+            if skip_unit(&space.units[ui as usize], ui, ws) {
                 tally.units_skipped += 1;
                 continue;
             }
-            let o = scan_unit(
-                &space.units[ui as usize],
-                ui,
-                &space,
-                arch,
-                ub_wave,
-                holder_wave,
-                true,
-                deadline,
-            );
+            let o = scan_unit(&space.units[ui as usize], ui, &space, arch, ws, true, deadline);
             tally.absorb(&o);
             timed_out |= o.timed_out;
             inc.absorb(ui, &o.best);
@@ -897,8 +954,14 @@ mod tests {
         let a = arch();
         let opts = SolverOptions::default();
         for shape in [GemmShape::new(64, 96, 32), GemmShape::new(64, 64, 64)] {
-            let canonical = solve_configured(shape, &a, opts, 1, true, false, None).unwrap();
-            let bound = solve_configured(shape, &a, opts, 1, true, true, None).unwrap();
+            let canonical = SolveRequest::new(shape, &a)
+                .options(opts)
+                .threads(1)
+                .bound_order(false)
+                .solve()
+                .unwrap();
+            let bound =
+                SolveRequest::new(shape, &a).options(opts).threads(1).solve().unwrap();
             assert_eq!(bound.mapping, canonical.mapping, "{shape}: the answer moved");
             assert_eq!(
                 bound.energy.normalized.to_bits(),
@@ -942,18 +1005,10 @@ mod tests {
         let shape = GemmShape::new(7560, 7560, 7560);
         let a = Accelerator::custom("huge", 1 << 20, 4, 64);
         let space = SearchSpace::build_with_dominance(shape, &a, true, false);
+        let open = WaveState { ub: f64::INFINITY, holder: NO_HOLDER };
         let mut target = None;
         for ui in 0..space.units.len() as u32 {
-            let free = scan_unit(
-                &space.units[ui as usize],
-                ui,
-                &space,
-                &a,
-                f64::INFINITY,
-                NO_HOLDER,
-                false,
-                None,
-            );
+            let free = scan_unit(&space.units[ui as usize], ui, &space, &a, open, false, None);
             if free.nodes > TIME_CHECK_PERIOD {
                 target = Some((ui, free.nodes));
                 break;
@@ -962,16 +1017,7 @@ mod tests {
         let (ui, free_nodes) = target.expect("premise: no unit out-scans one poll period");
         let d = Instant::now();
         std::thread::sleep(Duration::from_millis(2));
-        let cut = scan_unit(
-            &space.units[ui as usize],
-            ui,
-            &space,
-            &a,
-            f64::INFINITY,
-            NO_HOLDER,
-            false,
-            Some(d),
-        );
+        let cut = scan_unit(&space.units[ui as usize], ui, &space, &a, open, false, Some(d));
         assert!(cut.timed_out, "an expired deadline must interrupt the scan");
         assert_eq!(
             cut.nodes, TIME_CHECK_PERIOD,
@@ -985,8 +1031,13 @@ mod tests {
         let shape = GemmShape::new(64, 96, 32);
         let a = arch();
         let opts = SolverOptions::default();
-        let pruned = solve_configured(shape, &a, opts, 1, true, true, None).unwrap();
-        let raw = solve_configured(shape, &a, opts, 1, false, true, None).unwrap();
+        let pruned = SolveRequest::new(shape, &a).options(opts).threads(1).solve().unwrap();
+        let raw = SolveRequest::new(shape, &a)
+            .options(opts)
+            .threads(1)
+            .dominance(false)
+            .solve()
+            .unwrap();
         let (po, ro) = (pruned.energy.normalized, raw.energy.normalized);
         assert!((po - ro).abs() / ro < 1e-9, "pruning changed the optimum");
         assert!(
@@ -1045,11 +1096,15 @@ mod tests {
         let shape = GemmShape::new(64, 96, 32);
         let a = arch();
         let opts = SolverOptions::default();
-        let unseeded = solve_configured(shape, &a, opts, 1, true, true, None).unwrap();
+        let unseeded = SolveRequest::new(shape, &a).options(opts).threads(1).solve().unwrap();
         let bound = super::super::seed::recost(&unseeded.mapping, shape, &a, opts.exact_pe)
             .expect("the optimum must re-cost on its own instance");
         for threads in [1usize, 2, 4] {
-            let seeded = solve_configured(shape, &a, opts, threads, true, true, Some(bound))
+            let seeded = SolveRequest::new(shape, &a)
+                .options(opts)
+                .threads(threads)
+                .seed(bound)
+                .solve()
                 .unwrap();
             assert_eq!(seeded.mapping, unseeded.mapping, "threads={threads}");
             assert_eq!(
@@ -1065,7 +1120,8 @@ mod tests {
         }
         // And the seeded serial reference pins the seeded engine.
         let serial = solve_serial_reference_seeded(shape, &a, opts, Some(bound)).unwrap();
-        let engine = solve_configured(shape, &a, opts, 4, true, true, Some(bound)).unwrap();
+        let engine =
+            SolveRequest::new(shape, &a).options(opts).threads(4).seed(bound).solve().unwrap();
         assert_bit_identical(&engine, &serial, "seeded engine vs seeded serial");
     }
 
@@ -1076,8 +1132,10 @@ mod tests {
         let opts = SolverOptions::default();
         let plain = solve_with_threads(shape, &a, opts, 1).unwrap();
         let store = std::sync::Arc::new(SharedCandidateStore::new());
-        let cold = solve_shared(shape, &a, opts, 1, None, &store).unwrap();
-        let warm = solve_shared(shape, &a, opts, 2, None, &store).unwrap();
+        let cold =
+            SolveRequest::new(shape, &a).options(opts).threads(1).store(&store).solve().unwrap();
+        let warm =
+            SolveRequest::new(shape, &a).options(opts).threads(2).store(&store).solve().unwrap();
         assert_bit_identical(&cold, &plain, "cold store vs storeless");
         assert_bit_identical(&warm, &plain, "warm store vs storeless");
         assert!(store.hits() > 0, "the second solve must hit the store");

@@ -35,9 +35,15 @@
 //! Because the objective is O(1) to evaluate, solved mappings can be
 //! re-costed on *other* shapes for free: [`seed`] turns such donors into
 //! valid starting incumbents (feasibility-gated), which the engine accepts
-//! via [`engine::solve_configured`] — mapping and energy provably
+//! via [`SolveRequest::seed`] — mapping and energy provably
 //! unchanged, search effort only shrinking (DESIGN.md §6). The mapping
 //! service uses this to warm-bound batch solves across related shapes.
+//!
+//! Every configured solve goes through one typed entry point,
+//! [`SolveRequest`] (builder-style: threads, dominance/bound-order A/B
+//! switches, seed, shared store); [`solve`] and [`solve_with_threads`]
+//! are thin shims over it, and the wire protocol + CLI flag set derive
+//! from the same surface ([`crate::coordinator::wire`]).
 
 mod bnb;
 mod candidates;
@@ -51,9 +57,9 @@ pub use candidates::{
     spatial_triples, AxisCandidate, CandidateCache, CandidateList, SharedCandidateStore,
 };
 pub use engine::{
-    default_seed_bounds, default_solve_threads, parse_seed_bounds_value, solve_configured,
-    solve_engine, solve_seeded, solve_serial_reference, solve_serial_reference_seeded,
-    solve_shared, solve_with_threads, SeedBound, SolveError, SolveResult, SolverOptions,
+    default_seed_bounds, default_solve_threads, parse_seed_bounds_value, solve_serial_reference,
+    solve_serial_reference_seeded, solve_with_threads, SeedBound, SolveError, SolveRequest,
+    SolveResult, SolverOptions,
 };
 pub use exhaustive::{enumerate_all, exhaustive_best, MappingVisitor};
 pub use seed::{plan_seed, recost, similarity_key, SeedPlan};

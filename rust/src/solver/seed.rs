@@ -6,7 +6,7 @@
 //! — divisibility nesting, the Eq. 29 PE constraint, both capacities —
 //! its re-costed objective is a valid upper bound on the target's optimum,
 //! which the branch-and-bound can start from instead of `+∞`
-//! ([`super::engine::solve_configured`] with a [`SeedBound`]). Batches of
+//! ([`super::engine::SolveRequest::seed`] with a [`SeedBound`]). Batches of
 //! related shapes (the paper's Table II prefill workloads: dozens of GEMMs
 //! per model on one arch) are exactly this scenario, and the mapping
 //! service uses this module to seed every batch miss from earlier results

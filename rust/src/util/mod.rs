@@ -1,16 +1,19 @@
 //! Shared numeric utilities: divisor/prime machinery used by the folded
 //! mapping search space, statistics helpers used by the evaluation
 //! pipeline (geomean / median / percentiles of normalized EDP and runtime),
-//! and the deterministic worker pool the eval fan-out runs on.
+//! the deterministic worker pool the eval fan-out runs on, and the
+//! dependency-free JSON tree the wire protocol speaks.
 
 pub mod divisors;
 pub mod fnv;
+pub mod json;
 pub mod parallel;
 pub mod rng;
 pub mod stats;
 
 pub use divisors::{divisors, divisors_up_to, factorize, gcd, num_divisors, ordered_factor_triples};
 pub use fnv::Fnv64;
+pub use json::{Json, JsonError};
 pub use parallel::{default_jobs, ordered_map};
 pub use rng::Rng;
 pub use stats::{geomean, median, percentile, Summary};

@@ -4,7 +4,7 @@
 //!
 //! * **(a) the answer never moves** — the bound-ordered engine returns
 //!   mapping and energy bit-identical to the canonical-order baseline
-//!   (`solve_configured(…, bound_order = false, …)`, the historical scan)
+//!   (`SolveRequest::bound_order(false)`, the historical scan)
 //!   on every instance, seeded and unseeded, including exact-tie
 //!   instances (symmetric shapes draw often below);
 //! * **(b) thread-count determinism survives the reorder** —
@@ -29,8 +29,8 @@
 use goma::arch::Accelerator;
 use goma::mapping::GemmShape;
 use goma::solver::{
-    recost, solve_configured, solve_serial_reference, solve_serial_reference_seeded, solve_shared,
-    solve_with_threads, SharedCandidateStore, SolveResult, SolverOptions,
+    recost, solve_serial_reference, solve_serial_reference_seeded, solve_with_threads,
+    SharedCandidateStore, SolveRequest, SolveResult, SolverOptions,
 };
 use goma::util::Rng;
 use std::sync::Arc;
@@ -146,7 +146,11 @@ fn property_bound_ordered_engine_is_bit_identical_and_never_more_work() {
         let shape = rand_shape(&mut rng);
         let arch = rand_arch(&mut rng, "boprop", draws);
         let label = format!("draw {draws} {shape} on {}", arch.name);
-        let canonical = solve_configured(shape, &arch, opts, 1, true, false, None);
+        let canonical = SolveRequest::new(shape, &arch)
+            .options(opts)
+            .threads(1)
+            .bound_order(false)
+            .solve();
         let reference = solve_serial_reference(shape, &arch, opts);
         let (canonical, reference) = match (canonical, reference) {
             (Ok(c), Ok(r)) => (c, r),
@@ -178,12 +182,21 @@ fn property_bound_ordered_engine_is_bit_identical_and_never_more_work() {
         // own objective, where the bound ties the optimum exactly.
         let bound = recost(&canonical.mapping, shape, &arch, opts.exact_pe)
             .unwrap_or_else(|| panic!("{label}: the optimum must re-cost on its own instance"));
-        let canonical_seeded = solve_configured(shape, &arch, opts, 1, true, false, Some(bound))
+        let canonical_seeded = SolveRequest::new(shape, &arch)
+            .options(opts)
+            .threads(1)
+            .bound_order(false)
+            .seed(bound)
+            .solve()
             .unwrap_or_else(|e| panic!("{label}: canonical seeded solve failed: {e}"));
         let reference_seeded = solve_serial_reference_seeded(shape, &arch, opts, Some(bound))
             .unwrap_or_else(|e| panic!("{label}: seeded serial reference failed: {e}"));
         for threads in [1usize, 2, 4] {
-            let engine = solve_configured(shape, &arch, opts, threads, true, true, Some(bound))
+            let engine = SolveRequest::new(shape, &arch)
+                .options(opts)
+                .threads(threads)
+                .seed(bound)
+                .solve()
                 .unwrap_or_else(|e| panic!("{label} seeded threads={threads}: {e}"));
             assert_bit_identical(
                 &engine,
@@ -223,7 +236,12 @@ fn shared_candidate_store_batch_is_bit_identical_to_storeless() {
     for pass in 0..2 {
         for shape in shapes {
             let plain = solve_with_threads(shape, &arch, opts, 1).unwrap();
-            let shared = solve_shared(shape, &arch, opts, 2, None, &store).unwrap();
+            let shared = SolveRequest::new(shape, &arch)
+                .options(opts)
+                .threads(2)
+                .store(&store)
+                .solve()
+                .unwrap();
             assert_bit_identical(&shared, &plain, &format!("pass {pass} {shape}"));
         }
     }

@@ -101,9 +101,37 @@ fn solve_accepts_explicit_solve_threads() {
 }
 
 #[test]
-#[should_panic(expected = "missing required flag --m")]
-fn solve_missing_required_flag_panics_with_message() {
-    let _ = run(&args(&["solve", "--n", "64", "--k", "64"]));
+fn solve_missing_required_flag_errors_with_message() {
+    // Historically this panicked; the shared SolveSpec parser reports it
+    // as a proper error instead (the same message a wire client gets).
+    let err = run(&args(&["solve", "--n", "64", "--k", "64"])).unwrap_err();
+    assert!(err.to_string().contains("missing required flag --m"), "{err}");
+}
+
+#[test]
+fn solve_rejects_bad_deadline_before_running() {
+    let zero = args(&["solve", "--m", "8", "--n", "8", "--k", "8", "--deadline-ms", "0"]);
+    assert!(run(&zero).is_err());
+    let junk = args(&["solve", "--m", "8", "--n", "8", "--k", "8", "--deadline-ms", "soon"]);
+    assert!(run(&junk).is_err());
+}
+
+#[test]
+fn solve_with_generous_deadline_still_proves() {
+    let a = args(&["solve", "--m", "32", "--n", "32", "--k", "32", "--deadline-ms", "300000"]);
+    assert_eq!(run(&a).unwrap(), 0);
+}
+
+#[test]
+fn serve_listen_rejects_bad_flags_before_binding() {
+    assert!(run(&args(&["serve", "--listen"])).is_err(), "--listen needs an address");
+    let bad_threshold =
+        args(&["serve", "--listen", "127.0.0.1:0", "--admission-threshold", "0"]);
+    assert!(run(&bad_threshold).is_err());
+    let bad_quota = args(&["serve", "--listen", "127.0.0.1:0", "--client-quota", "none"]);
+    assert!(run(&bad_quota).is_err());
+    let bad_conn = args(&["serve", "--listen", "127.0.0.1:0", "--conn-threads", "0"]);
+    assert!(run(&bad_conn).is_err());
 }
 
 #[test]

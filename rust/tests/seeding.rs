@@ -11,7 +11,7 @@
 use goma::arch::Accelerator;
 use goma::coordinator::MappingService;
 use goma::mapping::{Bypass, GemmShape, Mapping, Tile};
-use goma::solver::{recost, solve_configured, SeedBound, SolveError, SolverOptions};
+use goma::solver::{recost, SeedBound, SolveError, SolveRequest, SolverOptions};
 use goma::util::Rng;
 
 mod common;
@@ -33,12 +33,12 @@ fn property_seeded_solve_is_bit_identical_with_fewer_or_equal_nodes() {
         draws += 1;
         let shape = rand_shape(&mut rng);
         let arch = rand_arch(&mut rng, "seedprop", draws);
-        let Ok(unseeded) = solve_configured(shape, &arch, opts, 1, true, true, None) else {
+        let Ok(unseeded) = SolveRequest::new(shape, &arch).options(opts).threads(1).solve() else {
             continue;
         };
         let mut donors: Vec<Mapping> = vec![unseeded.mapping];
         let related = GemmShape::new(shape.x * 2, shape.y, shape.z);
-        if let Ok(r) = solve_configured(related, &arch, opts, 1, true, true, None) {
+        if let Ok(r) = SolveRequest::new(related, &arch).options(opts).threads(1).solve() {
             donors.push(r.mapping);
         }
         for donor in &donors {
@@ -47,7 +47,11 @@ fn property_seeded_solve_is_bit_identical_with_fewer_or_equal_nodes() {
             };
             seeded_runs += 1;
             let label = format!("draw {draws} {shape} on {}", arch.name);
-            let seeded = solve_configured(shape, &arch, opts, 1, true, true, Some(bound))
+            let seeded = SolveRequest::new(shape, &arch)
+                .options(opts)
+                .threads(1)
+                .seed(bound)
+                .solve()
                 .unwrap_or_else(|e| panic!("{label}: seeded solve failed: {e}"));
             assert_eq!(seeded.mapping, unseeded.mapping, "{label}: mapping");
             assert_eq!(
@@ -71,7 +75,11 @@ fn property_seeded_solve_is_bit_identical_with_fewer_or_equal_nodes() {
             // seeded solves — bit-identical at 2 and 4 threads too.
             if seeded_runs % 8 == 0 {
                 for threads in [2usize, 4] {
-                    let t = solve_configured(shape, &arch, opts, threads, true, true, Some(bound))
+                    let t = SolveRequest::new(shape, &arch)
+                        .options(opts)
+                        .threads(threads)
+                        .seed(bound)
+                        .solve()
                         .unwrap_or_else(|e| panic!("{label} threads={threads}: {e}"));
                     assert_eq!(t.mapping, seeded.mapping, "{label} threads={threads}");
                     assert_eq!(
@@ -123,24 +131,25 @@ fn an_invalid_too_tight_bound_destroys_the_search() {
     let shape = GemmShape::new(64, 96, 32);
     let arch = Accelerator::custom("tight", 16 * 1024, 16, 64);
     let opts = SolverOptions::default();
-    let honest = solve_configured(shape, &arch, opts, 1, true, true, None).unwrap();
+    let honest = SolveRequest::new(shape, &arch).options(opts).threads(1).solve().unwrap();
     let valid = recost(&honest.mapping, shape, &arch, opts.exact_pe).unwrap();
     // Half the optimum's objective: below every feasible mapping's value.
     let poison = SeedBound { objective: valid.objective * 0.5 };
     assert_eq!(
-        solve_configured(shape, &arch, opts, 1, true, true, Some(poison)).unwrap_err(),
+        SolveRequest::new(shape, &arch).options(opts).threads(1).seed(poison).solve().unwrap_err(),
         SolveError::NoFeasibleMapping,
         "an invalid bound silently prunes the whole feasible space"
     );
     // Degenerate case: a zero bound wipes out everything too.
     let zero = SeedBound { objective: 0.0 };
     assert_eq!(
-        solve_configured(shape, &arch, opts, 1, true, true, Some(zero)).unwrap_err(),
+        SolveRequest::new(shape, &arch).options(opts).threads(1).seed(zero).solve().unwrap_err(),
         SolveError::NoFeasibleMapping
     );
     // Whereas the *valid* bound — even though it ties the optimum exactly —
     // leaves the result bit-identical.
-    let seeded = solve_configured(shape, &arch, opts, 1, true, true, Some(valid)).unwrap();
+    let seeded =
+        SolveRequest::new(shape, &arch).options(opts).threads(1).seed(valid).solve().unwrap();
     assert_eq!(seeded.mapping, honest.mapping);
     assert_eq!(seeded.energy.normalized.to_bits(), honest.energy.normalized.to_bits());
 }

@@ -1,0 +1,443 @@
+//! End-to-end suite for the network front door (`coordinator::server` +
+//! `coordinator::wire`):
+//!
+//! * **the stress property** — N seeded clients × M requests over real
+//!   TCP against a small admission threshold: every request is answered
+//!   exactly once (shed requests are retried until answered, never
+//!   silently dropped), sheds are counted, the server-side accounting
+//!   invariant `solve_requests == answered + shed + bad` stays exact, and
+//!   every wire answer is **bit-identical** to the in-process
+//!   `submit_batch` answer for the same key — certificate counters
+//!   included;
+//! * **deterministic overload shedding** — a jammed solve queue makes the
+//!   next wire request shed with a retryable 503 *without being queued*;
+//! * **per-client quotas** — concurrent requests under one client key
+//!   shed 429 beyond the in-flight cap and all complete under retry;
+//! * **deadlines** — a request whose deadline expires while queued is
+//!   answered `interrupted`, and the key is provably not poisoned;
+//! * **`/metrics` golden** — the exposition parses as Prometheus text
+//!   format (HELP/TYPE discipline, sample syntax, cumulative histogram)
+//!   and its counters agree with the in-process metrics.
+//!
+//! The suite must pass at `GOMA_TEST_WORKERS=1` and `=4` (CI runs both).
+
+use goma::arch::Accelerator;
+use goma::coordinator::wire::{self, ArchSpec, SolveSpec, WireReply};
+use goma::coordinator::{MappingServer, MappingService, ServeOptions};
+use goma::mapping::GemmShape;
+use goma::solver::SolveError;
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+mod common;
+use common::{assert_bit_identical, test_workers};
+
+fn arch() -> Accelerator {
+    Accelerator::custom("wire-stress", 1 << 16, 16, 64)
+}
+
+fn arch_spec() -> ArchSpec {
+    ArchSpec::Custom {
+        name: "wire-stress".into(),
+        sram_words: 1 << 16,
+        num_pe: 16,
+        regfile_words: 64,
+    }
+}
+
+/// POST a spec, retrying sheds until the server gives a real answer.
+/// Returns the answer plus how many times the request was shed.
+fn solve_with_retries(
+    addr: SocketAddr,
+    client: &str,
+    spec: &SolveSpec,
+) -> (Result<goma::solver::SolveResult, SolveError>, u64) {
+    let body = spec.to_json().to_text();
+    let mut sheds = 0;
+    for _ in 0..2000 {
+        let (status, reply) = wire::http_call(
+            addr,
+            "POST",
+            "/solve",
+            &[("Content-Type", "application/json"), ("X-Goma-Client", client)],
+            &body,
+        )
+        .expect("http call");
+        match wire::parse_reply(status, &reply).expect("well-formed reply") {
+            WireReply::Ok(r) => return (Ok(*r), sheds),
+            WireReply::Solve(e) => return (Err(e), sheds),
+            WireReply::Shed { retryable, .. } => {
+                assert!(retryable, "sheds must be marked retryable");
+                sheds += 1;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+    panic!("request for {:?} was shed forever", spec.shape);
+}
+
+/// Distinct feasible shapes for the stress pool (extents divisible by the
+/// 16-PE fanout's factor triples).
+fn stress_shapes() -> Vec<GemmShape> {
+    let mut shapes = Vec::new();
+    for &x in &[32u64, 64] {
+        for &y in &[32u64, 96] {
+            for &z in &[16u64, 64] {
+                shapes.push(GemmShape::new(x, y, z));
+            }
+        }
+    }
+    shapes
+}
+
+/// Distinct shapes used to jam the solve queue (never overlapping the
+/// stress pool, so jamming cannot warm the stress keys).
+fn jam_shapes(n: u64) -> Vec<GemmShape> {
+    (0..n).map(|i| GemmShape::new(48, 48, 2 * (i + 1))).collect()
+}
+
+#[test]
+fn wire_stress_every_request_answered_exactly_once_and_bit_identical() {
+    let service = MappingService::default().with_workers(test_workers()).spawn();
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        conn_threads: 4,
+        // Deliberately tiny: the jam phase below pushes queue_depth past
+        // it, so overload shedding provably triggers.
+        admission_threshold: 2,
+        client_quota: 8,
+    };
+    let server = MappingServer::spawn(service, opts).expect("bind");
+    let addr = server.addr();
+    let shapes = stress_shapes();
+
+    // Jam the queue through the in-process path (these submissions bypass
+    // admission control on purpose — it is the *wire* that sheds), then
+    // hit the wire while the queue is saturated.
+    let jam: Vec<_> = jam_shapes(48)
+        .into_iter()
+        .map(|s| server.service().submit_with_deadline(s, arch(), None))
+        .collect();
+    let jammed_spec = SolveSpec::new(shapes[0], arch_spec());
+    let (warmup, warmup_sheds) = solve_with_retries(addr, "warmup", &jammed_spec);
+    assert!(warmup.is_ok(), "warmup answer: {warmup:?}");
+    assert!(warmup_sheds >= 1, "a request arriving at a jammed queue must be shed at least once");
+    for p in jam {
+        p.wait().expect("jam shapes are feasible");
+    }
+
+    // The stress phase proper: N clients × M requests, all retried to
+    // completion.
+    let clients = 4usize;
+    let per_client = 6usize;
+    let total_sheds = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(clients));
+    let results: Vec<Vec<(GemmShape, goma::solver::SolveResult)>> = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let shapes = shapes.clone();
+            let total_sheds = total_sheds.clone();
+            let barrier = barrier.clone();
+            joins.push(scope.spawn(move || {
+                barrier.wait();
+                let name = format!("client-{c}");
+                let mut out = Vec::new();
+                for i in 0..per_client {
+                    // Each client walks the pool at a different stride so
+                    // concurrent requests mix duplicate and distinct keys.
+                    let shape = shapes[(c + 3 * i) % shapes.len()];
+                    let spec = SolveSpec::new(shape, arch_spec());
+                    let (r, sheds) = solve_with_retries(addr, &name, &spec);
+                    total_sheds.fetch_add(sheds, Ordering::Relaxed);
+                    out.push((shape, r.expect("stress shapes are feasible")));
+                }
+                out
+            }));
+        }
+        joins.into_iter().map(|j| j.join().expect("client thread")).collect()
+    });
+
+    // Every request answered exactly once: each client got exactly M
+    // answers, in its own request order.
+    assert_eq!(results.len(), clients);
+    for r in &results {
+        assert_eq!(r.len(), per_client, "a client lost or duplicated an answer");
+    }
+
+    // Accounting invariant, extended with sheds, still exact: every wire
+    // request is classified exactly once.
+    let m = server.metrics();
+    let answered = (clients * per_client) as u64 + 1; // + the warmup request
+    assert_eq!(m.answered_ok(), answered, "all answered requests succeeded");
+    assert_eq!(m.answered_err(), 0);
+    assert_eq!(m.bad_requests(), 0);
+    assert_eq!(
+        m.solve_requests(),
+        m.answered_ok() + m.answered_err() + m.shed_overload() + m.shed_quota() + m.bad_requests(),
+        "the shed-extended accounting invariant must be exact"
+    );
+    assert_eq!(
+        m.shed_overload() + m.shed_quota(),
+        total_sheds.load(Ordering::Relaxed) + warmup_sheds,
+        "every shed the clients saw is counted, and no others"
+    );
+    assert!(m.shed_overload() >= 1, "the jam phase must have shed on overload");
+    assert_eq!(m.latency_count(), answered, "the histogram observes answered requests only");
+
+    // Bit-identical to the in-process path: ask the same service through
+    // submit_batch and compare every field, counters included.
+    let in_process: Vec<_> = server
+        .service()
+        .submit_batch(&arch(), &shapes)
+        .into_iter()
+        .map(|p| p.wait().expect("feasible"))
+        .collect();
+    let by_shape: HashMap<GemmShape, _> =
+        shapes.iter().copied().zip(in_process.iter()).collect();
+    for (shape, wire_r) in results.iter().flatten() {
+        assert_bit_identical(wire_r, by_shape[shape], &format!("wire vs in-process, {shape}"));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn per_client_quota_sheds_and_all_requests_complete() {
+    let service = MappingService::default().with_workers(test_workers()).spawn();
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        conn_threads: 4,
+        admission_threshold: u64::MAX, // quota is the only shedding rule here
+        client_quota: 1,
+    };
+    let server = MappingServer::spawn(service, opts).expect("bind");
+    let addr = server.addr();
+
+    // 8 concurrent requests under ONE client key, released together; with
+    // an in-flight cap of 1 and 4 connection threads, the first wave must
+    // shed at least one of them. Retries drain everything.
+    let n = 8usize;
+    let barrier = Arc::new(Barrier::new(n));
+    let sheds = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|scope| {
+        for i in 0..n {
+            let barrier = barrier.clone();
+            let sheds = sheds.clone();
+            scope.spawn(move || {
+                // Distinct fresh shapes so every request is a real solve
+                // (a cache hit would shrink the in-flight window).
+                let spec = SolveSpec::new(GemmShape::new(96, 96, 2 * (i as u64 + 1)), arch_spec());
+                barrier.wait();
+                let (r, s) = solve_with_retries(addr, "greedy", &spec);
+                sheds.fetch_add(s, Ordering::Relaxed);
+                r.expect("feasible");
+            });
+        }
+    });
+    let m = server.metrics();
+    assert_eq!(m.answered_ok(), n as u64, "every request completed exactly once");
+    assert!(m.shed_quota() >= 1, "one greedy client must hit the in-flight quota");
+    assert_eq!(m.shed_overload(), 0, "threshold is infinite; only quota sheds");
+    assert_eq!(m.shed_quota(), sheds.load(Ordering::Relaxed), "clients saw every quota shed");
+    assert_eq!(
+        m.solve_requests(),
+        m.answered_ok() + m.shed_quota(),
+        "accounting stays exact under quota shedding"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn deadline_expired_in_queue_is_interrupted_and_never_poisons_the_key() {
+    // One solve worker so an in-process jam serializes ahead of the wire
+    // request, guaranteeing its 1 ms deadline expires while queued.
+    let service = MappingService::default().with_workers(1).spawn();
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        conn_threads: 2,
+        admission_threshold: u64::MAX, // deadlines, not admission, under test
+        client_quota: 8,
+    };
+    let server = MappingServer::spawn(service, opts).expect("bind");
+    let addr = server.addr();
+
+    // A chunky shape leads the jam so the single worker is provably busy
+    // for far longer than the 1 ms deadline below.
+    let mut blockers = vec![GemmShape::new(192, 192, 192)];
+    blockers.extend(jam_shapes(32));
+    let jam: Vec<_> = blockers
+        .into_iter()
+        .map(|s| server.service().submit_with_deadline(s, arch(), None))
+        .collect();
+    // Give the dispatcher time to pull the jam into its current batch
+    // window: the wire request below then lands in a *later* window and
+    // provably starts (and expires) behind the whole jam.
+    std::thread::sleep(Duration::from_millis(10));
+    let shape = GemmShape::new(64, 64, 64);
+    let mut spec = SolveSpec::new(shape, arch_spec());
+    spec.deadline_ms = Some(1);
+    let (r, _) = solve_with_retries(addr, "impatient", &spec);
+    assert_eq!(r.unwrap_err(), SolveError::Interrupted, "expired in queue → interrupted");
+    for p in jam {
+        p.wait().expect("jam shapes are feasible");
+    }
+
+    // The key must not be poisoned: the same shape without a deadline is
+    // solved and proved (an expired deadline is a load artifact, never a
+    // cacheable fact about the key — DESIGN.md §9).
+    let (again, _) = solve_with_retries(addr, "patient", &SolveSpec::new(shape, arch_spec()));
+    let again = again.expect("the key must still solve");
+    assert!(again.certificate.proved_optimal);
+    assert_eq!(server.metrics().answered_err(), 1);
+    server.shutdown();
+}
+
+#[test]
+fn bad_requests_health_and_unknown_routes() {
+    let service = MappingService::default().with_workers(1).spawn();
+    let server = MappingServer::spawn(service, ServeOptions::default()).expect("bind");
+    let addr = server.addr();
+
+    let (status, body) = wire::http_call(addr, "GET", "/healthz", &[], "").unwrap();
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+
+    let (status, _) = wire::http_call(addr, "GET", "/nope", &[], "").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = wire::http_call(addr, "GET", "/solve", &[], "").unwrap();
+    assert_eq!(status, 405, "GET /solve is a method error, not a 404");
+
+    for bad in [
+        "",         // empty body
+        "not json", // unparsable
+        r#"{"shape":{"x":0,"y":4,"z":4},"arch":{"template":"eyeriss"}}"#, // zero extent
+        r#"{"shape":{"x":4,"y":4,"z":4},"arch":{"template":"never-heard-of-it"}}"#,
+    ] {
+        let (status, reply) = wire::http_call(addr, "POST", "/solve", &[], bad).unwrap();
+        assert_eq!(status, 400, "{bad:?} must be a 400, got {reply}");
+    }
+    let m = server.metrics();
+    assert_eq!(m.bad_requests(), 4);
+    assert_eq!(m.solve_requests(), 4, "probes and 404s are not solve requests");
+    assert_eq!(
+        m.solve_requests(),
+        m.answered_ok() + m.answered_err() + m.shed_overload() + m.shed_quota() + m.bad_requests()
+    );
+    server.shutdown();
+}
+
+/// A minimal Prometheus text-format checker: HELP/TYPE discipline, sample
+/// line syntax, and numeric values. Returns `family type -> samples`.
+fn parse_prometheus(text: &str) -> HashMap<String, Vec<(String, f64)>> {
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut samples: HashMap<String, Vec<(String, f64)>> = HashMap::new();
+    let name_ok = |s: &str| {
+        !s.is_empty()
+            && s.chars().next().unwrap().is_ascii_alphabetic()
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    };
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let kind = parts.next().unwrap_or("");
+            let fam = parts.next().unwrap_or("");
+            let detail = parts.next().unwrap_or("");
+            assert!(kind == "HELP" || kind == "TYPE", "comments must be HELP or TYPE: {line:?}");
+            assert!(name_ok(fam), "bad family name in {line:?}");
+            assert!(!detail.is_empty(), "{kind} line without text: {line:?}");
+            if kind == "TYPE" {
+                let known = ["counter", "gauge", "histogram"];
+                assert!(known.contains(&detail), "unexpected TYPE {detail:?}");
+                types.insert(fam.to_string(), detail.to_string());
+            }
+            continue;
+        }
+        let (name_labels, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("sample without value: {line:?}"));
+        let value: f64 =
+            value.parse().unwrap_or_else(|_| panic!("non-numeric sample value: {line:?}"));
+        let (name, labels) = match name_labels.split_once('{') {
+            Some((n, l)) => {
+                let l = l.strip_suffix('}').unwrap_or_else(|| panic!("unclosed labels: {line:?}"));
+                for pair in l.split(',') {
+                    let (k, v) = pair.split_once('=').expect("label must be key=value");
+                    assert!(name_ok(k), "bad label name {k:?}");
+                    assert!(
+                        v.starts_with('"') && v.ends_with('"') && v.len() >= 2,
+                        "label value must be quoted: {pair:?}"
+                    );
+                }
+                (n, l.to_string())
+            }
+            None => (name_labels, String::new()),
+        };
+        assert!(name_ok(name), "bad metric name in {line:?}");
+        // Histogram series use the family's TYPE under suffixed names.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| name.strip_suffix(suf).filter(|f| types.contains_key(*f)))
+            .unwrap_or(name);
+        assert!(types.contains_key(family), "sample {name:?} has no preceding TYPE line");
+        samples.entry(name.to_string()).or_default().push((labels, value));
+    }
+    samples
+}
+
+#[test]
+fn metrics_endpoint_is_valid_prometheus_text_and_agrees_with_counters() {
+    let service = MappingService::default().with_workers(test_workers()).spawn();
+    let server = MappingServer::spawn(service, ServeOptions::default()).expect("bind");
+    let addr = server.addr();
+
+    // A little traffic so the counters are non-trivial: two real answers
+    // (one solve, one cache hit) and one bad request.
+    let spec = SolveSpec::new(GemmShape::new(64, 96, 32), arch_spec());
+    for client in ["a", "b"] {
+        let (r, _) = solve_with_retries(addr, client, &spec);
+        r.expect("feasible");
+    }
+    let _ = wire::http_call(addr, "POST", "/solve", &[], "garbage").unwrap();
+
+    let (status, text) = wire::http_call(addr, "GET", "/metrics", &[], "").unwrap();
+    assert_eq!(status, 200);
+    let samples = parse_prometheus(&text);
+
+    let scalar = |name: &str| -> f64 {
+        let s = &samples[name];
+        assert_eq!(s.len(), 1, "{name} must be a single series");
+        s[0].1
+    };
+    assert_eq!(scalar("goma_wire_solve_requests_total"), 3.0);
+    assert_eq!(scalar("goma_wire_bad_requests_total"), 1.0);
+    assert_eq!(scalar("goma_service_queue_depth"), 0.0, "quiescent service");
+    let answered: f64 = samples["goma_wire_answered_total"].iter().map(|(_, v)| v).sum();
+    let shed: f64 = samples["goma_wire_shed_total"].iter().map(|(_, v)| v).sum();
+    assert_eq!(
+        answered + shed + scalar("goma_wire_bad_requests_total"),
+        scalar("goma_wire_solve_requests_total"),
+        "the scraped invariant must balance: answered + shed + bad == sent"
+    );
+
+    // Histogram discipline: cumulative buckets ending at +Inf == _count.
+    let buckets = &samples["goma_wire_request_duration_seconds_bucket"];
+    let mut prev = 0.0;
+    for (labels, v) in buckets {
+        assert!(labels.starts_with("le="), "bucket must carry le: {labels:?}");
+        assert!(*v >= prev, "buckets must be cumulative");
+        prev = *v;
+    }
+    assert_eq!(buckets.last().unwrap().0, "le=\"+Inf\"", "last bucket is +Inf");
+    assert_eq!(prev, scalar("goma_wire_request_duration_seconds_count"));
+    assert_eq!(prev, answered, "the histogram counts answered requests");
+    assert!(scalar("goma_wire_request_duration_seconds_sum") >= 0.0);
+
+    // Counters scraped over the wire agree with the in-process accessors.
+    let m = server.metrics();
+    assert_eq!(scalar("goma_wire_solve_requests_total") as u64, m.solve_requests());
+    assert_eq!(answered as u64, m.answered_ok() + m.answered_err());
+    server.shutdown();
+}

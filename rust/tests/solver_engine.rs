@@ -15,7 +15,7 @@
 //! property sweeps seeded random draws and prints the failing instance.
 
 use goma::solver::{
-    exhaustive_best, solve_configured, solve_serial_reference, solve_with_threads, SolverOptions,
+    exhaustive_best, solve_serial_reference, solve_with_threads, SolveRequest, SolverOptions,
 };
 use goma::util::Rng;
 
@@ -98,8 +98,8 @@ fn property_pruning_never_expands_more_nodes_or_moves_the_optimum() {
     for i in 0..8 {
         let shape = rand_shape(&mut rng);
         let arch = rand_arch(&mut rng, "engprop", 200 + i);
-        let pruned = solve_configured(shape, &arch, opts, 1, true, true, None);
-        let raw = solve_configured(shape, &arch, opts, 1, false, true, None);
+        let pruned = SolveRequest::new(shape, &arch).options(opts).threads(1).solve();
+        let raw = SolveRequest::new(shape, &arch).options(opts).threads(1).dominance(false).solve();
         match (pruned, raw) {
             (Ok(p), Ok(r)) => {
                 let (po, ro) = (p.energy.normalized, r.energy.normalized);
