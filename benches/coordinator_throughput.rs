@@ -12,7 +12,11 @@
 //! JSON); runs a **wire front-door leg** (the same keys through a
 //! [`MappingServer`] over real HTTP — per-request p50/p99 latency and
 //! throughput recorded into the JSON's `wire` field, answers asserted
-//! bit-identical to the in-process path); then exercises the persistent
+//! bit-identical to the in-process path); runs a **distributed-shards
+//! leg** (the same keys through `MappingService::with_shards(4)`,
+//! DESIGN.md §10 — answers asserted bit-identical to the plain service,
+//! shard speedup and retry counters recorded into the JSON's `dist`
+//! field); then exercises the persistent
 //! warm-start path on
 //! the `goma serve --workload 1` key set (identical fingerprints, so a
 //! cache dir populated by that CLI in another process — CI carries one
@@ -268,6 +272,63 @@ fn wire_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
     )
 }
 
+/// Distributed-shards leg (DESIGN.md §10): the same keys through a
+/// service whose misses fan each solve out over 4 worker processes
+/// (`MappingService::with_shards`), answers asserted bit-identical to
+/// the plain service. Speedup is recorded, not asserted — keys this
+/// small pay process-spawn overhead that only larger spaces amortize.
+fn dist_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
+    let plain = MappingService::default().spawn();
+    let t = Instant::now();
+    let base: Vec<Arc<SolveResult>> = plain
+        .submit_batch(arch, shapes)
+        .into_iter()
+        .map(|p| p.wait().expect("bench instances are feasible"))
+        .collect();
+    let plain_s = t.elapsed().as_secs_f64();
+    plain.shutdown();
+
+    let dist = MappingService::default()
+        .with_shards(4)
+        .with_shard_bin(std::path::PathBuf::from(env!("CARGO_BIN_EXE_goma")))
+        .spawn();
+    let t = Instant::now();
+    let sharded: Vec<Arc<SolveResult>> = dist
+        .submit_batch(arch, shapes)
+        .into_iter()
+        .map(|p| p.wait().expect("bench instances are feasible"))
+        .collect();
+    let dist_s = t.elapsed().as_secs_f64();
+    for ((d, b), shape) in sharded.iter().zip(&base).zip(shapes) {
+        assert_eq!(d.mapping, b.mapping, "dist service answer moved on {shape}");
+        assert_eq!(
+            d.energy.normalized.to_bits(),
+            b.energy.normalized.to_bits(),
+            "dist service energy moved on {shape}"
+        );
+        assert!(d.certificate.shards >= 1, "{shape}: miss must take the dist route");
+    }
+    let m = dist.metrics();
+    assert_eq!(m.shard_solves(), shapes.len() as u64, "every miss must take the dist route");
+    println!(
+        "dist service (4 shards, {} keys): in-process {plain_s:.4}s -> dist {dist_s:.4}s \
+         (x{:.2}; {} retries)",
+        shapes.len(),
+        plain_s / dist_s.max(1e-12),
+        m.shard_retries()
+    );
+    let record = format!(
+        "{{\"keys\": {}, \"in_process_s\": {plain_s}, \"dist_s\": {dist_s}, \
+         \"shard_speedup\": {}, \"shard_solves\": {}, \"shard_retries\": {}}}",
+        shapes.len(),
+        plain_s / dist_s.max(1e-12),
+        m.shard_solves(),
+        m.shard_retries()
+    );
+    dist.shutdown();
+    record
+}
+
 fn main() {
     let smoke = std::env::var("GOMA_SMOKE").is_ok();
     let arch = Accelerator::custom("bench-pool", 1 << 17, 64, 64);
@@ -323,14 +384,20 @@ fn main() {
     // answers asserted bit-identical to the in-process path.
     let wire_record = wire_leg(&arch, &full[..store_n]);
 
+    // Distributed-shards leg: the same keys through a service whose
+    // misses fan out over worker processes (DESIGN.md §10), answers
+    // asserted bit-identical to the plain service.
+    let dist_record = dist_leg(&arch, &full[..store_n]);
+
     let json = format!(
         "{{\n  \"bench\": \"coordinator_seeding\",\n  \"smoke\": {},\n  \
          \"legs\": [\n    {}\n  ],\n  \"candidate_store\": {},\n  \
-         \"wire\": {}\n}}\n",
+         \"wire\": {},\n  \"dist\": {}\n}}\n",
         smoke,
         ab_records.join(",\n    "),
         store_record,
-        wire_record
+        wire_record,
+        dist_record
     );
     // Anchored to the workspace root (CARGO_MANIFEST_DIR is `rust/`), like
     // BENCH_solver.json: cargo runs bench binaries with the package dir as

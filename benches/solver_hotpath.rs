@@ -4,8 +4,10 @@
 //! pair at engine thread counts 1 and 4, plus a dominance-pruning-off
 //! baseline leg, a **canonical-order baseline leg**
 //! (`SolveRequest::bound_order(false)` — the A/B hook for the
-//! bound-ordered schedule of DESIGN.md §8) and the O(1) energy evaluation
-//! itself, printing latency distributions. Emits `BENCH_solver.json`
+//! bound-ordered schedule of DESIGN.md §8), a **distributed-shards leg**
+//! (`solve_dist` at 4 worker processes, DESIGN.md §10 — per-pair
+//! bit-identity asserted, shard speedup recorded) and the O(1) energy
+//! evaluation itself, printing latency distributions. Emits `BENCH_solver.json`
 //! (geomean solve time, expanded nodes, combos pruned, unit-skip rate,
 //! canonical-vs-bound-ordered node savings) so the perf trajectory is
 //! recorded run over run; this is the harness used for the
@@ -21,7 +23,7 @@
 use goma::arch::{center_templates, edge_templates};
 use goma::energy::evaluate;
 use goma::mapping::GemmShape;
-use goma::solver::{default_solve_threads, SolveRequest, SolverOptions};
+use goma::solver::{default_solve_threads, solve_dist, DistOptions, SolveRequest, SolverOptions};
 use goma::timeloop::score_unchecked;
 use goma::util::{geomean, percentile};
 use goma::workloads::{center_workloads, edge_workloads, Deployment};
@@ -65,6 +67,69 @@ fn time_solves(
         }
     }
     leg
+}
+
+/// The distributed-shards leg (DESIGN.md §10): each pair through
+/// `solve_dist` at `shards` worker processes, with bit-identity asserted
+/// per pair against a fresh in-process solve. Speedup vs the 1-thread
+/// leg is *recorded, not asserted* — on this pair set's small instances
+/// the fan-out pays process-spawn overhead that only larger search
+/// spaces amortize.
+fn time_dist_solves(
+    pairs: &[(GemmShape, goma::arch::Accelerator)],
+    shards: usize,
+) -> (Leg, Vec<f64>, u64) {
+    let dopts = DistOptions {
+        shards,
+        worker_bin: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_goma"))),
+        ..DistOptions::default()
+    };
+    let mut leg = Leg::default();
+    // The reference in-process solve, timed over the same subset so the
+    // recorded speedup compares like with like.
+    let mut ref_times = Vec::new();
+    let mut retries = 0u64;
+    for (shape, arch) in pairs {
+        let t = Instant::now();
+        let r = solve_dist(*shape, arch, SolverOptions::default(), None, &dopts);
+        let dt = t.elapsed().as_secs_f64();
+        let Ok(r) = r else {
+            assert!(
+                SolveRequest::new(*shape, arch).threads(1).solve().is_err(),
+                "dist errored on an in-process-feasible pair {shape}"
+            );
+            continue;
+        };
+        let t = Instant::now();
+        let base = SolveRequest::new(*shape, arch)
+            .threads(1)
+            .solve()
+            .unwrap_or_else(|e| panic!("dist answered an in-process-infeasible pair {shape}: {e}"));
+        ref_times.push(t.elapsed().as_secs_f64());
+        assert_eq!(r.mapping, base.mapping, "dist answer moved on {shape}");
+        assert_eq!(
+            r.energy.normalized.to_bits(),
+            base.energy.normalized.to_bits(),
+            "dist energy moved on {shape}"
+        );
+        assert_eq!(
+            r.certificate.upper_bound.to_bits(),
+            base.certificate.upper_bound.to_bits(),
+            "dist certificate bound moved on {shape}"
+        );
+        assert_eq!(
+            r.certificate.units_total, base.certificate.units_total,
+            "dist chunk tallies must partition the unit schedule on {shape}"
+        );
+        leg.times.push(dt);
+        leg.nodes += r.certificate.nodes;
+        leg.combos_total += r.certificate.combos_total;
+        leg.combos_pruned += r.certificate.combos_pruned;
+        leg.units_total += r.certificate.units_total;
+        leg.units_skipped += r.certificate.units_skipped;
+        retries += r.certificate.shard_retries;
+    }
+    (leg, ref_times, retries)
 }
 
 fn report(label: &str, xs: &[f64]) {
@@ -154,6 +219,21 @@ fn main() {
     report(&format!("env default leg ({dflt} thread(s))"), &tdflt.times);
     assert_eq!(tdflt.nodes, t1.nodes, "default-leg counters must be thread-invariant");
 
+    // The distributed-shards leg (DESIGN.md §10), bit-identity asserted
+    // inside. Capped to the first 24 pairs in full mode (each dist solve
+    // spawns 4 worker processes plus a reference solve, so the full pair
+    // set would dominate the bench's wall clock); the smoke run covers
+    // its whole trimmed set.
+    let dist_cap = if smoke { pairs.len() } else { pairs.len().min(24) };
+    let (dist, dist_ref, dist_retries) = time_dist_solves(&pairs[..dist_cap], 4);
+    report(&format!("distributed, 4 shards ({dist_cap} pairs)"), &dist.times);
+    assert_eq!(dist_retries, 0, "no faults are injected, so no chunk may need a retry");
+    let shard_speedup = geomean(&dist_ref) / geomean(&dist.times).max(1e-12);
+    println!(
+        "distributed speedup (4 shards vs in-process, {dist_cap} pairs): {shard_speedup:.2}x \
+         on geomean (spawn overhead dominates on small spaces; recorded, not asserted)"
+    );
+
     // The engine's determinism guarantee, checked where it is cheapest:
     // certificate counters must not depend on the thread count.
     assert_eq!(t1.nodes, t4.nodes, "node counters must be thread-invariant");
@@ -205,6 +285,8 @@ fn main() {
          \"threads_1\": {},\n  \"threads_4\": {},\n  \"canonical_order\": {},\n  \
          \"unpruned_threads_1\": {},\n  \
          \"default_threads\": {},\n  \"threads_default\": {},\n  \
+         \"shards_4\": {},\n  \"shard_pairs\": {},\n  \"shard_speedup\": {},\n  \
+         \"shard_retries\": {},\n  \
          \"speedup_threads_4\": {},\n  \"speedup_vs_canonical\": {},\n  \
          \"nodes_saved_by_dominance\": {},\n  \"nodes_saved_by_bound_order\": {},\n  \
          \"unit_skip_rate\": {}\n}}\n",
@@ -216,6 +298,10 @@ fn main() {
         json_leg(&unpruned),
         dflt,
         json_leg(&tdflt),
+        json_leg(&dist),
+        dist_cap,
+        shard_speedup,
+        dist_retries,
         geomean(&t1.times) / geomean(&t4.times).max(1e-12),
         geomean(&canonical.times) / geomean(&t1.times).max(1e-12),
         unpruned.nodes.saturating_sub(t1.nodes),

@@ -10,7 +10,7 @@ use crate::coordinator::wire::SolveSpec;
 use crate::coordinator::{MappingServer, MappingService, ServeOptions};
 use crate::experiments::cases::{cached_jobs_threads, normalize, summarize_normalized};
 use crate::experiments::Profile;
-use crate::solver::{SolveRequest, SolverOptions};
+use crate::solver::{solve_dist, DistOptions, SolveRequest, SolverOptions};
 use std::collections::HashMap;
 
 pub const USAGE: &str = "\
@@ -18,7 +18,8 @@ goma — globally optimal GEMM mapping for spatial accelerators
 
 USAGE:
     goma solve --m <M> --n <N> --k <K> [--arch eyeriss|gemmini|a100|tpu] [--solve-threads <N>]
-               [--seed-bounds on|off] [--deadline-ms <MS>]
+               [--seed-bounds on|off] [--deadline-ms <MS>] [--shards <N>]
+    goma solve-shard    (internal: distributed-solve worker, spawned by --shards)
     goma templates
     goma workloads
     goma eval [--jobs <N>] [--profile fast|paper] [--refresh] [--solve-threads <N>]
@@ -93,7 +94,23 @@ fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         opts.time_limit = Some(opts.time_limit.map_or(d, |l| l.min(d)));
     }
     let shape = spec.shape;
-    let r = SolveRequest::new(shape, &acc).options(opts).solve()?;
+    // `--shards N` fans the unit schedule over N worker processes
+    // (re-execing this binary as `goma solve-shard`); the answer is
+    // bit-identical to the in-process path (DESIGN.md §10).
+    let shards = match flags.get("shards") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => anyhow::bail!("--shards must be a positive integer, got '{s}'"),
+        },
+        None => None,
+    };
+    let r = match shards {
+        Some(n) => {
+            let dopts = DistOptions { shards: n, ..DistOptions::default() };
+            solve_dist(shape, &acc, opts, None, &dopts)?
+        }
+        None => SolveRequest::new(shape, &acc).options(opts).solve()?,
+    };
     println!("workload : {shape}");
     println!("arch     : {}", acc.name);
     println!("mapping  : {}", r.mapping.describe());
@@ -115,6 +132,12 @@ fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         r.certificate.units_total,
         r.solve_time
     );
+    if r.certificate.shards > 0 {
+        println!(
+            "dist     : merged from {} shard(s), {} chunk retry(ies)",
+            r.certificate.shards, r.certificate.shard_retries
+        );
+    }
     println!("verified : {}", r.certificate.verify(&r.mapping, shape, &acc));
     Ok(())
 }
@@ -399,6 +422,11 @@ pub fn run(args: &[String]) -> anyhow::Result<i32> {
         print!("{USAGE}");
         return Ok(0);
     };
+    // The shard worker speaks a framed protocol on stdin/stdout — never
+    // parse its (empty) arg list as flags, never print anything else.
+    if cmd == "solve-shard" {
+        return Ok(crate::solver::dist::worker_main());
+    }
     let flags = parse_flags(&args[1..]);
     match cmd.as_str() {
         "solve" => cmd_solve(&flags)?,

@@ -636,6 +636,18 @@ fn render_metrics(ctx: &ServerCtx) -> String {
         "Solves started from a warm bound.",
         s.seeded_solves(),
     );
+    counter(
+        &mut out,
+        "goma_service_shard_solves_total",
+        "Solves answered by the distributed shard coordinator.",
+        s.shard_solves(),
+    );
+    counter(
+        &mut out,
+        "goma_service_shard_retries_total",
+        "Shard unit ranges re-queued after a worker fault.",
+        s.shard_retries(),
+    );
     out.push_str("# HELP goma_service_queue_depth Requests submitted but not yet answered.\n");
     out.push_str("# TYPE goma_service_queue_depth gauge\n");
     out.push_str(&format!("goma_service_queue_depth {}\n", s.queue_depth()));

@@ -58,8 +58,8 @@ use super::warm::{WarmEntry, WarmOutcome, WarmStore};
 use crate::arch::Accelerator;
 use crate::mapping::{GemmShape, Mapping};
 use crate::solver::{
-    plan_seed, SeedBound, SharedCandidateStore, SolveError, SolveRequest, SolveResult,
-    SolverOptions,
+    plan_seed, solve_dist, DistError, DistOptions, SeedBound, SharedCandidateStore, SolveError,
+    SolveRequest, SolveResult, SolverOptions,
 };
 use crate::util::parallel::ordered_map;
 use std::collections::HashMap;
@@ -71,13 +71,15 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Fingerprint/on-disk format version. Mixed into every fingerprint and
-/// into the warm-store header: bumping it cold-starts every cache.
-/// v4: the bound-ordered engine (DESIGN.md §8) changed every certificate
-/// effort counter (`nodes`/`combos_*` record the reordered scan's work)
-/// and added the unit-level counters (`units_total`/`units_skipped`) to
-/// the persisted certificate — v3 files are cold-started wholesale, as
-/// every prior version was.
-pub const CACHE_FORMAT_VERSION: u32 = 4;
+/// into the warm-store header: bumping it cold-starts every cache. Also
+/// the version the shard-protocol handshake pins (`solver::dist`): a
+/// worker speaking another version is rejected at spawn, for the same
+/// reason old files are rejected wholesale.
+/// v5: the certificate gained the distributed-solve provenance counters
+/// (`shards`/`shard_retries`, DESIGN.md §10) — v4 files are cold-started
+/// wholesale, as every prior version was (v4 had added the bound-ordered
+/// engine's unit-level counters, DESIGN.md §8).
+pub const CACHE_FORMAT_VERSION: u32 = 5;
 
 /// Donor mappings kept per architecture for seed planning. Bounds the
 /// O(donors) re-cost work per miss; once full, the oldest entry is
@@ -197,6 +199,8 @@ pub struct ServiceMetrics {
     seeded_solves: AtomicU64,
     seed_accepted: AtomicU64,
     seed_rejected: AtomicU64,
+    shard_solves: AtomicU64,
+    shard_retries: AtomicU64,
     queue_depth: AtomicU64,
     per_shard_hits: Vec<AtomicU64>,
 }
@@ -214,6 +218,8 @@ impl ServiceMetrics {
             seeded_solves: AtomicU64::new(0),
             seed_accepted: AtomicU64::new(0),
             seed_rejected: AtomicU64::new(0),
+            shard_solves: AtomicU64::new(0),
+            shard_retries: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             per_shard_hits: (0..shards).map(|_| AtomicU64::new(0)).collect(),
         }
@@ -255,6 +261,22 @@ impl ServiceMetrics {
     /// Donor re-costs rejected by the target-feasibility check.
     pub fn seed_rejected(&self) -> u64 {
         self.seed_rejected.load(Ordering::Relaxed)
+    }
+
+    /// Solves answered by the distributed coordinator
+    /// ([`crate::solver::solve_dist`], DESIGN.md §10) — an overlay on
+    /// `solves`, like `seeded_solves`: it records *how* those solves ran
+    /// (fanned over worker processes), never enters the accounting sum,
+    /// and the results are bit-identical to in-process solves.
+    pub fn shard_solves(&self) -> u64 {
+        self.shard_solves.load(Ordering::Relaxed)
+    }
+
+    /// Total shard unit ranges re-queued after a worker died, hung, or
+    /// corrupted its stream, summed over all distributed solves
+    /// (provenance only — a retry never changes an answer).
+    pub fn shard_retries(&self) -> u64 {
+        self.shard_retries.load(Ordering::Relaxed)
     }
 
     /// Requests submitted but not yet answered (gauge; 0 when quiescent).
@@ -392,11 +414,17 @@ impl ServiceHandle {
 }
 
 /// The mapping service configuration: solver options, worker-pool size
-/// (== cache shard count), and the optional persistent cache location.
+/// (== cache shard count), the optional persistent cache location, and
+/// the optional distributed-solve fan-out. Note the two unrelated
+/// "shard" axes: `workers` shards the *cache* across the in-process
+/// pool, while `solve_shards` fans each individual miss across worker
+/// *processes* ([`crate::solver::solve_dist`], DESIGN.md §10).
 pub struct MappingService {
     options: SolverOptions,
     workers: usize,
     cache_dir: Option<PathBuf>,
+    solve_shards: usize,
+    shard_bin: Option<PathBuf>,
 }
 
 impl Default for MappingService {
@@ -405,6 +433,8 @@ impl Default for MappingService {
             options: SolverOptions::default(),
             workers: 1,
             cache_dir: None,
+            solve_shards: 1,
+            shard_bin: None,
         }
     }
 }
@@ -452,6 +482,24 @@ impl MappingService {
         self
     }
 
+    /// Fan each cache miss across `n` distributed worker processes
+    /// ([`crate::solver::solve_dist`], DESIGN.md §10). `1` (the default)
+    /// keeps every solve in-process. Answers are bit-identical either
+    /// way, so — like `solve_threads` and `seed_bounds` — the knob never
+    /// enters the solve fingerprint; the `shard_solves`/`shard_retries`
+    /// metrics record which route ran.
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.solve_shards = n.max(1);
+        self
+    }
+
+    /// Explicit worker binary for distributed solves. Unset resolves
+    /// through `GOMA_SHARD_BIN`, else the current executable.
+    pub fn with_shard_bin<P: Into<PathBuf>>(mut self, bin: P) -> Self {
+        self.shard_bin = Some(bin.into());
+        self
+    }
+
     /// Spawn the dispatcher; returns the client handle. The pool exits when
     /// every handle is dropped or [`ServiceHandle::shutdown`] is called.
     pub fn spawn(self) -> ServiceHandle {
@@ -470,8 +518,13 @@ impl MappingService {
         let (tx, rx) = channel::<Msg>();
         let m = metrics.clone();
         let options = self.options;
+        let dist = (self.solve_shards >= 2).then(|| DistOptions {
+            shards: self.solve_shards,
+            worker_bin: self.shard_bin,
+            ..DistOptions::default()
+        });
         let join = std::thread::spawn(move || {
-            service_loop(rx, workers, shards, m, options, store);
+            service_loop(rx, workers, shards, m, options, store, dist);
         });
         ServiceHandle {
             tx,
@@ -561,6 +614,7 @@ fn service_loop(
     m: Arc<ServiceMetrics>,
     options: SolverOptions,
     store: Arc<WarmStore>,
+    dist: Option<DistOptions>,
 ) {
     let nshards = shards.len() as u64;
     let seed_on = options.resolved_seed_bounds();
@@ -725,12 +779,40 @@ fn service_loop(
                 // never NoFeasibleMapping — queueing delay proves nothing
                 // about the key.
                 let outcome = match effective_options(options, inp.3) {
-                    Some(opts) => SolveRequest::new(inp.0, &inp.1)
-                        .options(opts)
-                        .threads(per_solve)
-                        .seed(inp.2)
-                        .store(&candidates)
-                        .solve(),
+                    // With `with_shards(n ≥ 2)`, fan the miss across
+                    // worker processes (DESIGN.md §10): same options,
+                    // seed, and per-solve thread share, and a merged
+                    // answer bit-identical to the in-process route — so
+                    // the cache and warm store never observe which ran.
+                    Some(opts) => match &dist {
+                        Some(d) => {
+                            let opts = SolverOptions { solve_threads: per_solve, ..opts };
+                            match solve_dist(inp.0, &inp.1, opts, inp.2, d) {
+                                Ok(r) => {
+                                    m.shard_solves.fetch_add(1, Ordering::Relaxed);
+                                    m.shard_retries
+                                        .fetch_add(r.certificate.shard_retries, Ordering::Relaxed);
+                                    Ok(r)
+                                }
+                                Err(DistError::Solve(e)) => Err(e),
+                                // A fleet failure (spawn/handshake) says
+                                // nothing about the key: answer in-process
+                                // rather than failing the request.
+                                Err(DistError::Worker(_)) => SolveRequest::new(inp.0, &inp.1)
+                                    .options(opts)
+                                    .threads(per_solve)
+                                    .seed(inp.2)
+                                    .store(&candidates)
+                                    .solve(),
+                            }
+                        }
+                        None => SolveRequest::new(inp.0, &inp.1)
+                            .options(opts)
+                            .threads(per_solve)
+                            .seed(inp.2)
+                            .store(&candidates)
+                            .solve(),
+                    },
                     None => Err(SolveError::Interrupted),
                 };
                 let result: WarmOutcome = match outcome {

@@ -5,7 +5,7 @@
 //! runs against the same `--cache-dir` answer without re-solving — the
 //! "same (workload, hardware) pairs recur across runs" serving pattern.
 //!
-//! **Format v4** (`warm_cache_v4.tsv` inside the cache dir): a header line
+//! **Format v5** (`warm_cache_v5.tsv` inside the cache dir): a header line
 //! ([`WARM_CACHE_HEADER`]) followed by one TSV entry per solve key. Keys
 //! are the 64-bit solve fingerprints of
 //! [`super::service::solve_fingerprint`] — shape, *full* architecture
@@ -14,12 +14,12 @@
 //! [`super::service::arch_options_fingerprint`] (the shape-independent
 //! half of the key), so a fresh service can harvest the persisted winning
 //! mappings as cross-shape seed **donors** for other fingerprints on the
-//! same architecture (DESIGN.md §6) — the reason v2 was bumped. v4 tracks
-//! the bound-ordered engine (DESIGN.md §8): every effort counter records
-//! the reordered scan's work and the certificate gained the unit-level
-//! counters (`units_total`/`units_skipped`), so v3 entries would replay
-//! counters no current solve can produce — they are rejected wholesale by
-//! the header, like every prior version. Every
+//! same architecture (DESIGN.md §6) — the reason v2 was bumped. v4 tracked
+//! the bound-ordered engine (DESIGN.md §8: reordered-scan counters plus
+//! the unit-level skip counters); v5 adds the distributed-solve provenance
+//! counters (`shards`/`shard_retries`, DESIGN.md §10) to the persisted
+//! certificate, so v4 entries no longer carry the full certificate — they
+//! are rejected wholesale by the header, like every prior version. Every
 //! `f64` is serialized as its IEEE-754 bit pattern in hex (`to_bits`), so
 //! a warm result is **bit-identical** to the original solve. Infeasible
 //! outcomes persist too (`err` lines): the negative cache is as warm as
@@ -45,14 +45,14 @@ use std::time::Duration;
 
 /// First line of every store file; the version must match exactly. Kept in
 /// lockstep with [`super::service::CACHE_FORMAT_VERSION`] so a version
-/// bump really does reject old files wholesale (v4: certificate effort
-/// counters record the bound-ordered scan and gained the unit-level
-/// skip counters).
-pub const WARM_CACHE_HEADER: &str = "# goma-warm-cache v4";
+/// bump really does reject old files wholesale (v5: the certificate
+/// gained the distributed-solve provenance counters
+/// `shards`/`shard_retries`, DESIGN.md §10).
+pub const WARM_CACHE_HEADER: &str = "# goma-warm-cache v5";
 
 /// File name of the store inside a service's `--cache-dir` (versioned in
 /// lockstep with the header: a pre-bump file is simply never opened).
-pub const WARM_CACHE_FILE: &str = "warm_cache_v4.tsv";
+pub const WARM_CACHE_FILE: &str = "warm_cache_v5.tsv";
 
 /// One persisted outcome: the solve succeeded (full result) or proved the
 /// key infeasible (negative entry).
@@ -204,10 +204,10 @@ fn bypass_of(s: &str) -> Option<Bypass> {
     Bypass::from_bits(s.parse::<u8>().ok()?)
 }
 
-/// The 30 payload fields of an `ok` line (following the fingerprint, the
+/// The 32 payload fields of an `ok` line (following the fingerprint, the
 /// kind tag, and the arch/options fingerprint), tab-joined: 9 tile
 /// lengths, the two walking axes, the two bypass bitmasks, the 7 energy
-/// terms, the certificate (3 bounds, 5 counters, proved bit), and the
+/// terms, the certificate (3 bounds, 7 counters, proved bit), and the
 /// solve time.
 fn format_result(r: &SolveResult) -> String {
     let m = &r.mapping;
@@ -216,7 +216,7 @@ fn format_result(r: &SolveResult) -> String {
     format!(
         "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t\
          {}\t{}\t{}\t{}\t{}\t{}\t{}\t\
-         {}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+         {}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
         m.l1.x,
         m.l1.y,
         m.l1.z,
@@ -245,6 +245,8 @@ fn format_result(r: &SolveResult) -> String {
         c.combos_pruned,
         c.units_total,
         c.units_skipped,
+        c.shards,
+        c.shard_retries,
         c.proved_optimal as u8,
         fx(r.solve_time.as_secs_f64()),
     )
@@ -264,7 +266,7 @@ fn parse_line(line: &str) -> Option<(u64, WarmEntry)> {
             Some((fp, WarmEntry { arch_fp, outcome: Err(SolveError::NoFeasibleMapping) }))
         }
         "ok" => {
-            if f.len() != 33 {
+            if f.len() != 35 {
                 return None;
             }
             let t = |i: usize| f[3 + i].parse::<u64>().ok();
@@ -295,13 +297,15 @@ fn parse_line(line: &str) -> Option<(u64, WarmEntry)> {
                 combos_pruned: f[28].parse().ok()?,
                 units_total: f[29].parse().ok()?,
                 units_skipped: f[30].parse().ok()?,
-                proved_optimal: match f[31] {
+                shards: f[31].parse().ok()?,
+                shard_retries: f[32].parse().ok()?,
+                proved_optimal: match f[33] {
                     "1" => true,
                     "0" => false,
                     _ => return None,
                 },
             };
-            let solve_time = Duration::try_from_secs_f64(hex_f64(f[32])?).ok()?;
+            let solve_time = Duration::try_from_secs_f64(hex_f64(f[34])?).ok()?;
             Some((
                 fp,
                 WarmEntry {
@@ -349,6 +353,8 @@ mod tests {
         assert_eq!(back.certificate.nodes, r.certificate.nodes);
         assert_eq!(back.certificate.units_total, r.certificate.units_total);
         assert_eq!(back.certificate.units_skipped, r.certificate.units_skipped);
+        assert_eq!(back.certificate.shards, r.certificate.shards);
+        assert_eq!(back.certificate.shard_retries, r.certificate.shard_retries);
         assert_eq!(back.certificate.proved_optimal, r.certificate.proved_optimal);
         assert_eq!(
             back.solve_time.as_secs_f64().to_bits(),
@@ -404,10 +410,12 @@ mod tests {
             "# goma-warm-cache v2\n00aa\terr\tinfeasible\n",
             // A v3-era store (pre-bound-order counters): likewise.
             "# goma-warm-cache v3\n00aa\terr\t00bb\tinfeasible\n",
+            // A v4-era store (pre-shard-counter certificate): likewise.
+            "# goma-warm-cache v4\n00aa\terr\t00bb\tinfeasible\n",
         ] {
             std::fs::write(&path, old).unwrap();
             let store = WarmStore::open(Some(dir.clone()));
-            assert_eq!(store.loaded_len(), 0, "pre-v4 file must be ignored wholesale: {old:?}");
+            assert_eq!(store.loaded_len(), 0, "pre-v5 file must be ignored wholesale: {old:?}");
         }
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -325,6 +325,8 @@ pub fn result_to_json(r: &SolveResult) -> Json {
                 ("combos_pruned", Json::u64(c.combos_pruned)),
                 ("units_total", Json::u64(c.units_total)),
                 ("units_skipped", Json::u64(c.units_skipped)),
+                ("shards", Json::u64(c.shards)),
+                ("shard_retries", Json::u64(c.shard_retries)),
                 ("proved_optimal", Json::Bool(c.proved_optimal)),
             ]),
         ),
@@ -375,6 +377,8 @@ pub fn result_from_json(v: &Json) -> Result<SolveResult, String> {
         combos_pruned: get_u64(c, "combos_pruned")?,
         units_total: get_u64(c, "units_total")?,
         units_skipped: get_u64(c, "units_skipped")?,
+        shards: get_u64(c, "shards")?,
+        shard_retries: get_u64(c, "shard_retries")?,
         proved_optimal: c
             .get("proved_optimal")
             .and_then(Json::as_bool)

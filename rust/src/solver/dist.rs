@@ -1,0 +1,1021 @@
+//! Distributed solve: shard one solve's `unit_sched` across worker
+//! processes and lex-min-merge their answers (DESIGN.md §10).
+//!
+//! [`solve_dist`] is a coordinator that partitions the bound-ordered unit
+//! schedule into contiguous chunks, fans them over N `goma solve-shard`
+//! worker processes (fork/exec of our own binary, length-prefixed JSON
+//! frames on stdin/stdout using [`crate::util::json`]'s bit-exact `f64`
+//! encoding), and merges the per-chunk results by the engine's own
+//! reduction — the lexicographic minimum over `(value, canonical key)`.
+//!
+//! **Why the merge is bit-identical to single-process** (the §10
+//! argument, proven end-to-end by `rust/tests/dist_solve.rs`): each chunk
+//! is scanned by [`scan_sched_range`], whose result — the chunk's lowest
+//! canonical-key attainer of the chunk optimum, with the identical
+//! mapping — is a pure function of `(space, range, valid starting
+//! bound)`. Any *valid* holderless bound (one some feasible mapping
+//! attains, seeded strictly above exactly like [`SolveRequest::seed`])
+//! leaves that attainer untouched, so chunk outcomes are invariant under
+//! the incumbent exchange, under retries, and under which worker ran
+//! what. The lex-min over chunk bests is associative/commutative, and the
+//! chunks partition `unit_sched`, so the merged `(value, key, mapping)`
+//! *is* the single-process engine's answer.
+//!
+//! **Incumbent exchange** rides the PR 4 seeding API: at every task
+//! dispatch the coordinator injects the best merged value so far as the
+//! chunk's starting bound — an injected incumbent is exactly a
+//! [`SeedBound`] (DESIGN.md §6), so the exchange can only shrink search
+//! effort, never the answer. Effort counters under exchange are
+//! timing-dependent provenance (which chunk saw which bound depends on
+//! scheduling); with exchange off they are fully deterministic.
+//!
+//! **Faults**: a worker that dies, hangs past the protocol timeout, or
+//! corrupts its stream is killed and its chunk is re-queued — on a
+//! surviving worker, or scanned in-process by the coordinator itself when
+//! no worker survives. A chunk is pure data, so the retry reproduces the
+//! identical outcome: shard death is a latency event, never a wrong
+//! answer. Retries are counted in [`Certificate::shard_retries`].
+//! A *handshake* mismatch is different — a worker speaking another
+//! [`CACHE_FORMAT_VERSION`] or computing another arch
+//! `param_fingerprint` is a configuration error (stale binary, wrong
+//! accelerator), and merging its results could be silently wrong, so it
+//! is rejected at spawn with [`DistError::Worker`] instead of retried.
+//!
+//! [`Certificate::shard_retries`]: super::Certificate::shard_retries
+//! [`CACHE_FORMAT_VERSION`]: crate::coordinator::CACHE_FORMAT_VERSION
+
+use super::engine::{
+    finish, scan_sched_range, CanonKey, RangeOutcome, SeedBound, SolveError, SolveRequest,
+    SolveResult, SolverOptions, Tally,
+};
+use super::space::SearchSpace;
+use crate::arch::{all_templates, Accelerator};
+use crate::coordinator::CACHE_FORMAT_VERSION;
+use crate::mapping::{Axis, Bypass, GemmShape, Mapping, Tile};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::fmt;
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Hard cap on one protocol frame — the coordinator reads untrusted child
+/// output, and a corrupt length prefix must not allocate unbounded memory.
+const MAX_FRAME: usize = 1 << 26;
+
+/// Target task chunks per shard. More than one on purpose: the incumbent
+/// exchange happens at task-dispatch granularity, so several smaller
+/// chunks per worker give later chunks tighter injected bounds (and give
+/// retries less work to repeat). Part of the deterministic chunking — the
+/// chunk boundaries depend only on `(unit_sched.len(), shards)`.
+const CHUNKS_PER_SHARD: usize = 4;
+
+/// Env override for the worker binary path (highest-priority default:
+/// [`DistOptions::worker_bin`]; fallback: `current_exe`). Integration
+/// tests point this at the built `goma` binary.
+pub const SHARD_BIN_ENV: &str = "GOMA_SHARD_BIN";
+
+/// Env hook the coordinator sets on *one* spawned worker to inject a
+/// protocol fault (test instrumentation; see [`DistOptions::fault`]).
+pub const SHARD_FAULT_ENV: &str = "GOMA_SHARD_FAULT";
+
+/// Coordinator configuration for [`solve_dist`].
+#[derive(Debug, Clone)]
+pub struct DistOptions {
+    /// Worker processes to fan the unit schedule over (clamped to ≥ 1).
+    /// The answer is bit-identical for every value (DESIGN.md §10).
+    pub shards: usize,
+    /// Periodic incumbent exchange: inject the best merged value so far
+    /// as each dispatched chunk's starting bound. On by default; provably
+    /// invisible in the answer, aggregate node counts only shrink
+    /// (property-tested). Off makes every effort counter deterministic.
+    pub exchange: bool,
+    /// Explicit worker binary. `None` resolves [`SHARD_BIN_ENV`], then
+    /// `std::env::current_exe()` (the production path: `goma` re-executes
+    /// itself with `solve-shard`).
+    pub worker_bin: Option<PathBuf>,
+    /// Per-task protocol timeout: a worker that has not answered a
+    /// dispatched chunk within this budget is declared hung, killed, and
+    /// its chunk re-queued.
+    pub task_timeout: Duration,
+    /// Fault injection (tests only): `(shard index, fault)` sets
+    /// [`SHARD_FAULT_ENV`] on that one worker. Vocabulary (see
+    /// `worker_loop`): `spoof-version`, `spoof-fingerprint`,
+    /// `die-on-task:K`, `hang-on-task:K`, `corrupt-on-task:K`,
+    /// `truncate-on-task:K` with `K` the 0-based task ordinal served by
+    /// that worker.
+    #[doc(hidden)]
+    pub fault: Option<(usize, String)>,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions {
+            shards: 1,
+            exchange: true,
+            worker_bin: None,
+            task_timeout: Duration::from_secs(30),
+            fault: None,
+        }
+    }
+}
+
+/// Distributed-solve failure modes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DistError {
+    /// The search itself failed — same vocabulary and meaning as the
+    /// in-process engine ([`SolveError`]); infeasibility here is a merged
+    /// proof over every chunk.
+    Solve(SolveError),
+    /// The worker fleet could not be set up or trusted: spawn failure, or
+    /// a handshake version/fingerprint mismatch. Says nothing about the
+    /// search space — callers may retry in-process.
+    Worker(String),
+}
+
+impl fmt::Display for DistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DistError::Solve(e) => write!(f, "{e}"),
+            DistError::Worker(msg) => write!(f, "shard worker error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DistError {}
+
+impl From<SolveError> for DistError {
+    fn from(e: SolveError) -> Self {
+        DistError::Solve(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing: 4-byte big-endian length prefix + one compact JSON document.
+// ---------------------------------------------------------------------------
+
+fn write_frame(w: &mut impl Write, v: &Json) -> std::io::Result<()> {
+    let text = v.to_text();
+    let len = u32::try_from(text.len())
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidInput, "frame too large"))?;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(text.as_bytes())?;
+    w.flush()
+}
+
+fn read_frame(r: &mut impl Read) -> Result<Json, String> {
+    let mut lenb = [0u8; 4];
+    r.read_exact(&mut lenb).map_err(|e| format!("frame length read failed: {e}"))?;
+    let len = u32::from_be_bytes(lenb) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(format!("frame length {len} out of range"));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).map_err(|e| format!("frame body read failed: {e}"))?;
+    let text = std::str::from_utf8(&buf).map_err(|e| format!("frame is not UTF-8: {e}"))?;
+    Json::parse(text).map_err(|e| format!("frame is not valid JSON: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Field helpers (String-error flavored, like the wire layer's).
+// ---------------------------------------------------------------------------
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("missing or invalid field {key:?}"))
+}
+
+fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing or invalid field {key:?}"))
+}
+
+fn get_bool(v: &Json, key: &str) -> Result<bool, String> {
+    v.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| format!("missing or invalid field {key:?}"))
+}
+
+fn get_obj<'a>(v: &'a Json, key: &str) -> Result<&'a Json, String> {
+    v.get(key).ok_or_else(|| format!("missing field {key:?}"))
+}
+
+fn frame_type(v: &Json) -> Result<&str, String> {
+    get_str(v, "type")
+}
+
+/// Bit-exact `f64`: `to_bits` as a decimal string (the `util/json.rs`
+/// contract — a bare JSON number cannot carry all 64 bits).
+fn f64_bits(v: f64) -> Json {
+    Json::u64(v.to_bits())
+}
+
+fn bits_f64(v: &Json, key: &str) -> Result<f64, String> {
+    Ok(f64::from_bits(get_u64(v, key)?))
+}
+
+// ---------------------------------------------------------------------------
+// Value codecs. Self-contained on purpose: the shard protocol is versioned
+// by CACHE_FORMAT_VERSION in the handshake, not by the HTTP wire schema.
+// ---------------------------------------------------------------------------
+
+fn axis_name(a: Axis) -> &'static str {
+    match a {
+        Axis::X => "x",
+        Axis::Y => "y",
+        Axis::Z => "z",
+    }
+}
+
+fn axis_from(s: &str) -> Result<Axis, String> {
+    match s {
+        "x" => Ok(Axis::X),
+        "y" => Ok(Axis::Y),
+        "z" => Ok(Axis::Z),
+        _ => Err(format!("unknown axis {s:?}")),
+    }
+}
+
+fn tile_json(t: Tile) -> Json {
+    Json::obj(vec![("x", Json::u64(t.x)), ("y", Json::u64(t.y)), ("z", Json::u64(t.z))])
+}
+
+fn tile_from(v: &Json) -> Result<Tile, String> {
+    Ok(Tile::new(get_u64(v, "x")?, get_u64(v, "y")?, get_u64(v, "z")?))
+}
+
+fn bypass_from(v: &Json, key: &str) -> Result<Bypass, String> {
+    let bits = get_u64(v, key)?;
+    u8::try_from(bits)
+        .ok()
+        .and_then(Bypass::from_bits)
+        .ok_or_else(|| format!("invalid bypass bits {bits} in {key:?}"))
+}
+
+fn mapping_json(m: &Mapping) -> Json {
+    Json::obj(vec![
+        ("l1", tile_json(m.l1)),
+        ("l2", tile_json(m.l2)),
+        ("l3", tile_json(m.l3)),
+        ("alpha01", Json::Str(axis_name(m.alpha01).into())),
+        ("alpha12", Json::Str(axis_name(m.alpha12).into())),
+        ("b1", Json::u64(m.b1.bits() as u64)),
+        ("b3", Json::u64(m.b3.bits() as u64)),
+    ])
+}
+
+fn mapping_from(v: &Json) -> Result<Mapping, String> {
+    Ok(Mapping {
+        l1: tile_from(get_obj(v, "l1")?)?,
+        l2: tile_from(get_obj(v, "l2")?)?,
+        l3: tile_from(get_obj(v, "l3")?)?,
+        alpha01: axis_from(get_str(v, "alpha01")?)?,
+        alpha12: axis_from(get_str(v, "alpha12")?)?,
+        b1: bypass_from(v, "b1")?,
+        b3: bypass_from(v, "b3")?,
+    })
+}
+
+fn shape_json(s: GemmShape) -> Json {
+    Json::obj(vec![("x", Json::u64(s.x)), ("y", Json::u64(s.y)), ("z", Json::u64(s.z))])
+}
+
+fn shape_from(v: &Json) -> Result<GemmShape, String> {
+    Ok(GemmShape::new(get_u64(v, "x")?, get_u64(v, "y")?, get_u64(v, "z")?))
+}
+
+/// Encode an accelerator so the worker can reconstruct the *identical*
+/// instance (checked by the fingerprint half of the handshake): a named
+/// template, or a plain [`Accelerator::custom`]. `None` when the instance
+/// was hand-mutated after construction — such an arch has no spec the
+/// worker could rebuild from, and distributing it would be caught (and
+/// rejected) by the fingerprint check anyway, so refuse up front.
+fn arch_json(arch: &Accelerator) -> Option<Json> {
+    let fp = arch.param_fingerprint();
+    if all_templates().iter().any(|t| t.name == arch.name && t.param_fingerprint() == fp) {
+        return Some(Json::obj(vec![
+            ("kind", Json::Str("template".into())),
+            ("name", Json::Str(arch.name.clone())),
+        ]));
+    }
+    let rebuilt = Accelerator::custom(&arch.name, arch.sram_words, arch.num_pe, arch.regfile_words);
+    if rebuilt.param_fingerprint() == fp {
+        return Some(Json::obj(vec![
+            ("kind", Json::Str("custom".into())),
+            ("name", Json::Str(arch.name.clone())),
+            ("sram_words", Json::u64(arch.sram_words)),
+            ("num_pe", Json::u64(arch.num_pe)),
+            ("regfile_words", Json::u64(arch.regfile_words)),
+        ]));
+    }
+    None
+}
+
+fn arch_from(v: &Json) -> Result<Accelerator, String> {
+    match get_str(v, "kind")? {
+        "template" => {
+            let name = get_str(v, "name")?;
+            all_templates()
+                .into_iter()
+                .find(|t| t.name == name)
+                .ok_or_else(|| format!("unknown arch template {name:?}"))
+        }
+        "custom" => Ok(Accelerator::custom(
+            get_str(v, "name")?,
+            get_u64(v, "sram_words")?,
+            get_u64(v, "num_pe")?,
+            get_u64(v, "regfile_words")?,
+        )),
+        kind => Err(format!("unknown arch kind {kind:?}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator-side merge state.
+// ---------------------------------------------------------------------------
+
+/// A fully parsed `done` frame. Parsing is completed *before* anything is
+/// committed to the merge state: a frame that fails mid-parse must count
+/// nothing, so the chunk's retry cannot double-count effort.
+struct DoneFrame {
+    best: Option<(f64, u32, u16, Mapping)>,
+    tally: Tally,
+    timed_out: bool,
+}
+
+fn parse_done(v: &Json, expect_id: u64) -> Result<DoneFrame, String> {
+    if frame_type(v)? != "done" {
+        return Err(format!("expected a done frame, got {:?}", frame_type(v)?));
+    }
+    let id = get_u64(v, "id")?;
+    if id != expect_id {
+        return Err(format!("done frame answers task {id}, expected {expect_id}"));
+    }
+    let best = match get_obj(v, "best")? {
+        Json::Null => None,
+        b => {
+            let unit = u32::try_from(get_u64(b, "unit")?).map_err(|_| "unit out of range")?;
+            let combo = u16::try_from(get_u64(b, "combo")?).map_err(|_| "combo out of range")?;
+            let mapping = mapping_from(get_obj(b, "mapping")?)?;
+            Some((bits_f64(b, "value")?, unit, combo, mapping))
+        }
+    };
+    Ok(DoneFrame {
+        best,
+        tally: Tally {
+            nodes: get_u64(v, "nodes")?,
+            combos_total: get_u64(v, "combos_total")?,
+            combos_pruned: get_u64(v, "combos_pruned")?,
+            units_total: get_u64(v, "units_total")?,
+            units_skipped: get_u64(v, "units_skipped")?,
+        },
+        timed_out: get_bool(v, "timed_out")?,
+    })
+}
+
+fn done_json(id: u64, out: &RangeOutcome) -> Json {
+    let best = match &out.best {
+        None => Json::Null,
+        Some((v, ui, ci, m)) => Json::obj(vec![
+            ("value", f64_bits(*v)),
+            ("unit", Json::u64(*ui as u64)),
+            ("combo", Json::u64(*ci as u64)),
+            ("mapping", mapping_json(m)),
+        ]),
+    };
+    Json::obj(vec![
+        ("type", Json::Str("done".into())),
+        ("id", Json::u64(id)),
+        ("best", best),
+        ("nodes", Json::u64(out.tally.nodes)),
+        ("combos_total", Json::u64(out.tally.combos_total)),
+        ("combos_pruned", Json::u64(out.tally.combos_pruned)),
+        ("units_total", Json::u64(out.tally.units_total)),
+        ("units_skipped", Json::u64(out.tally.units_skipped)),
+        ("timed_out", Json::Bool(out.timed_out)),
+    ])
+}
+
+/// The coordinator's merge of committed chunk outcomes: the engine's
+/// lex-min reduction over `(value, canonical key)` plus the summed effort
+/// counters — exactly what [`finish`] expects.
+struct Merged {
+    /// The caller's seed bound (DESIGN.md §6), exchange-independent.
+    seed: Option<f64>,
+    best: Option<(f64, CanonKey, Mapping)>,
+    tally: Tally,
+    timed_out: bool,
+}
+
+impl Merged {
+    fn commit(&mut self, d: DoneFrame) {
+        if let Some((v, ui, ci, m)) = d.best {
+            let key = (ui, ci);
+            let wins = match &self.best {
+                None => true,
+                Some((bv, bk, _)) => v < *bv || (v == *bv && key < *bk),
+            };
+            if wins {
+                self.best = Some((v, key, m));
+            }
+        }
+        self.tally.nodes += d.tally.nodes;
+        self.tally.combos_total += d.tally.combos_total;
+        self.tally.combos_pruned += d.tally.combos_pruned;
+        self.tally.units_total += d.tally.units_total;
+        self.tally.units_skipped += d.tally.units_skipped;
+        self.timed_out |= d.timed_out;
+    }
+
+    /// The starting bound to inject into the next dispatched chunk: the
+    /// caller's seed, tightened by the best merged value so far when the
+    /// incumbent exchange is on. Both are values *some feasible mapping
+    /// attains*, which is the §6 validity condition that keeps injection
+    /// answer-invisible.
+    fn bound(&self, exchange: bool) -> Option<f64> {
+        let mut b = self.seed;
+        if exchange {
+            if let Some((v, _, _)) = &self.best {
+                b = Some(b.map_or(*v, |s| s.min(*v)));
+            }
+        }
+        b
+    }
+}
+
+struct Shared {
+    queue: VecDeque<(usize, usize)>,
+    merged: Merged,
+    retries: u64,
+    next_id: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Worker process handles.
+// ---------------------------------------------------------------------------
+
+struct Worker {
+    index: usize,
+    child: Child,
+    stdin: ChildStdin,
+    /// Frames decoded off the child's stdout by a dedicated reader thread
+    /// (so the coordinator can time out a hung worker with `recv_timeout`
+    /// instead of blocking forever on a pipe read).
+    rx: mpsc::Receiver<Result<Json, String>>,
+}
+
+fn spawn_worker(
+    binary: &Path,
+    index: usize,
+    fault: &Option<(usize, String)>,
+) -> Result<Worker, String> {
+    let mut cmd = Command::new(binary);
+    cmd.arg("solve-shard")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .env_remove(SHARD_FAULT_ENV);
+    if let Some((fi, f)) = fault {
+        if *fi == index {
+            cmd.env(SHARD_FAULT_ENV, f);
+        }
+    }
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| format!("failed to spawn shard worker {index} ({}): {e}", binary.display()))?;
+    let stdin = child.stdin.take().expect("piped stdin");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let mut r = BufReader::new(stdout);
+        loop {
+            let frame = read_frame(&mut r);
+            let end = frame.is_err();
+            if tx.send(frame).is_err() || end {
+                break;
+            }
+        }
+    });
+    Ok(Worker { index, child, stdin, rx })
+}
+
+fn recv_frame(wk: &Worker, timeout: Duration) -> Result<Json, String> {
+    match wk.rx.recv_timeout(timeout) {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(e),
+        Err(mpsc::RecvTimeoutError::Timeout) => Err(format!("protocol timeout after {timeout:?}")),
+        Err(mpsc::RecvTimeoutError::Disconnected) => Err("protocol stream closed".into()),
+    }
+}
+
+/// Handshake one worker: send `hello`, require a `ready` that echoes our
+/// cache format version and recomputes our arch fingerprint. A mismatch
+/// is a configuration error — stale worker binary, or an accelerator the
+/// worker reconstructed differently — and is fatal to the whole solve
+/// (never a retry): merging across formats or architectures could be
+/// silently wrong, which is exactly what this check exists to prevent.
+fn handshake(wk: &mut Worker, hello: &Json, timeout: Duration, fp: u64) -> Result<(), String> {
+    write_frame(&mut wk.stdin, hello).map_err(|e| format!("hello write failed: {e}"))?;
+    let ready = recv_frame(wk, timeout)?;
+    if frame_type(&ready)? != "ready" {
+        return Err(format!("expected a ready frame, got {:?}", frame_type(&ready)?));
+    }
+    let wv = get_u64(&ready, "format_version")?;
+    let version = CACHE_FORMAT_VERSION as u64;
+    if wv != version {
+        return Err(format!(
+            "cache format version mismatch: worker speaks v{wv}, coordinator v{version} — \
+             stale worker binary rejected at spawn"
+        ));
+    }
+    let wfp = get_u64(&ready, "param_fingerprint")?;
+    if wfp != fp {
+        return Err(format!(
+            "arch param fingerprint mismatch: worker computed {wfp:#018x}, coordinator \
+             {fp:#018x} — refusing to merge results for a different accelerator"
+        ));
+    }
+    Ok(())
+}
+
+fn kill_all(workers: &mut [Worker]) {
+    for wk in workers {
+        let _ = wk.child.kill();
+        let _ = wk.child.wait();
+    }
+}
+
+/// One worker's drive loop: pop a chunk, dispatch it with the current
+/// injected bound, commit the fully parsed answer. Any protocol failure —
+/// write error, timeout, stream end, malformed or mis-addressed frame —
+/// declares the worker dead: kill it, push the chunk back for a survivor
+/// (or the coordinator's in-process sweep), count the retry, and return.
+fn drive_worker(mut wk: Worker, shared: &Mutex<Shared>, exchange: bool, timeout: Duration) {
+    loop {
+        let (range, id, bound) = {
+            let mut sh = shared.lock().unwrap();
+            let Some(range) = sh.queue.pop_front() else { break };
+            let id = sh.next_id;
+            sh.next_id += 1;
+            (range, id, sh.merged.bound(exchange))
+        };
+        let task = Json::obj(vec![
+            ("type", Json::Str("task".into())),
+            ("id", Json::u64(id)),
+            ("start", Json::u64(range.0 as u64)),
+            ("end", Json::u64(range.1 as u64)),
+            ("bound", bound.map_or(Json::Null, f64_bits)),
+        ]);
+        let outcome = write_frame(&mut wk.stdin, &task)
+            .map_err(|e| format!("task write failed: {e}"))
+            .and_then(|()| recv_frame(&wk, timeout))
+            .and_then(|f| parse_done(&f, id));
+        match outcome {
+            Ok(done) => shared.lock().unwrap().merged.commit(done),
+            Err(_) => {
+                // Runtime fault. The chunk committed nothing (parse-then-
+                // commit above), so re-scanning it elsewhere reproduces
+                // the identical outcome — a retry, not a wrong answer.
+                let _ = wk.child.kill();
+                let _ = wk.child.wait();
+                let mut sh = shared.lock().unwrap();
+                sh.queue.push_back(range);
+                sh.retries += 1;
+                return;
+            }
+        }
+    }
+    let _ = write_frame(&mut wk.stdin, &Json::obj(vec![("type", Json::Str("exit".into()))]));
+    let _ = wk.child.wait();
+}
+
+// ---------------------------------------------------------------------------
+// The coordinator.
+// ---------------------------------------------------------------------------
+
+/// Solve `(shape, arch)` by sharding the unit schedule over
+/// `dopts.shards` worker processes. Bit-identical to the in-process
+/// engine in mapping, energy, and certificate bounds for every shard
+/// count, thread count, and fault pattern (DESIGN.md §10; proven by
+/// `rust/tests/dist_solve.rs`) — only the effort counters and the new
+/// [`Certificate::shards`] / [`Certificate::shard_retries`] provenance
+/// fields record *how* the search ran.
+///
+/// `seed` is a cross-shape warm bound exactly as in [`SolveRequest::seed`];
+/// the incumbent exchange tightens it with merged values at every task
+/// dispatch when `dopts.exchange` is on.
+///
+/// Falls back to the in-process engine (same answer, `shards == 0` in the
+/// certificate) when the space build hits the deadline — a truncated
+/// build is process-local and must not be distributed — and scans
+/// leftover chunks itself when every worker has died, so worker loss can
+/// cost only time.
+///
+/// [`Certificate::shards`]: super::Certificate::shards
+/// [`Certificate::shard_retries`]: super::Certificate::shard_retries
+pub fn solve_dist(
+    shape: GemmShape,
+    arch: &Accelerator,
+    opts: SolverOptions,
+    seed: Option<SeedBound>,
+    dopts: &DistOptions,
+) -> Result<SolveResult, DistError> {
+    let start = Instant::now();
+    let deadline = opts.time_limit.and_then(|l| start.checked_add(l));
+    let shards = dopts.shards.max(1);
+    let Some(arch_spec) = arch_json(arch) else {
+        return Err(DistError::Worker(format!(
+            "accelerator {:?} is not expressible in the shard protocol \
+             (neither a named template nor a plain custom instance)",
+            arch.name
+        )));
+    };
+    let space = SearchSpace::build_bounded(shape, arch, opts.exact_pe, true, deadline);
+    if space.truncated || space.is_empty() {
+        // A truncated build is where the *coordinator's* deadline landed;
+        // each worker rebuilds the space independently and would truncate
+        // elsewhere, misaligning every chunk index. Never distribute it.
+        return SolveRequest::new(shape, arch)
+            .options(opts)
+            .seed(seed)
+            .solve()
+            .map_err(DistError::Solve);
+    }
+    let n = space.unit_sched.len();
+    let chunk = n.div_ceil(shards * CHUNKS_PER_SHARD).max(1);
+    let mut queue = VecDeque::new();
+    let mut at = 0;
+    while at < n {
+        let end = (at + chunk).min(n);
+        queue.push_back((at, end));
+        at = end;
+    }
+    let workers_wanted = shards.min(queue.len()).max(1);
+    let binary = match &dopts.worker_bin {
+        Some(p) => p.clone(),
+        None => match std::env::var_os(SHARD_BIN_ENV) {
+            Some(p) => PathBuf::from(p),
+            None => std::env::current_exe().map_err(|e| {
+                DistError::Worker(format!("cannot locate own binary to spawn workers: {e}"))
+            })?,
+        },
+    };
+
+    let threads = opts.resolved_threads();
+    let mut workers: Vec<Worker> = Vec::with_capacity(workers_wanted);
+    for index in 0..workers_wanted {
+        match spawn_worker(&binary, index, &dopts.fault) {
+            Ok(wk) => workers.push(wk),
+            Err(e) => {
+                kill_all(&mut workers);
+                return Err(DistError::Worker(e));
+            }
+        }
+    }
+    let fp = arch.param_fingerprint();
+    let mut rejected: Option<String> = None;
+    for wk in &mut workers {
+        let hello = Json::obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("format_version", Json::u64(CACHE_FORMAT_VERSION as u64)),
+            ("param_fingerprint", Json::u64(fp)),
+            ("shard", Json::u64(wk.index as u64)),
+            ("shape", shape_json(shape)),
+            ("arch", arch_spec.clone()),
+            ("exact_pe", Json::Bool(opts.exact_pe)),
+            ("solve_threads", Json::u64(threads as u64)),
+            (
+                "time_limit_ms",
+                match deadline {
+                    None => Json::Null,
+                    Some(d) => {
+                        let ms = d.saturating_duration_since(Instant::now()).as_millis();
+                        Json::u64(ms.min(u64::MAX as u128) as u64)
+                    }
+                },
+            ),
+        ]);
+        if let Err(e) = handshake(wk, &hello, dopts.task_timeout, fp) {
+            rejected = Some(format!("shard {}: {e}", wk.index));
+            break;
+        }
+    }
+    if let Some(e) = rejected {
+        kill_all(&mut workers);
+        return Err(DistError::Worker(e));
+    }
+
+    let shared = Mutex::new(Shared {
+        queue,
+        merged: Merged {
+            seed: seed.map(|s| s.objective),
+            best: None,
+            tally: Tally::default(),
+            timed_out: false,
+        },
+        retries: 0,
+        next_id: 0,
+    });
+    let exchange = dopts.exchange;
+    let timeout = dopts.task_timeout;
+    let shared_ref = &shared;
+    std::thread::scope(|s| {
+        for wk in workers.drain(..) {
+            s.spawn(move || drive_worker(wk, shared_ref, exchange, timeout));
+        }
+    });
+
+    // Sweep any chunks the (now all-exited) drivers left behind — the
+    // zero-survivor path, and the race where the last survivor dies after
+    // the others already drained out. Scanned in-process through the very
+    // same range kernel, so the merge argument is unchanged.
+    loop {
+        let (range, bound) = {
+            let mut sh = shared.lock().unwrap();
+            let Some(range) = sh.queue.pop_front() else { break };
+            (range, sh.merged.bound(exchange))
+        };
+        let out = scan_sched_range(&space, arch, range.0, range.1, bound, threads, deadline);
+        shared.lock().unwrap().merged.commit(DoneFrame {
+            best: out.best,
+            tally: out.tally,
+            timed_out: out.timed_out,
+        });
+    }
+
+    let sh = shared.into_inner().unwrap();
+    match sh.merged.best {
+        Some((_, _, mapping)) => {
+            let mut r = finish(start, shape, arch, mapping, sh.merged.tally, sh.merged.timed_out);
+            r.certificate.shards = workers_wanted as u64;
+            r.certificate.shard_retries = sh.retries;
+            Ok(r)
+        }
+        None if sh.merged.timed_out => Err(DistError::Solve(SolveError::Interrupted)),
+        None => Err(DistError::Solve(SolveError::NoFeasibleMapping)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The worker process (`goma solve-shard`).
+// ---------------------------------------------------------------------------
+
+/// Entry point of the `goma solve-shard` subcommand: speak the framed
+/// protocol on stdin/stdout until an `exit` frame or stream end. Returns
+/// the process exit code. Never invoked by hand — the coordinator
+/// fork/execs it.
+pub fn worker_main() -> i32 {
+    let fault = std::env::var(SHARD_FAULT_ENV).ok();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut input = BufReader::new(stdin.lock());
+    let mut output = stdout.lock();
+    match worker_loop(&mut input, &mut output, fault.as_deref()) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("goma solve-shard: {e}");
+            1
+        }
+    }
+}
+
+/// Does the injected fault string name this task ordinal? (Fault strings
+/// are `<kind>-on-task:K`; `K` counts tasks this worker has served.)
+fn fault_fires(fault: Option<&str>, prefix: &str, served: u64) -> bool {
+    fault.and_then(|f| f.strip_prefix(prefix)).and_then(|k| k.parse::<u64>().ok()) == Some(served)
+}
+
+fn worker_loop(
+    input: &mut impl Read,
+    output: &mut impl Write,
+    fault: Option<&str>,
+) -> Result<(), String> {
+    let hello = read_frame(input)?;
+    if frame_type(&hello)? != "hello" {
+        return Err(format!("expected a hello frame, got {:?}", frame_type(&hello)?));
+    }
+    let arrived = Instant::now();
+    let shape = shape_from(get_obj(&hello, "shape")?)?;
+    let arch = arch_from(get_obj(&hello, "arch")?)?;
+    let exact_pe = get_bool(&hello, "exact_pe")?;
+    let threads = (get_u64(&hello, "solve_threads")? as usize).max(1);
+    let deadline = match get_obj(&hello, "time_limit_ms")? {
+        Json::Null => None,
+        v => Some(
+            arrived
+                + Duration::from_millis(
+                    v.as_u64().ok_or_else(|| "invalid field \"time_limit_ms\"".to_string())?,
+                ),
+        ),
+    };
+    let mut version = CACHE_FORMAT_VERSION as u64;
+    let mut fp = arch.param_fingerprint();
+    // Handshake spoof hooks (tests): report doctored values so the
+    // coordinator's at-spawn rejection path is exercisable end-to-end.
+    if fault == Some("spoof-version") {
+        version += 1;
+    }
+    if fault == Some("spoof-fingerprint") {
+        fp ^= 1;
+    }
+    let ready = Json::obj(vec![
+        ("type", Json::Str("ready".into())),
+        ("format_version", Json::u64(version)),
+        ("param_fingerprint", Json::u64(fp)),
+    ]);
+    write_frame(output, &ready).map_err(|e| format!("ready write failed: {e}"))?;
+
+    // Deterministic rebuild (no deadline: the coordinator refused to
+    // distribute a truncated build, so ours is bit-for-bit the same
+    // schedule and every chunk index means the same units).
+    let space = SearchSpace::build_bounded(shape, &arch, exact_pe, true, None);
+    let n = space.unit_sched.len();
+    let mut served: u64 = 0;
+    loop {
+        let frame = read_frame(input)?;
+        match frame_type(&frame)? {
+            "exit" => return Ok(()),
+            "task" => {
+                let id = get_u64(&frame, "id")?;
+                let s = get_u64(&frame, "start")? as usize;
+                let e = get_u64(&frame, "end")? as usize;
+                if s > e || e > n {
+                    return Err(format!("task range {s}..{e} out of bounds (0..{n})"));
+                }
+                let bound = match get_obj(&frame, "bound")? {
+                    Json::Null => None,
+                    v => Some(f64::from_bits(
+                        v.as_u64().ok_or_else(|| "invalid field \"bound\"".to_string())?,
+                    )),
+                };
+                if fault_fires(fault, "die-on-task:", served) {
+                    // Observably identical to a SIGKILL: the stream just
+                    // ends mid-protocol, no farewell frame, nonzero exit.
+                    std::process::exit(137);
+                }
+                if fault_fires(fault, "hang-on-task:", served) {
+                    // Wedge until the coordinator's protocol timeout
+                    // declares us dead and kills the process.
+                    std::thread::sleep(Duration::from_secs(3600));
+                }
+                let out = scan_sched_range(&space, &arch, s, e, bound, threads, deadline);
+                if fault_fires(fault, "corrupt-on-task:", served) {
+                    let _ = output.write_all(&12u32.to_be_bytes());
+                    let _ = output.write_all(b"not-json!!!!");
+                    let _ = output.flush();
+                    std::process::exit(1);
+                }
+                if fault_fires(fault, "truncate-on-task:", served) {
+                    let _ = output.write_all(&64u32.to_be_bytes());
+                    let _ = output.write_all(b"{\"type\":");
+                    let _ = output.flush();
+                    std::process::exit(1);
+                }
+                write_frame(output, &done_json(id, &out))
+                    .map_err(|e| format!("done write failed: {e}"))?;
+                served += 1;
+            }
+            t => return Err(format!("unexpected frame type {t:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::eyeriss_like;
+
+    #[test]
+    fn frames_round_trip_and_reject_damage() {
+        let v = Json::obj(vec![
+            ("type", Json::Str("task".into())),
+            ("bound", f64_bits(1.25e-3)),
+            ("nested", Json::Arr(vec![Json::Null, Json::Bool(true)])),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).unwrap();
+        let back = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(back, v);
+        assert_eq!(bits_f64(&back, "bound").unwrap().to_bits(), 1.25e-3f64.to_bits());
+
+        // Truncated body, truncated prefix, corrupt body, oversize length.
+        assert!(read_frame(&mut &buf[..buf.len() - 1]).is_err());
+        assert!(read_frame(&mut &buf[..3]).is_err());
+        let mut garbage = (12u32.to_be_bytes()).to_vec();
+        garbage.extend_from_slice(b"not-json!!!!");
+        assert!(read_frame(&mut &garbage[..]).is_err());
+        let huge = (u32::MAX).to_be_bytes().to_vec();
+        assert!(read_frame(&mut &huge[..]).is_err());
+    }
+
+    #[test]
+    fn mapping_codec_round_trips() {
+        let m = Mapping {
+            l1: Tile::new(4, 6, 8),
+            l2: Tile::new(8, 12, 16),
+            l3: Tile::new(2, 3, 4),
+            alpha01: Axis::Y,
+            alpha12: Axis::Z,
+            b1: Bypass::new(true, false, true),
+            b3: Bypass::new(false, true, false),
+        };
+        let back = mapping_from(&mapping_json(&m)).unwrap();
+        assert_eq!(back, m);
+        assert!(mapping_from(&Json::obj(vec![("l1", Json::Null)])).is_err());
+    }
+
+    #[test]
+    fn arch_spec_round_trips_templates_and_customs() {
+        let t = eyeriss_like();
+        let spec = arch_json(&t).expect("template is expressible");
+        assert_eq!(spec.get("kind").unwrap().as_str(), Some("template"));
+        let back = arch_from(&spec).unwrap();
+        assert_eq!(back.param_fingerprint(), t.param_fingerprint());
+
+        let c = Accelerator::custom("bespoke", 8 * 1024, 16, 128);
+        let spec = arch_json(&c).expect("custom is expressible");
+        assert_eq!(spec.get("kind").unwrap().as_str(), Some("custom"));
+        let back = arch_from(&spec).unwrap();
+        assert_eq!(back.param_fingerprint(), c.param_fingerprint());
+
+        // A hand-mutated instance has no spec a worker could rebuild —
+        // refused up front rather than caught later by the fingerprint.
+        let mut doctored = Accelerator::custom("doctored", 8 * 1024, 16, 128);
+        doctored.clock_ghz += 1.0;
+        assert!(arch_json(&doctored).is_none());
+        assert!(arch_from(&Json::obj(vec![("kind", Json::Str("alien".into()))])).is_err());
+    }
+
+    #[test]
+    fn injected_bound_is_min_of_seed_and_merged_best_only_under_exchange() {
+        let mut m = Merged {
+            seed: Some(2.0),
+            best: None,
+            tally: Tally::default(),
+            timed_out: false,
+        };
+        assert_eq!(m.bound(true), Some(2.0));
+        m.commit(DoneFrame {
+            best: Some((1.5, 7, 3, Mapping::monolithic(GemmShape::new(4, 4, 4)))),
+            tally: Tally::default(),
+            timed_out: false,
+        });
+        assert_eq!(m.bound(true), Some(1.5), "exchange tightens the seed");
+        assert_eq!(m.bound(false), Some(2.0), "exchange off: seed only");
+    }
+
+    #[test]
+    fn merge_commits_lex_min_and_a_bad_frame_commits_nothing() {
+        let map = |v| {
+            let mut m = Mapping::monolithic(GemmShape::new(4, 4, 4));
+            m.l1.x = v;
+            m
+        };
+        let mut merged = Merged {
+            seed: None,
+            best: None,
+            tally: Tally::default(),
+            timed_out: false,
+        };
+        // Equal value, lower canonical key wins regardless of order.
+        let a = RangeOutcome {
+            best: Some((1.0, 9, 1, map(9))),
+            tally: Tally { nodes: 5, ..Tally::default() },
+            timed_out: false,
+        };
+        let b = RangeOutcome {
+            best: Some((1.0, 3, 7, map(3))),
+            tally: Tally { nodes: 7, ..Tally::default() },
+            timed_out: false,
+        };
+        for out in [&a, &b] {
+            let frame = done_json(0, out);
+            merged.commit(parse_done(&frame, 0).unwrap());
+        }
+        let (v, key, m) = merged.best.as_ref().unwrap();
+        assert_eq!((*v, *key), (1.0, (3, 7)));
+        assert_eq!(m.l1.x, 3);
+        assert_eq!(merged.tally.nodes, 12);
+
+        // Mis-addressed and mutilated frames fail *before* any commit.
+        let frame = done_json(5, &a);
+        assert!(parse_done(&frame, 6).is_err());
+        let Json::Obj(mut fields) = done_json(0, &a) else { unreachable!() };
+        fields.retain(|(k, _)| k != "nodes");
+        assert!(parse_done(&Json::Obj(fields), 0).is_err());
+        assert_eq!(merged.tally.nodes, 12, "failed parses committed nothing");
+    }
+
+    #[test]
+    fn fault_strings_address_one_task_ordinal() {
+        assert!(fault_fires(Some("die-on-task:2"), "die-on-task:", 2));
+        assert!(!fault_fires(Some("die-on-task:2"), "die-on-task:", 1));
+        assert!(!fault_fires(Some("die-on-task:2"), "hang-on-task:", 2));
+        assert!(!fault_fires(None, "die-on-task:", 0));
+        assert!(!fault_fires(Some("die-on-task:x"), "die-on-task:", 0));
+    }
+}

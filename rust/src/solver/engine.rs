@@ -309,13 +309,15 @@ fn rf_need(b3: Bypass, l3: [u64; 3]) -> u64 {
 }
 
 /// Search-effort counters, summed across units into the [`Certificate`].
+/// `pub(crate)` because the distributed coordinator (`solver::dist`) sums
+/// per-chunk counters into one of these before calling [`finish`].
 #[derive(Debug, Clone, Copy, Default)]
-struct Tally {
-    nodes: u64,
-    combos_total: u64,
-    combos_pruned: u64,
-    units_total: u64,
-    units_skipped: u64,
+pub(crate) struct Tally {
+    pub(crate) nodes: u64,
+    pub(crate) combos_total: u64,
+    pub(crate) combos_pruned: u64,
+    pub(crate) units_total: u64,
+    pub(crate) units_skipped: u64,
 }
 
 impl Tally {
@@ -576,8 +578,11 @@ fn scan_unit(
 }
 
 /// Assemble the [`SolveResult`] from the winning mapping and the summed
-/// search-effort counters.
-fn finish(
+/// search-effort counters. `pub(crate)` so the distributed coordinator
+/// (`solver::dist`) assembles its merged result through the exact same
+/// code path — the shard counters start at 0 here and are overlaid by the
+/// coordinator afterwards.
+pub(crate) fn finish(
     start: Instant,
     shape: GemmShape,
     arch: &Accelerator,
@@ -607,6 +612,8 @@ fn finish(
             combos_pruned: tally.combos_pruned,
             units_total: tally.units_total,
             units_skipped: tally.units_skipped,
+            shards: 0,
+            shard_retries: 0,
             proved_optimal: !timed_out,
         },
         solve_time: start.elapsed(),
@@ -908,6 +915,73 @@ pub fn solve_serial_reference_seeded(
     }
 }
 
+/// What scanning one contiguous `unit_sched` slice reports back to the
+/// distributed coordinator (`solver::dist`): the range's lex-min best as
+/// `(value, canonical unit, canonical combo, mapping)` plus the summed
+/// effort counters. The best is a pure function of `(space, range, valid
+/// starting bound, deadline)` — thread count and scheduling never leak
+/// (the same argument as the engine's wave rule), which is what makes the
+/// cross-process lex-min merge deterministic (DESIGN.md §10).
+pub(crate) struct RangeOutcome {
+    pub(crate) best: Option<(f64, u32, u16, Mapping)>,
+    pub(crate) tally: Tally,
+    pub(crate) timed_out: bool,
+}
+
+/// Scan `space.unit_sched[start..end]` exactly as the full engine would —
+/// bound-ordered waves of [`WAVE_UNITS`], wave-quantized incumbent state,
+/// tie-aware unit skips — starting from an optional holderless `bound`
+/// (strictly-above seeded, exactly like [`SolveRequest::seed`]). This is
+/// the shard worker's engine entry point and the coordinator's in-process
+/// fallback when every worker dies: the full-range call with
+/// `bound = None` is, wave for wave, the single-process engine.
+pub(crate) fn scan_sched_range(
+    space: &SearchSpace,
+    arch: &Accelerator,
+    start: usize,
+    end: usize,
+    bound: Option<f64>,
+    threads: usize,
+    deadline: Option<Instant>,
+) -> RangeOutcome {
+    let mut inc = Incumbent::new(bound.map(|objective| SeedBound { objective }));
+    let mut tally = Tally::default();
+    let mut timed_out = false;
+    let threads = threads.max(1);
+    for wave in space.unit_sched[start..end].chunks(WAVE_UNITS) {
+        if deadline.is_some_and(|d| Instant::now() > d) {
+            timed_out = true;
+            break;
+        }
+        let ws = inc.wave_state();
+        let mut dispatch: Vec<u32> = Vec::with_capacity(wave.len());
+        for &ui in wave {
+            tally.units_total += 1;
+            if skip_unit(&space.units[ui as usize], ui, ws) {
+                tally.units_skipped += 1;
+                continue;
+            }
+            dispatch.push(ui);
+        }
+        let outcomes = ordered_map(&dispatch, threads, |_, &ui| {
+            scan_unit(&space.units[ui as usize], ui, space, arch, ws, true, deadline)
+        });
+        for (&ui, o) in dispatch.iter().zip(&outcomes) {
+            tally.absorb(o);
+            timed_out |= o.timed_out;
+            inc.absorb(ui, &o.best);
+        }
+        if timed_out {
+            break;
+        }
+    }
+    RangeOutcome {
+        best: inc.best.map(|m| (inc.ub, inc.holder.0, inc.holder.1, m)),
+        tally,
+        timed_out,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -928,7 +1002,39 @@ mod tests {
         assert_eq!(ca.combos_pruned, cb.combos_pruned, "{label}: combos_pruned");
         assert_eq!(ca.units_total, cb.units_total, "{label}: units_total");
         assert_eq!(ca.units_skipped, cb.units_skipped, "{label}: units_skipped");
+        assert_eq!(ca.shards, cb.shards, "{label}: shards");
+        assert_eq!(ca.shard_retries, cb.shard_retries, "{label}: shard_retries");
         assert_eq!(ca.proved_optimal, cb.proved_optimal, "{label}: proved");
+    }
+
+    #[test]
+    fn full_range_scan_matches_the_engine_and_splits_merge_back() {
+        // The distributed coordinator's soundness in miniature, in-process:
+        // the full-range scan IS the engine, and a two-way split lex-min
+        // merges back to the identical `(value, key, mapping)`.
+        let shape = GemmShape::new(64, 64, 64);
+        let a = arch();
+        let engine = solve_with_threads(shape, &a, SolverOptions::default(), 1).unwrap();
+        let space = SearchSpace::build_with_dominance(shape, &a, true, true);
+        let n = space.unit_sched.len();
+        let full = scan_sched_range(&space, &a, 0, n, None, 1, None);
+        let (v, ui, ci, m) = full.best.expect("feasible instance");
+        assert_eq!(m, engine.mapping, "full-range scan is the engine");
+        assert_eq!(full.tally.nodes, engine.certificate.nodes);
+        assert_eq!(full.tally.units_skipped, engine.certificate.units_skipped);
+        let mid = n / 2;
+        let lo = scan_sched_range(&space, &a, 0, mid, None, 1, None);
+        let hi = scan_sched_range(&space, &a, mid, n, None, 1, None);
+        let merged = [lo.best, hi.best]
+            .into_iter()
+            .flatten()
+            .min_by(|a, b| {
+                (a.0, (a.1, a.2)).partial_cmp(&(b.0, (b.1, b.2))).expect("finite objectives")
+            })
+            .expect("at least one half finds the optimum");
+        assert_eq!(merged.0.to_bits(), v.to_bits(), "merged value");
+        assert_eq!((merged.1, merged.2), (ui, ci), "merged canonical key");
+        assert_eq!(merged.3, m, "merged mapping");
     }
 
     #[test]

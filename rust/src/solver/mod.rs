@@ -47,6 +47,7 @@
 
 mod bnb;
 mod candidates;
+pub mod dist;
 pub mod engine;
 mod exhaustive;
 pub mod seed;
@@ -56,6 +57,7 @@ pub use bnb::solve;
 pub use candidates::{
     spatial_triples, AxisCandidate, CandidateCache, CandidateList, SharedCandidateStore,
 };
+pub use dist::{solve_dist, DistError, DistOptions};
 pub use engine::{
     default_seed_bounds, default_solve_threads, parse_seed_bounds_value, solve_serial_reference,
     solve_serial_reference_seeded, solve_with_threads, SeedBound, SolveError, SolveRequest,
@@ -96,6 +98,15 @@ pub struct Certificate {
     /// schedule's unit-level kill counter (DESIGN.md §8; always 0 for the
     /// canonical-order A/B baseline, which never unit-skips).
     pub units_skipped: u64,
+    /// Worker processes the answer was merged from ([`solve_dist`],
+    /// DESIGN.md §10); 0 for an in-process solve. Like the effort counters
+    /// above, this records how the search was *run*, never what it found —
+    /// mapping/energy/bounds are shard-invariant.
+    pub shards: u64,
+    /// Shard unit ranges re-queued after a worker died, hung, or corrupted
+    /// its protocol stream (DESIGN.md §10). A retry re-scans pure data, so
+    /// this counter is provenance only — the merged answer is unchanged.
+    pub shard_retries: u64,
     /// Whether the search ran to completion (gap provably 0).
     pub proved_optimal: bool,
 }

@@ -21,6 +21,20 @@ pub fn test_workers() -> usize {
         .unwrap_or(4)
 }
 
+/// Distributed-solve shard count for suites that exercise
+/// [`goma::solver::solve_dist`]. CI runs those suites at both
+/// `GOMA_TEST_SHARDS=1` (degenerate single-worker fan-out) and `=4`, so
+/// partition/merge regressions cannot land green by only passing the
+/// one-shard path.
+#[allow(dead_code)]
+pub fn test_shards() -> usize {
+    std::env::var("GOMA_TEST_SHARDS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(2)
+}
+
 /// Random small-but-composite extent for solver property suites. The pool
 /// is deliberately tie-rich: equal draws across axes produce symmetric
 /// shapes whose optimum is attained at exactly equal objective values in
@@ -80,5 +94,7 @@ pub fn assert_bit_identical(a: &SolveResult, b: &SolveResult, label: &str) {
     assert_eq!(ca.combos_pruned, cb.combos_pruned, "{label}: combos_pruned");
     assert_eq!(ca.units_total, cb.units_total, "{label}: units_total");
     assert_eq!(ca.units_skipped, cb.units_skipped, "{label}: units_skipped");
+    assert_eq!(ca.shards, cb.shards, "{label}: shards");
+    assert_eq!(ca.shard_retries, cb.shard_retries, "{label}: shard_retries");
     assert_eq!(ca.proved_optimal, cb.proved_optimal, "{label}: proved_optimal");
 }

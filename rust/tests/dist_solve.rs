@@ -1,0 +1,316 @@
+//! Property and fault-injection suite for the distributed solve
+//! coordinator (`goma::solver::solve_dist`, DESIGN.md §10), pinning the
+//! contract the multi-process fan-out rests on:
+//!
+//! * **(a) the merged answer never moves** — for seeded random instances,
+//!   shard counts {1, 2, 4} × engine threads {1, 4} return mapping,
+//!   energy, bounds, and proved bit bit-identical to the in-process
+//!   engine, and agree with it on infeasibility;
+//! * **(b) worker loss costs only time** — a shard killed mid-solve
+//!   (exit-137, observably a SIGKILL), a hung shard, and a shard whose
+//!   stream is corrupted or truncated mid-frame all recover to the
+//!   bit-identical answer, with the re-queued range visible in
+//!   `Certificate::shard_retries`;
+//! * **(c) a mismatched worker never merges** — a worker reporting a
+//!   stale `CACHE_FORMAT_VERSION` or a different arch parameter
+//!   fingerprint is rejected at spawn with a clear error, before any
+//!   range is dispatched;
+//! * **(d) incumbent exchange is effort-only** — cross-shard bound
+//!   exchange leaves every answer field untouched and reduces aggregate
+//!   node counts (the same in-aggregate discipline `bound_order.rs`
+//!   holds the intra-process schedule to), while the exchange-off
+//!   configuration is bit-deterministic run to run, counters included;
+//! * **(e) partial infeasibility cannot mask the optimum** — on
+//!   register-starved architectures where whole shard ranges contain no
+//!   feasible mapping, the merge still surfaces the feasible optimum,
+//!   and fully infeasible instances error exactly like the in-process
+//!   engine.
+//!
+//! The worker binary is the suite's own `goma` build
+//! (`CARGO_BIN_EXE_goma`), so every test spawns real processes and
+//! speaks the real framed protocol — nothing is mocked.
+
+use goma::arch::Accelerator;
+use goma::coordinator::MappingService;
+use goma::mapping::GemmShape;
+use goma::solver::{
+    solve_dist, DistError, DistOptions, SolveRequest, SolveResult, SolverOptions,
+};
+use goma::util::Rng;
+use std::path::PathBuf;
+use std::time::Duration;
+
+mod common;
+use common::{assert_bit_identical, rand_arch, rand_shape, test_shards};
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_goma"))
+}
+
+fn dopts(shards: usize) -> DistOptions {
+    DistOptions { shards, worker_bin: Some(worker_bin()), ..DistOptions::default() }
+}
+
+/// The answer half of the distributed contract: every field the merge
+/// promises is shard-count-invariant. `nodes`/`units_skipped` are
+/// deliberately absent — under incumbent exchange they record which
+/// bound happened to be merged when a chunk was dispatched, i.e. they
+/// are provenance, not answer (DESIGN.md §10). `units_total` IS asserted:
+/// chunk tallies partition the unit schedule, so their sum must equal
+/// the single-process count exactly.
+fn assert_same_answer(dist: &SolveResult, base: &SolveResult, label: &str) {
+    let (cd, cb) = (&dist.certificate, &base.certificate);
+    assert_eq!(dist.mapping, base.mapping, "{label}: mapping");
+    assert_eq!(
+        dist.energy.normalized.to_bits(),
+        base.energy.normalized.to_bits(),
+        "{label}: normalized energy"
+    );
+    assert_eq!(
+        dist.energy.total_pj.to_bits(),
+        base.energy.total_pj.to_bits(),
+        "{label}: total energy"
+    );
+    assert_eq!(cd.upper_bound.to_bits(), cb.upper_bound.to_bits(), "{label}: upper bound");
+    assert_eq!(cd.lower_bound.to_bits(), cb.lower_bound.to_bits(), "{label}: lower bound");
+    assert_eq!(cd.gap.to_bits(), cb.gap.to_bits(), "{label}: gap");
+    assert_eq!(cd.units_total, cb.units_total, "{label}: units_total");
+    assert_eq!(cd.proved_optimal, cb.proved_optimal, "{label}: proved_optimal");
+}
+
+/// (a) The metamorphic core: 50+ feasible seeded instances, each solved
+/// in-process and then distributed at shard counts {1, 2, 4} × engine
+/// threads {1, 4}, every combination bit-identical on the answer.
+/// Infeasible draws are asserted too: the distributed route must report
+/// the same `NoFeasibleMapping`, not mask or invent feasibility.
+#[test]
+fn property_distributed_merge_is_bit_identical_to_in_process() {
+    let mut rng = Rng::seed_from_u64(0xD157_50CE); // "dist-solve"
+    let opts = SolverOptions::default();
+    let mut feasible: u64 = 0;
+    let mut infeasible: u64 = 0;
+    let mut draws: u64 = 0;
+    while feasible < 50 && draws < 300 {
+        draws += 1;
+        let shape = rand_shape(&mut rng);
+        let arch = rand_arch(&mut rng, "distprop", draws);
+        let label = format!("draw {draws} {shape} on {}", arch.name);
+        let base = SolveRequest::new(shape, &arch).options(opts).threads(1).solve();
+        for shards in [1usize, 2, 4] {
+            for threads in [1usize, 4] {
+                let run = SolverOptions { solve_threads: threads, ..opts };
+                let dist = solve_dist(shape, &arch, run, None, &dopts(shards));
+                let label = format!("{label} shards={shards} threads={threads}");
+                match (&base, dist) {
+                    (Ok(b), Ok(d)) => {
+                        assert_same_answer(&d, b, &label);
+                        assert!(
+                            (1..=shards as u64).contains(&d.certificate.shards),
+                            "{label}: merged from {} shards",
+                            d.certificate.shards
+                        );
+                        assert_eq!(
+                            d.certificate.shard_retries, 0,
+                            "{label}: clean run must not retry"
+                        );
+                    }
+                    (Err(b), Err(DistError::Solve(d))) => {
+                        assert_eq!(&d, b, "{label}: error kind");
+                    }
+                    (b, d) => panic!("{label}: disagreement ({b:?} vs {d:?})"),
+                }
+            }
+        }
+        match base {
+            Ok(_) => feasible += 1,
+            Err(_) => infeasible += 1,
+        }
+    }
+    assert!(
+        feasible >= 50,
+        "suite degenerated: only {feasible} feasible instances in {draws} draws"
+    );
+    assert!(infeasible >= 1, "suite degenerated: no infeasible draw exercised the error path");
+}
+
+/// (d) Incumbent exchange is effort-only. Answers match bit for bit with
+/// exchange on and off; aggregate node counts with exchange on stay at
+/// or below exchange-off (per-instance node counts are timing-dependent
+/// provenance, so — exactly like the bound-order schedule — the win is
+/// held in aggregate); and with exchange off the whole run, counters
+/// included, is deterministic across repeats.
+#[test]
+fn property_incumbent_exchange_is_effort_only_and_off_is_deterministic() {
+    let mut rng = Rng::seed_from_u64(0xE8C4_A27E); // "exchange"
+    let opts = SolverOptions::default();
+    let shards = test_shards().max(2);
+    let mut nodes_on: u64 = 0;
+    let mut nodes_off: u64 = 0;
+    let mut feasible: u64 = 0;
+    let mut draws: u64 = 0;
+    while feasible < 20 && draws < 150 {
+        draws += 1;
+        let shape = rand_shape(&mut rng);
+        let arch = rand_arch(&mut rng, "distxchg", draws);
+        let label = format!("draw {draws} {shape} on {}", arch.name);
+        let on = solve_dist(shape, &arch, opts, None, &dopts(shards));
+        let off_opts = DistOptions { exchange: false, ..dopts(shards) };
+        let off = solve_dist(shape, &arch, opts, None, &off_opts);
+        let (on, off) = match (on, off) {
+            (Ok(a), Ok(b)) => (a, b),
+            (Err(a), Err(b)) => {
+                assert_eq!(a, b, "{label}: error kind");
+                continue;
+            }
+            (a, b) => panic!("{label}: feasibility disagreement ({a:?} vs {b:?})"),
+        };
+        feasible += 1;
+        assert_same_answer(&on, &off, label.as_str());
+        nodes_on += on.certificate.nodes;
+        nodes_off += off.certificate.nodes;
+        // Exchange off: chunk bounds are seed-only, so every counter is a
+        // pure function of the partition — repeats are fully identical.
+        let again = solve_dist(shape, &arch, opts, None, &off_opts)
+            .unwrap_or_else(|e| panic!("{label}: repeat failed: {e:?}"));
+        assert_bit_identical(&again, &off, &format!("{label} exchange-off repeat"));
+    }
+    assert!(feasible >= 20, "suite degenerated: {feasible} feasible in {draws} draws");
+    assert!(
+        nodes_on <= nodes_off,
+        "incumbent exchange lost in aggregate ({nodes_on} > {nodes_off} nodes over {feasible} instances)"
+    );
+}
+
+/// (b) Fault injection through the real protocol: one shard of four is
+/// made to die (exit 137 — what a SIGKILL looks like from the
+/// coordinator's side: the stream ends mid-protocol with no farewell),
+/// hang until the protocol timeout, or corrupt/truncate a done frame.
+/// Every fault recovers to the bit-identical answer, with the re-queued
+/// range visible in `shard_retries`.
+#[test]
+fn killed_hung_and_corrupted_shards_recover_to_the_identical_answer() {
+    let shape = GemmShape::new(16, 24, 32);
+    let arch = Accelerator::custom("dist-fault", 1 << 12, 8, 64);
+    let base = SolveRequest::new(shape, &arch)
+        .options(SolverOptions::default())
+        .threads(1)
+        .solve()
+        .expect("the fault instance must be feasible");
+    let faults =
+        ["die-on-task:0", "hang-on-task:0", "corrupt-on-task:0", "truncate-on-task:1"];
+    for fault in faults {
+        // Hang detection rides the protocol timeout; everything else is
+        // detected the moment the stream breaks, so the short timeout is
+        // harmless there too (healthy chunks answer in milliseconds).
+        let dopts = DistOptions {
+            task_timeout: Duration::from_millis(2000),
+            fault: Some((1, fault.to_string())),
+            ..dopts(4)
+        };
+        let dist = solve_dist(shape, &arch, SolverOptions::default(), None, &dopts)
+            .unwrap_or_else(|e| panic!("fault {fault}: solve failed: {e:?}"));
+        assert_same_answer(&dist, &base, &format!("fault {fault}"));
+        assert!(
+            dist.certificate.shard_retries >= 1,
+            "fault {fault}: the re-queued range must be visible in shard_retries"
+        );
+        assert!(dist.certificate.shards >= 1, "fault {fault}: shard provenance");
+    }
+}
+
+/// (e) Regression: one shard's range being wholly infeasible must not
+/// mask another shard's feasible optimum. Register-starved draws (1- and
+/// 2-word regfiles) make empty-range merges routine; the merge must
+/// treat them as no-ops. Fully infeasible instances must surface the
+/// in-process error, not a fabricated mapping.
+#[test]
+fn infeasible_shard_ranges_do_not_mask_a_feasible_optimum() {
+    let mut rng = Rng::seed_from_u64(0x1F_EA51B1E); // "infeasible"
+    let opts = SolverOptions::default();
+    let mut feasible: u64 = 0;
+    let mut infeasible: u64 = 0;
+    let mut draws: u64 = 0;
+    while (feasible < 10 || infeasible < 3) && draws < 200 {
+        draws += 1;
+        let shape = rand_shape(&mut rng);
+        let regfile = [1u64, 2][(draws % 2) as usize];
+        let arch = Accelerator::custom(&format!("dist-tight{draws}"), 1 << 10, 4, regfile);
+        let label = format!("draw {draws} {shape} on {}", arch.name);
+        let base = SolveRequest::new(shape, &arch).options(opts).threads(1).solve();
+        let dist = solve_dist(shape, &arch, opts, None, &dopts(4));
+        match (base, dist) {
+            (Ok(b), Ok(d)) => {
+                assert_same_answer(&d, &b, &label);
+                feasible += 1;
+            }
+            (Err(b), Err(DistError::Solve(d))) => {
+                assert_eq!(d, b, "{label}: error kind");
+                infeasible += 1;
+            }
+            (b, d) => panic!("{label}: feasibility disagreement ({b:?} vs {d:?})"),
+        }
+    }
+    assert!(
+        feasible >= 10 && infeasible >= 3,
+        "suite degenerated: {feasible} feasible / {infeasible} infeasible in {draws} draws"
+    );
+}
+
+/// (c) Handshake rejection: a worker speaking a different
+/// `CACHE_FORMAT_VERSION` or a different arch parameter fingerprint is a
+/// configuration error, not a runtime fault — the whole solve fails at
+/// spawn with a message naming the mismatch, and is never silently
+/// retried into a wrong merge.
+#[test]
+fn mismatched_workers_are_rejected_at_spawn_with_a_clear_error() {
+    let shape = GemmShape::new(8, 8, 8);
+    let arch = Accelerator::custom("dist-hs", 1 << 12, 4, 64);
+    let spoofs =
+        [("spoof-version", "version mismatch"), ("spoof-fingerprint", "fingerprint mismatch")];
+    for (fault, needle) in spoofs {
+        let dopts = DistOptions { fault: Some((0, fault.to_string())), ..dopts(2) };
+        match solve_dist(shape, &arch, SolverOptions::default(), None, &dopts) {
+            Err(DistError::Worker(msg)) => {
+                assert!(
+                    msg.contains(needle),
+                    "{fault}: rejection must name the mismatch, got {msg:?}"
+                );
+            }
+            other => panic!("{fault}: expected a spawn-time rejection, got {other:?}"),
+        }
+    }
+}
+
+/// The service integration: `MappingService::with_shards` routes misses
+/// through the distributed coordinator, answers bit-identically to the
+/// plain service, and records the route in the `shard_solves` overlay
+/// metric without disturbing the accounting invariant.
+#[test]
+fn service_with_shards_answers_bit_identically_and_records_the_route() {
+    let shapes =
+        [GemmShape::new(8, 8, 16), GemmShape::new(16, 16, 16), GemmShape::new(12, 8, 24)];
+    let arch = Accelerator::custom("dist-svc", 1 << 12, 8, 64);
+    let dist = MappingService::default()
+        .with_shards(test_shards().max(2))
+        .with_shard_bin(worker_bin())
+        .spawn();
+    let plain = MappingService::default().spawn();
+    for shape in shapes {
+        let d = dist.map(shape, arch.clone()).unwrap_or_else(|e| panic!("{shape}: dist: {e}"));
+        let p = plain.map(shape, arch.clone()).unwrap_or_else(|e| panic!("{shape}: plain: {e}"));
+        assert_same_answer(&d, &p, &format!("service {shape}"));
+        assert!(d.certificate.shards >= 1, "{shape}: the dist route must be in the certificate");
+    }
+    let m = dist.metrics();
+    assert_eq!(m.shard_solves(), shapes.len() as u64, "every miss took the dist route");
+    assert_eq!(m.shard_retries(), 0, "no faults were injected");
+    let (req, solves, hits, coalesced, errs) = m.snapshot();
+    assert_eq!(
+        req,
+        hits + coalesced + solves + errs,
+        "shard counters are overlays and must not disturb the accounting invariant"
+    );
+    assert_eq!(plain.metrics().shard_solves(), 0, "the plain service never shards");
+    dist.shutdown();
+    plain.shutdown();
+}

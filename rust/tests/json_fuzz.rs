@@ -1,0 +1,213 @@
+//! Property-fuzz suite for the hand-rolled JSON tree (`goma::util::Json`)
+//! — the layer the shard protocol (`solver::dist`) and the wire protocol
+//! (`coordinator::wire`) both stand on, so its failure modes are theirs:
+//!
+//! * random nested documents round-trip `to_text → parse` to an equal
+//!   tree AND to byte-identical text (the writer's determinism is what
+//!   the wire suites' bit-identical assertions rely on);
+//! * `f64` payloads survive bit-exactly through the two encodings the
+//!   protocols actually use — bare numbers (shortest round-trip form,
+//!   including `-0.0` and subnormals) and `to_bits`-as-decimal-string
+//!   (`Json::u64`/`as_u64`, the encoding for values above 2^53 and
+//!   non-finite bit patterns);
+//! * every truncation of a valid document, printable-byte mutations, a
+//!   malformed corpus, and beyond-depth-cap nesting return `Err` — never
+//!   a panic, never an `Ok` on a prefix (frames are length-checked, so a
+//!   short read must surface as a parse error, not a silent partial).
+//!
+//! Hand-rolled generators (the offline registry has no proptest); seeds
+//! are fixed so failures replay.
+
+use goma::util::{Json, Rng};
+
+/// Random document: nested to `depth`, with f64 leaves drawn from both
+/// uniform draws and adversarial bit patterns (negative zero, subnormal,
+/// max finite, integral-looking).
+fn rand_json(rng: &mut Rng, depth: u32) -> Json {
+    let kinds = if depth == 0 { 4 } else { 6 };
+    match rng.gen_range(kinds) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.gen_bool()),
+        2 => {
+            let adversarial = [
+                -0.0,
+                f64::MIN_POSITIVE / 2.0, // subnormal
+                f64::MAX,
+                -1.0e-308,
+                42.0,
+                0.1 + 0.2, // classic shortest-repr stress
+            ];
+            Json::Num(if rng.gen_bool() {
+                rng.gen_f64() * 1.0e6 - 5.0e5
+            } else {
+                *rng.choose(&adversarial).unwrap()
+            })
+        }
+        3 => {
+            let pool = ["", "plain", "esc\"ape\\", "tab\there", "newline\nhere", "uni\u{2603}"];
+            Json::Str(rng.choose(&pool).unwrap().to_string())
+        }
+        4 => {
+            let n = rng.gen_range(4) as usize;
+            Json::Arr((0..n).map(|_| rand_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.gen_range(4) as usize;
+            Json::Obj(
+                (0..n).map(|i| (format!("k{i}"), rand_json(rng, depth - 1))).collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn random_documents_round_trip_to_equal_trees_and_identical_bytes() {
+    let mut rng = Rng::seed_from_u64(0x15_0FF22); // "json-fuzz"
+    for i in 0..500 {
+        let doc = rand_json(&mut rng, 4);
+        let text = doc.to_text();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("doc {i}: own output failed to parse: {e}\n{text}"));
+        assert_eq!(back, doc, "doc {i}: tree mutated through the round trip\n{text}");
+        // Byte-stability is the stronger claim: `Json::PartialEq` compares
+        // f64s numerically (so it cannot see a lost `-0.0` sign), but
+        // identical bytes can.
+        assert_eq!(back.to_text(), text, "doc {i}: writer is not byte-stable");
+    }
+}
+
+#[test]
+fn f64_bit_patterns_survive_both_wire_encodings() {
+    let mut rng = Rng::seed_from_u64(0xF64_B175); // "f64-bits"
+    let mut checked: u64 = 0;
+    for _ in 0..2000 {
+        let bits = rng.next_u64();
+        // Encoding 1: `to_bits` as a decimal string (`Json::u64`) — the
+        // protocols' encoding for every float, because it is total: NaN
+        // payloads and infinities ride through unchanged.
+        let via_bits = Json::u64(bits);
+        let reparsed = Json::parse(&via_bits.to_text()).expect("u64 encoding must parse");
+        assert_eq!(reparsed.as_u64(), Some(bits), "bits {bits:#018x} lost through Json::u64");
+        // Encoding 2: a bare number — only lossless for finite values
+        // (the writer documents non-finite → null), so gate on that.
+        let v = f64::from_bits(bits);
+        if v.is_finite() {
+            checked += 1;
+            let text = Json::Num(v).to_text();
+            let back = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("{v:e}: shortest form failed to parse: {e}"));
+            let got = back.as_f64().unwrap_or_else(|| panic!("{v:e}: reparsed as non-number"));
+            assert_eq!(got.to_bits(), bits, "{v:e}: bare-number round trip moved the bits");
+        }
+    }
+    assert!(checked >= 1000, "suite degenerated: only {checked} finite draws");
+    // The documented total-ness boundary: non-finite bare numbers
+    // serialize as null (invalid in JSON otherwise) — which is exactly
+    // why the protocols never use encoding 2 for certificate floats.
+    assert_eq!(Json::Num(f64::NAN).to_text(), "null");
+    assert_eq!(Json::Num(f64::INFINITY).to_text(), "null");
+}
+
+#[test]
+fn integers_above_2_pow_53_need_the_string_encoding() {
+    let big = (1u64 << 53) + 1;
+    // `big as f64` already rounds to 2^53 — the value is lost before the
+    // writer ever sees it, which is why the protocols ship bit-exact
+    // integers as decimal strings instead of bare numbers.
+    assert_ne!(Json::Num(big as f64).as_u64(), Some(big), "f64 cannot carry 2^53+1");
+    assert_eq!(Json::u64(big).as_u64(), Some(big));
+    assert_eq!(Json::u64(u64::MAX).as_u64(), Some(u64::MAX));
+}
+
+#[test]
+fn every_truncation_of_a_valid_document_errors_without_panicking() {
+    let mut rng = Rng::seed_from_u64(0x7264_0CA7E); // "truncate"
+    for i in 0..50 {
+        let doc = rand_json(&mut rng, 3);
+        let text = doc.to_text();
+        for cut in 0..text.len() {
+            if !text.is_char_boundary(cut) {
+                continue;
+            }
+            let prefix = &text[..cut];
+            // A strict prefix of a JSON document is never itself a valid
+            // document *unless* the document is a number (e.g. "123" cut
+            // to "12") — the one grammar production with valid prefixes.
+            if let Ok(v) = Json::parse(prefix) {
+                assert!(
+                    matches!(v, Json::Num(_)) && matches!(doc, Json::Num(_)),
+                    "doc {i}: truncation to {cut} bytes parsed as {v:?}\nfull: {text}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn printable_byte_mutations_never_panic() {
+    let mut rng = Rng::seed_from_u64(0x0707_A7E5); // "mutates"
+    for _ in 0..100 {
+        let doc = rand_json(&mut rng, 3);
+        let text = doc.to_text();
+        if text.is_empty() {
+            continue;
+        }
+        for _ in 0..20 {
+            let mut bytes = text.clone().into_bytes();
+            let pos = rng.gen_range(bytes.len() as u64) as usize;
+            // Printable ASCII keeps the buffer valid UTF-8 regardless of
+            // what it lands on (multi-byte chars are only generated in
+            // string bodies, where any byte sequence is the parser's
+            // problem to reject, not ours to avoid).
+            let replacement = 0x20 + (rng.gen_range(0x5f) as u8);
+            bytes[pos] = replacement;
+            if let Ok(mutated) = String::from_utf8(bytes) {
+                // Outcome is unconstrained (a mutation can leave the
+                // document valid); not panicking is the property.
+                let _ = Json::parse(&mutated);
+            }
+        }
+    }
+}
+
+#[test]
+fn the_malformed_corpus_is_rejected() {
+    let corpus: &[&str] = &[
+        "",
+        "   ",
+        "{",
+        "}",
+        "[1,",
+        "[1 2]",
+        "{\"a\":}",
+        "{\"a\" 1}",
+        "{a:1}",
+        "\"unterminated",
+        "\"bad escape \\x\"",
+        "tru",
+        "nulll",
+        "1.2.3",
+        "+1",
+        "- 1",
+        "0x10",
+        "NaN",
+        "Infinity",
+        "[1] trailing",
+        "{\"a\":1}{\"b\":2}",
+        "\u{feff}{}", // BOM is not whitespace
+    ];
+    for case in corpus {
+        assert!(Json::parse(case).is_err(), "accepted malformed input {case:?}");
+    }
+}
+
+#[test]
+fn nesting_beyond_the_depth_cap_is_rejected_not_overflowed() {
+    // 64 is the documented cap; well beyond it must error (not recurse
+    // into a stack overflow — the server feeds this parser bytes from
+    // the network).
+    let deep_ok = format!("{}1{}", "[".repeat(32), "]".repeat(32));
+    assert!(Json::parse(&deep_ok).is_ok(), "32 levels must be fine");
+    let deep_bad = format!("{}1{}", "[".repeat(500), "]".repeat(500));
+    assert!(Json::parse(&deep_bad).is_err(), "500 levels must be rejected by the depth cap");
+}
