@@ -9,7 +9,10 @@
 //! (DESIGN.md §8: the same batch solved with per-solve candidate lists
 //! vs. one `SharedCandidateStore` across the batch — bit-identical
 //! answers asserted, speedup and store hit counts recorded into the same
-//! JSON); runs a **wire front-door leg** (the same keys through a
+//! JSON); runs a **scalar-kernel A/B leg** (DESIGN.md §11:
+//! `with_simd(false)` + `with_suffix_bounds(false)` vs the SIMD kernel at
+//! the same suffix setting — bit-identical down to node counters); runs a
+//! **wire front-door leg** (the same keys through a
 //! [`MappingServer`] over real HTTP — per-request p50/p99 latency and
 //! throughput recorded into the JSON's `wire` field, answers asserted
 //! bit-identical to the in-process path); runs a **distributed-shards
@@ -193,6 +196,56 @@ fn candidate_store_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
         store.lists_held(),
         store.hits(),
         store.misses()
+    )
+}
+
+/// Scan-kernel A/B through the service layer (DESIGN.md §11): the same
+/// keys through a pure-scalar service (`with_simd(false)` +
+/// `with_suffix_bounds(false)`) and a SIMD one (suffix bounds still off,
+/// so every counter is comparable) — bit-identical down to the node
+/// counters, and the fingerprint-sharing rule means both populate the
+/// same cache entries.
+fn scalar_kernel_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
+    let run = |simd: bool| {
+        let handle = MappingService::default()
+            .with_workers(4)
+            .with_simd(simd)
+            .with_suffix_bounds(false)
+            .spawn();
+        let t = Instant::now();
+        let results: Vec<Arc<SolveResult>> = handle
+            .submit_batch(arch, shapes)
+            .into_iter()
+            .map(|p| p.wait().expect("bench instances are feasible"))
+            .collect();
+        let dt = t.elapsed().as_secs_f64();
+        handle.shutdown();
+        (results, dt)
+    };
+    let (scalar, scalar_s) = run(false);
+    let (simd, simd_s) = run(true);
+    for ((shape, a), b) in shapes.iter().zip(&simd).zip(&scalar) {
+        assert_eq!(a.mapping, b.mapping, "the simd kernel changed the mapping for {shape}");
+        assert_eq!(
+            a.energy.normalized.to_bits(),
+            b.energy.normalized.to_bits(),
+            "the simd kernel changed the energy for {shape}"
+        );
+        assert_eq!(
+            a.certificate.nodes, b.certificate.nodes,
+            "the simd kernel changed the node counter for {shape}"
+        );
+    }
+    println!(
+        "scalar-kernel service A/B (batch {}): scalar {scalar_s:.4}s -> simd {simd_s:.4}s \
+         (x{:.2}, bit-identical)",
+        shapes.len(),
+        scalar_s / simd_s.max(1e-12)
+    );
+    format!(
+        "{{\"batch\": {}, \"scalar_s\": {scalar_s}, \"simd_s\": {simd_s}, \"speedup\": {}}}",
+        shapes.len(),
+        scalar_s / simd_s.max(1e-12)
     )
 }
 
@@ -380,6 +433,10 @@ fn main() {
     let store_n = if smoke { 8 } else { 24 };
     let store_record = candidate_store_leg(&arch, &full[..store_n]);
 
+    // Scan-kernel A/B through the service layer (bit-identity asserted
+    // inside, DESIGN.md §11).
+    let scalar_record = scalar_kernel_leg(&arch, &full[..if smoke { 8 } else { 24 }]);
+
     // Wire front-door leg: latency percentiles + throughput over HTTP,
     // answers asserted bit-identical to the in-process path.
     let wire_record = wire_leg(&arch, &full[..store_n]);
@@ -392,10 +449,11 @@ fn main() {
     let json = format!(
         "{{\n  \"bench\": \"coordinator_seeding\",\n  \"smoke\": {},\n  \
          \"legs\": [\n    {}\n  ],\n  \"candidate_store\": {},\n  \
-         \"wire\": {},\n  \"dist\": {}\n}}\n",
+         \"scalar_kernel\": {},\n  \"wire\": {},\n  \"dist\": {}\n}}\n",
         smoke,
         ab_records.join(",\n    "),
         store_record,
+        scalar_record,
         wire_record,
         dist_record
     );

@@ -4,19 +4,25 @@
 //! pair at engine thread counts 1 and 4, plus a dominance-pruning-off
 //! baseline leg, a **canonical-order baseline leg**
 //! (`SolveRequest::bound_order(false)` — the A/B hook for the
-//! bound-ordered schedule of DESIGN.md §8), a **distributed-shards leg**
-//! (`solve_dist` at 4 worker processes, DESIGN.md §10 — per-pair
+//! bound-ordered schedule of DESIGN.md §8), **scan-kernel A/B legs**
+//! (DESIGN.md §11: `simd(false)`, `suffix_bounds(false)`, and the
+//! pure-scalar canonical kernel with both off — answers asserted
+//! bit-identical at threads 1/4 and shards 1/4, SIMD speedup and
+//! suffix-bound node savings recorded), **distributed-shards legs**
+//! (`solve_dist` at 1 and 4 worker processes, DESIGN.md §10 — per-pair
 //! bit-identity asserted, shard speedup recorded) and the O(1) energy
 //! evaluation itself, printing latency distributions. Emits `BENCH_solver.json`
 //! (geomean solve time, expanded nodes, combos pruned, unit-skip rate,
-//! canonical-vs-bound-ordered node savings) so the perf trajectory is
-//! recorded run over run; this is the harness used for the
-//! EXPERIMENTS.md §Perf before/after log.
+//! canonical-vs-bound-ordered node savings, `simd_speedup`,
+//! `suffix_bound_node_savings`) so the perf trajectory is recorded run
+//! over run; this is the harness used for the EXPERIMENTS.md §Perf
+//! before/after log.
 //!
 //! **Perf-rot guard**: the run *asserts* that the bound-ordered engine
 //! expands no more nodes and scans no more units than the canonical-order
-//! baseline over the whole pair set — CI's `GOMA_SMOKE=1` run turns a
-//! bound-ordering regression into a red build.
+//! baseline, that the SIMD kernel is bit-invisible, and that the suffix
+//! bounds never expand nodes, over the whole pair set — CI's
+//! `GOMA_SMOKE=1` run turns a regression in any of them into a red build.
 //!
 //! Run: `cargo bench --bench solver_hotpath`
 
@@ -40,6 +46,18 @@ struct Leg {
     combos_pruned: u64,
     units_total: u64,
     units_skipped: u64,
+    /// Per-pair `(mapping, energy bits)` in pair order (feasible pairs
+    /// only — every leg sees the same feasible set), for cross-leg
+    /// answer-identity asserts.
+    answers: Vec<(goma::mapping::Mapping, u64)>,
+}
+
+fn assert_same_answers(a: &Leg, b: &Leg, label: &str) {
+    assert_eq!(a.answers.len(), b.answers.len(), "{label}: feasible sets diverged");
+    for (i, (x, y)) in a.answers.iter().zip(&b.answers).enumerate() {
+        assert_eq!(x.0, y.0, "{label}: mapping moved on pair {i}");
+        assert_eq!(x.1, y.1, "{label}: energy bits moved on pair {i}");
+    }
 }
 
 fn time_solves(
@@ -47,6 +65,8 @@ fn time_solves(
     threads: usize,
     dominance: bool,
     bound_order: bool,
+    simd: bool,
+    suffix_bounds: bool,
 ) -> Leg {
     let mut leg = Leg::default();
     for (shape, arch) in pairs {
@@ -55,6 +75,8 @@ fn time_solves(
             .threads(threads)
             .dominance(dominance)
             .bound_order(bound_order)
+            .simd(simd)
+            .suffix_bounds(suffix_bounds)
             .solve();
         let dt = t.elapsed().as_secs_f64();
         if let Ok(r) = r {
@@ -64,6 +86,7 @@ fn time_solves(
             leg.combos_pruned += r.certificate.combos_pruned;
             leg.units_total += r.certificate.units_total;
             leg.units_skipped += r.certificate.units_skipped;
+            leg.answers.push((r.mapping, r.energy.normalized.to_bits()));
         }
     }
     leg
@@ -71,18 +94,27 @@ fn time_solves(
 
 /// The distributed-shards leg (DESIGN.md §10): each pair through
 /// `solve_dist` at `shards` worker processes, with bit-identity asserted
-/// per pair against a fresh in-process solve. Speedup vs the 1-thread
-/// leg is *recorded, not asserted* — on this pair set's small instances
-/// the fan-out pays process-spawn overhead that only larger search
-/// spaces amortize.
+/// per pair against a fresh in-process solve *at the same scan-kernel
+/// settings* (the coordinator propagates the resolved `simd` /
+/// `suffix_bounds` through the worker handshake, so the two routes run
+/// the same kernels). Speedup vs the 1-thread leg is *recorded, not
+/// asserted* — on this pair set's small instances the fan-out pays
+/// process-spawn overhead that only larger search spaces amortize.
 fn time_dist_solves(
     pairs: &[(GemmShape, goma::arch::Accelerator)],
     shards: usize,
+    simd: bool,
+    suffix_bounds: bool,
 ) -> (Leg, Vec<f64>, u64) {
     let dopts = DistOptions {
         shards,
         worker_bin: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_goma"))),
         ..DistOptions::default()
+    };
+    let opts = SolverOptions {
+        simd: Some(simd),
+        suffix_bounds: Some(suffix_bounds),
+        ..SolverOptions::default()
     };
     let mut leg = Leg::default();
     // The reference in-process solve, timed over the same subset so the
@@ -91,17 +123,18 @@ fn time_dist_solves(
     let mut retries = 0u64;
     for (shape, arch) in pairs {
         let t = Instant::now();
-        let r = solve_dist(*shape, arch, SolverOptions::default(), None, &dopts);
+        let r = solve_dist(*shape, arch, opts, None, &dopts);
         let dt = t.elapsed().as_secs_f64();
         let Ok(r) = r else {
             assert!(
-                SolveRequest::new(*shape, arch).threads(1).solve().is_err(),
+                SolveRequest::new(*shape, arch).options(opts).threads(1).solve().is_err(),
                 "dist errored on an in-process-feasible pair {shape}"
             );
             continue;
         };
         let t = Instant::now();
         let base = SolveRequest::new(*shape, arch)
+            .options(opts)
             .threads(1)
             .solve()
             .unwrap_or_else(|e| panic!("dist answered an in-process-infeasible pair {shape}: {e}"));
@@ -127,6 +160,7 @@ fn time_dist_solves(
         leg.combos_pruned += r.certificate.combos_pruned;
         leg.units_total += r.certificate.units_total;
         leg.units_skipped += r.certificate.units_skipped;
+        leg.answers.push((r.mapping, r.energy.normalized.to_bits()));
         retries += r.certificate.shard_retries;
     }
     (leg, ref_times, retries)
@@ -199,14 +233,22 @@ fn main() {
     // against, and — when `GOMA_SOLVE_THREADS` sets a different default —
     // a leg at that default, so CI's env-varied smoke runs exercise
     // distinct work.
-    let t1 = time_solves(&pairs, 1, true, true);
-    let t4 = time_solves(&pairs, 4, true, true);
-    let canonical = time_solves(&pairs, 1, true, false);
-    let unpruned = time_solves(&pairs, 1, false, true);
+    let t1 = time_solves(&pairs, 1, true, true, true, true);
+    let t4 = time_solves(&pairs, 4, true, true, true, true);
+    let canonical = time_solves(&pairs, 1, true, false, true, true);
+    let unpruned = time_solves(&pairs, 1, false, true, true, true);
     report(&format!("solves ({} pairs), 1 thread", pairs.len()), &t1.times);
     report(&format!("solves ({} pairs), 4 threads", pairs.len()), &t4.times);
     report("canonical-order baseline", &canonical.times);
     report("unpruned baseline, 1 thread", &unpruned.times);
+    // The scan-kernel A/B legs (DESIGN.md §11): SIMD off, suffix bounds
+    // off, and the pure-scalar canonical kernel with both off.
+    let scalar = time_solves(&pairs, 1, true, true, false, true);
+    let nosuffix = time_solves(&pairs, 1, true, true, true, false);
+    let scalar_canonical = time_solves(&pairs, 1, true, true, false, false);
+    report("scalar kernel (simd off)", &scalar.times);
+    report("no suffix bounds", &nosuffix.times);
+    report("pure-scalar canonical kernel", &scalar_canonical.times);
     // The env-default leg, measured fresh only when it differs from the
     // hard-coded 1/4-thread legs (re-timing an identical configuration
     // would double the bench's wall clock for no new information).
@@ -214,20 +256,36 @@ fn main() {
     let tdflt = match dflt {
         1 => t1.clone(),
         4 => t4.clone(),
-        _ => time_solves(&pairs, dflt, true, true),
+        _ => time_solves(&pairs, dflt, true, true, true, true),
     };
     report(&format!("env default leg ({dflt} thread(s))"), &tdflt.times);
     assert_eq!(tdflt.nodes, t1.nodes, "default-leg counters must be thread-invariant");
 
-    // The distributed-shards leg (DESIGN.md §10), bit-identity asserted
+    // The distributed-shards legs (DESIGN.md §10), bit-identity asserted
     // inside. Capped to the first 24 pairs in full mode (each dist solve
-    // spawns 4 worker processes plus a reference solve, so the full pair
+    // spawns worker processes plus a reference solve, so the full pair
     // set would dominate the bench's wall clock); the smoke run covers
-    // its whole trimmed set.
+    // its whole trimmed set. The 4-shard leg runs the production kernel
+    // configuration; the 1-shard leg runs the pure-scalar canonical
+    // kernel, so both toggle extremes are covered across a process
+    // boundary (the handshake propagates the settings to the workers).
     let dist_cap = if smoke { pairs.len() } else { pairs.len().min(24) };
-    let (dist, dist_ref, dist_retries) = time_dist_solves(&pairs[..dist_cap], 4);
+    let (dist, dist_ref, dist_retries) = time_dist_solves(&pairs[..dist_cap], 4, true, true);
     report(&format!("distributed, 4 shards ({dist_cap} pairs)"), &dist.times);
     assert_eq!(dist_retries, 0, "no faults are injected, so no chunk may need a retry");
+    let (dist1, _, dist1_retries) = time_dist_solves(&pairs[..dist_cap], 1, false, false);
+    report(&format!("distributed, 1 shard, scalar ({dist_cap} pairs)"), &dist1.times);
+    assert_eq!(dist1_retries, 0, "no faults are injected, so no chunk may need a retry");
+    // Cross-route answer identity at shards {1,4}: both dist legs must
+    // agree with the in-process pure-scalar canonical kernel on the same
+    // pair subset.
+    let scalar_canonical_sub = Leg {
+        answers: scalar_canonical.answers[..dist.answers.len().min(scalar_canonical.answers.len())]
+            .to_vec(),
+        ..Leg::default()
+    };
+    assert_same_answers(&dist, &scalar_canonical_sub, "4-shard dist vs scalar canonical");
+    assert_same_answers(&dist1, &scalar_canonical_sub, "1-shard scalar dist vs scalar canonical");
     let shard_speedup = geomean(&dist_ref) / geomean(&dist.times).max(1e-12);
     println!(
         "distributed speedup (4 shards vs in-process, {dist_cap} pairs): {shard_speedup:.2}x \
@@ -239,6 +297,37 @@ fn main() {
     assert_eq!(t1.nodes, t4.nodes, "node counters must be thread-invariant");
     assert_eq!(t1.combos_pruned, t4.combos_pruned, "combo counters must be thread-invariant");
     assert_eq!(t1.units_skipped, t4.units_skipped, "unit counters must be thread-invariant");
+    assert_same_answers(&t1, &t4, "1-thread vs 4-thread");
+
+    // Scan-kernel A/B guards (DESIGN.md §11). The SIMD kernel is
+    // bit-invisible: answers AND every counter identical to the scalar
+    // kernel. The suffix bounds keep the answer and never expand nodes.
+    assert_same_answers(&scalar, &t1, "scalar kernel vs simd");
+    assert_eq!(scalar.nodes, t1.nodes, "simd kernel changed the node count");
+    assert_eq!(scalar.combos_pruned, t1.combos_pruned, "simd kernel changed combo prunes");
+    assert_eq!(scalar.units_skipped, t1.units_skipped, "simd kernel changed unit skips");
+    assert_same_answers(&nosuffix, &t1, "no-suffix vs suffix");
+    assert_same_answers(&scalar_canonical, &t1, "pure-scalar canonical vs production");
+    assert!(
+        t1.nodes <= nosuffix.nodes,
+        "suffix bounds expanded nodes ({} > {})",
+        t1.nodes,
+        nosuffix.nodes
+    );
+    assert_eq!(
+        scalar_canonical.nodes, nosuffix.nodes,
+        "with suffix bounds off, the simd toggle must not move node counts"
+    );
+    let simd_speedup = geomean(&scalar.times) / geomean(&t1.times).max(1e-12);
+    let suffix_bound_node_savings = nosuffix.nodes.saturating_sub(t1.nodes);
+    println!(
+        "simd kernel: {simd_speedup:.2}x on geomean vs scalar; suffix bounds: {} -> {} nodes \
+         ({} saved, {:.1}%)",
+        nosuffix.nodes,
+        t1.nodes,
+        suffix_bound_node_savings,
+        100.0 * suffix_bound_node_savings as f64 / nosuffix.nodes.max(1) as f64
+    );
 
     // Perf-rot guard (DESIGN.md §8): over the whole pair set, the
     // bound-ordered schedule must expand no more nodes and scan no more
@@ -284,10 +373,12 @@ fn main() {
         "{{\n  \"bench\": \"solver_hotpath\",\n  \"smoke\": {},\n  \"pairs\": {},\n  \
          \"threads_1\": {},\n  \"threads_4\": {},\n  \"canonical_order\": {},\n  \
          \"unpruned_threads_1\": {},\n  \
+         \"scalar_kernel\": {},\n  \"no_suffix_bounds\": {},\n  \"scalar_canonical\": {},\n  \
          \"default_threads\": {},\n  \"threads_default\": {},\n  \
-         \"shards_4\": {},\n  \"shard_pairs\": {},\n  \"shard_speedup\": {},\n  \
-         \"shard_retries\": {},\n  \
+         \"shards_4\": {},\n  \"shards_1_scalar\": {},\n  \"shard_pairs\": {},\n  \
+         \"shard_speedup\": {},\n  \"shard_retries\": {},\n  \
          \"speedup_threads_4\": {},\n  \"speedup_vs_canonical\": {},\n  \
+         \"simd_speedup\": {},\n  \"suffix_bound_node_savings\": {},\n  \
          \"nodes_saved_by_dominance\": {},\n  \"nodes_saved_by_bound_order\": {},\n  \
          \"unit_skip_rate\": {}\n}}\n",
         smoke,
@@ -296,14 +387,20 @@ fn main() {
         json_leg(&t4),
         json_leg(&canonical),
         json_leg(&unpruned),
+        json_leg(&scalar),
+        json_leg(&nosuffix),
+        json_leg(&scalar_canonical),
         dflt,
         json_leg(&tdflt),
         json_leg(&dist),
+        json_leg(&dist1),
         dist_cap,
         shard_speedup,
         dist_retries,
         geomean(&t1.times) / geomean(&t4.times).max(1e-12),
         geomean(&canonical.times) / geomean(&t1.times).max(1e-12),
+        simd_speedup,
+        suffix_bound_node_savings,
         unpruned.nodes.saturating_sub(t1.nodes),
         canonical.nodes.saturating_sub(t1.nodes),
         t1.units_skipped as f64 / t1.units_total.max(1) as f64

@@ -18,17 +18,19 @@ goma — globally optimal GEMM mapping for spatial accelerators
 
 USAGE:
     goma solve --m <M> --n <N> --k <K> [--arch eyeriss|gemmini|a100|tpu] [--solve-threads <N>]
-               [--seed-bounds on|off] [--deadline-ms <MS>] [--shards <N>]
+               [--seed-bounds on|off] [--simd on|off|auto] [--suffix-bounds on|off]
+               [--deadline-ms <MS>] [--shards <N>]
     goma solve-shard    (internal: distributed-solve worker, spawned by --shards)
     goma templates
     goma workloads
     goma eval [--jobs <N>] [--profile fast|paper] [--refresh] [--solve-threads <N>]
-              [--seed-bounds on|off]
+              [--seed-bounds on|off] [--simd on|off|auto] [--suffix-bounds on|off]
     goma serve --listen <ADDR> [--workers <N>] [--solve-threads <N>] [--cache-dir <dir>]
-               [--seed-bounds on|off] [--conn-threads <N>] [--admission-threshold <N>]
-               [--client-quota <N>]
+               [--seed-bounds on|off] [--simd on|off|auto] [--suffix-bounds on|off]
+               [--conn-threads <N>] [--admission-threshold <N>] [--client-quota <N>]
     goma serve [--arch <name>] [--workload <0-11>] [--workers <N>] [--solve-threads <N>]
-               [--cache-dir <dir>] [--seed-bounds on|off]
+               [--cache-dir <dir>] [--seed-bounds on|off] [--simd on|off|auto]
+               [--suffix-bounds on|off]
     goma exec [--name <artifact>] [--dir <artifacts-dir>]
     goma conv [--arch eyeriss|gemmini|a100|tpu]
     goma help
@@ -78,6 +80,21 @@ fn parse_solve_threads(flags: &HashMap<String, String>) -> anyhow::Result<usize>
 /// has no donor context — the flag is validated but changes nothing.
 fn parse_seed_bounds(flags: &HashMap<String, String>) -> anyhow::Result<Option<bool>> {
     crate::coordinator::wire::parse_seed_bounds_flag(flags).map_err(anyhow::Error::msg)
+}
+
+/// Parse `--simd on|off|auto` (shared with the wire schema; absent or
+/// `auto` = auto via `GOMA_SIMD`, then runtime CPU detection). A pure
+/// latency knob: answers and certificates are bit-identical for every
+/// value (DESIGN.md §11).
+fn parse_simd(flags: &HashMap<String, String>) -> anyhow::Result<Option<bool>> {
+    crate::coordinator::wire::parse_simd_flag(flags).map_err(anyhow::Error::msg)
+}
+
+/// Parse `--suffix-bounds on|off` (shared with the wire schema; absent =
+/// auto via `GOMA_SUFFIX_BOUNDS`). Same answer bit for bit; node counts
+/// can only shrink with the bounds on (DESIGN.md §11).
+fn parse_suffix_bounds(flags: &HashMap<String, String>) -> anyhow::Result<Option<bool>> {
+    crate::coordinator::wire::parse_suffix_bounds_flag(flags).map_err(anyhow::Error::msg)
 }
 
 fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -204,8 +221,11 @@ fn cmd_eval(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let solve_threads = parse_solve_threads(flags)?;
     // Validated for a consistent CLI surface; the sweep drives mappers
     // directly (no batch service), so there is no donor context and the
-    // aggregates are bit-identical either way.
+    // aggregates are bit-identical either way. Likewise the scan-kernel
+    // knobs: validated here, bit-identical answers regardless.
     let _ = parse_seed_bounds(flags)?;
+    let _ = parse_simd(flags)?;
+    let _ = parse_suffix_bounds(flags)?;
     eprintln!("[eval] 24-case sweep, profile {profile:?}, {jobs} worker(s)");
     let records = cached_jobs_threads(profile, jobs, flags.contains_key("refresh"), solve_threads);
     let edp = normalize(&records, |r| r.edp_case());
@@ -255,19 +275,36 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     let solve_threads = parse_solve_threads(flags)?;
     let seed_bounds = parse_seed_bounds(flags)?;
+    let simd = parse_simd(flags)?;
+    let suffix_bounds = parse_suffix_bounds(flags)?;
     let workloads = crate::workloads::all_workloads();
     let Some(w) = workloads.get(idx) else {
         anyhow::bail!("workload index {idx} out of range (0-{})", workloads.len() - 1);
     };
-    let solve_opts = SolverOptions { solve_threads, seed_bounds, ..SolverOptions::default() };
+    let solve_opts = SolverOptions {
+        solve_threads,
+        seed_bounds,
+        simd,
+        suffix_bounds,
+        ..SolverOptions::default()
+    };
     let resolved = solve_opts.resolved_threads();
     let seeding = if solve_opts.resolved_seed_bounds() {
         "on"
     } else {
         "off"
     };
+    // The resolved kernel/suffix state is part of this config line so
+    // subprocess tests (and operators) can see what the env resolved to.
+    let kernel = crate::solver::SimdKernel::detect(solve_opts.resolved_simd());
+    let suffix = if solve_opts.resolved_suffix_bounds() {
+        "on"
+    } else {
+        "off"
+    };
     println!(
-        "serving {} on {} ({workers} worker(s) × {resolved} solve thread(s), seeding {seeding})",
+        "serving {} on {} ({workers} worker(s) × {resolved} solve thread(s), seeding {seeding}, \
+         simd {kernel}, suffix bounds {suffix})",
         w.name,
         acc.name
     );
@@ -328,6 +365,8 @@ fn cmd_serve_listen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let solve_opts = SolverOptions {
         solve_threads: parse_solve_threads(flags)?,
         seed_bounds: parse_seed_bounds(flags)?,
+        simd: parse_simd(flags)?,
+        suffix_bounds: parse_suffix_bounds(flags)?,
         ..SolverOptions::default()
     };
     let serve_opts = ServeOptions::from_flags(flags).map_err(anyhow::Error::msg)?;

@@ -110,12 +110,15 @@ pub fn arch_options_fingerprint(arch: &Accelerator, opts: SolverOptions) -> u64 
             h.u64(d.as_nanos() as u64);
         }
     }
-    // `opts.solve_threads` and `opts.seed_bounds` are deliberately NOT
-    // hashed: the engine's result is bit-identical for every thread count,
-    // and a seeded solve's mapping/energy are bit-identical to the
-    // unseeded one (both property-tested) — so services with different
-    // thread budgets or seeding switches must share cache entries; hashing
-    // either knob would split the warm store by deployment configuration.
+    // `opts.solve_threads`, `opts.seed_bounds`, `opts.simd`, and
+    // `opts.suffix_bounds` are deliberately NOT hashed: the engine's
+    // result is bit-identical for every thread count, a seeded solve's
+    // mapping/energy are bit-identical to the unseeded one, and the scan
+    // kernel and suffix bounds are pure latency knobs with bit-identical
+    // answers and certificates (all property-tested) — so services with
+    // different thread budgets, seeding switches, or kernel configurations
+    // must share cache entries; hashing any of these knobs would split the
+    // warm store by deployment configuration.
     h.finish()
 }
 
@@ -472,6 +475,25 @@ impl MappingService {
     /// through `GOMA_SEED_BOUNDS`, else on.
     pub fn with_seed_bounds(mut self, on: bool) -> Self {
         self.options.seed_bounds = Some(on);
+        self
+    }
+
+    /// Force the SIMD scan kernel on or off (`None` default resolves via
+    /// `GOMA_SIMD`, then runtime CPU detection). Answers and certificates
+    /// are bit-identical for every value (DESIGN.md §11), so — like
+    /// `solve_threads` — the knob never enters the solve fingerprint.
+    pub fn with_simd(mut self, on: bool) -> Self {
+        self.options.simd = Some(on);
+        self
+    }
+
+    /// Switch the capacity-aware suffix bounds on or off (`None` default
+    /// resolves via `GOMA_SUFFIX_BOUNDS`, else on). The answer is
+    /// bit-identical either way and node counts can only shrink with the
+    /// bounds on (DESIGN.md §11), so the knob never enters the solve
+    /// fingerprint.
+    pub fn with_suffix_bounds(mut self, on: bool) -> Self {
+        self.options.suffix_bounds = Some(on);
         self
     }
 
@@ -1090,6 +1112,34 @@ mod tests {
             arch_options_fingerprint(&a, on),
             arch_options_fingerprint(&a, off)
         );
+    }
+
+    #[test]
+    fn fingerprint_ignores_simd_and_suffix_bounds() {
+        // Kernel configuration is a latency knob with a bit-identical
+        // answer (DESIGN.md §11): a scalar deployment and an AVX2 one
+        // must share cache entries.
+        let shape = GemmShape::new(8, 8, 8);
+        let a = Accelerator::custom("t", 4096, 8, 32);
+        let base = SolverOptions::default();
+        for opts in [
+            SolverOptions { simd: Some(true), ..base },
+            SolverOptions { simd: Some(false), ..base },
+            SolverOptions { suffix_bounds: Some(true), ..base },
+            SolverOptions { suffix_bounds: Some(false), ..base },
+            SolverOptions { simd: Some(false), suffix_bounds: Some(false), ..base },
+        ] {
+            assert_eq!(
+                solve_fingerprint(shape, &a, opts),
+                solve_fingerprint(shape, &a, base),
+                "{opts:?}"
+            );
+            assert_eq!(
+                arch_options_fingerprint(&a, opts),
+                arch_options_fingerprint(&a, base),
+                "{opts:?}"
+            );
+        }
     }
 
     #[test]

@@ -112,13 +112,30 @@ pub struct SolveSpec {
     pub solve_threads: usize,
     /// Cross-shape warm-bound switch; `None` = auto (`GOMA_SEED_BOUNDS`).
     pub seed_bounds: Option<bool>,
+    /// SIMD scan-kernel switch; `None` = auto (`GOMA_SIMD`, then runtime
+    /// CPU detection). Like `seed_bounds`, a pure latency knob: the
+    /// answer and every certificate counter are bit-identical either way
+    /// (DESIGN.md §11).
+    pub simd: Option<bool>,
+    /// Capacity-aware suffix-bound switch; `None` = auto
+    /// (`GOMA_SUFFIX_BOUNDS`). Same answer bit for bit; node counts can
+    /// only shrink with the bounds on (DESIGN.md §11).
+    pub suffix_bounds: Option<bool>,
     /// Answer deadline in milliseconds from request arrival.
     pub deadline_ms: Option<u64>,
 }
 
 impl SolveSpec {
     pub fn new(shape: GemmShape, arch: ArchSpec) -> Self {
-        SolveSpec { shape, arch, solve_threads: 0, seed_bounds: None, deadline_ms: None }
+        SolveSpec {
+            shape,
+            arch,
+            solve_threads: 0,
+            seed_bounds: None,
+            simd: None,
+            suffix_bounds: None,
+            deadline_ms: None,
+        }
     }
 
     /// Parse the `POST /solve` body.
@@ -140,6 +157,12 @@ impl SolveSpec {
         }
         if let Some(s) = v.get("seed_bounds") {
             spec.seed_bounds = Some(s.as_bool().ok_or("seed_bounds must be a boolean")?);
+        }
+        if let Some(s) = v.get("simd") {
+            spec.simd = Some(s.as_bool().ok_or("simd must be a boolean")?);
+        }
+        if let Some(s) = v.get("suffix_bounds") {
+            spec.suffix_bounds = Some(s.as_bool().ok_or("suffix_bounds must be a boolean")?);
         }
         if let Some(d) = v.get("deadline_ms") {
             let ms = d.as_u64().filter(|&ms| ms >= 1).ok_or("deadline_ms must be ≥ 1")?;
@@ -168,6 +191,8 @@ impl SolveSpec {
         let mut spec = SolveSpec::new(shape, ArchSpec::Template(arch_name.to_string()));
         spec.solve_threads = parse_solve_threads_flag(flags)?;
         spec.seed_bounds = parse_seed_bounds_flag(flags)?;
+        spec.simd = parse_simd_flag(flags)?;
+        spec.suffix_bounds = parse_suffix_bounds_flag(flags)?;
         if let Some(s) = flags.get("deadline-ms") {
             let ms = s.parse::<u64>().ok().filter(|&ms| ms >= 1);
             spec.deadline_ms = Some(ms.ok_or(format!("--deadline-ms must be ≥ 1, got '{s}'"))?);
@@ -195,6 +220,12 @@ impl SolveSpec {
         if let Some(s) = self.seed_bounds {
             fields.push(("seed_bounds".to_string(), Json::Bool(s)));
         }
+        if let Some(s) = self.simd {
+            fields.push(("simd".to_string(), Json::Bool(s)));
+        }
+        if let Some(s) = self.suffix_bounds {
+            fields.push(("suffix_bounds".to_string(), Json::Bool(s)));
+        }
         if let Some(ms) = self.deadline_ms {
             fields.push(("deadline_ms".to_string(), Json::u64(ms)));
         }
@@ -207,6 +238,8 @@ impl SolveSpec {
         SolverOptions {
             solve_threads: self.solve_threads,
             seed_bounds: self.seed_bounds.or(base.seed_bounds),
+            simd: self.simd.or(base.simd),
+            suffix_bounds: self.suffix_bounds.or(base.suffix_bounds),
             ..base
         }
     }
@@ -236,6 +269,30 @@ pub fn parse_seed_bounds_flag(flags: &HashMap<String, String>) -> Result<Option<
         Some(s) => match crate::solver::parse_seed_bounds_value(s) {
             Some(b) => Ok(Some(b)),
             None => Err(format!("--seed-bounds must be on|off, got '{s}'")),
+        },
+        None => Ok(None),
+    }
+}
+
+/// Shared `--simd on|off|auto` parsing: absent or `auto` means `None` =
+/// auto (`GOMA_SIMD`, then runtime CPU detection).
+pub fn parse_simd_flag(flags: &HashMap<String, String>) -> Result<Option<bool>, String> {
+    match flags.get("simd") {
+        Some(s) => match crate::solver::parse_simd_value(s) {
+            Some(v) => Ok(v),
+            None => Err(format!("--simd must be on|off|auto, got '{s}'")),
+        },
+        None => Ok(None),
+    }
+}
+
+/// Shared `--suffix-bounds on|off` parsing: absent means `None` = auto
+/// (`GOMA_SUFFIX_BOUNDS`).
+pub fn parse_suffix_bounds_flag(flags: &HashMap<String, String>) -> Result<Option<bool>, String> {
+    match flags.get("suffix-bounds") {
+        Some(s) => match crate::solver::parse_seed_bounds_value(s) {
+            Some(b) => Ok(Some(b)),
+            None => Err(format!("--suffix-bounds must be on|off, got '{s}'")),
         },
         None => Ok(None),
     }
@@ -516,6 +573,8 @@ mod tests {
             SolveSpec::new(GemmShape::new(64, 96, 32), ArchSpec::Template("eyeriss".into()));
         spec.solve_threads = 2;
         spec.seed_bounds = Some(false);
+        spec.simd = Some(false);
+        spec.suffix_bounds = Some(true);
         spec.deadline_ms = Some(1500);
         let back = SolveSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
@@ -527,6 +586,8 @@ mod tests {
             ("arch", "eyeriss"),
             ("solve-threads", "2"),
             ("seed-bounds", "off"),
+            ("simd", "off"),
+            ("suffix-bounds", "on"),
             ("deadline-ms", "1500"),
         ]
         .into_iter()
@@ -534,6 +595,26 @@ mod tests {
         .collect();
         let from_flags = SolveSpec::from_flags(&flags).unwrap();
         assert_eq!(from_flags, spec, "flags and JSON must parse to the same spec");
+
+        // `--simd auto` and an absent flag are both `None`, and `None`
+        // fields stay off the wire entirely.
+        let mut auto_flags = flags.clone();
+        auto_flags.insert("simd".into(), "auto".into());
+        auto_flags.remove("suffix-bounds");
+        let auto = SolveSpec::from_flags(&auto_flags).unwrap();
+        assert_eq!(auto.simd, None);
+        assert_eq!(auto.suffix_bounds, None);
+        let text = auto.to_json().to_text();
+        assert!(!text.contains("simd"), "auto must not serialize: {text}");
+        assert!(!text.contains("suffix_bounds"), "auto must not serialize: {text}");
+        assert!(parse_simd_flag(
+            &[("simd".to_string(), "fast".to_string())].into_iter().collect()
+        )
+        .is_err());
+        assert!(parse_suffix_bounds_flag(
+            &[("suffix-bounds".to_string(), "auto".to_string())].into_iter().collect()
+        )
+        .is_err());
     }
 
     #[test]

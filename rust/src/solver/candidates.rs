@@ -24,7 +24,23 @@
 //! `l1`/`l3` — instead of striding over 24-byte structs. The per-list
 //! minima the scan's capacity prechecks need (`min_l1`, `min_l3`; `min_f`
 //! is `f[0]` by the sort) are baked in at construction, not recomputed per
-//! combo (DESIGN.md §8).
+//! combo (DESIGN.md §8). Two further precomputes ride along for the PR 8
+//! scan layers (DESIGN.md §11), both pure functions of the list contents
+//! so store sharing stays bit-identical:
+//!
+//! * **Lane padding** (`fp`/`l1p`/`l3p`): copies of the three arrays
+//!   padded to a multiple of [`LANES`] with `+∞` / `u64::MAX` sentinels,
+//!   so the SIMD z-scan kernels load full fixed-width chunks with no
+//!   tail loop — a pad lane's `+∞` objective always trips the cutoff
+//!   comparison, so padding can terminate a scan only where the scalar
+//!   loop would have exhausted the list anyway, and can never be
+//!   accepted (the cut outranks feasibility within a lane).
+//! * **Feasibility staircases** (`stair_l1`/`stair_l3`): for each tile
+//!   length axis, the running `min f` at-or-below each length threshold,
+//!   compacted to the strictly-improving steps. `fit_min_f` combines a
+//!   query per axis into a valid lower bound on every candidate whose
+//!   tile fits the caller's remaining SRAM/RF slack — the engine's
+//!   capacity-aware completion bounds (`suffix_bounds`).
 //!
 //! **Sharing.** Lists depend only on `(L^(0), Ŝ, flags)` and the
 //! accelerator's parameters — not on the GEMM shape beyond `L^(0)`, and
@@ -38,6 +54,7 @@
 //! so sharing is invisible in every solve result (property-tested in
 //! `rust/tests/bound_order.rs`).
 
+use super::kernel::LANES;
 use crate::arch::Accelerator;
 use crate::energy::{axis_term, AxisTermInput};
 use crate::util::divisors;
@@ -56,9 +73,63 @@ pub struct AxisCandidate {
     pub f: f64,
 }
 
+/// One tile-length axis's feasibility staircase (DESIGN.md §11): length
+/// thresholds in strictly ascending order, each carrying the minimum
+/// objective term over every candidate whose tile length is ≤ that
+/// threshold. Only the strictly-improving steps are kept, so `caps` is
+/// strictly ascending and `min_f` strictly descending, and a query is a
+/// binary search.
+#[derive(Debug)]
+pub struct FitStaircase {
+    caps: Box<[u64]>,
+    min_f: Box<[f64]>,
+}
+
+impl FitStaircase {
+    /// Build from `(tile length, f)` pairs (any order, duplicates fine).
+    fn build(mut pairs: Vec<(u64, f64)>) -> FitStaircase {
+        pairs.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        let mut caps = Vec::new();
+        let mut min_f = Vec::new();
+        let mut run = f64::INFINITY;
+        for (l, f) in pairs {
+            // Sorted (length asc, f asc): the first entry of each length
+            // group carries the group minimum, so `run` improves at most
+            // once per distinct length and every kept step is a new cap.
+            if f < run {
+                run = f;
+                caps.push(l);
+                min_f.push(run);
+            }
+        }
+        FitStaircase {
+            caps: caps.into(),
+            min_f: min_f.into(),
+        }
+    }
+
+    /// Minimum `f` over candidates whose tile length is ≤ `cap`; `+∞`
+    /// when none fits (every bound built from it prunes).
+    #[inline]
+    pub fn query(&self, cap: u64) -> f64 {
+        let i = self.caps.partition_point(|&c| c <= cap);
+        if i == 0 {
+            f64::INFINITY
+        } else {
+            self.min_f[i - 1]
+        }
+    }
+
+    /// Number of strictly-improving steps (telemetry/tests).
+    pub fn steps(&self) -> usize {
+        self.caps.len()
+    }
+}
+
 /// A finished per-axis candidate list in struct-of-arrays layout, sorted
 /// `f`-ascending (index 0 is the per-axis objective lower bound), with the
-/// capacity-precheck minima baked in at construction.
+/// capacity-precheck minima, the lane-padded kernel arrays, and the
+/// feasibility staircases baked in at construction.
 #[derive(Debug)]
 pub struct CandidateList {
     /// Objective terms, ascending.
@@ -72,16 +143,54 @@ pub struct CandidateList {
     pub min_l1: u64,
     /// `min(l3)` over the list (`u64::MAX` when empty).
     pub min_l3: u64,
+    /// `f` padded to a multiple of [`LANES`] with `+∞` (SIMD kernels; a
+    /// pad lane always trips the cutoff, never the acceptance).
+    pub fp: Box<[f64]>,
+    /// `l1` padded to a multiple of [`LANES`] with `u64::MAX`.
+    pub l1p: Box<[u64]>,
+    /// `l3` padded to a multiple of [`LANES`] with `u64::MAX`.
+    pub l3p: Box<[u64]>,
+    /// min-`f`-at-or-below-`l1` staircase (capacity-aware bounds).
+    pub stair_l1: FitStaircase,
+    /// min-`f`-at-or-below-`l3` staircase.
+    pub stair_l3: FitStaircase,
 }
 
 impl CandidateList {
-    fn from_sorted(cands: &[AxisCandidate]) -> CandidateList {
+    pub(crate) fn from_sorted(cands: &[AxisCandidate]) -> CandidateList {
+        let padded = cands.len().div_ceil(LANES) * LANES;
+        let mut fp = vec![f64::INFINITY; padded];
+        let mut l1p = vec![u64::MAX; padded];
+        let mut l3p = vec![u64::MAX; padded];
+        for (i, c) in cands.iter().enumerate() {
+            fp[i] = c.f;
+            l1p[i] = c.l1;
+            l3p[i] = c.l3;
+        }
         CandidateList {
             f: cands.iter().map(|c| c.f).collect(),
             l1: cands.iter().map(|c| c.l1).collect(),
             l3: cands.iter().map(|c| c.l3).collect(),
             min_l1: cands.iter().map(|c| c.l1).min().unwrap_or(u64::MAX),
             min_l3: cands.iter().map(|c| c.l3).min().unwrap_or(u64::MAX),
+            fp: fp.into(),
+            l1p: l1p.into(),
+            l3p: l3p.into(),
+            stair_l1: FitStaircase::build(cands.iter().map(|c| (c.l1, c.f)).collect()),
+            stair_l3: FitStaircase::build(cands.iter().map(|c| (c.l3, c.f)).collect()),
+        }
+    }
+
+    /// A valid objective lower bound over every candidate whose `l1` fits
+    /// under `cap1` *and* whose `l3` fits under `cap3`: any such candidate
+    /// is counted by both per-axis staircase queries, so its `f` is ≥
+    /// their max. `None` means the caller's slack admits no length at all
+    /// — the bound is `+∞` and everything prunes (DESIGN.md §11).
+    #[inline]
+    pub fn fit_min_f(&self, cap1: Option<u64>, cap3: Option<u64>) -> f64 {
+        match (cap1, cap3) {
+            (Some(c1), Some(c3)) => self.stair_l1.query(c1).max(self.stair_l3.query(c3)),
+            _ => f64::INFINITY,
         }
     }
 
@@ -412,6 +521,78 @@ mod tests {
             assert_eq!(64 % list.l1[i], 0);
             assert_eq!(list.l1[i] % (list.l3[i] * 4), 0);
         }
+        // Lane padding: a LANES multiple, real prefix bit-identical, pad
+        // sentinels after it.
+        assert_eq!(list.fp.len() % LANES, 0);
+        assert!(list.fp.len() >= list.len());
+        for i in 0..list.len() {
+            assert_eq!(list.fp[i].to_bits(), list.f[i].to_bits());
+            assert_eq!(list.l1p[i], list.l1[i]);
+            assert_eq!(list.l3p[i], list.l3[i]);
+        }
+        for i in list.len()..list.fp.len() {
+            assert!(list.fp[i].is_infinite());
+            assert_eq!(list.l1p[i], u64::MAX);
+            assert_eq!(list.l3p[i], u64::MAX);
+        }
+        // Staircase sanity: an unconstrained query is the list minimum,
+        // and a cap below the smallest length fits nothing.
+        assert_eq!(list.stair_l1.query(u64::MAX).to_bits(), list.min_f().to_bits());
+        assert_eq!(list.stair_l3.query(u64::MAX).to_bits(), list.min_f().to_bits());
+        assert!(list.stair_l1.query(list.min_l1 - 1).is_infinite());
+        assert!(list.stair_l3.query(list.min_l3 - 1).is_infinite());
+        assert_eq!(
+            list.fit_min_f(Some(u64::MAX), Some(u64::MAX)).to_bits(),
+            list.min_f().to_bits()
+        );
+        assert!(list.fit_min_f(None, Some(u64::MAX)).is_infinite());
+    }
+
+    /// Staircase-bound exactness fuzz: 1 000 seeded random lists; every
+    /// query must equal the naive O(n) "min f over candidates with length
+    /// ≤ cap" reference, bit for bit, at caps around each step and at the
+    /// extremes.
+    #[test]
+    fn staircase_fuzz_matches_naive_min_over_fitting_on_1k_lists() {
+        let mut rng = Rng::seed_from_u64(0x57A1_2CA5);
+        for case in 0..1000u64 {
+            let n = rng.gen_range(33) as usize;
+            let cands: Vec<AxisCandidate> = (0..n)
+                .map(|_| {
+                    cand(
+                        rng.gen_range(6) as f64 * 0.25,
+                        1 << rng.gen_range(5),
+                        1 << rng.gen_range(5),
+                    )
+                })
+                .collect();
+            let list = CandidateList::from_sorted(&cands);
+            let naive = |cap: u64, by_l1: bool| -> f64 {
+                cands
+                    .iter()
+                    .filter(|c| (if by_l1 { c.l1 } else { c.l3 }) <= cap)
+                    .map(|c| c.f)
+                    .fold(f64::INFINITY, f64::min)
+            };
+            let mut probes: Vec<u64> = vec![0, 1, u64::MAX];
+            for c in &cands {
+                probes.extend([c.l1.saturating_sub(1), c.l1, c.l1 + 1]);
+                probes.extend([c.l3.saturating_sub(1), c.l3, c.l3 + 1]);
+            }
+            for cap in probes {
+                assert_eq!(
+                    list.stair_l1.query(cap).to_bits(),
+                    naive(cap, true).to_bits(),
+                    "case {case}: l1 staircase disagrees at cap {cap}"
+                );
+                assert_eq!(
+                    list.stair_l3.query(cap).to_bits(),
+                    naive(cap, false).to_bits(),
+                    "case {case}: l3 staircase disagrees at cap {cap}"
+                );
+            }
+            assert!(list.stair_l1.steps() <= n.max(1));
+        }
     }
 
     #[test]
@@ -491,6 +672,19 @@ mod tests {
         }
         assert_eq!(shared.min_l1, built.min_l1);
         assert_eq!(shared.min_l3, built.min_l3);
+        // The derived kernel arrays and staircases are pure functions of
+        // the contents, so store sharing is invisible to them too.
+        assert_eq!(shared.fp.len(), built.fp.len());
+        for i in 0..built.fp.len() {
+            assert_eq!(shared.fp[i].to_bits(), built.fp[i].to_bits());
+            assert_eq!(shared.l1p[i], built.l1p[i]);
+            assert_eq!(shared.l3p[i], built.l3p[i]);
+        }
+        assert_eq!(shared.stair_l1.steps(), built.stair_l1.steps());
+        for cap in built.l1.iter().chain(built.l3.iter()).copied() {
+            assert_eq!(shared.stair_l1.query(cap).to_bits(), built.stair_l1.query(cap).to_bits());
+            assert_eq!(shared.stair_l3.query(cap).to_bits(), built.stair_l3.query(cap).to_bits());
+        }
     }
 
     fn cand(f: f64, l1: u64, l3: u64) -> AxisCandidate {

@@ -45,9 +45,10 @@
 //! [`CACHE_FORMAT_VERSION`]: crate::coordinator::CACHE_FORMAT_VERSION
 
 use super::engine::{
-    finish, scan_sched_range, CanonKey, RangeOutcome, SeedBound, SolveError, SolveRequest,
-    SolveResult, SolverOptions, Tally,
+    finish, scan_sched_range, CanonKey, RangeOutcome, ScanConfig, SeedBound, SolveError,
+    SolveRequest, SolveResult, SolverOptions, Tally,
 };
+use super::kernel::SimdKernel;
 use super::space::SearchSpace;
 use crate::arch::{all_templates, Accelerator};
 use crate::coordinator::CACHE_FORMAT_VERSION;
@@ -688,6 +689,12 @@ pub fn solve_dist(
             ("arch", arch_spec.clone()),
             ("exact_pe", Json::Bool(opts.exact_pe)),
             ("solve_threads", Json::u64(threads as u64)),
+            // Scan-kernel knobs ride the handshake (not the environment):
+            // the worker mirrors the coordinator's *resolved* settings, so
+            // certificates stay bit-identical to an in-process solve with
+            // the same options regardless of the worker's own env.
+            ("simd", Json::Bool(opts.resolved_simd())),
+            ("suffix_bounds", Json::Bool(opts.resolved_suffix_bounds())),
             (
                 "time_limit_ms",
                 match deadline {
@@ -739,7 +746,16 @@ pub fn solve_dist(
             let Some(range) = sh.queue.pop_front() else { break };
             (range, sh.merged.bound(exchange))
         };
-        let out = scan_sched_range(&space, arch, range.0, range.1, bound, threads, deadline);
+        let out = scan_sched_range(
+            &space,
+            arch,
+            range.0,
+            range.1,
+            bound,
+            threads,
+            ScanConfig::from_options(&opts),
+            deadline,
+        );
         shared.lock().unwrap().merged.commit(DoneFrame {
             best: out.best,
             tally: out.tally,
@@ -803,6 +819,10 @@ fn worker_loop(
     let arch = arch_from(get_obj(&hello, "arch")?)?;
     let exact_pe = get_bool(&hello, "exact_pe")?;
     let threads = (get_u64(&hello, "solve_threads")? as usize).max(1);
+    let cfg = ScanConfig {
+        kernel: SimdKernel::detect(get_bool(&hello, "simd")?),
+        suffix_bounds: get_bool(&hello, "suffix_bounds")?,
+    };
     let deadline = match get_obj(&hello, "time_limit_ms")? {
         Json::Null => None,
         v => Some(
@@ -862,7 +882,7 @@ fn worker_loop(
                     // declares us dead and kills the process.
                     std::thread::sleep(Duration::from_secs(3600));
                 }
-                let out = scan_sched_range(&space, &arch, s, e, bound, threads, deadline);
+                let out = scan_sched_range(&space, &arch, s, e, bound, threads, cfg, deadline);
                 if fault_fires(fault, "corrupt-on-task:", served) {
                     let _ = output.write_all(&12u32.to_be_bytes());
                     let _ = output.write_all(b"not-json!!!!");

@@ -69,6 +69,7 @@
 //! [`Certificate::units_skipped`]: super::Certificate::units_skipped
 
 use super::candidates::SharedCandidateStore;
+use super::kernel::{SimdKernel, ZScan};
 use super::space::{SearchSpace, TripleUnit};
 use super::Certificate;
 use crate::arch::Accelerator;
@@ -126,6 +127,23 @@ pub struct SolverOptions {
     /// either way (property-tested), so the knob never enters the solve
     /// fingerprint.
     pub seed_bounds: Option<bool>,
+    /// SIMD z-scan kernel switch (DESIGN.md §11). `None` means auto: the
+    /// `GOMA_SIMD` env override when set, otherwise on — resolving to the
+    /// widest kernel the CPU supports, probed at runtime
+    /// ([`SimdKernel::detect`]). Every kernel evaluates lane-for-lane the
+    /// same scalar expressions reduced in scalar order, so mappings,
+    /// energies, and every certificate counter are bit-identical for
+    /// every value (property-tested) — the knob never enters the solve
+    /// fingerprint. `Some(false)` is the canonical scalar A/B baseline.
+    pub simd: Option<bool>,
+    /// Capacity-aware suffix completion bounds (DESIGN.md §11). `None`
+    /// means auto: the `GOMA_SUFFIX_BOUNDS` env override when set,
+    /// otherwise on. The bounds are strictly tighter *valid* lower bounds
+    /// fed through the same `cuts()` tie rule, so the answer is
+    /// bit-identical and per-instance node counts can only shrink
+    /// (property-tested) — the knob never enters the solve fingerprint.
+    /// `Some(false)` is the A/B baseline.
+    pub suffix_bounds: Option<bool>,
 }
 
 impl Default for SolverOptions {
@@ -135,6 +153,8 @@ impl Default for SolverOptions {
             time_limit: None,
             solve_threads: 0,
             seed_bounds: None,
+            simd: None,
+            suffix_bounds: None,
         }
     }
 }
@@ -154,6 +174,18 @@ impl SolverOptions {
     /// set, otherwise [`default_seed_bounds`].
     pub fn resolved_seed_bounds(&self) -> bool {
         self.seed_bounds.unwrap_or_else(default_seed_bounds)
+    }
+
+    /// The effective SIMD switch: the explicit `simd` value when set,
+    /// otherwise [`default_simd`].
+    pub fn resolved_simd(&self) -> bool {
+        self.simd.unwrap_or_else(default_simd)
+    }
+
+    /// The effective suffix-bounds switch: the explicit `suffix_bounds`
+    /// value when set, otherwise [`default_suffix_bounds`].
+    pub fn resolved_suffix_bounds(&self) -> bool {
+        self.suffix_bounds.unwrap_or_else(default_suffix_bounds)
     }
 }
 
@@ -188,6 +220,40 @@ pub fn parse_seed_bounds_value(s: &str) -> Option<bool> {
 /// (DESIGN.md §6) and only ever shrinks search effort.
 pub fn default_seed_bounds() -> bool {
     std::env::var("GOMA_SEED_BOUNDS")
+        .ok()
+        .and_then(|v| parse_seed_bounds_value(&v))
+        .unwrap_or(true)
+}
+
+/// Parse one `on|off|auto` SIMD value (the shared vocabulary of the
+/// `--simd` flag): `Some(Some(_))` for an explicit switch, `Some(None)`
+/// for `auto` (defer to [`default_simd`]), `None` for anything
+/// unrecognized.
+pub fn parse_simd_value(s: &str) -> Option<Option<bool>> {
+    if s.eq_ignore_ascii_case("auto") {
+        return Some(None);
+    }
+    parse_seed_bounds_value(s).map(Some)
+}
+
+/// Default SIMD switch: the `GOMA_SIMD` env override when it parses
+/// (`on|off` vocabulary), otherwise on. On by default because every
+/// kernel is provably bit-identical (DESIGN.md §11) and the wider ones
+/// are strictly faster; `off` exists as the canonical scalar baseline
+/// for A/B legs and for ruling the kernels out while bisecting.
+pub fn default_simd() -> bool {
+    std::env::var("GOMA_SIMD")
+        .ok()
+        .and_then(|v| parse_seed_bounds_value(&v))
+        .unwrap_or(true)
+}
+
+/// Default suffix-bounds switch: the `GOMA_SUFFIX_BOUNDS` env override
+/// when it parses (`on|off` vocabulary), otherwise on. On by default
+/// because the bounds are provably answer-invisible (DESIGN.md §11) and
+/// only ever shrink search effort.
+pub fn default_suffix_bounds() -> bool {
+    std::env::var("GOMA_SUFFIX_BOUNDS")
         .ok()
         .and_then(|v| parse_seed_bounds_value(&v))
         .unwrap_or(true)
@@ -400,13 +466,51 @@ impl Incumbent {
 /// exact tie there may be the canonical winner and must be scanned). The
 /// §8 bit-identity argument depends on every cutoff using exactly this
 /// rule, which is why it exists once.
+/// (`pub(crate)` only so the z-scan kernels in [`super::kernel`] share it
+/// rather than restate it.)
 #[inline]
-fn cuts(lb: f64, ub: f64, tie_ok: bool) -> bool {
+pub(crate) fn cuts(lb: f64, ub: f64, tie_ok: bool) -> bool {
     if tie_ok {
         lb > ub
     } else {
         lb >= ub
     }
+}
+
+/// Per-solve scan configuration, resolved once from [`SolverOptions`]
+/// before any unit is scanned: which z-scan kernel runs and whether the
+/// capacity-aware suffix bounds are applied. Both switches are
+/// answer-invisible (DESIGN.md §11), so this never reaches a fingerprint.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ScanConfig {
+    pub(crate) kernel: SimdKernel,
+    pub(crate) suffix_bounds: bool,
+}
+
+impl ScanConfig {
+    pub(crate) fn from_options(opts: &SolverOptions) -> ScanConfig {
+        ScanConfig {
+            kernel: SimdKernel::detect(opts.resolved_simd()),
+            suffix_bounds: opts.resolved_suffix_bounds(),
+        }
+    }
+}
+
+/// The largest tile length `l` with `c0 + l·c1 ≤ limit` — the remaining
+/// slack of one hoisted linear-form capacity check, as a cap on a deeper
+/// level's staircase query (DESIGN.md §11). Exact in ℕ (floor division);
+/// `None` when even the constant term overflows the limit (nothing fits,
+/// bound `+∞`); `u64::MAX` when the level does not gate this resource
+/// (`c1 = 0`).
+#[inline]
+fn slack_cap(c0: u64, c1: u64, limit: u64) -> Option<u64> {
+    if c0 > limit {
+        return None;
+    }
+    if c1 == 0 {
+        return Some(u64::MAX);
+    }
+    Some((limit - c0) / c1)
 }
 
 /// Exhaustive branch-and-bound over one unit's 576 combos against a fixed
@@ -421,6 +525,18 @@ fn cuts(lb: f64, ub: f64, tie_ok: bool) -> bool {
 /// the combo-level precheck evaluates. List minima (`min_l1`/`min_l3`,
 /// `f[0]`) are baked into the lists at construction, never recomputed
 /// here.
+///
+/// Two toggleable layers ride on top of the historical loop (DESIGN.md
+/// §11), both answer-invisible: `cfg.suffix_bounds` adds capacity-aware
+/// completion cutoffs at the x and y levels (the global-minima cutoffs
+/// `bx`/`by` above them stay the `break` conditions — the capacity-aware
+/// bound is *not* monotone in the candidate index, so it may only
+/// `continue`), and `cfg.kernel` selects which z-scan kernel
+/// ([`super::kernel::ZScan`]) evaluates the innermost first-feasible
+/// scan. The canonical-key tie admission `tie_ok` is hoisted to combo
+/// scope: it depends only on `holder`, which changes exactly at
+/// acceptances — where it becomes `key`, making `tie_ok` (`key < holder`)
+/// false.
 fn scan_unit(
     unit: &TripleUnit,
     unit_canon: u32,
@@ -428,6 +544,7 @@ fn scan_unit(
     arch: &Accelerator,
     wave: WaveState,
     bound_order: bool,
+    cfg: ScanConfig,
     deadline: Option<Instant>,
 ) -> UnitOutcome {
     let [sx, sy, sz] = unit.s;
@@ -454,7 +571,7 @@ fn scan_unit(
         // ties the bound, so its cutoff relaxes to strict `>`. Empty-list
         // combos carry lb = +∞ and always die here.
         let lb = unit.combo_lb(ci as usize);
-        let tie_ok = holder != NO_HOLDER && key < holder;
+        let mut tie_ok = holder != NO_HOLDER && key < holder;
         if cuts(lb, ub, tie_ok) {
             combos_pruned += 1;
             continue;
@@ -492,7 +609,6 @@ fn scan_unit(
             // Exact bound of the best completion of this x prefix, in the
             // scan's own reduction order (sorted ⇒ all later x are worse).
             let bx = (fx_i + miny) + minz;
-            let tie_ok = holder != NO_HOLDER && key < holder;
             if cuts(bx, ub, tie_ok) {
                 break;
             }
@@ -506,6 +622,28 @@ fn scan_unit(
             let s_y1 = g1[0] * min1[2] + g1[2] * l1x_i;
             let r_y0 = g3[1] * l3x_i * min3[2];
             let r_y1 = g3[0] * min3[2] + g3[2] * l3x_i;
+            if cfg.suffix_bounds {
+                // Capacity-aware completion bound (DESIGN.md §11): the
+                // best y that *fits this x's remaining slack*, plus the
+                // best z that could fit with y at its minima — the z caps
+                // below use min-y coefficients, which are ≤ any real y's,
+                // so the fitting set is a superset and the bound valid.
+                // f64 addition is monotone per operand, so the bound is
+                // ≤ every completion's computed value and the §8 `cuts`
+                // rule applies verbatim. Not monotone in xi (the caps
+                // depend on l1x/l3x): `continue`, never `break`.
+                let by_fit =
+                    ly.fit_min_f(slack_cap(s_y0, s_y1, sram), slack_cap(r_y0, r_y1, rf));
+                let sz0m = g1[2] * l1x_i * min1[1];
+                let sz1m = g1[0] * min1[1] + g1[1] * l1x_i;
+                let rz0m = g3[2] * l3x_i * min3[1];
+                let rz1m = g3[0] * min3[1] + g3[1] * l3x_i;
+                let bz_fit =
+                    lz.fit_min_f(slack_cap(sz0m, sz1m, sram), slack_cap(rz0m, rz1m, rf));
+                if cuts((fx_i + by_fit) + bz_fit, ub, tie_ok) {
+                    continue;
+                }
+            }
             for yi in 0..fy.len() {
                 nodes += 1;
                 // The only clock read in the kernel: one huge combo must
@@ -519,7 +657,6 @@ fn scan_unit(
                 }
                 let base = fx_i + fy[yi];
                 let by = base + minz;
-                let tie_ok = holder != NO_HOLDER && key < holder;
                 if cuts(by, ub, tie_ok) {
                     break;
                 }
@@ -534,36 +671,51 @@ fn scan_unit(
                 let s_z1 = g1[0] * l1y_i + g1[1] * l1x_i;
                 let r_z0 = g3[2] * l3x_i * l3y_i;
                 let r_z1 = g3[0] * l3y_i + g3[1] * l3x_i;
-                for zi in 0..fz.len() {
+                if cfg.suffix_bounds {
+                    // Mid-y capacity-aware cutoff: best z fitting this
+                    // exact (x, y) slack. `continue` for the same
+                    // non-monotonicity reason as the x-level cutoff.
+                    let bz_fit =
+                        lz.fit_min_f(slack_cap(s_z0, s_z1, sram), slack_cap(r_z0, r_z1, rf));
+                    if cuts(base + bz_fit, ub, tie_ok) {
+                        continue;
+                    }
+                }
+                let scan = ZScan {
+                    base,
+                    ub,
+                    tie_ok,
+                    s_z0,
+                    s_z1,
+                    r_z0,
+                    r_z1,
+                    sram,
+                    rf,
+                };
+                if let Some(zi) = scan.run(cfg.kernel, lz) {
+                    // Sorted ⇒ the first feasible z below the cutoff is
+                    // this prefix's best completion: it strictly improves
+                    // the bound or claims an exact tie at a lower
+                    // canonical key.
                     let v = base + fz[zi];
-                    let tie_ok = holder != NO_HOLDER && key < holder;
-                    if cuts(v, ub, tie_ok) {
-                        break;
+                    if v < ub {
+                        ub = v;
                     }
-                    if s_z0 + l1z[zi] * s_z1 <= sram && r_z0 + l3z[zi] * r_z1 <= rf {
-                        // Sorted ⇒ the first feasible z is this prefix's
-                        // best completion. Passing the break above means
-                        // it strictly improves the bound or claims an
-                        // exact tie at a lower canonical key.
-                        if v < ub {
-                            ub = v;
-                        }
-                        holder = key;
-                        best = Some((
-                            v,
-                            ci,
-                            Mapping {
-                                l1: Tile::new(l1x_i, l1y_i, l1z[zi]),
-                                l2: Tile::new(l3x_i * sx, l3y_i * sy, l3z[zi] * sz),
-                                l3: Tile::new(l3x_i, l3y_i, l3z[zi]),
-                                alpha01: a01,
-                                alpha12: a12,
-                                b1,
-                                b3,
-                            },
-                        ));
-                        break;
-                    }
+                    holder = key;
+                    tie_ok = false; // key < holder = key is now false
+                    best = Some((
+                        v,
+                        ci,
+                        Mapping {
+                            l1: Tile::new(l1x_i, l1y_i, l1z[zi]),
+                            l2: Tile::new(l3x_i * sx, l3y_i * sy, l3z[zi] * sz),
+                            l3: Tile::new(l3x_i, l3y_i, l3z[zi]),
+                            alpha01: a01,
+                            alpha12: a12,
+                            b1,
+                            b3,
+                        },
+                    ));
                 }
             }
         }
@@ -754,6 +906,24 @@ impl<'a> SolveRequest<'a> {
         self
     }
 
+    /// Switch the SIMD z-scan kernel (DESIGN.md §11) — shorthand for
+    /// setting [`SolverOptions::simd`]. `false` is the canonical scalar
+    /// A/B baseline; the answer and every counter are provably
+    /// bit-identical.
+    pub fn simd(mut self, on: bool) -> Self {
+        self.opts.simd = Some(on);
+        self
+    }
+
+    /// Switch the capacity-aware suffix completion bounds (DESIGN.md
+    /// §11) — shorthand for setting [`SolverOptions::suffix_bounds`].
+    /// `false` is the A/B baseline: the answer is provably identical and
+    /// node counts can only shrink with the bounds on.
+    pub fn suffix_bounds(mut self, on: bool) -> Self {
+        self.opts.suffix_bounds = Some(on);
+        self
+    }
+
     /// Run the engine over this request.
     pub fn solve(&self) -> Result<SolveResult, SolveError> {
         run_engine(self)
@@ -786,6 +956,7 @@ fn run_engine(req: &SolveRequest<'_>) -> Result<SolveResult, SolveError> {
         });
     }
     let threads = req.threads.unwrap_or_else(|| opts.resolved_threads()).max(1);
+    let cfg = ScanConfig::from_options(&opts);
     let order: Vec<u32> = if bound_order {
         space.unit_sched.clone()
     } else {
@@ -812,7 +983,7 @@ fn run_engine(req: &SolveRequest<'_>) -> Result<SolveResult, SolveError> {
             dispatch.push(ui);
         }
         let outcomes = ordered_map(&dispatch, threads, |_, &ui| {
-            scan_unit(&space.units[ui as usize], ui, &space, arch, ws, bound_order, deadline)
+            scan_unit(&space.units[ui as usize], ui, &space, arch, ws, bound_order, cfg, deadline)
         });
         // Deterministic reduction: lexicographic min over (value, key) —
         // exactly the canonical scan's first-best-wins rule, independent
@@ -883,6 +1054,7 @@ pub fn solve_serial_reference_seeded(
     }
     let mut inc = Incumbent::new(seed);
     let mut tally = Tally::default();
+    let cfg = ScanConfig::from_options(&opts);
 
     for wave in space.unit_sched.chunks(WAVE_UNITS) {
         if deadline.is_some_and(|d| Instant::now() > d) {
@@ -898,7 +1070,8 @@ pub fn solve_serial_reference_seeded(
                 tally.units_skipped += 1;
                 continue;
             }
-            let o = scan_unit(&space.units[ui as usize], ui, &space, arch, ws, true, deadline);
+            let o =
+                scan_unit(&space.units[ui as usize], ui, &space, arch, ws, true, cfg, deadline);
             tally.absorb(&o);
             timed_out |= o.timed_out;
             inc.absorb(ui, &o.best);
@@ -935,6 +1108,13 @@ pub(crate) struct RangeOutcome {
 /// the shard worker's engine entry point and the coordinator's in-process
 /// fallback when every worker dies: the full-range call with
 /// `bound = None` is, wave for wave, the single-process engine.
+///
+/// `cfg` carries the resolved scan toggles (DESIGN.md §11); both are
+/// answer-invisible, so coordinator and workers may even disagree on them
+/// without breaking the merge — only effort counters would differ. The
+/// dist handshake still propagates them so certificates stay bit-identical
+/// to the in-process engine at the same settings.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn scan_sched_range(
     space: &SearchSpace,
     arch: &Accelerator,
@@ -942,6 +1122,7 @@ pub(crate) fn scan_sched_range(
     end: usize,
     bound: Option<f64>,
     threads: usize,
+    cfg: ScanConfig,
     deadline: Option<Instant>,
 ) -> RangeOutcome {
     let mut inc = Incumbent::new(bound.map(|objective| SeedBound { objective }));
@@ -964,7 +1145,7 @@ pub(crate) fn scan_sched_range(
             dispatch.push(ui);
         }
         let outcomes = ordered_map(&dispatch, threads, |_, &ui| {
-            scan_unit(&space.units[ui as usize], ui, space, arch, ws, true, deadline)
+            scan_unit(&space.units[ui as usize], ui, space, arch, ws, true, cfg, deadline)
         });
         for (&ui, o) in dispatch.iter().zip(&outcomes) {
             tally.absorb(o);
@@ -1016,15 +1197,16 @@ mod tests {
         let a = arch();
         let engine = solve_with_threads(shape, &a, SolverOptions::default(), 1).unwrap();
         let space = SearchSpace::build_with_dominance(shape, &a, true, true);
+        let cfg = ScanConfig::from_options(&SolverOptions::default());
         let n = space.unit_sched.len();
-        let full = scan_sched_range(&space, &a, 0, n, None, 1, None);
+        let full = scan_sched_range(&space, &a, 0, n, None, 1, cfg, None);
         let (v, ui, ci, m) = full.best.expect("feasible instance");
         assert_eq!(m, engine.mapping, "full-range scan is the engine");
         assert_eq!(full.tally.nodes, engine.certificate.nodes);
         assert_eq!(full.tally.units_skipped, engine.certificate.units_skipped);
         let mid = n / 2;
-        let lo = scan_sched_range(&space, &a, 0, mid, None, 1, None);
-        let hi = scan_sched_range(&space, &a, mid, n, None, 1, None);
+        let lo = scan_sched_range(&space, &a, 0, mid, None, 1, cfg, None);
+        let hi = scan_sched_range(&space, &a, mid, n, None, 1, cfg, None);
         let merged = [lo.best, hi.best]
             .into_iter()
             .flatten()
@@ -1112,9 +1294,11 @@ mod tests {
         let a = Accelerator::custom("huge", 1 << 20, 4, 64);
         let space = SearchSpace::build_with_dominance(shape, &a, true, false);
         let open = WaveState { ub: f64::INFINITY, holder: NO_HOLDER };
+        let cfg = ScanConfig::from_options(&SolverOptions::default());
         let mut target = None;
         for ui in 0..space.units.len() as u32 {
-            let free = scan_unit(&space.units[ui as usize], ui, &space, &a, open, false, None);
+            let free =
+                scan_unit(&space.units[ui as usize], ui, &space, &a, open, false, cfg, None);
             if free.nodes > TIME_CHECK_PERIOD {
                 target = Some((ui, free.nodes));
                 break;
@@ -1123,7 +1307,8 @@ mod tests {
         let (ui, free_nodes) = target.expect("premise: no unit out-scans one poll period");
         let d = Instant::now();
         std::thread::sleep(Duration::from_millis(2));
-        let cut = scan_unit(&space.units[ui as usize], ui, &space, &a, open, false, Some(d));
+        let cut =
+            scan_unit(&space.units[ui as usize], ui, &space, &a, open, false, cfg, Some(d));
         assert!(cut.timed_out, "an expired deadline must interrupt the scan");
         assert_eq!(
             cut.nodes, TIME_CHECK_PERIOD,
@@ -1245,5 +1430,114 @@ mod tests {
         assert_bit_identical(&cold, &plain, "cold store vs storeless");
         assert_bit_identical(&warm, &plain, "warm store vs storeless");
         assert!(store.hits() > 0, "the second solve must hit the store");
+    }
+
+    #[test]
+    fn simd_value_vocabulary_and_resolution() {
+        for s in ["on", "true", "1", "yes"] {
+            assert_eq!(parse_simd_value(s), Some(Some(true)), "{s}");
+        }
+        for s in ["off", "false", "0", "no"] {
+            assert_eq!(parse_simd_value(s), Some(Some(false)), "{s}");
+        }
+        assert_eq!(parse_simd_value("auto"), Some(None));
+        assert_eq!(parse_simd_value("AUTO"), Some(None));
+        assert_eq!(parse_simd_value("avx512"), None);
+        // Explicit options beat whatever the environment says.
+        let on = SolverOptions { simd: Some(true), ..SolverOptions::default() };
+        let off = SolverOptions { simd: Some(false), ..SolverOptions::default() };
+        assert!(on.resolved_simd());
+        assert!(!off.resolved_simd());
+        let s_on = SolverOptions { suffix_bounds: Some(true), ..SolverOptions::default() };
+        let s_off = SolverOptions { suffix_bounds: Some(false), ..SolverOptions::default() };
+        assert!(s_on.resolved_suffix_bounds());
+        assert!(!s_off.resolved_suffix_bounds());
+        // `off` resolves to the scalar kernel, always.
+        assert_eq!(ScanConfig::from_options(&off).kernel, SimdKernel::Scalar);
+    }
+
+    #[test]
+    fn slack_cap_is_the_exact_linear_form_inverse() {
+        // `l ≤ cap ⇔ c0 + l·c1 ≤ limit`, checked exhaustively on a grid.
+        for c0 in 0..20u64 {
+            for c1 in 0..6u64 {
+                for limit in 0..25u64 {
+                    let cap = slack_cap(c0, c1, limit);
+                    for l in 0..40u64 {
+                        let fits = c0 + l * c1 <= limit;
+                        let admitted = cap.is_some_and(|c| l <= c);
+                        assert_eq!(
+                            fits, admitted,
+                            "c0={c0} c1={c1} limit={limit} l={l} cap={cap:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The tentpole's A/B contract on a tie-heavy instance (64³ attains
+    /// the optimum at equal objective values in distinct combos — the
+    /// case the canonical-key machinery exists for) and an asymmetric
+    /// one: the SIMD kernels are invisible bit for bit, and the suffix
+    /// bounds keep the answer while node counts only shrink — per
+    /// instance, which for suffix bounds IS a theorem (DESIGN.md §11):
+    /// the pruned material contains no acceptances, so the incumbent
+    /// trajectory — and with it every combo-prune and unit-skip decision
+    /// — is identical.
+    #[test]
+    fn simd_and_suffix_bounds_toggles_preserve_the_answer_bitwise() {
+        let a = arch();
+        let opts = SolverOptions::default();
+        for shape in [GemmShape::new(64, 96, 32), GemmShape::new(64, 64, 64)] {
+            let baseline = SolveRequest::new(shape, &a)
+                .options(opts)
+                .threads(1)
+                .simd(false)
+                .suffix_bounds(false)
+                .solve()
+                .unwrap();
+            for threads in [1usize, 4] {
+                let simd_on = SolveRequest::new(shape, &a)
+                    .options(opts)
+                    .threads(threads)
+                    .simd(true)
+                    .suffix_bounds(false)
+                    .solve()
+                    .unwrap();
+                assert_bit_identical(
+                    &simd_on,
+                    &baseline,
+                    &format!("{shape} simd on, threads={threads}"),
+                );
+                let suffix_on = SolveRequest::new(shape, &a)
+                    .options(opts)
+                    .threads(threads)
+                    .simd(true)
+                    .suffix_bounds(true)
+                    .solve()
+                    .unwrap();
+                assert_eq!(suffix_on.mapping, baseline.mapping, "{shape}: suffix moved answer");
+                assert_eq!(
+                    suffix_on.energy.normalized.to_bits(),
+                    baseline.energy.normalized.to_bits(),
+                    "{shape}: suffix energy"
+                );
+                assert!(
+                    suffix_on.certificate.nodes <= baseline.certificate.nodes,
+                    "{shape} threads={threads}: suffix bounds expanded nodes ({} > {})",
+                    suffix_on.certificate.nodes,
+                    baseline.certificate.nodes
+                );
+                assert_eq!(
+                    suffix_on.certificate.combos_pruned, baseline.certificate.combos_pruned,
+                    "{shape}: identical incumbent trajectory ⇒ identical combo prunes"
+                );
+                assert_eq!(
+                    suffix_on.certificate.units_skipped, baseline.certificate.units_skipped,
+                    "{shape}: identical incumbent trajectory ⇒ identical unit skips"
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,388 @@
+//! Lane-parallel z-scan kernels (DESIGN.md §11).
+//!
+//! The innermost loop of [`super::engine`]'s `scan_unit` walks one
+//! `f`-ascending z candidate list looking for the *first* index that
+//! either trips the incumbent cutoff (scan over: everything after it is
+//! at least as expensive) or fits both capacity constraints (accepted:
+//! lists are sorted, so the first fit is the cheapest fit). That
+//! first-match scan is what this module evaluates [`LANES`] candidates
+//! at a time.
+//!
+//! **Bit-identity is the contract.** Every kernel evaluates the *exact
+//! same scalar expressions* the historical loop evaluated — the `f64`
+//! cutoff comparison on `base + fz[zi]` and the integer linear-form
+//! capacity predicates `c0 + l·c1 ≤ cap` — one candidate per lane, and
+//! reduces with first-set-lane so the answer index (and therefore the
+//! acceptance order, the incumbent trajectory, and every certificate
+//! counter) is the scalar loop's answer. There is no floating-point
+//! reassociation anywhere: lanes never combine values across candidates.
+//!
+//! The candidate arrays come lane-padded from construction
+//! ([`CandidateList`]: `fp`/`l1p`/`l3p`): pad lanes carry `f = +∞`, which
+//! always trips the cutoff comparison and therefore ends the scan exactly
+//! where the scalar loop would have exhausted the list — and because a
+//! lane's cutoff outranks its feasibility in the reduction (scalar check
+//! order), a pad lane can never be accepted, even though its sentinel
+//! `u64::MAX` tile lengths make the (wrapping) capacity arithmetic
+//! meaningless there.
+//!
+//! Three implementations share that contract:
+//! * [`SimdKernel::Scalar`] — the historical per-candidate loop, kept as
+//!   the canonical A/B baseline (`--simd off`).
+//! * [`SimdKernel::Lanes`] — fixed-width array lanes over `chunks_exact`,
+//!   written so the pinned 1.83 toolchain auto-vectorizes them on any
+//!   target.
+//! * [`SimdKernel::Avx2`] — an `unsafe` AVX2 intrinsic path, only ever
+//!   constructed after `is_x86_feature_detected!("avx2")` succeeds at
+//!   runtime.
+//!
+//! All three are differentially fuzzed against each other (and a naive
+//! reference) across the lane-remainder edges {0, 1, LANES−1, LANES,
+//! LANES+1, 576} in this module's tests, and the whole-solver property
+//! suites assert end-to-end bit-identity between `--simd on` and `off`.
+
+use super::candidates::CandidateList;
+use super::engine::cuts;
+use std::fmt;
+
+/// Fixed kernel width: candidates evaluated per chunk. Candidate arrays
+/// are padded to a multiple of this at construction.
+pub(crate) const LANES: usize = 8;
+
+/// Which z-scan implementation a solve runs (resolved once per solve by
+/// [`SimdKernel::detect`] from the `simd` knob; never part of the solve
+/// fingerprint because all variants are bit-identical).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdKernel {
+    /// The historical per-candidate loop — the canonical A/B baseline.
+    Scalar,
+    /// Fixed-width array lanes written for auto-vectorization.
+    Lanes,
+    /// Runtime-detected AVX2 intrinsics (x86_64 only).
+    Avx2,
+}
+
+impl SimdKernel {
+    /// Resolve the `simd` knob to a kernel: `false` is the scalar
+    /// baseline; `true` picks the widest kernel this CPU supports, probed
+    /// at runtime (never at compile time, so one binary serves every
+    /// host).
+    pub fn detect(simd_on: bool) -> SimdKernel {
+        if !simd_on {
+            return SimdKernel::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdKernel::Avx2;
+        }
+        SimdKernel::Lanes
+    }
+}
+
+impl fmt::Display for SimdKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            SimdKernel::Scalar => "scalar",
+            SimdKernel::Lanes => "lanes",
+            SimdKernel::Avx2 => "avx2",
+        })
+    }
+}
+
+/// One z-scan invocation: every scalar the inner loop closes over. The
+/// scan finds the first index that trips the cutoff (`None`: nothing
+/// cheaper than the incumbent remains) or fits both capacity constraints
+/// (`Some(zi)`: the acceptance, cheapest by the `f`-ascending sort).
+/// Exhaustion is also `None` — the caller's continuation is the same.
+#[derive(Clone, Copy)]
+pub(crate) struct ZScan {
+    /// `f_x + f_y` of the enclosing node (the scan compares
+    /// `base + fz[zi]`, the engine's exact reduction order).
+    pub(crate) base: f64,
+    /// Current upper bound (wave incumbent, possibly tightened locally).
+    pub(crate) ub: f64,
+    /// Canonical-key tie admission: relaxes the cutoff from `≥` to `>`
+    /// (see `cuts`). Loop-invariant here — it only changes on acceptance,
+    /// which ends the scan.
+    pub(crate) tie_ok: bool,
+    /// SRAM linear form `s_z0 + l1z·s_z1 ≤ sram` (Eq. 31, hoisted).
+    pub(crate) s_z0: u64,
+    pub(crate) s_z1: u64,
+    /// RF linear form `r_z0 + l3z·r_z1 ≤ rf` (Eq. 32, hoisted).
+    pub(crate) r_z0: u64,
+    pub(crate) r_z1: u64,
+    pub(crate) sram: u64,
+    pub(crate) rf: u64,
+}
+
+impl ZScan {
+    /// Run the scan with the chosen kernel. All kernels return the same
+    /// index on the same inputs (differentially fuzzed below).
+    #[inline]
+    pub(crate) fn run(&self, kernel: SimdKernel, list: &CandidateList) -> Option<usize> {
+        match kernel {
+            SimdKernel::Scalar => self.scalar(list),
+            SimdKernel::Lanes => self.lanes(list),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Avx2` is only constructed by `detect` after
+            // `is_x86_feature_detected!("avx2")` succeeded on this CPU.
+            SimdKernel::Avx2 => unsafe { self.avx2(list) },
+            #[cfg(not(target_arch = "x86_64"))]
+            SimdKernel::Avx2 => self.lanes(list),
+        }
+    }
+
+    /// The historical loop, verbatim: cutoff first, then feasibility.
+    fn scalar(&self, list: &CandidateList) -> Option<usize> {
+        for zi in 0..list.len() {
+            let v = self.base + list.f[zi];
+            if cuts(v, self.ub, self.tie_ok) {
+                return None;
+            }
+            if self.s_z0 + list.l1[zi] * self.s_z1 <= self.sram
+                && self.r_z0 + list.l3[zi] * self.r_z1 <= self.rf
+            {
+                return Some(zi);
+            }
+        }
+        None
+    }
+
+    /// Auto-vectorizable lanes: per-chunk cutoff and feasibility masks in
+    /// two fixed-width passes, then a first-set-lane reduction in which a
+    /// lane's cutoff outranks its feasibility (the scalar check order).
+    /// Pad lanes always cut (`f = +∞`), so the tail needs no special
+    /// case; the capacity arithmetic wraps so their `u64::MAX` sentinels
+    /// stay harmless (real lanes never overflow — same inputs as the
+    /// scalar path's plain ops).
+    fn lanes(&self, list: &CandidateList) -> Option<usize> {
+        debug_assert_eq!(list.fp.len() % LANES, 0);
+        for (chunk, ((fc, l1c), l3c)) in list
+            .fp
+            .chunks_exact(LANES)
+            .zip(list.l1p.chunks_exact(LANES))
+            .zip(list.l3p.chunks_exact(LANES))
+            .enumerate()
+        {
+            let mut cut_m = 0u32;
+            for (j, &f) in fc.iter().enumerate() {
+                let v = self.base + f;
+                let cut = if self.tie_ok { v > self.ub } else { v >= self.ub };
+                cut_m |= (cut as u32) << j;
+            }
+            let mut stop = cut_m;
+            for (j, (&l1, &l3)) in l1c.iter().zip(l3c.iter()).enumerate() {
+                let fit = self.s_z0.wrapping_add(l1.wrapping_mul(self.s_z1)) <= self.sram
+                    && self.r_z0.wrapping_add(l3.wrapping_mul(self.r_z1)) <= self.rf;
+                stop |= (fit as u32) << j;
+            }
+            if stop != 0 {
+                let j = stop.trailing_zeros() as usize;
+                if cut_m & (1 << j) != 0 {
+                    return None;
+                }
+                return Some(chunk * LANES + j);
+            }
+        }
+        None
+    }
+
+    /// AVX2 intrinsics: two 4-wide halves per [`LANES`] chunk. Same
+    /// per-lane scalar expressions, same first-set-lane reduction as
+    /// [`Self::lanes`]; the 64-bit wrapping multiply is assembled from
+    /// 32×32 partial products (`_mm256_mul_epu32`) and the unsigned
+    /// compare from a sign-flipped signed compare.
+    ///
+    /// # Safety
+    /// Requires AVX2 (guaranteed by [`SimdKernel::detect`]).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn avx2(&self, list: &CandidateList) -> Option<usize> {
+        use std::arch::x86_64::*;
+
+        #[target_feature(enable = "avx2")]
+        unsafe fn mul_lo_epi64(a: __m256i, b: __m256i) -> __m256i {
+            let a_hi = _mm256_srli_epi64::<32>(a);
+            let b_hi = _mm256_srli_epi64::<32>(b);
+            let lolo = _mm256_mul_epu32(a, b);
+            let cross = _mm256_add_epi64(_mm256_mul_epu32(a, b_hi), _mm256_mul_epu32(a_hi, b));
+            _mm256_add_epi64(lolo, _mm256_slli_epi64::<32>(cross))
+        }
+
+        const SIGN: i64 = i64::MIN;
+        let n = list.fp.len();
+        debug_assert_eq!(n % LANES, 0);
+        let base_v = _mm256_set1_pd(self.base);
+        let ub_v = _mm256_set1_pd(self.ub);
+        let s0 = _mm256_set1_epi64x(self.s_z0 as i64);
+        let s1 = _mm256_set1_epi64x(self.s_z1 as i64);
+        let r0 = _mm256_set1_epi64x(self.r_z0 as i64);
+        let r1 = _mm256_set1_epi64x(self.r_z1 as i64);
+        let sign = _mm256_set1_epi64x(SIGN);
+        // Unsigned `need ≤ cap` is `!(need > cap)`; flip sign bits once
+        // so the signed 64-bit compare orders like the unsigned one.
+        let sram_f = _mm256_set1_epi64x(self.sram as i64 ^ SIGN);
+        let rf_f = _mm256_set1_epi64x(self.rf as i64 ^ SIGN);
+        let mut i = 0usize;
+        while i < n {
+            let mut cut_m = 0u32;
+            let mut stop = 0u32;
+            for half in 0..2usize {
+                let o = i + half * 4;
+                // SAFETY: `o + 4 ≤ n` — `n` is a multiple of LANES = 8 and
+                // the three padded arrays share it by construction.
+                let f = _mm256_loadu_pd(list.fp.as_ptr().add(o));
+                let v = _mm256_add_pd(base_v, f);
+                let cut = if self.tie_ok {
+                    _mm256_cmp_pd::<_CMP_GT_OQ>(v, ub_v)
+                } else {
+                    _mm256_cmp_pd::<_CMP_GE_OQ>(v, ub_v)
+                };
+                let l1 = _mm256_loadu_si256(list.l1p.as_ptr().add(o) as *const __m256i);
+                let l3 = _mm256_loadu_si256(list.l3p.as_ptr().add(o) as *const __m256i);
+                let s_need = _mm256_add_epi64(s0, mul_lo_epi64(l1, s1));
+                let r_need = _mm256_add_epi64(r0, mul_lo_epi64(l3, r1));
+                let s_over = _mm256_cmpgt_epi64(_mm256_xor_si256(s_need, sign), sram_f);
+                let r_over = _mm256_cmpgt_epi64(_mm256_xor_si256(r_need, sign), rf_f);
+                let over = _mm256_or_si256(s_over, r_over);
+                let fit_m = !(_mm256_movemask_pd(_mm256_castsi256_pd(over)) as u32) & 0xF;
+                let half_cut = _mm256_movemask_pd(cut) as u32 & 0xF;
+                cut_m |= half_cut << (half * 4);
+                stop |= (half_cut | fit_m) << (half * 4);
+            }
+            if stop != 0 {
+                let j = stop.trailing_zeros() as usize;
+                if cut_m & (1 << j) != 0 {
+                    return None;
+                }
+                return Some(i + j);
+            }
+            i += LANES;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::candidates::AxisCandidate;
+    use crate::util::Rng;
+
+    fn list_of(cands: &[AxisCandidate]) -> CandidateList {
+        CandidateList::from_sorted(cands)
+    }
+
+    /// Definitionally correct reference, written independently of
+    /// `ZScan::scalar` so a shared bug cannot hide.
+    fn naive(scan: &ZScan, cands: &[AxisCandidate]) -> Option<usize> {
+        for (zi, c) in cands.iter().enumerate() {
+            let v = scan.base + c.f;
+            let over = if scan.tie_ok { v > scan.ub } else { v >= scan.ub };
+            if over {
+                return None;
+            }
+            if scan.s_z0 + c.l1 * scan.s_z1 <= scan.sram && scan.r_z0 + c.l3 * scan.r_z1 <= scan.rf
+            {
+                return Some(zi);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn detect_resolves_off_to_scalar_and_on_to_a_simd_kernel() {
+        assert_eq!(SimdKernel::detect(false), SimdKernel::Scalar);
+        let on = SimdKernel::detect(true);
+        assert_ne!(on, SimdKernel::Scalar);
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            assert_eq!(on, SimdKernel::Avx2);
+        }
+        assert_eq!(format!("{}", SimdKernel::Scalar), "scalar");
+        assert_eq!(format!("{}", SimdKernel::Lanes), "lanes");
+        assert_eq!(format!("{}", SimdKernel::Avx2), "avx2");
+    }
+
+    /// Differential fuzz across the lane-remainder edges: 1 000 seeded
+    /// random lists at lengths {0, 1, LANES−1, LANES, LANES+1, 576} with
+    /// exact-tie upper bounds, both tie rules, and infeasible tails. All
+    /// kernels must agree with the naive reference on every case —
+    /// including which side of a `v == ub` tie the scan stops on.
+    #[test]
+    fn kernels_are_bit_identical_to_scalar_on_1k_fuzzed_lists() {
+        let lens = [0usize, 1, LANES - 1, LANES, LANES + 1, 576];
+        let kernels = [SimdKernel::Scalar, SimdKernel::Lanes, SimdKernel::detect(true)];
+        let mut rng = Rng::seed_from_u64(0x513D_0DD5);
+        for case in 0..1000u64 {
+            let n = lens[(case % lens.len() as u64) as usize];
+            let mut cands: Vec<AxisCandidate> = (0..n)
+                .map(|_| AxisCandidate {
+                    l1: 1 << rng.gen_range(5),
+                    l3: 1 << rng.gen_range(5),
+                    // Small grid so exact cutoff ties occur often.
+                    f: rng.gen_range(64) as f64 * 0.25,
+                })
+                .collect();
+            cands.sort_by(|a, b| a.f.total_cmp(&b.f));
+            let list = list_of(&cands);
+            let base = rng.gen_range(8) as f64 * 0.5;
+            // Mix exact-tie bounds (an existing candidate's value), open
+            // bounds, and +∞ (no incumbent yet — tie_ok impossible then).
+            let ub = match rng.gen_range(4) {
+                0 if n > 0 => base + cands[rng.gen_range(n as u64) as usize].f,
+                1 => f64::INFINITY,
+                _ => base + rng.gen_range(64) as f64 * 0.25,
+            };
+            let tie_ok = ub.is_finite() && rng.gen_range(2) == 1;
+            let scan = ZScan {
+                base,
+                ub,
+                tie_ok,
+                s_z0: rng.gen_range(64),
+                s_z1: rng.gen_range(8),
+                r_z0: rng.gen_range(64),
+                r_z1: rng.gen_range(8),
+                sram: rng.gen_range(512),
+                rf: rng.gen_range(512),
+            };
+            let want = naive(&scan, &cands);
+            for k in kernels {
+                let got = scan.run(k, &list);
+                assert_eq!(got, want, "case {case} (len {n}): kernel {k} diverged");
+            }
+            if let Some(zi) = want {
+                assert!(zi < list.len(), "case {case}: accepted index out of range");
+            }
+        }
+    }
+
+    /// Pad lanes must be inert: on a list whose every real candidate is
+    /// feasible and below the bound, the scan accepts index 0; on one
+    /// whose candidates all cut, it returns `None` — at every remainder.
+    #[test]
+    fn pad_lanes_never_accept_and_never_cut_early() {
+        for n in [1usize, LANES - 1, LANES, LANES + 1] {
+            let cheap: Vec<AxisCandidate> =
+                (0..n).map(|i| AxisCandidate { l1: 1, l3: 1, f: i as f64 }).collect();
+            let list = list_of(&cheap);
+            let scan = ZScan {
+                base: 0.0,
+                ub: f64::INFINITY,
+                tie_ok: false,
+                s_z0: 0,
+                s_z1: 1,
+                r_z0: 0,
+                r_z1: 1,
+                sram: 8,
+                rf: 8,
+            };
+            for k in [SimdKernel::Scalar, SimdKernel::Lanes, SimdKernel::detect(true)] {
+                assert_eq!(scan.run(k, &list), Some(0), "len {n} kernel {k}");
+                // Tight bound: everything cuts (0 + f ≥ 0 = ub).
+                let cut_all = ZScan { ub: 0.0, ..scan };
+                assert_eq!(cut_all.run(k, &list), None, "len {n} kernel {k} cut");
+            }
+        }
+    }
+}

@@ -50,6 +50,7 @@ mod candidates;
 pub mod dist;
 pub mod engine;
 mod exhaustive;
+mod kernel;
 pub mod seed;
 pub mod space;
 
@@ -59,11 +60,13 @@ pub use candidates::{
 };
 pub use dist::{solve_dist, DistError, DistOptions};
 pub use engine::{
-    default_seed_bounds, default_solve_threads, parse_seed_bounds_value, solve_serial_reference,
+    default_seed_bounds, default_simd, default_solve_threads, default_suffix_bounds,
+    parse_seed_bounds_value, parse_simd_value, solve_serial_reference,
     solve_serial_reference_seeded, solve_with_threads, SeedBound, SolveError, SolveRequest,
     SolveResult, SolverOptions,
 };
 pub use exhaustive::{enumerate_all, exhaustive_best, MappingVisitor};
+pub use kernel::SimdKernel;
 pub use seed::{plan_seed, recost, similarity_key, SeedPlan};
 pub use space::{SearchSpace, SpaceStats, TripleUnit};
 

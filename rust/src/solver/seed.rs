@@ -45,10 +45,15 @@ use crate::mapping::{validate, Axis, GemmShape, Mapping};
 /// `base = f_x + f_y; base + f_z` — is the flat SoA kernel's own
 /// arithmetic (`scan_unit`'s `base` / `base + fz[zi]`), and the space
 /// layer's precomputed combo bounds use the same order
-/// (`(min_f_x + min_f_y) + min_f_z`). Change one and you must change all
-/// three, or a donor that ties the optimum stops re-costing to the exact
-/// value the scan computes and the strictly-above seeding guarantee
-/// (DESIGN.md §6) silently breaks.
+/// (`(min_f_x + min_f_y) + min_f_z`). The SIMD lanes of
+/// `solver::kernel` evaluate the identical `base + fz[zi]` expression per
+/// lane (no horizontal reduction, no reassociation), and the capacity
+/// suffix bounds are compare-only (they never feed a stored value), so
+/// both stay inside this contract by construction (DESIGN.md §11).
+/// Change the reduction in one place and you must change all three, or a
+/// donor that ties the optimum stops re-costing to the exact value the
+/// scan computes and the strictly-above seeding guarantee (DESIGN.md §6)
+/// silently breaks.
 pub fn recost(
     donor: &Mapping,
     shape: GemmShape,

@@ -29,7 +29,11 @@
 //! incumbent tightens in the first wave and later units/combos die on a
 //! single `lb ≥ incumbent` comparison — the orders are data-dependent but
 //! deterministic and thread-count-independent, which is what lets the
-//! engine stay bit-identical while scanning far fewer nodes.
+//! engine stay bit-identical while scanning far fewer nodes. Each list
+//! additionally carries the feasibility staircases of DESIGN.md §11
+//! ([`CandidateList::fit_min_f`]), which tighten the same bounds
+//! *capacity-aware* inside the engine's scan: min f restricted to
+//! candidates whose tile still fits the remaining SRAM/RF slack.
 //!
 //! **Completeness** (load-bearing for cross-shape seeding, DESIGN.md §6):
 //! every mapping that passes [`crate::mapping::validate`] for
@@ -358,6 +362,41 @@ mod tests {
                 }
             }
             assert_eq!(u.lb.to_bits(), min_lb.to_bits(), "unit bound must be the combo min");
+        }
+    }
+
+    #[test]
+    fn suffix_staircases_agree_with_list_minima() {
+        // The engine's capacity-aware bounds degenerate to the classic
+        // `min_f` bounds when nothing is capacity-constrained: an
+        // unconstrained staircase query IS the list minimum (bit for
+        // bit), and a query below the smallest tile admits nothing.
+        let shape = GemmShape::new(64, 96, 32);
+        let a = arch();
+        let space = SearchSpace::build(shape, &a, true);
+        for u in &space.units {
+            for &(a01, a12, b1, b3) in &space.combos {
+                for &d in &AXES {
+                    let l = u.list(d, a01, a12, b1, b3);
+                    if l.is_empty() {
+                        continue;
+                    }
+                    let unconstrained = l.fit_min_f(Some(u64::MAX), Some(u64::MAX));
+                    assert_eq!(unconstrained.to_bits(), l.min_f().to_bits());
+                    assert_eq!(l.stair_l1.query(u64::MAX).to_bits(), l.min_f().to_bits());
+                    assert_eq!(l.stair_l3.query(u64::MAX).to_bits(), l.min_f().to_bits());
+                    if l.min_l1 > 0 {
+                        assert!(l.stair_l1.query(l.min_l1 - 1).is_infinite());
+                    }
+                    if l.min_l3 > 0 {
+                        assert!(l.stair_l3.query(l.min_l3 - 1).is_infinite());
+                    }
+                    // A missing cap (the linear form already overflows the
+                    // budget) admits no completion at all.
+                    assert!(l.fit_min_f(None, Some(u64::MAX)).is_infinite());
+                    assert!(l.fit_min_f(Some(u64::MAX), None).is_infinite());
+                }
+            }
         }
     }
 

@@ -23,6 +23,14 @@
 //! sharing one [`SharedCandidateStore`] is bit-identical to storeless
 //! solves, counters included.
 //!
+//! The same sweep also A/Bs the scan-kernel toggles (DESIGN.md §11) on
+//! every feasible draw: the SIMD kernel is bit-invisible (every
+//! certificate counter identical to the scalar kernel), and the
+//! capacity-aware suffix bounds keep the answer bit-identical while node
+//! counts only shrink — per instance, which for suffix bounds IS a
+//! theorem (the pruned material contains no acceptances, so the incumbent
+//! trajectory, combo prunes, and unit skips are unchanged).
+//!
 //! Hand-rolled generators (the offline registry has no proptest); every
 //! property sweeps seeded random draws and prints the failing instance.
 
@@ -178,6 +186,50 @@ fn property_bound_ordered_engine_is_bit_identical_and_never_more_work() {
         }
         // (a) + (c) unseeded.
         unseeded.check(&reference, &canonical, &label);
+        // Scan-kernel toggles (DESIGN.md §11), A/B'd per instance against
+        // the pure-scalar no-suffix baseline.
+        let scalar_off = SolveRequest::new(shape, &arch)
+            .options(opts)
+            .threads(1)
+            .simd(false)
+            .suffix_bounds(false)
+            .solve()
+            .unwrap_or_else(|e| panic!("{label}: scalar baseline failed: {e}"));
+        let simd_only = SolveRequest::new(shape, &arch)
+            .options(opts)
+            .threads(1)
+            .simd(true)
+            .suffix_bounds(false)
+            .solve()
+            .unwrap_or_else(|e| panic!("{label}: simd solve failed: {e}"));
+        assert_bit_identical(&simd_only, &scalar_off, &format!("{label} simd kernel"));
+        let suffix_on = SolveRequest::new(shape, &arch)
+            .options(opts)
+            .threads(1)
+            .simd(true)
+            .suffix_bounds(true)
+            .solve()
+            .unwrap_or_else(|e| panic!("{label}: suffix solve failed: {e}"));
+        assert_eq!(suffix_on.mapping, scalar_off.mapping, "{label}: suffix moved the answer");
+        assert_eq!(
+            suffix_on.energy.normalized.to_bits(),
+            scalar_off.energy.normalized.to_bits(),
+            "{label}: suffix moved the energy"
+        );
+        assert!(
+            suffix_on.certificate.nodes <= scalar_off.certificate.nodes,
+            "{label}: suffix bounds expanded nodes ({} > {})",
+            suffix_on.certificate.nodes,
+            scalar_off.certificate.nodes
+        );
+        assert_eq!(
+            suffix_on.certificate.combos_pruned, scalar_off.certificate.combos_pruned,
+            "{label}: suffix changed combo prunes"
+        );
+        assert_eq!(
+            suffix_on.certificate.units_skipped, scalar_off.certificate.units_skipped,
+            "{label}: suffix changed unit skips"
+        );
         // (a) + (b) + (c) seeded: the hardest valid seed — the optimum's
         // own objective, where the bound ties the optimum exactly.
         let bound = recost(&canonical.mapping, shape, &arch, opts.exact_pe)

@@ -188,6 +188,123 @@ fn seed_bounds_env_fallback_resolves_in_a_subprocess() {
 }
 
 #[test]
+fn simd_and_suffix_bounds_flags_parse_and_reject_garbage() {
+    // Valid values run end-to-end; the solve is tiny.
+    for simd in ["on", "off", "auto"] {
+        let a = args(&["solve", "--m", "16", "--n", "16", "--k", "16", "--simd", simd]);
+        assert_eq!(run(&a).unwrap(), 0, "--simd {simd}");
+    }
+    for suffix in ["on", "off"] {
+        let a =
+            args(&["solve", "--m", "16", "--n", "16", "--k", "16", "--suffix-bounds", suffix]);
+        assert_eq!(run(&a).unwrap(), 0, "--suffix-bounds {suffix}");
+    }
+    // Invalid values error before any work, on every command that takes
+    // them. `auto` is simd-only vocabulary: suffix bounds reject it.
+    let bad = args(&["solve", "--m", "16", "--n", "16", "--k", "16", "--simd", "avx512"]);
+    assert!(run(&bad).is_err());
+    let bad =
+        args(&["solve", "--m", "16", "--n", "16", "--k", "16", "--suffix-bounds", "auto"]);
+    assert!(run(&bad).is_err());
+    assert!(run(&args(&["serve", "--simd", "banana"])).is_err());
+    assert!(run(&args(&["serve", "--suffix-bounds", "banana"])).is_err());
+    assert!(run(&args(&["eval", "--simd", "nope"])).is_err());
+    assert!(run(&args(&["eval", "--suffix-bounds", "nope"])).is_err());
+}
+
+#[test]
+fn simd_and_suffix_bounds_env_fallback_resolves_in_a_subprocess() {
+    // Same subprocess pattern as the seed-bounds test (in-process set_var
+    // races glibc getenv): `goma serve` prints the resolved kernel and
+    // suffix-bound state on its config line.
+    let exe = env!("CARGO_BIN_EXE_goma");
+    let base = ["serve", "--workload", "0", "--workers", "1"];
+    let off = std::process::Command::new(exe)
+        .args(base)
+        .env("GOMA_SIMD", "off")
+        .env("GOMA_SUFFIX_BOUNDS", "off")
+        .output()
+        .expect("goma serve must run");
+    assert!(off.status.success());
+    let stdout = String::from_utf8_lossy(&off.stdout);
+    assert!(stdout.contains("simd scalar"), "GOMA_SIMD=off must resolve scalar:\n{stdout}");
+    assert!(
+        stdout.contains("suffix bounds off"),
+        "GOMA_SUFFIX_BOUNDS=off must resolve off:\n{stdout}"
+    );
+
+    let unset = std::process::Command::new(exe)
+        .args(base)
+        .env_remove("GOMA_SIMD")
+        .env_remove("GOMA_SUFFIX_BOUNDS")
+        .output()
+        .expect("goma serve must run");
+    assert!(unset.status.success());
+    let stdout = String::from_utf8_lossy(&unset.stdout);
+    assert!(
+        !stdout.contains("simd scalar"),
+        "unset env must default to a SIMD kernel:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("suffix bounds on"),
+        "unset env must default suffix bounds on:\n{stdout}"
+    );
+
+    // The explicit flag beats the environment.
+    let flag_wins = std::process::Command::new(exe)
+        .args(base)
+        .args(["--simd", "off", "--suffix-bounds", "off"])
+        .env("GOMA_SIMD", "on")
+        .env("GOMA_SUFFIX_BOUNDS", "on")
+        .output()
+        .expect("goma serve must run");
+    assert!(flag_wins.status.success());
+    let stdout = String::from_utf8_lossy(&flag_wins.stdout);
+    assert!(stdout.contains("simd scalar"), "--simd off must beat the env:\n{stdout}");
+    assert!(
+        stdout.contains("suffix bounds off"),
+        "--suffix-bounds off must beat the env:\n{stdout}"
+    );
+}
+
+#[test]
+fn simd_and_suffix_bounds_toggles_change_the_answer_not_at_all() {
+    // The CLI knobs' smoke assertion (the full property lives in
+    // bound_order.rs): SIMD off is bit-identical including node counts;
+    // suffix bounds off keeps the answer with nodes ≥ the bounded run.
+    use goma::mapping::GemmShape;
+    use goma::solver::{SolveRequest, SolverOptions};
+    let arch = pick_arch("eyeriss");
+    let shape = GemmShape::mnk(64, 64, 64);
+    let opts = SolverOptions::default();
+    let scalar = SolveRequest::new(shape, &arch)
+        .options(opts)
+        .simd(false)
+        .suffix_bounds(false)
+        .solve()
+        .unwrap();
+    let simd = SolveRequest::new(shape, &arch)
+        .options(opts)
+        .simd(true)
+        .suffix_bounds(false)
+        .solve()
+        .unwrap();
+    assert_eq!(simd.mapping, scalar.mapping);
+    assert_eq!(simd.energy.normalized.to_bits(), scalar.energy.normalized.to_bits());
+    assert_eq!(simd.certificate.nodes, scalar.certificate.nodes);
+    assert_eq!(simd.certificate.combos_pruned, scalar.certificate.combos_pruned);
+    let suffix = SolveRequest::new(shape, &arch)
+        .options(opts)
+        .simd(true)
+        .suffix_bounds(true)
+        .solve()
+        .unwrap();
+    assert_eq!(suffix.mapping, scalar.mapping);
+    assert_eq!(suffix.energy.normalized.to_bits(), scalar.energy.normalized.to_bits());
+    assert!(suffix.certificate.nodes <= scalar.certificate.nodes);
+}
+
+#[test]
 fn seed_bounds_flag_changes_neither_energy_nor_mapping() {
     // The smoke assertion behind the CLI knob: a single cold solve is
     // bit-identical whatever the switch says (the engine only ever sees a
