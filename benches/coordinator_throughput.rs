@@ -19,7 +19,11 @@
 //! leg** (the same keys through `MappingService::with_shards(4)`,
 //! DESIGN.md §10 — answers asserted bit-identical to the plain service,
 //! shard speedup and retry counters recorded into the JSON's `dist`
-//! field); then exercises the persistent
+//! field); runs a **Zipf hit-rate-curve leg** (DESIGN.md §12: one
+//! Zipf-skewed request stream replayed at several cache byte budgets —
+//! answers asserted bit-identical at every budget, hit rate / eviction /
+//! bloom counters recorded into the JSON's `zipf` field); then exercises
+//! the persistent
 //! warm-start path on
 //! the `goma serve --workload 1` key set (identical fingerprints, so a
 //! cache dir populated by that CLI in another process — CI carries one
@@ -325,6 +329,99 @@ fn wire_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
     )
 }
 
+/// Zipf hit-rate-curve leg (DESIGN.md §12): one skewed request stream
+/// over a fixed key pool, replayed against the same service at several
+/// cache byte budgets. Answers are asserted bit-identical at every
+/// budget — eviction only ever costs a deterministic re-solve — so the
+/// hit-rate / eviction / bloom counters per budget are the only things
+/// the curve records. Seeding is off so the re-solve comparison covers
+/// the full certificate, node counters included.
+fn zipf_leg(arch: &Accelerator, shapes: &[GemmShape], smoke: bool) -> String {
+    let requests = if smoke { 96 } else { 256 };
+    // Zipf(s = 1.1) over key ranks via a precomputed CDF: a hot head and
+    // a long tail, the canonical cache workload.
+    let weights: Vec<f64> = (0..shapes.len()).map(|r| 1.0 / ((r + 1) as f64).powf(1.1)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    let cdf: Vec<f64> = weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect();
+    let mut rng = goma::util::Rng::seed_from_u64(0x21BF_CACE);
+    let stream: Vec<GemmShape> = (0..requests)
+        .map(|_| {
+            let u = rng.gen_f64();
+            let i = cdf.iter().position(|&c| u <= c).unwrap_or(shapes.len() - 1);
+            shapes[i]
+        })
+        .collect();
+
+    let budgets: [Option<u64>; 4] = [None, Some(16384), Some(8192), Some(4096)];
+    let mut baseline: Option<Vec<Arc<SolveResult>>> = None;
+    let mut curve = Vec::new();
+    for budget in budgets {
+        let mut service = MappingService::default().with_workers(4).with_seed_bounds(false);
+        if let Some(b) = budget {
+            service = service.with_cache_budget(b);
+        }
+        let handle = service.spawn();
+        let t = Instant::now();
+        let results: Vec<Arc<SolveResult>> = stream
+            .iter()
+            .map(|&s| handle.map(s, arch.clone()).expect("bench instances are feasible"))
+            .collect();
+        let dt = t.elapsed().as_secs_f64();
+        let m = handle.metrics();
+        let (req, _, hits, ..) = m.snapshot();
+        let hit_rate = hits as f64 / req.max(1) as f64;
+        let (evictions, bloom_hits, bloom_fp) =
+            (m.cache_evictions(), m.bloom_hits(), m.bloom_false_positives());
+        match &baseline {
+            None => baseline = Some(results),
+            Some(base) => {
+                for ((s, a), b) in stream.iter().zip(base).zip(&results) {
+                    assert_eq!(
+                        b.mapping, a.mapping,
+                        "budget {budget:?} changed the mapping on {s}"
+                    );
+                    assert_eq!(
+                        b.energy.normalized.to_bits(),
+                        a.energy.normalized.to_bits(),
+                        "budget {budget:?} changed the energy on {s}"
+                    );
+                    assert_eq!(
+                        b.certificate.nodes, a.certificate.nodes,
+                        "budget {budget:?} changed the node counter on {s}"
+                    );
+                }
+            }
+        }
+        handle.shutdown();
+        let label = match budget {
+            Some(b) => format!("{b} B"),
+            None => "unbounded".to_string(),
+        };
+        println!(
+            "zipf curve (budget {label}): hit rate {hit_rate:.3}, {evictions} evictions, \
+             {bloom_hits} bloom fast-misses, {bloom_fp} bloom false positives, {dt:.4}s"
+        );
+        curve.push(format!(
+            "{{\"budget_bytes\": {}, \"hit_rate\": {hit_rate}, \"evictions\": {evictions}, \
+             \"bloom_hits\": {bloom_hits}, \"bloom_false_positives\": {bloom_fp}, \
+             \"seconds\": {dt}}}",
+            budget.unwrap_or(0)
+        ));
+    }
+    format!(
+        "{{\"requests\": {requests}, \"distinct\": {}, \"curve\": [{}]}}",
+        shapes.len(),
+        curve.join(", ")
+    )
+}
+
 /// Distributed-shards leg (DESIGN.md §10): the same keys through a
 /// service whose misses fan each solve out over 4 worker processes
 /// (`MappingService::with_shards`), answers asserted bit-identical to
@@ -446,16 +543,22 @@ fn main() {
     // asserted bit-identical to the plain service.
     let dist_record = dist_leg(&arch, &full[..store_n]);
 
+    // Zipf hit-rate-curve leg: a skewed stream replayed at several cache
+    // byte budgets (DESIGN.md §12), answers asserted bit-identical at
+    // every budget.
+    let zipf_record = zipf_leg(&arch, &full[..store_n], smoke);
+
     let json = format!(
         "{{\n  \"bench\": \"coordinator_seeding\",\n  \"smoke\": {},\n  \
          \"legs\": [\n    {}\n  ],\n  \"candidate_store\": {},\n  \
-         \"scalar_kernel\": {},\n  \"wire\": {},\n  \"dist\": {}\n}}\n",
+         \"scalar_kernel\": {},\n  \"wire\": {},\n  \"dist\": {},\n  \"zipf\": {}\n}}\n",
         smoke,
         ab_records.join(",\n    "),
         store_record,
         scalar_record,
         wire_record,
-        dist_record
+        dist_record,
+        zipf_record
     );
     // Anchored to the workspace root (CARGO_MANIFEST_DIR is `rust/`), like
     // BENCH_solver.json: cargo runs bench binaries with the package dir as

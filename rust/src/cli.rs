@@ -12,6 +12,7 @@ use crate::experiments::cases::{cached_jobs_threads, normalize, summarize_normal
 use crate::experiments::Profile;
 use crate::solver::{solve_dist, DistOptions, SolveRequest, SolverOptions};
 use std::collections::HashMap;
+use std::time::Duration;
 
 pub const USAGE: &str = "\
 goma — globally optimal GEMM mapping for spatial accelerators
@@ -19,7 +20,7 @@ goma — globally optimal GEMM mapping for spatial accelerators
 USAGE:
     goma solve --m <M> --n <N> --k <K> [--arch eyeriss|gemmini|a100|tpu] [--solve-threads <N>]
                [--seed-bounds on|off] [--simd on|off|auto] [--suffix-bounds on|off]
-               [--deadline-ms <MS>] [--shards <N>]
+               [--cache-budget-bytes <B>] [--deadline-ms <MS>] [--shards <N>]
     goma solve-shard    (internal: distributed-solve worker, spawned by --shards)
     goma templates
     goma workloads
@@ -27,10 +28,12 @@ USAGE:
               [--seed-bounds on|off] [--simd on|off|auto] [--suffix-bounds on|off]
     goma serve --listen <ADDR> [--workers <N>] [--solve-threads <N>] [--cache-dir <dir>]
                [--seed-bounds on|off] [--simd on|off|auto] [--suffix-bounds on|off]
+               [--cache-budget-bytes <B>] [--flush-every <N>] [--flush-interval-ms <MS>]
                [--conn-threads <N>] [--admission-threshold <N>] [--client-quota <N>]
     goma serve [--arch <name>] [--workload <0-11>] [--workers <N>] [--solve-threads <N>]
                [--cache-dir <dir>] [--seed-bounds on|off] [--simd on|off|auto]
-               [--suffix-bounds on|off]
+               [--suffix-bounds on|off] [--cache-budget-bytes <B>] [--flush-every <N>]
+               [--flush-interval-ms <MS>]
     goma exec [--name <artifact>] [--dir <artifacts-dir>]
     goma conv [--arch eyeriss|gemmini|a100|tpu]
     goma help
@@ -95,6 +98,53 @@ fn parse_simd(flags: &HashMap<String, String>) -> anyhow::Result<Option<bool>> {
 /// can only shrink with the bounds on (DESIGN.md §11).
 fn parse_suffix_bounds(flags: &HashMap<String, String>) -> anyhow::Result<Option<bool>> {
     crate::coordinator::wire::parse_suffix_bounds_flag(flags).map_err(anyhow::Error::msg)
+}
+
+/// Parse `--cache-budget-bytes` (shared with the wire schema; accepts
+/// binary `KiB`/`MiB`/`GiB` suffixes; absent = auto via
+/// `GOMA_CACHE_BUDGET`). A pure capacity knob: eviction re-solves
+/// deterministically, so answers are bit-identical at every budget
+/// (DESIGN.md §12).
+fn parse_cache_budget(flags: &HashMap<String, String>) -> anyhow::Result<Option<u64>> {
+    crate::coordinator::wire::parse_cache_budget_flag(flags).map_err(anyhow::Error::msg)
+}
+
+/// Parse `--flush-every <N>` (serve only): flush the warm store after
+/// this many newly proved outcomes. Absent keeps the service default.
+fn parse_flush_every(flags: &HashMap<String, String>) -> anyhow::Result<Option<usize>> {
+    match flags.get("flush-every") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Some(n)),
+            _ => anyhow::bail!("--flush-every must be a positive integer, got '{s}'"),
+        },
+        None => Ok(None),
+    }
+}
+
+/// Parse `--flush-interval-ms <MS>` (serve only): flush pending warm
+/// entries at least this often while idle. Absent keeps the default.
+fn parse_flush_interval(flags: &HashMap<String, String>) -> anyhow::Result<Option<Duration>> {
+    match flags.get("flush-interval-ms") {
+        Some(s) => match s.parse::<u64>() {
+            Ok(ms) if ms >= 1 => Ok(Some(Duration::from_millis(ms))),
+            _ => anyhow::bail!("--flush-interval-ms must be a positive integer, got '{s}'"),
+        },
+        None => Ok(None),
+    }
+}
+
+/// Apply the serve-only warm-flush knobs to a service builder.
+fn apply_flush_flags(
+    mut service: MappingService,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<MappingService> {
+    if let Some(n) = parse_flush_every(flags)? {
+        service = service.with_flush_every(n);
+    }
+    if let Some(d) = parse_flush_interval(flags)? {
+        service = service.with_flush_interval(d);
+    }
+    Ok(service)
 }
 
 fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -286,6 +336,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         seed_bounds,
         simd,
         suffix_bounds,
+        cache_budget_bytes: parse_cache_budget(flags)?,
         ..SolverOptions::default()
     };
     let resolved = solve_opts.resolved_threads();
@@ -312,7 +363,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(dir) = flags.get("cache-dir") {
         service = service.with_cache_dir(dir.as_str());
     }
-    let handle = service.spawn();
+    let handle = apply_flush_flags(service, flags)?.spawn();
     // Submit the whole workload in one batch call — the request-path
     // pattern a compiler/serving stack would use.
     for (g, result) in w.gemms.iter().zip(handle.map_workload(w, &acc)) {
@@ -367,6 +418,7 @@ fn cmd_serve_listen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         seed_bounds: parse_seed_bounds(flags)?,
         simd: parse_simd(flags)?,
         suffix_bounds: parse_suffix_bounds(flags)?,
+        cache_budget_bytes: parse_cache_budget(flags)?,
         ..SolverOptions::default()
     };
     let serve_opts = ServeOptions::from_flags(flags).map_err(anyhow::Error::msg)?;
@@ -374,7 +426,8 @@ fn cmd_serve_listen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if let Some(dir) = flags.get("cache-dir") {
         service = service.with_cache_dir(dir.as_str());
     }
-    let server = MappingServer::spawn(service.spawn(), serve_opts.clone())?;
+    let handle = apply_flush_flags(service, flags)?.spawn();
+    let server = MappingServer::spawn(handle, serve_opts.clone())?;
     // First stdout line is machine-readable (and flushed) so wrappers can
     // scrape the resolved port out of `--listen 127.0.0.1:0`.
     println!("listening on http://{}", server.addr());

@@ -1,0 +1,436 @@
+//! The memory-budgeted result cache: hash-sharded, byte-accounted LRU
+//! eviction, and a bloom-filter front per shard (DESIGN.md §12).
+//!
+//! This is the bounded tier ROADMAP item 4 asks for: every other cache in
+//! the stack (warm store, donor registry, candidate store) has its own
+//! cap, and this one bounds the in-RAM result map that used to be a plain
+//! `Vec<HashMap>` growing forever. The contract is the same one every
+//! latency knob in this repo obeys: **eviction never changes answers**. A
+//! budgeted cache answers every request either from a retained entry
+//! (bit-identical by construction — it *is* the proved outcome) or by
+//! re-solving the key (bit-identical because the engine is deterministic
+//! and only proved outcomes are ever cached). Budgets move hit rates and
+//! the eviction/bloom counters, nothing else — property-tested by
+//! `tests/cache_eviction.rs`.
+//!
+//! **Bloom front.** Each shard carries a compact bloom filter (hand
+//! rolled, dependency-free) over the inserted solve fingerprints, probed
+//! with double hashing: bit `i` is `h1 + i·h2` where `h1` is the FNV
+//! fingerprint itself (already avalanche-mixed) and `h2` is an odd
+//! SplitMix64 remix of it. A "definitely absent" probe answers a cold
+//! miss from lock-free atomic reads without touching the shard mutex
+//! (`bloom_hits`); a "maybe present" probe that finds nothing in the map
+//! is a counted false positive (`bloom_false_positives`). Evicted keys
+//! are *not* cleared — bloom filters cannot delete — so they degrade into
+//! false positives until the shard rebuilds its filter from live keys
+//! (triggered by eviction churn; a rebuild can only widen the fast-miss
+//! path, never change an answer).
+
+use super::warm::WarmOutcome;
+use crate::solver::SolveResult;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One cached outcome plus its provenance: the shape-independent
+/// [`super::service::arch_options_fingerprint`] (donor harvesting, warm
+/// persistence) and whether the entry was loaded from the on-disk store
+/// (so hits discriminate warm/cold).
+#[derive(Clone)]
+pub struct CacheEntry {
+    pub result: WarmOutcome,
+    pub arch_fp: u64,
+    pub warm: bool,
+}
+
+/// Cache-tier counters, owned by [`super::service::ServiceMetrics`] and
+/// exported through `/metrics` as `goma_cache_*` / `goma_bloom_*`.
+#[derive(Debug, Default)]
+pub struct CacheMetrics {
+    evictions: AtomicU64,
+    bytes: AtomicU64,
+    bloom_hits: AtomicU64,
+    bloom_false_positives: AtomicU64,
+}
+
+impl CacheMetrics {
+    /// Entries evicted (or refused outright as over-budget) across all
+    /// shards since spawn.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Accounted bytes currently resident across all shards (gauge).
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cold misses answered by the bloom front without taking a shard
+    /// lock ("definitely absent").
+    pub fn bloom_hits(&self) -> u64 {
+        self.bloom_hits.load(Ordering::Relaxed)
+    }
+
+    /// "Maybe present" probes that found nothing in the shard map — the
+    /// filter's honesty counter, and the *only* metric eviction is allowed
+    /// to inflate beyond hit-rate shifts (evicted keys stay set until a
+    /// rebuild).
+    pub fn bloom_false_positives(&self) -> u64 {
+        self.bloom_false_positives.load(Ordering::Relaxed)
+    }
+}
+
+/// Double-hash probes per bloom query. At the sizing below (≥ 8 bits per
+/// expected entry) four probes put the false-positive rate around 2 %.
+const BLOOM_K: u64 = 4;
+
+/// Bloom bits per shard when the cache is unbounded (there is no capacity
+/// estimate to size from): 2^16 bits = 8 KiB of filter per shard.
+const BLOOM_DEFAULT_BITS: u64 = 1 << 16;
+
+/// Approximate accounted bytes per cached entry, used only to size the
+/// bloom filter from a byte budget (the eviction loop uses the exact
+/// per-entry accounting from [`entry_bytes`]).
+const APPROX_ENTRY_BYTES: u64 = 256;
+
+/// Odd SplitMix64-style remix of the fingerprint: the second hash of the
+/// double-hashing scheme. Forced odd so every probe stride is coprime
+/// with the power-of-two bit count (all `BLOOM_K` probes stay distinct).
+fn bloom_h2(fp: u64) -> u64 {
+    let mut z = fp.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    (z ^ (z >> 31)) | 1
+}
+
+/// A fixed-size bloom filter over solve fingerprints. Reads are lock-free
+/// (relaxed atomic loads); the only writers are the dispatcher's inserts
+/// and rebuilds, so no ordering stronger than `Relaxed` is needed — a
+/// racing reader at worst takes the slow path (a lock it would have taken
+/// anyway) or re-solves a key (bit-identical by the eviction contract).
+struct Bloom {
+    words: Vec<AtomicU64>,
+    /// `bits - 1` for a power-of-two bit count: probe masking, no modulo.
+    mask: u64,
+}
+
+impl Bloom {
+    fn new(bits: u64) -> Bloom {
+        let bits = bits.next_power_of_two().max(64);
+        Bloom {
+            words: (0..bits / 64).map(|_| AtomicU64::new(0)).collect(),
+            mask: bits - 1,
+        }
+    }
+
+    fn set(&self, fp: u64) {
+        let h2 = bloom_h2(fp);
+        for i in 0..BLOOM_K {
+            let bit = fp.wrapping_add(i.wrapping_mul(h2)) & self.mask;
+            self.words[(bit / 64) as usize].fetch_or(1 << (bit % 64), Ordering::Relaxed);
+        }
+    }
+
+    fn may_contain(&self, fp: u64) -> bool {
+        let h2 = bloom_h2(fp);
+        for i in 0..BLOOM_K {
+            let bit = fp.wrapping_add(i.wrapping_mul(h2)) & self.mask;
+            if self.words[(bit / 64) as usize].load(Ordering::Relaxed) & (1 << (bit % 64)) == 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn clear(&self) {
+        for w in &self.words {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One resident entry: the outcome, its LRU tick, and its accounted size
+/// (frozen at insert so removal subtracts exactly what insertion added).
+struct Slot {
+    entry: CacheEntry,
+    tick: u64,
+    bytes: u64,
+}
+
+/// The mutable half of one shard. Recency is a `BTreeMap<tick, fp>` over
+/// monotonically increasing unique ticks rather than any hash-ordered
+/// structure: which entry is oldest — and therefore which entries a tiny
+/// budget retains — must be a pure function of the access sequence, never
+/// of SipHash iteration order.
+struct ShardState {
+    map: HashMap<u64, Slot>,
+    lru: BTreeMap<u64, u64>,
+    bytes: u64,
+    next_tick: u64,
+    /// Evictions since the bloom filter was last rebuilt from live keys.
+    churn: u64,
+}
+
+struct CacheShard {
+    bloom: Bloom,
+    state: Mutex<ShardState>,
+}
+
+/// Accounted heap size of one cached entry: the `Slot`, its share of the
+/// map/LRU bookkeeping, and — for positive entries — the `Arc<SolveResult>`
+/// allocation (header + payload; `SolveResult` is a fixed-size value with
+/// no further heap indirection). Negative entries carry no payload.
+fn entry_bytes(e: &CacheEntry) -> u64 {
+    const ARC_HEADER: usize = 2 * std::mem::size_of::<usize>();
+    // Keyed map slot + the BTreeMap recency node, both approximated by
+    // their element sizes (allocator slack is not modeled).
+    let bookkeeping = std::mem::size_of::<Slot>() + 2 * std::mem::size_of::<(u64, u64)>();
+    let payload = match &e.result {
+        Ok(_) => ARC_HEADER + std::mem::size_of::<SolveResult>(),
+        Err(_) => 0,
+    };
+    (bookkeeping + payload) as u64
+}
+
+/// The byte-budgeted sharded cache. Routing is `fp % shards` — the same
+/// partition the per-shard hit metrics report. A `None` budget disables
+/// eviction entirely (the pre-budget behavior); `Some(b)` splits `b`
+/// evenly across shards and holds each shard under its share by evicting
+/// least-recently-used entries at insert time.
+pub struct BoundedShardCache {
+    shards: Vec<CacheShard>,
+    shard_budget: Option<u64>,
+    metrics: Arc<CacheMetrics>,
+}
+
+impl BoundedShardCache {
+    pub fn new(nshards: usize, total_budget: Option<u64>, metrics: Arc<CacheMetrics>) -> Self {
+        let nshards = nshards.max(1);
+        let shard_budget = total_budget.map(|b| b / nshards as u64);
+        let bloom_bits = match shard_budget {
+            // ≥ 8 filter bits per entry the budget could hold.
+            Some(b) => (b / APPROX_ENTRY_BYTES).max(8) * 8,
+            None => BLOOM_DEFAULT_BITS,
+        };
+        let shards = (0..nshards)
+            .map(|_| CacheShard {
+                bloom: Bloom::new(bloom_bits),
+                state: Mutex::new(ShardState {
+                    map: HashMap::new(),
+                    lru: BTreeMap::new(),
+                    bytes: 0,
+                    next_tick: 0,
+                    churn: 0,
+                }),
+            })
+            .collect();
+        BoundedShardCache { shards, shard_budget, metrics }
+    }
+
+    /// The shard a fingerprint routes to (shared with the per-shard hit
+    /// metrics).
+    pub fn shard_of(&self, fp: u64) -> usize {
+        (fp % self.shards.len() as u64) as usize
+    }
+
+    /// Look up a fingerprint, promoting it to most-recently-used on a hit.
+    /// The bloom front answers definite cold misses before the lock.
+    pub fn get(&self, fp: u64) -> Option<CacheEntry> {
+        let shard = &self.shards[self.shard_of(fp)];
+        if !shard.bloom.may_contain(fp) {
+            self.metrics.bloom_hits.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut st = shard.state.lock().unwrap();
+        let next = st.next_tick;
+        let hit = st.map.get_mut(&fp).map(|slot| {
+            let old = slot.tick;
+            slot.tick = next;
+            (old, slot.entry.clone())
+        });
+        match hit {
+            Some((old, entry)) => {
+                st.lru.remove(&old);
+                st.lru.insert(next, fp);
+                st.next_tick = next + 1;
+                Some(entry)
+            }
+            None => {
+                self.metrics.bloom_false_positives.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) an entry, evicting least-recently-used entries
+    /// first if the shard would exceed its byte share. An entry larger
+    /// than the whole share is refused rather than admitted to evict
+    /// everything else (counted as an eviction so the event is visible).
+    pub fn insert(&self, fp: u64, entry: CacheEntry) {
+        let shard = &self.shards[self.shard_of(fp)];
+        let cost = entry_bytes(&entry);
+        let mut st = shard.state.lock().unwrap();
+        if let Some(old) = st.map.remove(&fp) {
+            st.lru.remove(&old.tick);
+            st.bytes -= old.bytes;
+            self.metrics.bytes.fetch_sub(old.bytes, Ordering::Relaxed);
+        }
+        if let Some(budget) = self.shard_budget {
+            if cost > budget {
+                self.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            while st.bytes + cost > budget {
+                let (&tick, &victim) = st.lru.iter().next().expect("bytes > 0 implies entries");
+                st.lru.remove(&tick);
+                let gone = st.map.remove(&victim).expect("lru and map agree");
+                st.bytes -= gone.bytes;
+                st.churn += 1;
+                self.metrics.bytes.fetch_sub(gone.bytes, Ordering::Relaxed);
+                self.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let tick = st.next_tick;
+        st.next_tick = tick + 1;
+        st.map.insert(fp, Slot { entry, tick, bytes: cost });
+        st.lru.insert(tick, fp);
+        st.bytes += cost;
+        self.metrics.bytes.fetch_add(cost, Ordering::Relaxed);
+        shard.bloom.set(fp);
+        // Rebuild the bloom filter from live keys once eviction churn has
+        // left more dead keys set than live ones (plus slack): false
+        // positives decay back toward the filter's design rate.
+        if st.churn > st.map.len() as u64 + 64 {
+            shard.bloom.clear();
+            for &k in st.map.keys() {
+                shard.bloom.set(k);
+            }
+            st.churn = 0;
+        }
+    }
+
+    /// Resident entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.state.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::SolveError;
+
+    fn neg(afp: u64) -> CacheEntry {
+        CacheEntry { result: Err(SolveError::NoFeasibleMapping), arch_fp: afp, warm: false }
+    }
+
+    fn metrics() -> Arc<CacheMetrics> {
+        Arc::new(CacheMetrics::default())
+    }
+
+    #[test]
+    fn bloom_never_false_negatives() {
+        let b = Bloom::new(1 << 10);
+        let keys: Vec<u64> = (0..200u64).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15)).collect();
+        for &k in &keys {
+            b.set(k);
+        }
+        for &k in &keys {
+            assert!(b.may_contain(k), "bloom dropped a set key {k:#x}");
+        }
+    }
+
+    #[test]
+    fn bloom_answers_most_cold_keys_absent() {
+        let b = Bloom::new(1 << 12);
+        for i in 0..64u64 {
+            b.set(i.wrapping_mul(0x9e3779b97f4a7c15));
+        }
+        let cold = (1_000_000..1_001_000u64)
+            .filter(|&i| b.may_contain(i.wrapping_mul(0x6c62272e07bb0142)))
+            .count();
+        assert!(cold < 100, "false-positive rate implausibly high: {cold}/1000");
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let m = metrics();
+        let c = BoundedShardCache::new(2, None, m.clone());
+        for fp in 0..500u64 {
+            c.insert(fp, neg(1));
+        }
+        assert_eq!(c.len(), 500);
+        assert_eq!(m.evictions(), 0);
+        assert_eq!(m.bytes(), 500 * entry_bytes(&neg(1)));
+    }
+
+    #[test]
+    fn eviction_is_lru_order_and_byte_exact() {
+        let m = metrics();
+        let per = entry_bytes(&neg(1));
+        // One shard, room for exactly 3 entries.
+        let c = BoundedShardCache::new(1, Some(3 * per), m.clone());
+        for fp in 0..3u64 {
+            c.insert(fp, neg(1));
+        }
+        assert_eq!(m.evictions(), 0);
+        // Touch 0 so 1 becomes the LRU victim.
+        assert!(c.get(0).is_some());
+        c.insert(3, neg(1));
+        assert_eq!(m.evictions(), 1);
+        assert!(c.get(1).is_none(), "LRU victim must be the untouched key");
+        assert!(c.get(0).is_some() && c.get(2).is_some() && c.get(3).is_some());
+        assert_eq!(c.len(), 3);
+        assert_eq!(m.bytes(), 3 * per, "gauge must track residency exactly");
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_not_admitted() {
+        let m = metrics();
+        let per = entry_bytes(&neg(1));
+        let c = BoundedShardCache::new(1, Some(2 * per), m.clone());
+        c.insert(1, neg(1));
+        c.insert(2, neg(1));
+        // A shard budget below one positive entry's cost: the insert is
+        // refused and the resident set survives.
+        let tiny = BoundedShardCache::new(1, Some(per / 2), m.clone());
+        tiny.insert(9, neg(1));
+        assert!(tiny.is_empty(), "over-budget entry must not be admitted");
+        assert_eq!(c.len(), 2, "other caches are untouched");
+        assert!(m.evictions() >= 1);
+    }
+
+    #[test]
+    fn replacing_a_key_does_not_leak_bytes_or_lru_nodes() {
+        let m = metrics();
+        let c = BoundedShardCache::new(1, None, m.clone());
+        for _ in 0..10 {
+            c.insert(7, neg(1));
+        }
+        assert_eq!(c.len(), 1);
+        assert_eq!(m.bytes(), entry_bytes(&neg(1)));
+        let st = c.shards[0].state.lock().unwrap();
+        assert_eq!(st.lru.len(), 1, "stale recency nodes must not accumulate");
+    }
+
+    #[test]
+    fn bloom_counters_split_fast_misses_from_false_positives() {
+        let m = metrics();
+        let per = entry_bytes(&neg(1));
+        let c = BoundedShardCache::new(1, Some(per), m.clone());
+        c.insert(1, neg(1));
+        c.insert(2, neg(1)); // evicts 1; bloom still remembers it
+        assert!(c.get(1).is_none());
+        assert_eq!(m.bloom_false_positives(), 1, "evicted key must count as a false positive");
+        // A key never inserted overwhelmingly takes the lock-free path.
+        let before = m.bloom_hits();
+        for fp in 1000..2000u64 {
+            let _ = c.get(fp);
+        }
+        assert!(m.bloom_hits() - before > 900, "cold misses must mostly skip the lock");
+    }
+}

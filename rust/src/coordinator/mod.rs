@@ -12,7 +12,9 @@
 //!   fingerprint* ([`solve_fingerprint`]) covering the GEMM shape, the full
 //!   architecture parameter set (never the arch name), the solver options,
 //!   and the cache format version; hash-partitioned `fp % shards` with
-//!   per-shard hit metrics;
+//!   per-shard hit metrics, a byte budget with LRU eviction, and a
+//!   bloom-filter front per shard (`--cache-budget-bytes` /
+//!   `GOMA_CACHE_BUDGET`; eviction is answer-invisible, DESIGN.md §12);
 //! * **an N-worker solve pool** — distinct uncached keys in each batch
 //!   window fan out onto [`crate::util::parallel::ordered_map`]'s scoped
 //!   worker pool ([`MappingService::with_workers`]); duplicate in-flight
@@ -21,9 +23,10 @@
 //! * **a persistent warm-start store** — with
 //!   [`MappingService::with_cache_dir`], solved results serialize
 //!   bit-exactly to a versioned on-disk TSV (see [`WARM_CACHE_FILE`] /
-//!   [`WARM_CACHE_HEADER`]) loaded at spawn and flushed on
-//!   [`ServiceHandle::shutdown`], so repeated CLI/eval runs are warm across
-//!   processes;
+//!   [`WARM_CACHE_HEADER`]) loaded at spawn, flushed periodically while
+//!   running (crash-safe: a SIGKILL loses at most the last window) and on
+//!   [`ServiceHandle::shutdown`], and compacted to the cache byte budget
+//!   on every flush, so repeated CLI/eval runs are warm across processes;
 //! * **batch submission** — [`ServiceHandle::submit_batch`] /
 //!   [`ServiceHandle::map_workload`] push a whole workload's GEMMs in one
 //!   call, the request-path pattern a compiler or serving stack would use;
@@ -49,6 +52,7 @@
 //! same process, so a request can go mapping → (optionally) execution
 //! without Python anywhere on the path.
 
+mod cache;
 mod server;
 mod service;
 mod warm;

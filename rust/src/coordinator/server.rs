@@ -648,6 +648,27 @@ fn render_metrics(ctx: &ServerCtx) -> String {
         "Shard unit ranges re-queued after a worker fault.",
         s.shard_retries(),
     );
+    counter(
+        &mut out,
+        "goma_cache_evictions_total",
+        "Cache entries evicted (or refused) by the byte budget.",
+        s.cache_evictions(),
+    );
+    counter(
+        &mut out,
+        "goma_bloom_hits_total",
+        "Cache misses answered by the bloom front without a shard lock.",
+        s.bloom_hits(),
+    );
+    counter(
+        &mut out,
+        "goma_bloom_false_positives_total",
+        "Bloom front passes that the shard map then answered as misses.",
+        s.bloom_false_positives(),
+    );
+    out.push_str("# HELP goma_cache_bytes Bytes accounted to resident cache entries.\n");
+    out.push_str("# TYPE goma_cache_bytes gauge\n");
+    out.push_str(&format!("goma_cache_bytes {}\n", s.cache_bytes()));
     out.push_str("# HELP goma_service_queue_depth Requests submitted but not yet answered.\n");
     out.push_str("# TYPE goma_service_queue_depth gauge\n");
     out.push_str(&format!("goma_service_queue_depth {}\n", s.queue_depth()));

@@ -33,11 +33,17 @@
 //! and measured by `coordinator_throughput`'s cold-vs-shared leg.
 //!
 //! The cache is hash-sharded by fingerprint (`fp % shards`, one shard per
-//! worker) with per-shard hit metrics; with a `--cache-dir`, shards are
-//! seeded from the on-disk warm store ([`super::warm`]) at spawn and merged
-//! back + flushed when the pool exits, making repeated runs warm across
-//! processes. Handles are cheap clones; the service exits when every handle
-//! is dropped, or deterministically via [`ServiceHandle::shutdown`].
+//! worker) with per-shard hit metrics, byte-budgeted LRU eviction, and a
+//! bloom-filter front per shard ([`super::cache`], DESIGN.md §12 —
+//! `--cache-budget-bytes` / `GOMA_CACHE_BUDGET`; unbounded by default);
+//! with a `--cache-dir`, the cache is seeded from the on-disk warm store
+//! ([`super::warm`]) at spawn, and newly proved outcomes flush back
+//! periodically (every [`MappingService::with_flush_every`] proofs or
+//! [`MappingService::with_flush_interval`] of wall-clock — so a killed
+//! process keeps all but the last window) and once more when the pool
+//! exits, making repeated runs warm across processes. Handles are cheap
+//! clones; the service exits when every handle is dropped, or
+//! deterministically via [`ServiceHandle::shutdown`].
 //!
 //! **Cross-shape warm bounds** (DESIGN.md §6). With seeding on
 //! ([`MappingService::with_seed_bounds`], `--seed-bounds`,
@@ -54,6 +60,7 @@
 //! fingerprint; certificate *effort counters* in cached entries record the
 //! work the producing solve actually did under whatever bounds it had.
 
+use super::cache::{BoundedShardCache, CacheEntry, CacheMetrics};
 use super::warm::{WarmEntry, WarmOutcome, WarmStore};
 use crate::arch::Accelerator;
 use crate::mapping::{GemmShape, Mapping};
@@ -62,13 +69,13 @@ use crate::solver::{
     SolveRequest, SolveResult, SolverOptions,
 };
 use crate::util::parallel::ordered_map;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Fingerprint/on-disk format version. Mixed into every fingerprint and
 /// into the warm-store header: bumping it cold-starts every cache. Also
@@ -85,6 +92,21 @@ pub const CACHE_FORMAT_VERSION: u32 = 5;
 /// O(donors) re-cost work per miss; once full, the oldest entry is
 /// replaced ring-buffer style (see [`DonorPool`]).
 const MAX_DONORS_PER_ARCH: usize = 128;
+
+/// Architectures the donor registry keeps pools for. The per-arch ring was
+/// always capped, but the map of rings was not — a long-lived service fed
+/// a stream of distinct architectures grew it forever. Past the cap the
+/// least-recently-used arch pool is dropped (LRU over arch fingerprints,
+/// [`DonorRegistry`]); losing a pool only loses seed *bounds*, never
+/// answers — an unseeded re-solve is bit-identical (DESIGN.md §6).
+const MAX_DONOR_ARCHES: usize = 64;
+
+/// Crash-safe flush defaults (DESIGN.md §12): the dispatcher flushes the
+/// warm store after this many newly proved outcomes, or when this much
+/// time passes with proved outcomes still unflushed — so a SIGKILL loses
+/// at most the last window, not the whole session.
+const DEFAULT_FLUSH_EVERY: usize = 32;
+const DEFAULT_FLUSH_INTERVAL: Duration = Duration::from_secs(5);
 
 /// The shape-independent half of the solve key: a stable fingerprint of
 /// the **full** architecture parameter set (capacities, PE count, node,
@@ -110,14 +132,17 @@ pub fn arch_options_fingerprint(arch: &Accelerator, opts: SolverOptions) -> u64 
             h.u64(d.as_nanos() as u64);
         }
     }
-    // `opts.solve_threads`, `opts.seed_bounds`, `opts.simd`, and
-    // `opts.suffix_bounds` are deliberately NOT hashed: the engine's
-    // result is bit-identical for every thread count, a seeded solve's
-    // mapping/energy are bit-identical to the unseeded one, and the scan
-    // kernel and suffix bounds are pure latency knobs with bit-identical
-    // answers and certificates (all property-tested) — so services with
-    // different thread budgets, seeding switches, or kernel configurations
-    // must share cache entries; hashing any of these knobs would split the
+    // `opts.solve_threads`, `opts.seed_bounds`, `opts.simd`,
+    // `opts.suffix_bounds`, and `opts.cache_budget_bytes` are deliberately
+    // NOT hashed: the engine's result is bit-identical for every thread
+    // count, a seeded solve's mapping/energy are bit-identical to the
+    // unseeded one, the scan kernel and suffix bounds are pure latency
+    // knobs with bit-identical answers and certificates, and a cache
+    // budget only decides which proved outcomes stay resident — eviction
+    // forces a deterministic re-solve, never a different answer (all
+    // property-tested) — so services with different thread budgets,
+    // seeding switches, kernel configurations, or memory budgets must
+    // share cache entries; hashing any of these knobs would split the
     // warm store by deployment configuration.
     h.finish()
 }
@@ -206,6 +231,10 @@ pub struct ServiceMetrics {
     shard_retries: AtomicU64,
     queue_depth: AtomicU64,
     per_shard_hits: Vec<AtomicU64>,
+    /// Cache-tier counters (evictions, resident bytes, bloom fast
+    /// misses/false positives) — owned here, written by the
+    /// [`super::cache::BoundedShardCache`] that holds a clone.
+    cache: Arc<CacheMetrics>,
 }
 
 impl ServiceMetrics {
@@ -225,6 +254,7 @@ impl ServiceMetrics {
             shard_retries: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             per_shard_hits: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            cache: Arc::new(CacheMetrics::default()),
         }
     }
 
@@ -293,6 +323,31 @@ impl ServiceMetrics {
             .iter()
             .map(|a| a.load(Ordering::Relaxed))
             .collect()
+    }
+
+    /// Cache entries evicted under the byte budget (DESIGN.md §12).
+    /// Eviction moves hit rates only — answers are bit-identical to an
+    /// unbounded run (property-tested).
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache.evictions()
+    }
+
+    /// Accounted bytes resident in the sharded result cache (gauge).
+    pub fn cache_bytes(&self) -> u64 {
+        self.cache.bytes()
+    }
+
+    /// Cold misses answered by the bloom front without taking a shard
+    /// lock ("definitely absent").
+    pub fn bloom_hits(&self) -> u64 {
+        self.cache.bloom_hits()
+    }
+
+    /// Bloom "maybe present" probes that found nothing in the shard —
+    /// the only counter eviction is allowed to inflate beyond hit-rate
+    /// shifts (evicted keys stay set until a filter rebuild).
+    pub fn bloom_false_positives(&self) -> u64 {
+        self.cache.bloom_false_positives()
     }
 }
 
@@ -428,6 +483,9 @@ pub struct MappingService {
     cache_dir: Option<PathBuf>,
     solve_shards: usize,
     shard_bin: Option<PathBuf>,
+    flush_every: usize,
+    flush_interval: Duration,
+    donor_arch_cap: usize,
 }
 
 impl Default for MappingService {
@@ -438,6 +496,9 @@ impl Default for MappingService {
             cache_dir: None,
             solve_shards: 1,
             shard_bin: None,
+            flush_every: DEFAULT_FLUSH_EVERY,
+            flush_interval: DEFAULT_FLUSH_INTERVAL,
+            donor_arch_cap: MAX_DONOR_ARCHES,
         }
     }
 }
@@ -522,31 +583,73 @@ impl MappingService {
         self
     }
 
+    /// Byte budget for the sharded result cache and the warm store's
+    /// on-disk cap (DESIGN.md §12). Eviction under the budget only moves
+    /// hit rates — answers are bit-identical for every value
+    /// (property-tested) — so, like `solve_threads`, the knob never
+    /// enters the solve fingerprint. The unset default resolves through
+    /// `GOMA_CACHE_BUDGET`, else unbounded.
+    pub fn with_cache_budget(mut self, bytes: u64) -> Self {
+        self.options.cache_budget_bytes = Some(bytes);
+        self
+    }
+
+    /// Flush the warm store after every `n` newly proved outcomes (min 1;
+    /// the crash-safe flush threshold — see [`service_loop`]).
+    pub fn with_flush_every(mut self, n: usize) -> Self {
+        self.flush_every = n.max(1);
+        self
+    }
+
+    /// Flush the warm store when proved outcomes have sat unflushed for
+    /// this long (the crash-safe flush period).
+    pub fn with_flush_interval(mut self, interval: Duration) -> Self {
+        self.flush_interval = interval;
+        self
+    }
+
+    /// Cap on distinct architectures the donor registry keeps pools for
+    /// (default [`MAX_DONOR_ARCHES`]; min 1). Exposed for the bounding
+    /// tests — dropping a pool loses seed bounds, never answers.
+    pub fn with_donor_arch_cap(mut self, n: usize) -> Self {
+        self.donor_arch_cap = n.max(1);
+        self
+    }
+
     /// Spawn the dispatcher; returns the client handle. The pool exits when
     /// every handle is dropped or [`ServiceHandle::shutdown`] is called.
     pub fn spawn(self) -> ServiceHandle {
         let workers = self.workers.max(1);
         let metrics = Arc::new(ServiceMetrics::new(workers));
-        let store = Arc::new(WarmStore::open(self.cache_dir));
-        // Seed the cache shards from the warm store (fp-routed, so the
-        // partition is stable for a given worker count but the store itself
-        // is worker-count-independent).
-        let mut shards: Vec<HashMap<u64, CacheEntry>> =
-            (0..workers).map(|_| HashMap::new()).collect();
-        for (fp, e) in store.loaded() {
-            let entry = CacheEntry { result: e.outcome, arch_fp: e.arch_fp, warm: true };
-            shards[(fp % workers as u64) as usize].insert(fp, entry);
+        let options = self.options;
+        let budget = options.resolved_cache_budget();
+        let store = Arc::new(WarmStore::open(self.cache_dir, budget));
+        // Seed the cache from the warm store in fingerprint order (fp
+        // routing keeps the partition stable for a given worker count;
+        // the sort makes LRU ticks — and therefore which loaded entries a
+        // tiny budget retains — deterministic for a given store).
+        let cache = BoundedShardCache::new(workers, budget, metrics.cache.clone());
+        let mut seed: Vec<(u64, WarmEntry)> = store.loaded().collect();
+        seed.sort_by_key(|&(fp, _)| fp);
+        for (fp, e) in seed {
+            cache.insert(fp, CacheEntry { result: e.outcome, arch_fp: e.arch_fp, warm: true });
         }
         let (tx, rx) = channel::<Msg>();
         let m = metrics.clone();
-        let options = self.options;
-        let dist = (self.solve_shards >= 2).then(|| DistOptions {
-            shards: self.solve_shards,
-            worker_bin: self.shard_bin,
-            ..DistOptions::default()
-        });
+        let cfg = ServiceConfig {
+            workers,
+            options,
+            dist: (self.solve_shards >= 2).then(|| DistOptions {
+                shards: self.solve_shards,
+                worker_bin: self.shard_bin,
+                ..DistOptions::default()
+            }),
+            flush_every: self.flush_every.max(1),
+            flush_interval: self.flush_interval,
+            donor_arch_cap: self.donor_arch_cap.max(1),
+        };
         let join = std::thread::spawn(move || {
-            service_loop(rx, workers, shards, m, options, store, dist);
+            service_loop(rx, cache, m, store, cfg);
         });
         ServiceHandle {
             tx,
@@ -557,13 +660,15 @@ impl MappingService {
     }
 }
 
-struct CacheEntry {
-    result: WarmOutcome,
-    /// [`arch_options_fingerprint`] of the producing solve: groups entries
-    /// by accelerator for donor harvesting and travels into the warm store.
-    arch_fp: u64,
-    /// Loaded from the persistent store (so hits discriminate warm/cold).
-    warm: bool,
+/// Everything the dispatcher needs beyond its channels and stores, bundled
+/// so [`service_loop`]'s signature stays readable.
+struct ServiceConfig {
+    workers: usize,
+    options: SolverOptions,
+    dist: Option<DistOptions>,
+    flush_every: usize,
+    flush_interval: Duration,
+    donor_arch_cap: usize,
 }
 
 /// One architecture's seed-donor pool: a deduplicated ring of the most
@@ -593,9 +698,78 @@ impl DonorPool {
     }
 }
 
-/// Record `mapping` as a seed donor for its architecture.
-fn push_donor(donors: &mut HashMap<u64, DonorPool>, arch_fp: u64, mapping: Mapping) {
-    donors.entry(arch_fp).or_default().insert(mapping);
+/// The donor registry: per-arch [`DonorPool`]s behind an LRU bound on the
+/// number of *architectures* (the per-arch rings were always capped, but
+/// the map of rings used to grow without bound — this is the fix).
+/// Recency is a `BTreeMap<tick, arch_fp>` over monotonic unique ticks, so
+/// which pool an over-cap insert drops is a pure function of the
+/// insert/lookup sequence — never of hash iteration order. Both inserts
+/// and donor lookups promote the arch: the architectures actively being
+/// solved keep their pools. Dropping a pool only costs future seed
+/// *bounds*; an unseeded re-solve is bit-identical (DESIGN.md §6).
+struct DonorRegistry {
+    pools: HashMap<u64, (DonorPool, u64)>,
+    recency: BTreeMap<u64, u64>,
+    next_tick: u64,
+    cap: usize,
+}
+
+impl DonorRegistry {
+    fn new(cap: usize) -> Self {
+        DonorRegistry {
+            pools: HashMap::new(),
+            recency: BTreeMap::new(),
+            next_tick: 0,
+            cap: cap.max(1),
+        }
+    }
+
+    fn promote(&mut self, arch_fp: u64) {
+        let next = self.next_tick;
+        if let Some((_, tick)) = self.pools.get_mut(&arch_fp) {
+            self.recency.remove(tick);
+            *tick = next;
+            self.recency.insert(next, arch_fp);
+            self.next_tick = next + 1;
+        }
+    }
+
+    /// Record `mapping` as a seed donor for its architecture, evicting the
+    /// least-recently-used arch pool if a new pool would exceed the cap.
+    fn insert(&mut self, arch_fp: u64, mapping: Mapping) {
+        if let Some((pool, _)) = self.pools.get_mut(&arch_fp) {
+            pool.insert(mapping);
+        } else {
+            while self.pools.len() >= self.cap {
+                let (&tick, &victim) = self.recency.iter().next().expect("cap >= 1");
+                self.recency.remove(&tick);
+                self.pools.remove(&victim);
+            }
+            let mut pool = DonorPool::default();
+            pool.insert(mapping);
+            let tick = self.next_tick;
+            self.next_tick = tick + 1;
+            self.pools.insert(arch_fp, (pool, tick));
+            self.recency.insert(tick, arch_fp);
+            return;
+        }
+        self.promote(arch_fp);
+    }
+
+    /// The donor mappings for an architecture (empty when no pool is
+    /// retained), promoting the pool to most-recently-used.
+    fn donors(&mut self, arch_fp: u64) -> &[Mapping] {
+        self.promote(arch_fp);
+        self.pools
+            .get(&arch_fp)
+            .map(|(p, _)| p.items.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Distinct architectures currently retained (bounded by `cap`).
+    fn arches(&self) -> usize {
+        self.pools.len()
+    }
 }
 
 /// Map a per-request deadline onto the engine's wall-clock budget at solve
@@ -631,14 +805,13 @@ fn reply_all(waiters: Vec<Request>, result: &WarmOutcome, m: &ServiceMetrics) {
 
 fn service_loop(
     rx: Receiver<Msg>,
-    workers: usize,
-    mut shards: Vec<HashMap<u64, CacheEntry>>,
+    cache: BoundedShardCache,
     m: Arc<ServiceMetrics>,
-    options: SolverOptions,
     store: Arc<WarmStore>,
-    dist: Option<DistOptions>,
+    cfg: ServiceConfig,
 ) {
-    let nshards = shards.len() as u64;
+    let ServiceConfig { workers, options, dist, flush_every, flush_interval, donor_arch_cap } =
+        cfg;
     let seed_on = options.resolved_seed_bounds();
     // The cross-solve candidate store (DESIGN.md §8): per-axis candidate
     // lists depend only on the architecture's parameters, so one
@@ -651,29 +824,42 @@ fn service_loop(
     // usable as cross-shape warm bounds. Seeded from the warm store (other
     // fingerprints, same arch — the cross-process donor path) and fed by
     // every proved solve from then on. The harvest is sorted by
-    // fingerprint before insertion: shard iteration order is SipHash- and
-    // worker-count-dependent, and an unsorted walk would make which
-    // entries survive the pool cap vary between identical runs.
-    let mut donors: HashMap<u64, DonorPool> = HashMap::new();
+    // fingerprint before insertion: store iteration order is SipHash-
+    // dependent, and an unsorted walk would make which entries survive
+    // the pool caps vary between identical runs.
+    let mut donors = DonorRegistry::new(donor_arch_cap);
     if seed_on {
-        let mut harvest: Vec<(u64, u64, Mapping)> = Vec::new();
-        for shard in &shards {
-            for (fp, e) in shard.iter() {
-                if let Ok(r) = &e.result {
-                    harvest.push((e.arch_fp, *fp, r.mapping));
-                }
-            }
-        }
+        let mut harvest: Vec<(u64, u64, Mapping)> = store
+            .loaded()
+            .filter_map(|(fp, e)| e.outcome.ok().map(|r| (e.arch_fp, fp, r.mapping)))
+            .collect();
         harvest.sort_by_key(|&(afp, fp, _)| (afp, fp));
         for (afp, _, mapping) in harvest {
-            push_donor(&mut donors, afp, mapping);
+            donors.insert(afp, mapping);
         }
     }
+    // The crash-safe flush window (DESIGN.md §12): newly proved outcomes
+    // accumulate here and merge into the warm store every `flush_every`
+    // proofs or `flush_interval` of wall-clock, so a killed process keeps
+    // all but the last window. The store's merged view already carries
+    // everything previously flushed or loaded — each flush hands over
+    // only the new window.
+    let mut pending: Vec<(u64, WarmEntry)> = Vec::new();
+    let mut last_flush = Instant::now();
     let mut quit = false;
     while !quit {
-        let first = match rx.recv() {
+        let first = match rx.recv_timeout(flush_interval) {
             Ok(Msg::Solve(r)) => *r,
-            Ok(Msg::Shutdown) | Err(_) => break,
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                // Idle period: land whatever window accumulated.
+                if !pending.is_empty() {
+                    store.merge_and_flush(pending.drain(..));
+                    last_flush = Instant::now();
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
         };
         // Batch window: drain whatever queued behind the first request.
         let mut batch = vec![first];
@@ -707,11 +893,10 @@ fn service_loop(
             if waiters.len() > 1 {
                 m.coalesced.fetch_add(waiters.len() as u64 - 1, Ordering::Relaxed);
             }
-            let sid = (fp % nshards) as usize;
-            match shards[sid].get(&fp) {
+            match cache.get(fp) {
                 Some(e) => {
                     m.cache_hits.fetch_add(1, Ordering::Relaxed);
-                    m.per_shard_hits[sid].fetch_add(1, Ordering::Relaxed);
+                    m.per_shard_hits[cache.shard_of(fp)].fetch_add(1, Ordering::Relaxed);
                     if e.warm {
                         m.warm_hits.fetch_add(1, Ordering::Relaxed);
                     }
@@ -767,7 +952,7 @@ fn service_loop(
                     };
                 }
                 let seed = if seed_on {
-                    let pool = donors.get(afp).map(|p| p.items.as_slice()).unwrap_or(&[]);
+                    let pool = donors.donors(*afp);
                     let plan = plan_seed(pool, shape, &arch, options.exact_pe);
                     m.seed_accepted.fetch_add(plan.accepted, Ordering::Relaxed);
                     m.seed_rejected.fetch_add(plan.rejected, Ordering::Relaxed);
@@ -873,21 +1058,31 @@ fn service_loop(
                 if proved {
                     if seed_on {
                         if let Ok(r) = &result {
-                            push_donor(&mut donors, afp, r.mapping);
+                            donors.insert(afp, r.mapping);
                         }
                     }
-                    let sid = (fp % nshards) as usize;
-                    let entry = CacheEntry { result, arch_fp: afp, warm: false };
-                    shards[sid].insert(fp, entry);
+                    // Into the flush window first (the warm store is the
+                    // capacity tier — an entry the RAM budget evicts later
+                    // still persists), then into the bounded cache.
+                    pending.push((fp, WarmEntry { arch_fp: afp, outcome: result.clone() }));
+                    cache.insert(fp, CacheEntry { result, arch_fp: afp, warm: false });
                 }
             }
         }
+        // The crash-safe flush: land the window once it is large or old
+        // enough. Proofs answered since the last flush are the only thing
+        // a SIGKILL can lose.
+        if pending.len() >= flush_every
+            || (!pending.is_empty() && last_flush.elapsed() >= flush_interval)
+        {
+            store.merge_and_flush(pending.drain(..));
+            last_flush = Instant::now();
+        }
     }
-    // Pool exit: merge every shard into the shared store and flush...
-    store.merge_and_flush(shards.into_iter().flat_map(|s| {
-        s.into_iter()
-            .map(|(fp, e)| (fp, WarmEntry { arch_fp: e.arch_fp, outcome: e.result }))
-    }));
+    // Pool exit: land the final window. The store's merged view already
+    // carries the loaded set and every earlier flush, so this writes the
+    // full union even though only the tail is handed over here.
+    store.merge_and_flush(pending.drain(..));
     // ...then, as the dispatcher's very last act before the receiver drops,
     // drain anything still queued so the gauges stay honest: those waiters
     // get ServiceUnavailable from their dropped reply senders and are
@@ -1140,6 +1335,96 @@ mod tests {
                 "{opts:?}"
             );
         }
+    }
+
+    #[test]
+    fn fingerprint_ignores_cache_budget() {
+        // A memory budget decides which proved outcomes stay resident,
+        // never what an answer is — budgeted and unbounded deployments
+        // must share cache entries (DESIGN.md §12).
+        let shape = GemmShape::new(8, 8, 8);
+        let a = Accelerator::custom("t", 4096, 8, 32);
+        let base = SolverOptions::default();
+        for opts in [
+            SolverOptions { cache_budget_bytes: Some(0), ..base },
+            SolverOptions { cache_budget_bytes: Some(64 << 10), ..base },
+            SolverOptions { cache_budget_bytes: Some(u64::MAX), ..base },
+        ] {
+            assert_eq!(
+                solve_fingerprint(shape, &a, opts),
+                solve_fingerprint(shape, &a, base),
+                "{opts:?}"
+            );
+            assert_eq!(
+                arch_options_fingerprint(&a, opts),
+                arch_options_fingerprint(&a, base),
+                "{opts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn donor_registry_bounds_arch_pools_with_lru() {
+        use crate::mapping::{Axis, Bypass, Tile};
+        let mk = |x: u64| Mapping {
+            l1: Tile::new(x, 1, 1),
+            l2: Tile::new(1, 1, 1),
+            l3: Tile::new(1, 1, 1),
+            alpha01: Axis::X,
+            alpha12: Axis::Y,
+            b1: Bypass::ALL,
+            b3: Bypass::ALL,
+        };
+        let mut reg = DonorRegistry::new(2);
+        reg.insert(10, mk(1));
+        reg.insert(20, mk(2));
+        assert_eq!(reg.arches(), 2);
+        // Touch arch 10 so 20 is the LRU victim when 30 arrives.
+        assert_eq!(reg.donors(10).len(), 1);
+        reg.insert(30, mk(3));
+        assert_eq!(reg.arches(), 2, "a new arch past the cap must evict, not grow");
+        assert!(reg.donors(20).is_empty(), "the LRU arch pool is the one dropped");
+        assert_eq!(reg.donors(10).len(), 1);
+        assert_eq!(reg.donors(30).len(), 1);
+        // Inserting for a retained arch promotes it, never evicts it.
+        reg.insert(10, mk(4));
+        assert_eq!(reg.donors(10).len(), 2);
+        assert_eq!(reg.arches(), 2);
+    }
+
+    #[test]
+    fn tiny_cache_budget_changes_hit_rates_never_answers() {
+        // A budget too small to retain anything: every repeat re-solves,
+        // and every answer is bit-identical to the unbounded service's.
+        // Seeding off so even the effort counters must match exactly (a
+        // seeded re-solve could legitimately expand fewer nodes).
+        let unbounded = MappingService::default().with_seed_bounds(false).spawn();
+        let tiny = MappingService::default()
+            .with_seed_bounds(false)
+            .with_cache_budget(1)
+            .spawn();
+        let shapes = [
+            GemmShape::new(32, 32, 32),
+            GemmShape::new(64, 32, 32),
+            GemmShape::new(32, 32, 32),
+        ];
+        for &s in &shapes {
+            let a = unbounded.map(s, arch()).unwrap();
+            let b = tiny.map(s, arch()).unwrap();
+            assert_eq!(a.mapping, b.mapping, "{s}");
+            assert_eq!(a.energy.normalized.to_bits(), b.energy.normalized.to_bits(), "{s}");
+            assert_eq!(a.certificate.nodes, b.certificate.nodes, "{s}");
+        }
+        let (req, solves, hits, _, errs) = tiny.metrics().snapshot();
+        assert_eq!(req, 3);
+        assert_eq!(hits, 0, "nothing can be retained under a 1-byte budget");
+        assert_eq!(solves, 3, "the repeat must re-solve");
+        assert_eq!(errs, 0);
+        assert!(tiny.metrics().cache_evictions() >= 1, "refusals must be visible");
+        assert_eq!(tiny.metrics().cache_bytes(), 0);
+        let (_, u_solves, u_hits, ..) = unbounded.metrics().snapshot();
+        assert_eq!(u_solves, 2);
+        assert_eq!(u_hits, 1);
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! Persistent warm-start cache for the mapping service.
 //!
 //! Solved results outlive the process: the service loads this store at
-//! spawn and flushes it when the worker pool exits, so repeated CLI/eval
-//! runs against the same `--cache-dir` answer without re-solving — the
-//! "same (workload, hardware) pairs recur across runs" serving pattern.
+//! spawn and flushes it periodically while running (the crash-safe flush,
+//! DESIGN.md §12) and once more when the worker pool exits, so repeated
+//! CLI/eval runs against the same `--cache-dir` answer without re-solving
+//! — the "same (workload, hardware) pairs recur across runs" serving
+//! pattern. With a cache byte budget configured, every flush also
+//! compacts the file to the cap, dropping least-recently-merged entries
+//! first — the disk tier is bounded like the RAM tier, and eviction only
+//! ever costs a future re-solve, never an answer change.
 //!
 //! **Format v5** (`warm_cache_v5.tsv` inside the cache dir): a header line
 //! ([`WARM_CACHE_HEADER`]) followed by one TSV entry per solve key. Keys
@@ -68,29 +73,57 @@ pub struct WarmEntry {
     pub outcome: WarmOutcome,
 }
 
-/// The shared on-disk store: loaded once at service spawn; at pool exit
-/// the dispatcher merges every cache shard back in (warm entries included,
-/// since shards never evict) and the file is rewritten atomically
-/// (unique tmp file + rename).
+/// The merged view the store flushes from: every entry carries a
+/// monotonically increasing merge sequence number — the compaction
+/// recency. Re-merging a fingerprint refreshes its seq, so under a size
+/// cap the entries dropped first are the least recently (re)proved ones.
+struct MergedMap {
+    entries: HashMap<u64, (WarmEntry, u64)>,
+    next_seq: u64,
+}
+
+/// The shared on-disk store: loaded once at service spawn; the dispatcher
+/// merges newly proved outcomes back in — periodically (the crash-safe
+/// flush, DESIGN.md §12) and once more at pool exit — and each flush
+/// rewrites the file atomically (unique tmp file + rename). The merged
+/// view starts as the loaded set, so a partial flush (periodic flushes
+/// carry only the new window) still writes the full union — flushing can
+/// never lose entries that were on disk at open.
 pub struct WarmStore {
     path: Option<PathBuf>,
+    /// On-disk byte cap applied at every flush ([`WarmStore::merge_and_flush`]):
+    /// oldest-merged entries are compacted away until the serialized file
+    /// fits. `None` = grow forever (the pre-cap behavior).
+    cap_bytes: Option<u64>,
     loaded: HashMap<u64, WarmEntry>,
-    merged: Mutex<HashMap<u64, WarmEntry>>,
+    merged: Mutex<MergedMap>,
 }
 
 impl WarmStore {
     /// Open the store under `dir` (`None` disables persistence). A missing,
     /// version-mismatched, or unreadable file is not an error — recovery is
-    /// "start cold".
-    pub fn open(dir: Option<PathBuf>) -> WarmStore {
+    /// "start cold". `cap_bytes` bounds the serialized file size on flush.
+    pub fn open(dir: Option<PathBuf>, cap_bytes: Option<u64>) -> WarmStore {
         let path = dir.map(|d| d.join(WARM_CACHE_FILE));
         let loaded = match &path {
             Some(p) => load_file(p),
             None => HashMap::new(),
         };
+        // Seed the merged view from the loaded set in fingerprint order:
+        // deterministic seqs, so which loaded entries a cap retains is a
+        // pure function of the file contents.
+        let mut keys: Vec<u64> = loaded.keys().copied().collect();
+        keys.sort_unstable();
+        let mut merged = MergedMap { entries: HashMap::new(), next_seq: 0 };
+        for fp in keys {
+            let seq = merged.next_seq;
+            merged.next_seq += 1;
+            merged.entries.insert(fp, (loaded[&fp].clone(), seq));
+        }
         WarmStore {
             path,
-            merged: Mutex::new(HashMap::new()),
+            cap_bytes,
+            merged: Mutex::new(merged),
             loaded,
         }
     }
@@ -106,19 +139,52 @@ impl WarmStore {
     }
 
     /// Merge `entries` into the store and rewrite the file. The dispatcher
-    /// calls this once at pool exit with every shard's entries (the loaded
-    /// warm set flows back through the shards, so the flush carries the
-    /// full union). A store without a path merges in memory only.
+    /// calls this with each flushed window of newly proved outcomes (and
+    /// once more at pool exit); the merged view already carries the loaded
+    /// set plus every earlier window, so each flush writes the full union.
+    /// With a `cap_bytes`, oldest-merged entries are compacted away first
+    /// until the serialized file fits the cap. A store without a path
+    /// merges in memory only.
     pub fn merge_and_flush(&self, entries: impl IntoIterator<Item = (u64, WarmEntry)>) {
         let mut merged = self.merged.lock().unwrap();
         for (fp, v) in entries {
-            merged.insert(fp, v);
+            let seq = merged.next_seq;
+            merged.next_seq += 1;
+            merged.entries.insert(fp, (v, seq));
+        }
+        if let Some(cap) = self.cap_bytes {
+            compact(&mut merged, cap);
         }
         if let Some(path) = &self.path {
-            if let Err(e) = write_file(path, &merged) {
+            if let Err(e) = write_file(path, &merged.entries) {
                 eprintln!("[coordinator] warm-cache flush to {} failed: {e}", path.display());
             }
         }
+    }
+}
+
+/// Drop lowest-seq (least recently merged) entries until the serialized
+/// file — header plus one line per entry, each with its trailing newline —
+/// fits `cap`. Exact byte accounting: sizes come from the same
+/// [`entry_line`] the writer emits.
+fn compact(merged: &mut MergedMap, cap: u64) {
+    let mut total = WARM_CACHE_HEADER.len() as u64 + 1;
+    let mut sized: Vec<(u64, u64, u64)> = merged
+        .entries
+        .iter()
+        .map(|(&fp, (e, seq))| (*seq, fp, entry_line(fp, e).len() as u64 + 1))
+        .collect();
+    total += sized.iter().map(|&(_, _, b)| b).sum::<u64>();
+    if total <= cap {
+        return;
+    }
+    sized.sort_unstable_by_key(|&(seq, _, _)| seq);
+    for (_, fp, bytes) in sized {
+        if total <= cap {
+            break;
+        }
+        merged.entries.remove(&fp);
+        total -= bytes;
     }
 }
 
@@ -144,7 +210,18 @@ fn load_file(path: &Path) -> HashMap<u64, WarmEntry> {
     out
 }
 
-fn write_file(path: &Path, entries: &HashMap<u64, WarmEntry>) -> std::io::Result<()> {
+/// One serialized store line (no trailing newline) — shared by the writer
+/// and the compaction size accounting, so "fits the cap" is measured in
+/// the exact bytes the file will contain.
+fn entry_line(fp: u64, e: &WarmEntry) -> String {
+    let afp = e.arch_fp;
+    match &e.outcome {
+        Err(_) => format!("{fp:016x}\terr\t{afp:016x}\tinfeasible"),
+        Ok(r) => format!("{fp:016x}\tok\t{afp:016x}\t{}", format_result(r.as_ref())),
+    }
+}
+
+fn write_file(path: &Path, entries: &HashMap<u64, (WarmEntry, u64)>) -> std::io::Result<()> {
     use std::sync::atomic::{AtomicU64, Ordering};
     // Unique per writer: concurrent flushes into one shared cache dir (two
     // processes, or two services in one process) must not interleave on a
@@ -165,14 +242,8 @@ fn write_file(path: &Path, entries: &HashMap<u64, WarmEntry>) -> std::io::Result
         let mut keys: Vec<u64> = entries.keys().copied().collect();
         keys.sort_unstable();
         for fp in keys {
-            let e = &entries[&fp];
-            let afp = e.arch_fp;
-            match &e.outcome {
-                Err(_) => writeln!(f, "{fp:016x}\terr\t{afp:016x}\tinfeasible")?,
-                Ok(r) => {
-                    writeln!(f, "{fp:016x}\tok\t{afp:016x}\t{}", format_result(r.as_ref()))?
-                }
-            }
+            let (e, _) = &entries[&fp];
+            writeln!(f, "{}", entry_line(fp, e))?;
         }
     }
     std::fs::rename(&tmp, path)
@@ -414,9 +485,58 @@ mod tests {
             "# goma-warm-cache v4\n00aa\terr\t00bb\tinfeasible\n",
         ] {
             std::fs::write(&path, old).unwrap();
-            let store = WarmStore::open(Some(dir.clone()));
+            let store = WarmStore::open(Some(dir.clone()), None);
             assert_eq!(store.loaded_len(), 0, "pre-v5 file must be ignored wholesale: {old:?}");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flush_preserves_loaded_entries_across_partial_merges() {
+        let dir = std::env::temp_dir().join(format!("goma_warm_partial_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join(WARM_CACHE_FILE)).ok();
+        let a = WarmEntry { arch_fp: 1, outcome: Err(SolveError::NoFeasibleMapping) };
+        let s1 = WarmStore::open(Some(dir.clone()), None);
+        s1.merge_and_flush([(0xaa, a.clone())]);
+        // A later process merges only its own new window: the flush must
+        // carry the union (regression: `merged` used to start empty, so a
+        // flush that was not preceded by re-merging every shard silently
+        // dropped the loaded set from the rewritten file).
+        let s2 = WarmStore::open(Some(dir.clone()), None);
+        assert_eq!(s2.loaded_len(), 1);
+        s2.merge_and_flush([(0xbb, a.clone())]);
+        let s3 = WarmStore::open(Some(dir.clone()), None);
+        assert_eq!(s3.loaded_len(), 2, "a partial flush must keep the loaded entries");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_cap_compacts_oldest_merged_entries_first() {
+        let dir = std::env::temp_dir().join(format!("goma_warm_cap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(WARM_CACHE_FILE);
+        std::fs::remove_file(&path).ok();
+        let e = |afp| WarmEntry { arch_fp: afp, outcome: Err(SolveError::NoFeasibleMapping) };
+        // Exactly two err lines fit under the cap.
+        let line = entry_line(1, &e(1)).len() as u64 + 1;
+        let cap = WARM_CACHE_HEADER.len() as u64 + 1 + 2 * line;
+        let store = WarmStore::open(Some(dir.clone()), Some(cap));
+        store.merge_and_flush([(1, e(1))]);
+        store.merge_and_flush([(2, e(2)), (3, e(3))]);
+        assert!(std::fs::metadata(&path).unwrap().len() <= cap, "file must fit the cap");
+        let back = WarmStore::open(Some(dir.clone()), Some(cap));
+        let kept: Vec<u64> = back.loaded().map(|(fp, _)| fp).collect();
+        assert_eq!(kept.len(), 2);
+        assert!(!kept.contains(&1), "the oldest-merged entry is the one compacted");
+        assert!(kept.contains(&2) && kept.contains(&3));
+        // Re-merging a key refreshes its recency: after touching 2, adding
+        // 4 compacts 3 away, not 2.
+        back.merge_and_flush([(2, e(2))]);
+        back.merge_and_flush([(4, e(4))]);
+        let last = WarmStore::open(Some(dir.clone()), Some(cap));
+        let kept: Vec<u64> = last.loaded().map(|(fp, _)| fp).collect();
+        assert!(kept.contains(&2) && kept.contains(&4) && !kept.contains(&3), "{kept:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

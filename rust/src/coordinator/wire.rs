@@ -121,6 +121,10 @@ pub struct SolveSpec {
     /// (`GOMA_SUFFIX_BOUNDS`). Same answer bit for bit; node counts can
     /// only shrink with the bounds on (DESIGN.md §11).
     pub suffix_bounds: Option<bool>,
+    /// Result-cache byte budget; `None` = auto (`GOMA_CACHE_BUDGET`).
+    /// Pure capacity knob: eviction re-solves deterministically, so the
+    /// answer is bit-identical at every budget (DESIGN.md §12).
+    pub cache_budget_bytes: Option<u64>,
     /// Answer deadline in milliseconds from request arrival.
     pub deadline_ms: Option<u64>,
 }
@@ -134,6 +138,7 @@ impl SolveSpec {
             seed_bounds: None,
             simd: None,
             suffix_bounds: None,
+            cache_budget_bytes: None,
             deadline_ms: None,
         }
     }
@@ -164,6 +169,10 @@ impl SolveSpec {
         if let Some(s) = v.get("suffix_bounds") {
             spec.suffix_bounds = Some(s.as_bool().ok_or("suffix_bounds must be a boolean")?);
         }
+        if let Some(b) = v.get("cache_budget_bytes") {
+            spec.cache_budget_bytes =
+                Some(b.as_u64().ok_or("cache_budget_bytes must be a non-negative integer")?);
+        }
         if let Some(d) = v.get("deadline_ms") {
             let ms = d.as_u64().filter(|&ms| ms >= 1).ok_or("deadline_ms must be ≥ 1")?;
             spec.deadline_ms = Some(ms);
@@ -193,6 +202,7 @@ impl SolveSpec {
         spec.seed_bounds = parse_seed_bounds_flag(flags)?;
         spec.simd = parse_simd_flag(flags)?;
         spec.suffix_bounds = parse_suffix_bounds_flag(flags)?;
+        spec.cache_budget_bytes = parse_cache_budget_flag(flags)?;
         if let Some(s) = flags.get("deadline-ms") {
             let ms = s.parse::<u64>().ok().filter(|&ms| ms >= 1);
             spec.deadline_ms = Some(ms.ok_or(format!("--deadline-ms must be ≥ 1, got '{s}'"))?);
@@ -226,6 +236,9 @@ impl SolveSpec {
         if let Some(s) = self.suffix_bounds {
             fields.push(("suffix_bounds".to_string(), Json::Bool(s)));
         }
+        if let Some(b) = self.cache_budget_bytes {
+            fields.push(("cache_budget_bytes".to_string(), Json::u64(b)));
+        }
         if let Some(ms) = self.deadline_ms {
             fields.push(("deadline_ms".to_string(), Json::u64(ms)));
         }
@@ -240,6 +253,7 @@ impl SolveSpec {
             seed_bounds: self.seed_bounds.or(base.seed_bounds),
             simd: self.simd.or(base.simd),
             suffix_bounds: self.suffix_bounds.or(base.suffix_bounds),
+            cache_budget_bytes: self.cache_budget_bytes.or(base.cache_budget_bytes),
             ..base
         }
     }
@@ -293,6 +307,19 @@ pub fn parse_suffix_bounds_flag(flags: &HashMap<String, String>) -> Result<Optio
         Some(s) => match crate::solver::parse_seed_bounds_value(s) {
             Some(b) => Ok(Some(b)),
             None => Err(format!("--suffix-bounds must be on|off, got '{s}'")),
+        },
+        None => Ok(None),
+    }
+}
+
+/// Shared `--cache-budget-bytes` parsing (accepts plain bytes or binary
+/// suffixes `B`/`KiB`/`MiB`/`GiB`): absent means `None` = auto
+/// (`GOMA_CACHE_BUDGET`).
+pub fn parse_cache_budget_flag(flags: &HashMap<String, String>) -> Result<Option<u64>, String> {
+    match flags.get("cache-budget-bytes") {
+        Some(s) => match crate::solver::parse_cache_budget_value(s) {
+            Some(b) => Ok(Some(b)),
+            None => Err(format!("--cache-budget-bytes must be bytes or KiB/MiB/GiB, got '{s}'")),
         },
         None => Ok(None),
     }
@@ -575,6 +602,7 @@ mod tests {
         spec.seed_bounds = Some(false);
         spec.simd = Some(false);
         spec.suffix_bounds = Some(true);
+        spec.cache_budget_bytes = Some(64 << 10);
         spec.deadline_ms = Some(1500);
         let back = SolveSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
@@ -588,6 +616,7 @@ mod tests {
             ("seed-bounds", "off"),
             ("simd", "off"),
             ("suffix-bounds", "on"),
+            ("cache-budget-bytes", "64KiB"),
             ("deadline-ms", "1500"),
         ]
         .into_iter()
@@ -601,18 +630,25 @@ mod tests {
         let mut auto_flags = flags.clone();
         auto_flags.insert("simd".into(), "auto".into());
         auto_flags.remove("suffix-bounds");
+        auto_flags.remove("cache-budget-bytes");
         let auto = SolveSpec::from_flags(&auto_flags).unwrap();
         assert_eq!(auto.simd, None);
         assert_eq!(auto.suffix_bounds, None);
+        assert_eq!(auto.cache_budget_bytes, None);
         let text = auto.to_json().to_text();
         assert!(!text.contains("simd"), "auto must not serialize: {text}");
         assert!(!text.contains("suffix_bounds"), "auto must not serialize: {text}");
+        assert!(!text.contains("cache_budget_bytes"), "auto must not serialize: {text}");
         assert!(parse_simd_flag(
             &[("simd".to_string(), "fast".to_string())].into_iter().collect()
         )
         .is_err());
         assert!(parse_suffix_bounds_flag(
             &[("suffix-bounds".to_string(), "auto".to_string())].into_iter().collect()
+        )
+        .is_err());
+        assert!(parse_cache_budget_flag(
+            &[("cache-budget-bytes".to_string(), "lots".to_string())].into_iter().collect()
         )
         .is_err());
     }

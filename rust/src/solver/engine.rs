@@ -144,6 +144,15 @@ pub struct SolverOptions {
     /// (property-tested) — the knob never enters the solve fingerprint.
     /// `Some(false)` is the A/B baseline.
     pub suffix_bounds: Option<bool>,
+    /// Byte budget for the serving layer's result caches (DESIGN.md §12).
+    /// `None` means auto: the `GOMA_CACHE_BUDGET` env override when it
+    /// parses ([`parse_cache_budget_value`]), otherwise unbounded. The
+    /// engine itself ignores this — it configures the mapping service's
+    /// sharded cache and the warm store's on-disk cap — and eviction only
+    /// ever forces a deterministic re-solve, so answers are bit-identical
+    /// for every budget (property-tested) and the knob never enters the
+    /// solve fingerprint.
+    pub cache_budget_bytes: Option<u64>,
 }
 
 impl Default for SolverOptions {
@@ -155,6 +164,7 @@ impl Default for SolverOptions {
             seed_bounds: None,
             simd: None,
             suffix_bounds: None,
+            cache_budget_bytes: None,
         }
     }
 }
@@ -186,6 +196,13 @@ impl SolverOptions {
     /// value when set, otherwise [`default_suffix_bounds`].
     pub fn resolved_suffix_bounds(&self) -> bool {
         self.suffix_bounds.unwrap_or_else(default_suffix_bounds)
+    }
+
+    /// The effective cache byte budget: the explicit `cache_budget_bytes`
+    /// value when set, otherwise [`default_cache_budget`] (`None` means
+    /// unbounded — the pre-budget behavior).
+    pub fn resolved_cache_budget(&self) -> Option<u64> {
+        self.cache_budget_bytes.or_else(default_cache_budget)
     }
 }
 
@@ -257,6 +274,38 @@ pub fn default_suffix_bounds() -> bool {
         .ok()
         .and_then(|v| parse_seed_bounds_value(&v))
         .unwrap_or(true)
+}
+
+/// Parse one byte-budget value (the shared vocabulary of the
+/// `--cache-budget-bytes` flag and the `GOMA_CACHE_BUDGET` env var): a
+/// plain byte count, optionally suffixed `B`, `KiB`, `MiB`, or `GiB`
+/// (case-insensitive, e.g. `64KiB`). `None` for anything unrecognized or
+/// overflowing.
+pub fn parse_cache_budget_value(s: &str) -> Option<u64> {
+    let lower = s.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(p) = lower.strip_suffix("kib") {
+        (p, 1u64 << 10)
+    } else if let Some(p) = lower.strip_suffix("mib") {
+        (p, 1u64 << 20)
+    } else if let Some(p) = lower.strip_suffix("gib") {
+        (p, 1u64 << 30)
+    } else if let Some(p) = lower.strip_suffix('b') {
+        (p, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    digits.trim().parse::<u64>().ok()?.checked_mul(mult)
+}
+
+/// Default cache byte budget: the `GOMA_CACHE_BUDGET` env override when it
+/// parses ([`parse_cache_budget_value`]), otherwise `None` — unbounded.
+/// Unbounded by default on purpose: a budget is a deployment sizing
+/// decision, and the unbounded cache is the behavior every pre-budget
+/// test and bench baseline pinned.
+pub fn default_cache_budget() -> Option<u64> {
+    std::env::var("GOMA_CACHE_BUDGET")
+        .ok()
+        .and_then(|v| parse_cache_budget_value(&v))
 }
 
 /// A cross-shape warm bound for the incumbent (DESIGN.md §6).
@@ -1348,6 +1397,31 @@ mod tests {
         assert_eq!(explicit.resolved_threads(), 3);
         let auto = SolverOptions::default();
         assert!(auto.resolved_threads() >= 1);
+    }
+
+    #[test]
+    fn cache_budget_values_parse_with_binary_suffixes() {
+        for (s, want) in [
+            ("0", Some(0)),
+            ("4096", Some(4096)),
+            ("4096B", Some(4096)),
+            ("64KiB", Some(64 << 10)),
+            ("64kib", Some(64 << 10)),
+            (" 2MiB ", Some(2 << 20)),
+            ("1GiB", Some(1 << 30)),
+            ("", None),
+            ("KiB", None),
+            ("12Ki", None),
+            ("-1", None),
+            ("99999999999999999999GiB", None),
+        ] {
+            assert_eq!(parse_cache_budget_value(s), want, "{s:?}");
+        }
+        let explicit = SolverOptions {
+            cache_budget_bytes: Some(1 << 20),
+            ..SolverOptions::default()
+        };
+        assert_eq!(explicit.resolved_cache_budget(), Some(1 << 20));
     }
 
     #[test]

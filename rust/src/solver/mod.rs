@@ -60,10 +60,10 @@ pub use candidates::{
 };
 pub use dist::{solve_dist, DistError, DistOptions};
 pub use engine::{
-    default_seed_bounds, default_simd, default_solve_threads, default_suffix_bounds,
-    parse_seed_bounds_value, parse_simd_value, solve_serial_reference,
-    solve_serial_reference_seeded, solve_with_threads, SeedBound, SolveError, SolveRequest,
-    SolveResult, SolverOptions,
+    default_cache_budget, default_seed_bounds, default_simd, default_solve_threads,
+    default_suffix_bounds, parse_cache_budget_value, parse_seed_bounds_value, parse_simd_value,
+    solve_serial_reference, solve_serial_reference_seeded, solve_with_threads, SeedBound,
+    SolveError, SolveRequest, SolveResult, SolverOptions,
 };
 pub use exhaustive::{enumerate_all, exhaustive_best, MappingVisitor};
 pub use kernel::SimdKernel;

@@ -1,0 +1,414 @@
+//! Eviction soundness for the budgeted cache tier (DESIGN.md §12):
+//!
+//! * **the eviction property** — 100+ seeded requests over a key pool far
+//!   larger than a tiny byte budget: every answer (positive or negative)
+//!   is **bit-identical** to an unbounded service's, certificate counters
+//!   included; only hit rates and the eviction/bloom counters move, and
+//!   the accounting invariant `requests == solves + hits + coalesced +
+//!   errors` stays exact on both sides;
+//! * **seeding interplay** — with cross-shape warm bounds on, an evicted
+//!   key's re-solve may see *more* donors than the original solve, so
+//!   mapping/energy/bounds stay bit-identical while `nodes` can only
+//!   shrink;
+//! * **donor-registry cap** — a service bounded to one retained donor
+//!   architecture answers a multi-arch workload bit-identically to an
+//!   unseeded reference (dropping a pool only ever costs a bound);
+//! * **crash-safe flush** — a `goma serve` process is SIGKILLed (no
+//!   shutdown hook) after its periodic flush landed; reopening the cache
+//!   dir answers every flushed key warm, solve-free, and bit-identical to
+//!   the wire answers;
+//! * **disk-tier compaction** — a byte budget caps the warm store's file
+//!   on flush; surviving entries still answer warm and bit-identical.
+//!
+//! The suite must pass at `GOMA_TEST_WORKERS=1` and `=4` (CI runs both,
+//! plus a `GOMA_CACHE_BUDGET=64KiB` leg over the whole test suite).
+
+use goma::arch::Accelerator;
+use goma::coordinator::wire::{self, ArchSpec, SolveSpec, WireReply};
+use goma::coordinator::{MappingService, ServiceHandle, WARM_CACHE_FILE};
+use goma::mapping::GemmShape;
+use goma::solver::{SolveError, SolveResult};
+use goma::util::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+mod common;
+use common::{assert_bit_identical, rand_arch, rand_shape, test_workers};
+
+/// Fresh per-test temp dir (tests run concurrently in one process).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("goma_evict_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+type Outcome = Result<Arc<SolveResult>, SolveError>;
+
+/// Drive one request sequence through a service, sequentially (every
+/// request sees the cache state its predecessors left — the order both
+/// services under comparison replay identically).
+fn replay(handle: &ServiceHandle, reqs: &[(GemmShape, Accelerator)]) -> Vec<Outcome> {
+    reqs.iter().map(|(s, a)| handle.map(*s, a.clone())).collect()
+}
+
+fn assert_same_outcomes(a: &[Outcome], b: &[Outcome], label: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        match (x, y) {
+            (Ok(r1), Ok(r2)) => assert_bit_identical(r1, r2, &format!("{label}[{i}]")),
+            (Err(e1), Err(e2)) => assert_eq!(e1, e2, "{label}[{i}]: error kind"),
+            _ => panic!("{label}[{i}]: feasibility verdict flipped: {x:?} vs {y:?}"),
+        }
+    }
+}
+
+/// A seeded request sequence over a fixed key pool: every key appears at
+/// least once, then random repeats — the repeat pattern is what a tiny
+/// budget turns into eviction-then-re-solve churn.
+fn request_sequence(
+    rng: &mut Rng,
+    pool: &[(GemmShape, Accelerator)],
+    total: usize,
+) -> Vec<(GemmShape, Accelerator)> {
+    let mut reqs: Vec<(GemmShape, Accelerator)> = pool.to_vec();
+    while reqs.len() < total {
+        let i = rng.gen_range(pool.len() as u64) as usize;
+        reqs.push(pool[i].clone());
+    }
+    reqs
+}
+
+fn key_pool(
+    rng: &mut Rng,
+    prefix: &str,
+    arches: u64,
+    shapes_per_arch: usize,
+) -> Vec<(GemmShape, Accelerator)> {
+    let mut pool = Vec::new();
+    for i in 0..arches {
+        let arch = rand_arch(rng, prefix, i);
+        for _ in 0..shapes_per_arch {
+            pool.push((rand_shape(rng), arch.clone()));
+        }
+    }
+    pool
+}
+
+#[test]
+fn eviction_changes_only_hit_rates_never_answers() {
+    let mut rng = Rng::seed_from_u64(0xE71C_7104);
+    let pool = key_pool(&mut rng, "evict", 6, 4);
+    let reqs = request_sequence(&mut rng, &pool, 128);
+
+    // Seeding off on both sides: an unseeded re-solve is bit-identical to
+    // the original in *every* certificate field, so the comparison below
+    // can assert the full certificate (the seeded variant is the next
+    // test).
+    let unbounded = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(false)
+        .spawn();
+    let tiny = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(false)
+        .with_cache_budget(4096)
+        .spawn();
+
+    let a = replay(&unbounded, &reqs);
+    let b = replay(&tiny, &reqs);
+    assert_same_outcomes(&a, &b, "tiny-budget vs unbounded");
+
+    let (mu, mt) = (unbounded.metrics(), tiny.metrics());
+    // The accounting invariant holds on both sides; eviction moves work
+    // from the hit column to the solve/error columns and nothing else.
+    for (label, m) in [("unbounded", mu), ("tiny", mt)] {
+        let (req, solves, hits, coalesced, errs) = m.snapshot();
+        assert_eq!(req, reqs.len() as u64, "{label}: requests");
+        assert_eq!(
+            req,
+            solves + hits + coalesced + errs,
+            "{label}: every request is a hit, a solve, a coalesce, or an error"
+        );
+    }
+    let (_, _, hits_u, ..) = mu.snapshot();
+    let (_, _, hits_t, ..) = mt.snapshot();
+    assert_eq!(mu.cache_evictions(), 0, "no budget, no evictions");
+    assert!(
+        mt.cache_evictions() > 0,
+        "24 keys against a 4 KiB budget must evict (got {})",
+        mt.cache_evictions()
+    );
+    assert!(hits_t <= hits_u, "eviction can only lose hits ({hits_t} vs {hits_u})");
+    assert!(mt.cache_bytes() <= 4096, "gauge must respect the budget: {}", mt.cache_bytes());
+    unbounded.shutdown();
+    tiny.shutdown();
+}
+
+#[test]
+fn eviction_under_seeding_keeps_answers_and_only_shrinks_nodes() {
+    let mut rng = Rng::seed_from_u64(0x5EED_E71C);
+    let pool = key_pool(&mut rng, "sevict", 4, 3);
+    let reqs = request_sequence(&mut rng, &pool, 48);
+
+    let unbounded = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(true)
+        .spawn();
+    let tiny = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(true)
+        .with_cache_budget(4096)
+        .spawn();
+    let a = replay(&unbounded, &reqs);
+    let b = replay(&tiny, &reqs);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        match (x, y) {
+            (Ok(r1), Ok(r2)) => {
+                // A re-solve after eviction may run with *more* donors
+                // than the original solve had (the donor registry outlives
+                // the evicted entry), so the answer and bounds are
+                // bit-identical while search effort can only shrink
+                // (DESIGN.md §6, §12).
+                assert_eq!(r1.mapping, r2.mapping, "[{i}] mapping");
+                assert_eq!(
+                    r1.energy.normalized.to_bits(),
+                    r2.energy.normalized.to_bits(),
+                    "[{i}] energy"
+                );
+                assert_eq!(
+                    r1.certificate.upper_bound.to_bits(),
+                    r2.certificate.upper_bound.to_bits(),
+                    "[{i}] upper bound"
+                );
+                assert_eq!(
+                    r1.certificate.lower_bound.to_bits(),
+                    r2.certificate.lower_bound.to_bits(),
+                    "[{i}] lower bound"
+                );
+                assert_eq!(
+                    r1.certificate.proved_optimal, r2.certificate.proved_optimal,
+                    "[{i}] proved"
+                );
+                assert!(
+                    r2.certificate.nodes <= r1.certificate.nodes,
+                    "[{i}] a better-seeded re-solve must not expand more nodes \
+                     ({} vs {})",
+                    r2.certificate.nodes,
+                    r1.certificate.nodes
+                );
+            }
+            (Err(e1), Err(e2)) => assert_eq!(e1, e2, "[{i}] error kind"),
+            _ => panic!("[{i}] feasibility verdict flipped: {x:?} vs {y:?}"),
+        }
+    }
+    unbounded.shutdown();
+    tiny.shutdown();
+}
+
+#[test]
+fn donor_arch_cap_is_answer_invisible() {
+    let mut rng = Rng::seed_from_u64(0xD0_40CA);
+    // Interleave arches so the one-arch cap evicts a pool between every
+    // pair of consecutive requests — the worst case for the registry.
+    let pool = key_pool(&mut rng, "dcap", 6, 2);
+    let mut reqs = request_sequence(&mut rng, &pool, 36);
+    rng.shuffle(&mut reqs);
+
+    let capped = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(true)
+        .with_donor_arch_cap(1)
+        .spawn();
+    let reference = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(false)
+        .spawn();
+    let a = replay(&capped, &reqs);
+    let b = replay(&reference, &reqs);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        match (x, y) {
+            // Seeding (with however many donors survive the cap) never
+            // changes the answer — only the effort counters, which the
+            // unseeded reference does not share.
+            (Ok(r1), Ok(r2)) => {
+                assert_eq!(r1.mapping, r2.mapping, "[{i}] mapping");
+                assert_eq!(
+                    r1.energy.normalized.to_bits(),
+                    r2.energy.normalized.to_bits(),
+                    "[{i}] energy"
+                );
+                assert_eq!(
+                    r1.certificate.upper_bound.to_bits(),
+                    r2.certificate.upper_bound.to_bits(),
+                    "[{i}] upper bound"
+                );
+            }
+            (Err(e1), Err(e2)) => assert_eq!(e1, e2, "[{i}] error kind"),
+            _ => panic!("[{i}] feasibility verdict flipped: {x:?} vs {y:?}"),
+        }
+    }
+    capped.shutdown();
+    reference.shutdown();
+}
+
+fn kill_arch() -> Accelerator {
+    Accelerator::custom("killflush", 1 << 16, 16, 64)
+}
+
+fn kill_arch_spec() -> ArchSpec {
+    ArchSpec::Custom {
+        name: "killflush".into(),
+        sram_words: 1 << 16,
+        num_pe: 16,
+        regfile_words: 64,
+    }
+}
+
+/// The crash-safety property the periodic flush exists for: a server that
+/// never reaches its shutdown hook (SIGKILL) still persists every proved
+/// outcome outside the final unflushed window. With `--flush-every 1`,
+/// that window is empty after the file visibly contains the entries.
+#[test]
+fn sigkilled_server_keeps_flushed_entries_warm_and_bit_identical() {
+    use std::io::BufRead;
+    let dir = tmp_dir("sigkill");
+    let shapes =
+        [GemmShape::new(64, 64, 64), GemmShape::new(128, 64, 32), GemmShape::new(32, 96, 64)];
+    let exe = env!("CARGO_BIN_EXE_goma");
+    let mut child = std::process::Command::new(exe)
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--workers",
+            "2",
+            "--flush-every",
+            "1",
+            "--flush-interval-ms",
+            "50",
+            "--cache-dir",
+            dir.to_str().unwrap(),
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn goma serve");
+    let mut first_line = String::new();
+    std::io::BufReader::new(child.stdout.take().unwrap())
+        .read_line(&mut first_line)
+        .expect("read the address line");
+    let addr: std::net::SocketAddr = first_line
+        .trim()
+        .strip_prefix("listening on http://")
+        .unwrap_or_else(|| panic!("unexpected first line: {first_line:?}"))
+        .parse()
+        .expect("parse bound address");
+
+    let mut wire_answers: Vec<SolveResult> = Vec::new();
+    for &shape in &shapes {
+        let spec = SolveSpec::new(shape, kill_arch_spec());
+        let (status, body) =
+            wire::http_call(addr, "POST", "/solve", &[], &spec.to_json().to_text()).expect("POST");
+        match wire::parse_reply(status, &body).expect("well-formed reply") {
+            WireReply::Ok(r) => wire_answers.push(*r),
+            other => panic!("expected a feasible answer, got {other:?}"),
+        }
+    }
+    // The HTTP reply can race the flush that follows it; wait until the
+    // periodic flush has demonstrably landed all three entries.
+    let path = dir.join(WARM_CACHE_FILE);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let lines = std::fs::read_to_string(&path).map(|t| t.lines().count()).unwrap_or(0);
+        if lines >= 1 + shapes.len() {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "periodic flush never landed {} entries (file has {lines} lines)",
+            shapes.len()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    // SIGKILL: no shutdown hook, no exit flush — what the file holds now
+    // is exactly what the next process may rely on.
+    child.kill().expect("kill");
+    child.wait().expect("reap");
+
+    let h = MappingService::default()
+        .with_workers(test_workers())
+        .with_cache_dir(&dir)
+        .spawn();
+    for (shape, wired) in shapes.iter().zip(&wire_answers) {
+        let warm = h.map(*shape, kill_arch()).expect("feasible");
+        assert_bit_identical(&warm, wired, "reopened-dir answer vs wire answer");
+    }
+    let m = h.metrics();
+    let (_, solves, hits, ..) = m.snapshot();
+    assert_eq!(solves, 0, "every flushed key must answer without re-solving");
+    assert_eq!(hits, shapes.len() as u64);
+    assert_eq!(m.warm_hits(), shapes.len() as u64);
+    h.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn warm_store_compaction_bounds_the_disk_tier_end_to_end() {
+    let dir = tmp_dir("compact");
+    let arch = Accelerator::custom("compact", 1 << 16, 16, 64);
+    let shapes = [
+        GemmShape::new(64, 64, 64),
+        GemmShape::new(128, 64, 32),
+        GemmShape::new(32, 96, 64),
+        GemmShape::new(48, 48, 48),
+    ];
+    let solve_all = |h: &ServiceHandle| -> Vec<Outcome> {
+        shapes.iter().map(|&s| h.map(s, arch.clone())).collect()
+    };
+
+    // Pass 1 (unbounded): produce the full 4-entry file to size the cap.
+    let h1 = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(false)
+        .with_cache_dir(&dir)
+        .spawn();
+    let first = solve_all(&h1);
+    h1.shutdown();
+    let path = dir.join(WARM_CACHE_FILE);
+    let full = std::fs::metadata(&path).unwrap().len();
+    assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 1 + shapes.len());
+
+    // Pass 2: one byte under the full size — at least one entry must be
+    // compacted away at flush, and the file must land under the cap.
+    let cap = full - 1;
+    let h2 = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(false)
+        .with_cache_budget(cap)
+        .with_cache_dir(&dir)
+        .spawn();
+    let second = solve_all(&h2);
+    assert_same_outcomes(&first, &second, "budgeted pass vs unbounded pass");
+    h2.shutdown();
+    assert!(std::fs::metadata(&path).unwrap().len() <= cap, "flush must respect the disk cap");
+    let survivors = std::fs::read_to_string(&path).unwrap().lines().count() - 1;
+    assert!(survivors < shapes.len(), "the cap must have dropped an entry");
+    assert!(survivors >= 1, "a one-byte-under cap must not wipe the store");
+
+    // Pass 3 (unbounded again): the survivors answer warm and
+    // bit-identical; only the compacted keys re-solve — to the same bits.
+    let h3 = MappingService::default()
+        .with_workers(test_workers())
+        .with_seed_bounds(false)
+        .with_cache_dir(&dir)
+        .spawn();
+    let third = solve_all(&h3);
+    assert_same_outcomes(&first, &third, "post-compaction pass vs original");
+    let m = h3.metrics();
+    let (_, solves, ..) = m.snapshot();
+    assert_eq!(m.warm_hits(), survivors as u64, "every surviving entry answers warm");
+    assert_eq!(solves, (shapes.len() - survivors) as u64, "only compacted keys re-solve");
+    h3.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
