@@ -13,8 +13,9 @@
 //! `with_simd(false)` + `with_suffix_bounds(false)` vs the SIMD kernel at
 //! the same suffix setting — bit-identical down to node counters); runs a
 //! **wire front-door leg** (the same keys through a
-//! [`MappingServer`] over real HTTP — per-request p50/p99 latency and
-//! throughput recorded into the JSON's `wire` field, answers asserted
+//! [`MappingServer`] over real HTTP by the retrying [`WireClient`] —
+//! per-request p50/p99 latency, throughput, and client retries recorded
+//! into the JSON's `wire` field, answers asserted
 //! bit-identical to the in-process path); runs a **distributed-shards
 //! leg** (the same keys through `MappingService::with_shards(4)`,
 //! DESIGN.md §10 — answers asserted bit-identical to the plain service,
@@ -22,8 +23,13 @@
 //! field); runs a **Zipf hit-rate-curve leg** (DESIGN.md §12: one
 //! Zipf-skewed request stream replayed at several cache byte budgets —
 //! answers asserted bit-identical at every budget, hit rate / eviction /
-//! bloom counters recorded into the JSON's `zipf` field); then exercises
-//! the persistent
+//! bloom counters recorded into the JSON's `zipf` field); runs a
+//! **degraded-mode leg** (DESIGN.md §13: the same keys under an injected
+//! warm-store ENOSPC outage — RAM-only mode — answers asserted
+//! bit-identical to the healthy run, `degraded_throughput_ratio` and the
+//! failed-flush count recorded into the JSON's `degraded` field, and the
+//! post-recovery store proven complete by a solve-free reopen); then
+//! exercises the persistent
 //! warm-start path on
 //! the `goma serve --workload 1` key set (identical fingerprints, so a
 //! cache dir populated by that CLI in another process — CI carries one
@@ -36,16 +42,17 @@
 //!        (default `target/goma_warm_bench`).
 
 use goma::arch::Accelerator;
-use goma::coordinator::wire::{self, ArchSpec, SolveSpec, WireReply};
-use goma::coordinator::{MappingServer, MappingService, ServeOptions};
+use goma::coordinator::wire::{ArchSpec, SolveSpec};
+use goma::coordinator::{MappingServer, MappingService, ServeOptions, WireClient};
 use goma::mapping::GemmShape;
 use goma::solver::{
     solve_with_threads, SharedCandidateStore, SolveRequest, SolveResult, SolverOptions,
 };
+use goma::util::fault;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// 24 distinct solve keys: 4 × 3 × 2 extent combinations.
 fn batch() -> Vec<GemmShape> {
@@ -262,10 +269,12 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// The network-front-door leg: the same keys pushed through a
-/// [`MappingServer`] over real HTTP — one cold pass, one cached pass —
-/// recording per-request latency percentiles and throughput, and
-/// asserting every wire answer bit-identical to the in-process path
-/// (certificate counters included).
+/// [`MappingServer`] over real HTTP by the retrying [`WireClient`] (the
+/// production client path — sheds are absorbed by its backoff policy
+/// instead of failing the bench) — one cold pass, one cached pass —
+/// recording per-request latency percentiles, throughput, and client
+/// retries, and asserting every wire answer bit-identical to the
+/// in-process path (certificate counters included).
 fn wire_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
     let service = MappingService::default().with_workers(4).spawn();
     let server = MappingServer::spawn(service, ServeOptions::default()).expect("bind");
@@ -281,27 +290,23 @@ fn wire_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
             },
         )
     };
+    let mut client = WireClient::new(addr.to_string());
     let t = Instant::now();
     let mut lats = Vec::new();
     let mut wire_results = Vec::new();
     for pass in 0..2 {
         for &s in shapes {
-            let body = spec_for(s).to_json().to_text();
+            let spec = spec_for(s);
             let t0 = Instant::now();
-            let (status, reply) =
-                wire::http_call(addr, "POST", "/solve", &[], &body).expect("wire call");
+            let r = client.solve(&spec).expect("wire call");
             lats.push(t0.elapsed().as_secs_f64());
-            match wire::parse_reply(status, &reply).expect("well-formed reply") {
-                WireReply::Ok(r) => {
-                    if pass == 0 {
-                        wire_results.push(*r);
-                    }
-                }
-                other => panic!("unexpected wire reply: {other:?}"),
+            if pass == 0 {
+                wire_results.push(*r);
             }
         }
     }
     let total_s = t.elapsed().as_secs_f64();
+    let retries = client.retries();
     for (s, w) in shapes.iter().zip(&wire_results) {
         let local = server.service().map(*s, arch.clone()).expect("bench instances are feasible");
         assert_eq!(w.mapping, local.mapping, "the wire changed the mapping for {s}");
@@ -319,12 +324,12 @@ fn wire_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
     let rps = lats.len() as f64 / total_s.max(1e-12);
     println!(
         "wire front door ({} requests over 2 passes): p50 {p50:.6}s  p99 {p99:.6}s  \
-         {rps:.1} req/s  ({sheds} shed)",
+         {rps:.1} req/s  ({sheds} shed, {retries} client retries)",
         lats.len()
     );
     format!(
         "{{\"requests\": {}, \"p50_s\": {p50}, \"p99_s\": {p99}, \
-         \"throughput_rps\": {rps}, \"shed\": {sheds}}}",
+         \"throughput_rps\": {rps}, \"shed\": {sheds}, \"client_retries\": {retries}}}",
         lats.len()
     )
 }
@@ -479,6 +484,96 @@ fn dist_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
     record
 }
 
+/// Degraded-mode leg (DESIGN.md §13): the same keys through a service
+/// whose warm-store flushes fail with an injected ENOSPC for the whole
+/// run, forcing RAM-only degraded mode. Answers are asserted
+/// bit-identical to the healthy run — an outage is a durability and
+/// throughput event, never a correctness event — and the
+/// healthy/degraded throughput ratio is recorded for the trajectory
+/// row. The outage is lifted before shutdown so the exit flush lands
+/// the full RAM union, proven by a solve-free reopen of the same dir.
+fn degraded_leg(arch: &Accelerator, shapes: &[GemmShape]) -> String {
+    let run = |outage: bool, dir: &Path| -> (Vec<Arc<SolveResult>>, f64, u64) {
+        let handle = MappingService::default()
+            .with_workers(4)
+            .with_cache_dir(dir)
+            .with_flush_every(1)
+            .spawn();
+        let t = Instant::now();
+        let results: Vec<Arc<SolveResult>> = handle
+            .submit_batch(arch, shapes)
+            .into_iter()
+            .map(|p| p.wait().expect("bench instances are feasible"))
+            .collect();
+        let dt = t.elapsed().as_secs_f64();
+        let m = handle.metrics();
+        if outage {
+            // The failing flush runs on the service thread; wait for the
+            // latch rather than racing it.
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while !m.warm_degraded() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            assert!(m.warm_degraded(), "the injected ENOSPC must latch degraded mode");
+            // Lift the outage before shutdown so the exit flush persists
+            // the RAM union the failed windows kept.
+            fault::clear();
+        }
+        let failures = m.warm_write_failures();
+        handle.shutdown();
+        (results, dt, failures)
+    };
+
+    let pid = std::process::id();
+    let healthy_dir = PathBuf::from("target").join(format!("goma_degraded_healthy_{pid}"));
+    let outage_dir = PathBuf::from("target").join(format!("goma_degraded_outage_{pid}"));
+    for d in [&healthy_dir, &outage_dir] {
+        let _ = std::fs::remove_dir_all(d);
+        std::fs::create_dir_all(d).expect("bench scratch dir");
+    }
+
+    let (base, healthy_s, healthy_failures) = run(false, &healthy_dir);
+    assert_eq!(healthy_failures, 0, "the healthy run must not see write failures");
+
+    fault::install("0:warm.flush.write=err:enospc")
+        .expect("bench builds compile the chaos registry via the dev-dependency");
+    let (degraded, degraded_s, failures) = run(true, &outage_dir);
+    assert!(failures >= 1, "the outage run must record its failed flushes");
+    for ((d, b), shape) in degraded.iter().zip(&base).zip(shapes) {
+        assert_eq!(d.mapping, b.mapping, "degraded mode changed the mapping on {shape}");
+        assert_eq!(
+            d.energy.normalized.to_bits(),
+            b.energy.normalized.to_bits(),
+            "degraded mode changed the energy on {shape}"
+        );
+        assert_eq!(
+            d.certificate.nodes, b.certificate.nodes,
+            "degraded mode changed the node counter on {shape}"
+        );
+    }
+    // The lifted outage's exit flush must have landed the whole union:
+    // a reopen answers the batch without a single solve.
+    let (_, reopen_solves, reopen_hits) = run_once(4, arch, shapes, Some(&outage_dir));
+    assert_eq!(reopen_solves, 0, "the recovery flush must persist every RAM entry");
+    assert!(reopen_hits > 0, "reopened answers must come from the healed store");
+
+    let ratio = healthy_s / degraded_s.max(1e-12);
+    println!(
+        "degraded mode ({} keys): healthy {healthy_s:.4}s -> RAM-only {degraded_s:.4}s \
+         (x{ratio:.2}; {failures} failed flushes; reopen {reopen_hits} hits, 0 solves)",
+        shapes.len()
+    );
+    let record = format!(
+        "{{\"keys\": {}, \"healthy_s\": {healthy_s}, \"degraded_s\": {degraded_s}, \
+         \"degraded_throughput_ratio\": {ratio}, \"warm_write_failures\": {failures}}}",
+        shapes.len()
+    );
+    for d in [&healthy_dir, &outage_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    record
+}
+
 fn main() {
     let smoke = std::env::var("GOMA_SMOKE").is_ok();
     let arch = Accelerator::custom("bench-pool", 1 << 17, 64, 64);
@@ -548,17 +643,24 @@ fn main() {
     // every budget.
     let zipf_record = zipf_leg(&arch, &full[..store_n], smoke);
 
+    // Degraded-mode leg: the same keys under an injected warm-store
+    // outage (DESIGN.md §13), answers asserted bit-identical to the
+    // healthy run and the throughput ratio recorded.
+    let degraded_record = degraded_leg(&arch, &full[..if smoke { 8 } else { 16 }]);
+
     let json = format!(
         "{{\n  \"bench\": \"coordinator_seeding\",\n  \"smoke\": {},\n  \
          \"legs\": [\n    {}\n  ],\n  \"candidate_store\": {},\n  \
-         \"scalar_kernel\": {},\n  \"wire\": {},\n  \"dist\": {},\n  \"zipf\": {}\n}}\n",
+         \"scalar_kernel\": {},\n  \"wire\": {},\n  \"dist\": {},\n  \"zipf\": {},\n  \
+         \"degraded\": {}\n}}\n",
         smoke,
         ab_records.join(",\n    "),
         store_record,
         scalar_record,
         wire_record,
         dist_record,
-        zipf_record
+        zipf_record,
+        degraded_record
     );
     // Anchored to the workspace root (CARGO_MANIFEST_DIR is `rust/`), like
     // BENCH_solver.json: cargo runs bench binaries with the package dir as

@@ -21,6 +21,7 @@ USAGE:
     goma solve --m <M> --n <N> --k <K> [--arch eyeriss|gemmini|a100|tpu] [--solve-threads <N>]
                [--seed-bounds on|off] [--simd on|off|auto] [--suffix-bounds on|off]
                [--cache-budget-bytes <B>] [--deadline-ms <MS>] [--shards <N>]
+               [--remote <ADDR>]   (solve over the wire against a running goma serve)
     goma solve-shard    (internal: distributed-solve worker, spawned by --shards)
     goma templates
     goma workloads
@@ -171,12 +172,36 @@ fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         },
         None => None,
     };
-    let r = match shards {
-        Some(n) => {
+    // `--remote ADDR` sends exactly the same SolveSpec over the wire to a
+    // running `goma serve --listen` instead of solving here; the retrying
+    // client ([`crate::coordinator::WireClient`]) handles sheds and
+    // connect failures, and the reply is bit-identical to the local path.
+    let remote = match flags.get("remote") {
+        Some(a) if a == "true" => {
+            anyhow::bail!("--remote needs an address (e.g. --remote 127.0.0.1:8080)")
+        }
+        Some(a) => Some(a.clone()),
+        None => None,
+    };
+    let r = match (remote, shards) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--remote and --shards are mutually exclusive (sharding is the server's)")
+        }
+        (Some(addr), None) => {
+            let mut client = crate::coordinator::WireClient::new(addr.clone());
+            let result = client
+                .solve(&spec)
+                .map_err(|e| anyhow::anyhow!("remote solve against {addr} failed: {e}"))?;
+            if client.retries() > 0 {
+                eprintln!("[remote] answered after {} retried attempt(s)", client.retries());
+            }
+            *result
+        }
+        (None, Some(n)) => {
             let dopts = DistOptions { shards: n, ..DistOptions::default() };
             solve_dist(shape, &acc, opts, None, &dopts)?
         }
-        None => SolveRequest::new(shape, &acc).options(opts).solve()?,
+        (None, None) => SolveRequest::new(shape, &acc).options(opts).solve()?,
     };
     println!("workload : {shape}");
     println!("arch     : {}", acc.name);
@@ -201,8 +226,15 @@ fn cmd_solve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     );
     if r.certificate.shards > 0 {
         println!(
-            "dist     : merged from {} shard(s), {} chunk retry(ies)",
-            r.certificate.shards, r.certificate.shard_retries
+            "dist     : merged from {} shard(s), {} chunk retry(ies), {} respawn(s){}",
+            r.certificate.shards,
+            r.certificate.shard_retries,
+            r.certificate.shard_respawns,
+            if r.certificate.breaker_trips > 0 {
+                ", spawn breaker tripped"
+            } else {
+                ""
+            }
         );
     }
     println!("verified : {}", r.certificate.verify(&r.mapping, shape, &acc));

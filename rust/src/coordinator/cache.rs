@@ -418,6 +418,43 @@ mod tests {
     }
 
     #[test]
+    fn churn_rebuild_restores_the_fast_miss_path() {
+        let m = metrics();
+        let per = entry_bytes(&neg(1));
+        // One shard with a one-entry budget: every insert evicts its
+        // predecessor, so eviction churn is exactly the insert count minus
+        // one and the rebuild threshold (churn > live + 64) is crossed on a
+        // known schedule.
+        let c = BoundedShardCache::new(1, Some(per), m.clone());
+        let keys: Vec<u64> =
+            (1..=200u64).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15)).collect();
+        for &k in &keys {
+            c.insert(k, neg(1));
+        }
+        // 199 evictions at a threshold of 65 means the filter rebuilt at
+        // least three times; without the rebuild, churn would sit at 199.
+        let churn = c.shards[0].state.lock().unwrap().churn;
+        assert!(churn <= 65, "rebuild must reset churn, found {churn}");
+
+        // Keys evicted before the last rebuild were scrubbed from the
+        // filter: probing them is a lock-free fast miss again instead of a
+        // counted false positive (modulo the filter's design collision
+        // rate — with ≤ 2 live keys set, collisions are vanishingly rare).
+        let fast_before = m.bloom_hits();
+        let slow_before = m.bloom_false_positives();
+        for &k in &keys[..64] {
+            assert!(c.get(k).is_none(), "evicted keys stay evicted");
+        }
+        let fast = m.bloom_hits() - fast_before;
+        let slow = m.bloom_false_positives() - slow_before;
+        assert_eq!(fast + slow, 64, "every probe is classified exactly once");
+        assert!(fast >= 56, "rebuilt filter must fast-miss long-dead keys, got {fast}/64");
+
+        // The rebuild never drops live keys: the resident entry still hits.
+        assert!(c.get(*keys.last().unwrap()).is_some(), "live key must survive the rebuild");
+    }
+
+    #[test]
     fn bloom_counters_split_fast_misses_from_false_positives() {
         let m = metrics();
         let per = entry_bytes(&neg(1));

@@ -1,0 +1,386 @@
+//! A retrying wire client for [`super::MappingServer`] (DESIGN.md §13).
+//!
+//! [`super::wire::http_call`] is a one-shot protocol helper: an IO error
+//! tells the caller nothing about *when* the call died, so it cannot
+//! safely retry. This client phases the call — connect, send, status
+//! line, headers, body — and derives its retry policy from the phase:
+//!
+//! * **Before any reply byte** (connect refused/reset, send failure, a
+//!   dead socket at the status line) the request provably went
+//!   unanswered, and re-submitting is idempotent by the bit-identity
+//!   contract: the server's answer for a key is the same bits no matter
+//!   which replica, route, or retry produces it, and sheds/cache hits
+//!   make duplicate submissions harmless. Retry with jittered
+//!   exponential backoff.
+//! * **Sheds** (`503` overload / `429` quota) are explicit "not an
+//!   answer, try again" refusals — retryable by design (DESIGN.md §9).
+//! * **After a `200` status line** the answer has begun. A failure here
+//!   ([`ClientError::TornReply`]) is *never* retried: the request *was*
+//!   answered — the bytes just didn't survive the socket — and the
+//!   caller, not this layer, must decide whether to re-issue it as a new
+//!   request.
+//! * **Definitive verdicts** — `422` solver errors, `400` rejections —
+//!   are answers, not failures; retrying cannot change them.
+//!
+//! Backoff is seeded ([`ClientOptions::seed`]) so tests and the chaos
+//! sweep get reproducible retry schedules, and deadline-aware: the sleep
+//! is clipped to the remaining budget and no attempt starts past it.
+//! Used by `goma solve --remote ADDR` and the throughput bench's wire
+//! leg.
+
+use super::wire::{self, SolveSpec, WireReply};
+use crate::solver::{SolveError, SolveResult};
+use crate::util::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Per-socket-operation timeout when no overall deadline tightens it.
+const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Retry policy. Defaults: 4 retries (5 attempts), 25 ms base doubling to
+/// an 800 ms cap, jittered to `[backoff/2, backoff]`, no overall deadline.
+#[derive(Debug, Clone)]
+pub struct ClientOptions {
+    /// Retries after the first attempt (0 = single-shot).
+    pub max_retries: u32,
+    /// First backoff window; doubles per retry up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Overall wall-clock budget per [`WireClient::solve`] call, covering
+    /// every attempt and backoff sleep. `None` = bounded by `max_retries`
+    /// and the per-operation IO timeouts only.
+    pub deadline: Option<Duration>,
+    /// Jitter seed — fixed so a given client's retry schedule is
+    /// reproducible (the chaos sweep depends on this).
+    pub seed: u64,
+}
+
+impl Default for ClientOptions {
+    fn default() -> Self {
+        ClientOptions {
+            max_retries: 4,
+            backoff_base: Duration::from_millis(25),
+            backoff_cap: Duration::from_millis(800),
+            deadline: None,
+            seed: 0xC11E57,
+        }
+    }
+}
+
+/// Why a [`WireClient::solve`] call did not return a result.
+#[derive(Debug)]
+pub enum ClientError {
+    /// A definitive `422` solver-level answer (infeasible, interrupted).
+    /// Not a transport failure — retrying cannot change it.
+    Solve(SolveError),
+    /// The server rejected the request itself (`400`/`404`/`405`) —
+    /// deterministic, never retried.
+    Rejected(String),
+    /// A `200` reply began and then broke or failed to parse. Never
+    /// retried (see the module docs); the caller decides what to do.
+    TornReply(String),
+    /// Every attempt failed retryably (or the deadline expired first);
+    /// carries the last failure's description.
+    Unavailable(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Solve(e) => write!(f, "solver error: {e}"),
+            ClientError::Rejected(msg) => write!(f, "request rejected: {msg}"),
+            ClientError::TornReply(msg) => {
+                write!(f, "answer began but did not survive the socket: {msg}")
+            }
+            ClientError::Unavailable(msg) => write!(f, "server unavailable: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// One attempt's verdict: final (return to the caller) or retryable.
+enum Attempt {
+    Done(Result<Box<SolveResult>, ClientError>),
+    Retry(String),
+}
+
+/// A retrying `POST /solve` client. Holds no connection — each attempt
+/// uses a fresh one (`Connection: close`), so a retry can never be
+/// poisoned by a half-dead keep-alive socket.
+pub struct WireClient {
+    addr: String,
+    opts: ClientOptions,
+    rng: Rng,
+    retries: u64,
+}
+
+impl WireClient {
+    pub fn new<A: Into<String>>(addr: A) -> Self {
+        WireClient::with_options(addr, ClientOptions::default())
+    }
+
+    pub fn with_options<A: Into<String>>(addr: A, opts: ClientOptions) -> Self {
+        let rng = Rng::seed_from_u64(opts.seed);
+        WireClient { addr: addr.into(), opts, rng, retries: 0 }
+    }
+
+    /// Attempts that failed retryably over this client's lifetime
+    /// (provenance, like the service's `shard_retries` — a retry never
+    /// changes an answer).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Solve `spec` remotely. `Ok` carries the server's bit-exact
+    /// [`SolveResult`]; every shed / connect failure / pre-reply IO error
+    /// is retried under the backoff policy, everything else is final.
+    pub fn solve(&mut self, spec: &SolveSpec) -> Result<Box<SolveResult>, ClientError> {
+        let body = spec.to_json().to_text();
+        let deadline = self.opts.deadline.map(|d| Instant::now() + d);
+        let mut backoff = self.opts.backoff_base;
+        let mut last = String::new();
+        for attempt in 0..=self.opts.max_retries {
+            if attempt > 0 {
+                // Jittered sleep in [backoff/2, backoff], clipped to the
+                // remaining deadline; the window doubles per retry.
+                let half = (backoff / 2).as_micros() as u64;
+                let mut sleep = backoff / 2 + Duration::from_micros(self.rng.gen_range(half + 1));
+                if let Some(d) = deadline {
+                    let now = Instant::now();
+                    if d <= now {
+                        break;
+                    }
+                    sleep = sleep.min(d - now);
+                }
+                std::thread::sleep(sleep);
+                backoff = (backoff * 2).min(self.opts.backoff_cap);
+            }
+            if deadline.is_some_and(|d| d <= Instant::now()) {
+                break;
+            }
+            match self.attempt(&body, deadline) {
+                Attempt::Done(r) => return r,
+                Attempt::Retry(msg) => {
+                    self.retries += 1;
+                    last = msg;
+                }
+            }
+        }
+        if last.is_empty() {
+            last = "deadline expired before the first attempt".to_string();
+        }
+        Err(ClientError::Unavailable(last))
+    }
+
+    /// One phased attempt (see the module docs for the phase → policy
+    /// mapping).
+    fn attempt(&self, body: &str, deadline: Option<Instant>) -> Attempt {
+        let io_timeout = match deadline {
+            Some(d) => {
+                let now = Instant::now();
+                if d <= now {
+                    return Attempt::Retry("deadline expired".to_string());
+                }
+                (d - now).min(DEFAULT_IO_TIMEOUT)
+            }
+            None => DEFAULT_IO_TIMEOUT,
+        };
+        // Phase 1: connect. Refused/reset here means no server saw the
+        // request at all.
+        let mut stream = match TcpStream::connect(&self.addr) {
+            Ok(s) => s,
+            Err(e) => return Attempt::Retry(format!("connect: {e}")),
+        };
+        let _ = stream.set_read_timeout(Some(io_timeout));
+        let _ = stream.set_write_timeout(Some(io_timeout));
+        // Phase 2: send. A failed (even partial) send is unanswered by
+        // construction — the server answers whole requests only.
+        let req = format!(
+            "POST /solve HTTP/1.1\r\nHost: goma\r\nConnection: close\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        if let Err(e) = stream.write_all(req.as_bytes()).and_then(|()| stream.flush()) {
+            return Attempt::Retry(format!("send: {e}"));
+        }
+        // Phase 3: the status line — the commit point. Nothing readable
+        // (EOF, reset, timeout, or a line too garbled to carry a status
+        // code) means no answer was committed to us; retry.
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        match reader.read_line(&mut status_line) {
+            Ok(0) => return Attempt::Retry("connection closed before a status line".to_string()),
+            Ok(_) => {}
+            Err(e) => return Attempt::Retry(format!("status line: {e}")),
+        }
+        let Some(status) = status_line.split_whitespace().nth(1).and_then(|s| s.parse::<u16>().ok())
+        else {
+            return Attempt::Retry(format!("garbled status line {status_line:?}"));
+        };
+        // Phase 4: headers + body. From here the policy splits on the
+        // status: a 200's bytes are an answer in flight (failures are
+        // final), everything else is still a refusal or verdict whose
+        // loss is retryable.
+        let mut content_length = 0usize;
+        loop {
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                Ok(0) => {
+                    return torn_or_retry(status, "connection closed mid-headers".to_string());
+                }
+                Ok(_) => {}
+                Err(e) => return torn_or_retry(status, format!("headers: {e}")),
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+        let mut raw = vec![0u8; content_length];
+        if let Err(e) = reader.read_exact(&mut raw) {
+            return torn_or_retry(status, format!("body: {e}"));
+        }
+        let Ok(reply_body) = String::from_utf8(raw) else {
+            return torn_or_retry(status, "non-utf8 body".to_string());
+        };
+        classify(status, &reply_body)
+    }
+}
+
+/// A post-status-line failure: final for a `200` (the answer began),
+/// retryable for everything else (a lost refusal proves nothing).
+fn torn_or_retry(status: u16, msg: String) -> Attempt {
+    if status == 200 {
+        Attempt::Done(Err(ClientError::TornReply(msg)))
+    } else {
+        Attempt::Retry(format!("HTTP {status}: {msg}"))
+    }
+}
+
+/// Map a complete `(status, body)` reply onto the retry policy.
+fn classify(status: u16, body: &str) -> Attempt {
+    match status {
+        200 => match wire::parse_reply(200, body) {
+            Ok(WireReply::Ok(r)) => Attempt::Done(Ok(r)),
+            // A complete-but-unparseable 200 (e.g. a corrupted reply) is
+            // still an answer that began: final, never retried.
+            Ok(_) => Attempt::Done(Err(ClientError::TornReply(
+                "200 carried a non-ok payload".to_string(),
+            ))),
+            Err(e) => Attempt::Done(Err(ClientError::TornReply(e))),
+        },
+        422 => match wire::parse_reply(422, body) {
+            Ok(WireReply::Solve(e)) => Attempt::Done(Err(ClientError::Solve(e))),
+            // The verdict is deterministic; a garbled copy of it may be
+            // re-requested safely.
+            _ => Attempt::Retry("garbled 422 reply".to_string()),
+        },
+        503 | 429 => Attempt::Retry(format!("shed (HTTP {status})")),
+        400 | 404 | 405 => {
+            let detail = crate::util::Json::parse(body)
+                .ok()
+                .and_then(|v| v.get("error").and_then(|e| e.as_str().map(String::from)))
+                .unwrap_or_else(|| body.trim().to_string());
+            Attempt::Done(Err(ClientError::Rejected(format!("HTTP {status}: {detail}"))))
+        }
+        other => Attempt::Retry(format!("unexpected HTTP {other}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::TcpListener;
+
+    #[test]
+    fn classify_routes_every_status_family() {
+        assert!(matches!(classify(503, "{\"status\":\"shed\"}"), Attempt::Retry(_)));
+        assert!(matches!(classify(429, "{}"), Attempt::Retry(_)));
+        assert!(matches!(
+            classify(400, "{\"status\":\"bad_request\",\"error\":\"nope\"}"),
+            Attempt::Done(Err(ClientError::Rejected(m))) if m.contains("nope")
+        ));
+        assert!(matches!(
+            classify(200, "definitely not json"),
+            Attempt::Done(Err(ClientError::TornReply(_)))
+        ));
+        assert!(matches!(
+            classify(422, "{\"status\":\"error\",\"error\":\"no_feasible_mapping\"}"),
+            Attempt::Done(Err(ClientError::Solve(SolveError::NoFeasibleMapping)))
+        ));
+        assert!(matches!(classify(418, ""), Attempt::Retry(_)));
+    }
+
+    #[test]
+    fn torn_reply_is_final_only_for_200() {
+        assert!(matches!(
+            torn_or_retry(200, "body: eof".to_string()),
+            Attempt::Done(Err(ClientError::TornReply(_)))
+        ));
+        assert!(matches!(torn_or_retry(503, "body: eof".to_string()), Attempt::Retry(_)));
+    }
+
+    #[test]
+    fn connect_failures_retry_until_exhausted_with_counted_attempts() {
+        // Bind-then-drop: the port was just free, so connecting fails fast.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let opts = ClientOptions {
+            max_retries: 2,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(2),
+            ..ClientOptions::default()
+        };
+        let mut client = WireClient::with_options(addr, opts);
+        let spec = SolveSpec::new(
+            crate::mapping::GemmShape::new(8, 8, 8),
+            super::super::wire::ArchSpec::Template("eyeriss".into()),
+        );
+        let err = client.solve(&spec).unwrap_err();
+        assert!(matches!(err, ClientError::Unavailable(_)), "{err}");
+        assert_eq!(client.retries(), 3, "every failed attempt is counted");
+    }
+
+    #[test]
+    fn a_torn_200_is_never_retried() {
+        // A one-shot server that sends half a 200 and slams the socket.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let accepts = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let seen = accepts.clone();
+        let server = std::thread::spawn(move || {
+            for stream in listener.incoming().take(1) {
+                let mut s = stream.unwrap();
+                seen.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                let mut buf = [0u8; 4096];
+                use std::io::Read as _;
+                let _ = s.read(&mut buf);
+                let _ = s.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 999\r\n\r\n{\"st");
+                // Drop: the client sees EOF mid-body.
+            }
+        });
+        let mut client = WireClient::with_options(
+            addr,
+            ClientOptions { backoff_base: Duration::from_millis(1), ..ClientOptions::default() },
+        );
+        let spec = SolveSpec::new(
+            crate::mapping::GemmShape::new(8, 8, 8),
+            super::super::wire::ArchSpec::Template("eyeriss".into()),
+        );
+        let err = client.solve(&spec).unwrap_err();
+        assert!(matches!(err, ClientError::TornReply(_)), "{err}");
+        assert_eq!(client.retries(), 0, "a begun 200 must never be retried");
+        server.join().unwrap();
+        assert_eq!(accepts.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+}

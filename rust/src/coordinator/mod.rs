@@ -46,18 +46,24 @@
 //!   budget net of queueing time, and a Prometheus `/metrics` endpoint.
 //!   Wire answers are bit-identical to in-process
 //!   [`ServiceHandle::submit_batch`] answers (the wire serializes floats
-//!   by bit pattern), proven by `rust/tests/server.rs`.
+//!   by bit pattern), proven by `rust/tests/server.rs`. The matching
+//!   client side is [`WireClient`] (`goma solve --remote`): phased
+//!   deadline-aware retries with jittered backoff on sheds and connect
+//!   failures, never retrying once a `200` body has begun (DESIGN.md
+//!   §13).
 //!
 //! The compiled-artifact execution path ([`crate::runtime`]) hangs off the
 //! same process, so a request can go mapping → (optionally) execution
 //! without Python anywhere on the path.
 
 mod cache;
+pub mod client;
 mod server;
 mod service;
 mod warm;
 pub mod wire;
 
+pub use client::{ClientError, ClientOptions, WireClient};
 pub use server::{MappingServer, ServeOptions, ServerHandle, ServerMetrics};
 pub use service::{
     arch_options_fingerprint, shape_fingerprint, solve_fingerprint, MappingService, Pending,

@@ -10,7 +10,12 @@
 //! * `GET /metrics` — Prometheus text exposition: the service's counters,
 //!   the server's admission/shed counters, the queue-depth gauge, and an
 //!   answered-request latency histogram.
-//! * `GET /healthz` — liveness probe.
+//! * `GET /healthz` — liveness probe ("the process is up").
+//! * `GET /readyz` — readiness probe ("send this replica traffic"):
+//!   `ok`, `degraded` (still 200 — answers stay bit-exact while the warm
+//!   store is failing to flush, the distributed spawn breaker is open, or
+//!   the admission gauge sits at threshold), or `draining` (503, shutdown
+//!   begun). See [`readiness`] and DESIGN.md §13.
 //!
 //! **Admission control** (the load-shedding rule): a solve request is
 //! admitted only while the service's `queue_depth` gauge — requests
@@ -40,6 +45,7 @@
 
 use super::service::{ServiceHandle, ServiceMetrics};
 use super::wire::{self, SolveSpec};
+use crate::util::fault::{self, Fault};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -57,6 +63,15 @@ const MAX_BODY_BYTES: usize = 1 << 20;
 /// timeout just re-checks the shutdown flag; mid-request it drops the
 /// connection (a stalled sender, not a stalled server).
 const READ_TIMEOUT: Duration = Duration::from_millis(1000);
+
+/// Per-write socket timeout. A client that stops reading while a response
+/// is in flight eventually fills the kernel send buffer, and an uncapped
+/// `write_all` then holds the connection thread hostage indefinitely. With
+/// the cap, the stalled write errors out, the connection is dropped, and
+/// the failure is counted in `goma_wire_write_errors_total` — the solver
+/// side is unaffected (the request was already answered and any proof
+/// cached; the client simply never received the bytes).
+const WRITE_TIMEOUT: Duration = Duration::from_millis(2000);
 
 /// Latency histogram bucket upper bounds, in seconds (`+Inf` implicit).
 const LATENCY_BUCKETS: [f64; 7] = [0.001, 0.005, 0.025, 0.1, 0.5, 2.5, 10.0];
@@ -167,6 +182,12 @@ impl Histogram {
 ///
 /// is exact at quiescence and is asserted by the stress test and the CI
 /// smoke leg.
+///
+/// The write-error counters are overlays, not classification slots: a
+/// request whose *response write* times out or hits a broken pipe was
+/// still answered (classified `answered_*` above) — the client just never
+/// received the bytes. Retrying such a request is always sound: answers
+/// are bit-identical and re-answering from cache is idempotent.
 pub struct ServerMetrics {
     solve_requests: AtomicU64,
     answered_ok: AtomicU64,
@@ -174,6 +195,9 @@ pub struct ServerMetrics {
     shed_overload: AtomicU64,
     shed_quota: AtomicU64,
     bad_requests: AtomicU64,
+    write_timeouts: AtomicU64,
+    write_pipe_errors: AtomicU64,
+    write_other_errors: AtomicU64,
     latency: Histogram,
 }
 
@@ -186,6 +210,9 @@ impl ServerMetrics {
             shed_overload: AtomicU64::new(0),
             shed_quota: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
+            write_timeouts: AtomicU64::new(0),
+            write_pipe_errors: AtomicU64::new(0),
+            write_other_errors: AtomicU64::new(0),
             latency: Histogram::new(),
         }
     }
@@ -207,6 +234,19 @@ impl ServerMetrics {
     }
     pub fn bad_requests(&self) -> u64 {
         self.bad_requests.load(Ordering::Relaxed)
+    }
+    /// Response writes that hit the [`WRITE_TIMEOUT`] (slow-reading client).
+    pub fn write_timeouts(&self) -> u64 {
+        self.write_timeouts.load(Ordering::Relaxed)
+    }
+    /// Response writes that hit a broken pipe / connection reset (client
+    /// went away mid-response).
+    pub fn write_pipe_errors(&self) -> u64 {
+        self.write_pipe_errors.load(Ordering::Relaxed)
+    }
+    /// Response writes that failed for any other reason.
+    pub fn write_other_errors(&self) -> u64 {
+        self.write_other_errors.load(Ordering::Relaxed)
     }
     /// Answered requests observed by the latency histogram
     /// (`== answered_ok + answered_err` at quiescence).
@@ -299,6 +339,13 @@ fn accept_loop(listener: &TcpListener, conn_tx: &Sender<TcpStream>, ctx: &Server
     while !ctx.stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
+                // Chaos site: an injected accept failure drops the fresh
+                // connection on the floor (the client sees a reset — a
+                // retryable connect error, never a half-answered request).
+                if fault::check_io("server.conn.accept").is_err() {
+                    drop(stream);
+                    continue;
+                }
                 if conn_tx.send(stream).is_err() {
                     return;
                 }
@@ -413,10 +460,41 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> ReadOutcome {
     let Ok(body) = String::from_utf8(body) else {
         return ReadOutcome::Broken;
     };
+    // Chaos site, placed *after* the parse so hit ordinals count actual
+    // requests (the 1-second idle polls above never consume one): an
+    // injected read fault drops the connection as if the request had
+    // arrived damaged.
+    match fault::hit("server.conn.read") {
+        None => {}
+        Some(Fault::Delay(d)) => std::thread::sleep(d),
+        Some(Fault::Kill) => std::process::exit(fault::KILL_EXIT_CODE),
+        Some(_) => return ReadOutcome::Broken,
+    }
     ReadOutcome::Request(Box::new(HttpRequest { method, path, headers, body }))
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) {
+/// Classify a failed response write into `goma_wire_write_errors_total`.
+/// `WouldBlock` counts as a timeout: on some platforms a socket write
+/// timeout surfaces as `WouldBlock` rather than `TimedOut`.
+fn count_write_error(m: &ServerMetrics, e: &std::io::Error) {
+    use std::io::ErrorKind;
+    let slot = match e.kind() {
+        ErrorKind::TimedOut | ErrorKind::WouldBlock => &m.write_timeouts,
+        ErrorKind::BrokenPipe | ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted => {
+            &m.write_pipe_errors
+        }
+        _ => &m.write_other_errors,
+    };
+    slot.fetch_add(1, Ordering::Relaxed);
+}
+
+fn write_response(
+    m: &ServerMetrics,
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -432,8 +510,52 @@ fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body:
          Content-Length: {}\r\n\r\n",
         body.len()
     );
-    let _ = stream.write_all(head.as_bytes()).and_then(|()| stream.write_all(body.as_bytes()));
-    let _ = stream.flush();
+    // Chaos site: injected response-write failures exercise the same
+    // accounting as real ones — an `err` flavor is counted without
+    // touching the socket, a torn write sends a prefix then drops the
+    // connection mid-body (what a client sees when a server dies while
+    // replying), and a delay stalls the reply without failing it.
+    match fault::hit("server.conn.write") {
+        None => {}
+        Some(Fault::Delay(d)) => std::thread::sleep(d),
+        Some(Fault::Kill) => std::process::exit(fault::KILL_EXIT_CODE),
+        Some(Fault::Err(flavor)) => {
+            count_write_error(m, &fault::flavor_error(flavor));
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return;
+        }
+        Some(Fault::Torn(keep)) => {
+            let full = [head.as_bytes(), body.as_bytes()].concat();
+            let _ = stream.write_all(&full[..keep.min(full.len())]);
+            let _ = stream.flush();
+            count_write_error(
+                m,
+                &std::io::Error::new(std::io::ErrorKind::BrokenPipe, "injected torn write"),
+            );
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return;
+        }
+        Some(Fault::Corrupt) => {
+            // A corrupted reply keeps the framing valid (same length) so
+            // the client's *parser*, not its socket, rejects it.
+            let garbled = "X".repeat(body.len());
+            if let Err(e) = stream
+                .write_all(head.as_bytes())
+                .and_then(|()| stream.write_all(garbled.as_bytes()))
+                .and_then(|()| stream.flush())
+            {
+                count_write_error(m, &e);
+            }
+            return;
+        }
+    }
+    if let Err(e) = stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(body.as_bytes()))
+        .and_then(|()| stream.flush())
+    {
+        count_write_error(m, &e);
+    }
 }
 
 fn serve_connection(stream: TcpStream, ctx: &ServerCtx) {
@@ -441,6 +563,7 @@ fn serve_connection(stream: TcpStream, ctx: &ServerCtx) {
     // every platform; force blocking + timeout explicitly.
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let Ok(mut writer) = stream.try_clone() else {
         return;
     };
@@ -486,17 +609,47 @@ impl Drop for QuotaSlot<'_> {
     }
 }
 
+/// The readiness decision (DESIGN.md §13). Liveness (`/healthz`) asks "is
+/// the process up"; readiness asks "should this replica receive traffic":
+///
+/// * `draining` (503) — shutdown has begun; stop routing here.
+/// * `degraded` (200) — still answering, but impaired: warm-store flushes
+///   are failing (RAM-only mode), the distributed spawn breaker is open
+///   (solves fall back in-process), or the admission gauge sits at
+///   threshold (new solves would be shed). Deliberately 200: every answer
+///   is still bit-exact, so load balancers should keep the replica while
+///   operators look at the cause.
+/// * `ok` (200) — healthy.
+fn readiness(ctx: &ServerCtx) -> (u16, &'static str) {
+    if ctx.stop.load(Ordering::SeqCst) {
+        return (503, "draining\n");
+    }
+    let s = ctx.service.metrics();
+    if s.warm_degraded()
+        || s.breaker_open()
+        || s.queue_depth() >= ctx.opts.admission_threshold
+    {
+        return (200, "degraded\n");
+    }
+    (200, "ok\n")
+}
+
 fn handle_request(writer: &mut TcpStream, req: &HttpRequest, peer_ip: &str, ctx: &ServerCtx) {
+    let m = &ctx.metrics;
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/solve") => handle_solve(writer, req, peer_ip, ctx),
         ("GET", "/metrics") => {
-            write_response(writer, 200, "text/plain; version=0.0.4", &render_metrics(ctx));
+            write_response(m, writer, 200, "text/plain; version=0.0.4", &render_metrics(ctx));
         }
-        ("GET", "/healthz") => write_response(writer, 200, "text/plain", "ok\n"),
-        ("GET", "/solve") | ("POST", "/metrics") | ("POST", "/healthz") => {
-            write_response(writer, 405, "text/plain", "method not allowed\n");
+        ("GET", "/healthz") => write_response(m, writer, 200, "text/plain", "ok\n"),
+        ("GET", "/readyz") => {
+            let (status, body) = readiness(ctx);
+            write_response(m, writer, status, "text/plain", body);
         }
-        _ => write_response(writer, 404, "text/plain", "not found\n"),
+        ("GET", "/solve") | ("POST", "/metrics") | ("POST", "/healthz") | ("POST", "/readyz") => {
+            write_response(m, writer, 405, "text/plain", "method not allowed\n");
+        }
+        _ => write_response(m, writer, 404, "text/plain", "not found\n"),
     }
 }
 
@@ -521,7 +674,7 @@ fn handle_solve(writer: &mut TcpStream, req: &HttpRequest, peer_ip: &str, ctx: &
             ("error", crate::util::Json::Str(msg)),
         ])
         .to_text();
-        write_response(writer, 400, "application/json", &body);
+        write_response(&ctx.metrics, writer, 400, "application/json", &body);
     };
 
     let spec = match crate::util::Json::parse(&req.body)
@@ -550,7 +703,7 @@ fn handle_solve(writer: &mut TcpStream, req: &HttpRequest, peer_ip: &str, ctx: &
     };
     if over_quota {
         m.shed_quota.fetch_add(1, Ordering::Relaxed);
-        return write_response(writer, 429, "application/json", &shed_body("quota"));
+        return write_response(m, writer, 429, "application/json", &shed_body("quota"));
     }
     let _slot = QuotaSlot { ctx, key: client };
 
@@ -559,7 +712,7 @@ fn handle_solve(writer: &mut TcpStream, req: &HttpRequest, peer_ip: &str, ctx: &
     // inflated by the very requests being refused.
     if ctx.service.metrics().queue_depth() >= ctx.opts.admission_threshold {
         m.shed_overload.fetch_add(1, Ordering::Relaxed);
-        return write_response(writer, 503, "application/json", &shed_body("overloaded"));
+        return write_response(m, writer, 503, "application/json", &shed_body("overloaded"));
     }
 
     let deadline = spec.deadline().map(|d| arrival + d);
@@ -573,7 +726,7 @@ fn handle_solve(writer: &mut TcpStream, req: &HttpRequest, peer_ip: &str, ctx: &
                 ("result", wire::result_to_json(&r)),
             ])
             .to_text();
-            write_response(writer, 200, "application/json", &body);
+            write_response(m, writer, 200, "application/json", &body);
         }
         Err(e) => {
             m.answered_err.fetch_add(1, Ordering::Relaxed);
@@ -582,7 +735,7 @@ fn handle_solve(writer: &mut TcpStream, req: &HttpRequest, peer_ip: &str, ctx: &
                 ("error", crate::util::Json::Str(wire::error_code(&e).into())),
             ])
             .to_text();
-            write_response(writer, 422, "application/json", &body);
+            write_response(m, writer, 422, "application/json", &body);
         }
     }
 }
@@ -620,6 +773,23 @@ fn render_metrics(ctx: &ServerCtx) -> String {
         "Wire requests rejected as malformed.",
         m.bad_requests(),
     );
+    out.push_str(
+        "# HELP goma_wire_write_errors_total Response writes that failed \
+         (the request was still answered and accounted).\n",
+    );
+    out.push_str("# TYPE goma_wire_write_errors_total counter\n");
+    out.push_str(&format!(
+        "goma_wire_write_errors_total{{kind=\"timeout\"}} {}\n",
+        m.write_timeouts()
+    ));
+    out.push_str(&format!(
+        "goma_wire_write_errors_total{{kind=\"pipe\"}} {}\n",
+        m.write_pipe_errors()
+    ));
+    out.push_str(&format!(
+        "goma_wire_write_errors_total{{kind=\"other\"}} {}\n",
+        m.write_other_errors()
+    ));
     counter(&mut out, "goma_service_requests_total", "Requests accepted by the service.", req);
     counter(&mut out, "goma_service_solves_total", "Engine solves executed.", solves);
     counter(&mut out, "goma_service_cache_hits_total", "Requests answered from cache.", hits);
@@ -647,6 +817,24 @@ fn render_metrics(ctx: &ServerCtx) -> String {
         "goma_service_shard_retries_total",
         "Shard unit ranges re-queued after a worker fault.",
         s.shard_retries(),
+    );
+    counter(
+        &mut out,
+        "goma_service_shard_respawns_total",
+        "Workers respawned into dead shard slots.",
+        s.shard_respawns(),
+    );
+    counter(
+        &mut out,
+        "goma_service_breaker_trips_total",
+        "Distributed-solve spawn circuit-breaker trips.",
+        s.breaker_trips(),
+    );
+    counter(
+        &mut out,
+        "goma_service_warm_write_failures_total",
+        "Warm-store flush attempts that failed (RAM tier keeps every proof).",
+        s.warm_write_failures(),
     );
     counter(
         &mut out,

@@ -71,7 +71,7 @@ use crate::solver::{
 use crate::util::parallel::ordered_map;
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -86,7 +86,11 @@ use std::time::{Duration, Instant};
 /// (`shards`/`shard_retries`, DESIGN.md §10) — v4 files are cold-started
 /// wholesale, as every prior version was (v4 had added the bound-ordered
 /// engine's unit-level counters, DESIGN.md §8).
-pub const CACHE_FORMAT_VERSION: u32 = 5;
+/// v6: the certificate gained the supervision counters
+/// (`shard_respawns`/`breaker_trips`, DESIGN.md §13), widening every
+/// persisted line — v5 files are cold-started wholesale, like every
+/// version before them.
+pub const CACHE_FORMAT_VERSION: u32 = 6;
 
 /// Donor mappings kept per architecture for seed planning. Bounds the
 /// O(donors) re-cost work per miss; once full, the oldest entry is
@@ -229,6 +233,19 @@ pub struct ServiceMetrics {
     seed_rejected: AtomicU64,
     shard_solves: AtomicU64,
     shard_retries: AtomicU64,
+    shard_respawns: AtomicU64,
+    breaker_trips: AtomicU64,
+    /// Latched while the most recent distributed solve reported a tripped
+    /// spawn breaker (DESIGN.md §13); cleared by the next breaker-free
+    /// distributed solve. Feeds `/readyz`'s `degraded` state.
+    breaker_open: AtomicBool,
+    /// Warm-store flush attempts that failed (ENOSPC, torn write, …).
+    /// Answers are unaffected — proofs stay cached in RAM and every later
+    /// flush window retries the full union (DESIGN.md §13).
+    warm_write_failures: AtomicU64,
+    /// Latched while warm-store flushes are failing (RAM-only degraded
+    /// mode); cleared by the first flush that lands. Feeds `/readyz`.
+    warm_degraded: AtomicBool,
     queue_depth: AtomicU64,
     per_shard_hits: Vec<AtomicU64>,
     /// Cache-tier counters (evictions, resident bytes, bloom fast
@@ -252,6 +269,11 @@ impl ServiceMetrics {
             seed_rejected: AtomicU64::new(0),
             shard_solves: AtomicU64::new(0),
             shard_retries: AtomicU64::new(0),
+            shard_respawns: AtomicU64::new(0),
+            breaker_trips: AtomicU64::new(0),
+            breaker_open: AtomicBool::new(false),
+            warm_write_failures: AtomicU64::new(0),
+            warm_degraded: AtomicBool::new(false),
             queue_depth: AtomicU64::new(0),
             per_shard_hits: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             cache: Arc::new(CacheMetrics::default()),
@@ -310,6 +332,41 @@ impl ServiceMetrics {
     /// (provenance only — a retry never changes an answer).
     pub fn shard_retries(&self) -> u64 {
         self.shard_retries.load(Ordering::Relaxed)
+    }
+
+    /// Workers respawned into dead shard slots, summed over all
+    /// distributed solves (DESIGN.md §13; provenance only — a respawned
+    /// worker re-scans pure data, never changing an answer).
+    pub fn shard_respawns(&self) -> u64 {
+        self.shard_respawns.load(Ordering::Relaxed)
+    }
+
+    /// Spawn circuit-breaker trips summed over all distributed solves
+    /// (the breaker latches per solve, so each solve contributes 0 or 1).
+    /// A tripped solve is finished by the in-process sweep — answers are
+    /// bit-identical either way.
+    pub fn breaker_trips(&self) -> u64 {
+        self.breaker_trips.load(Ordering::Relaxed)
+    }
+
+    /// Whether the most recent distributed solve tripped its spawn
+    /// breaker (cleared by the next breaker-free distributed solve).
+    /// Feeds `/readyz`'s `degraded` state.
+    pub fn breaker_open(&self) -> bool {
+        self.breaker_open.load(Ordering::Relaxed)
+    }
+
+    /// Warm-store flush attempts that failed (the disk tier is unhealthy;
+    /// the RAM tier keeps every proof and later windows retry the union).
+    pub fn warm_write_failures(&self) -> u64 {
+        self.warm_write_failures.load(Ordering::Relaxed)
+    }
+
+    /// Whether the service is in RAM-only degraded mode: warm-store
+    /// flushes are failing, answers keep flowing, nothing new persists
+    /// until a flush lands again (DESIGN.md §13). Feeds `/readyz`.
+    pub fn warm_degraded(&self) -> bool {
+        self.warm_degraded.load(Ordering::Relaxed)
     }
 
     /// Requests submitted but not yet answered (gauge; 0 when quiescent).
@@ -803,6 +860,32 @@ fn reply_all(waiters: Vec<Request>, result: &WarmOutcome, m: &ServiceMetrics) {
     }
 }
 
+/// Land a flush window, tracking disk-tier health (DESIGN.md §13). The
+/// store merges the window into its RAM view *before* touching the file,
+/// so a failed write loses nothing: the failure is counted, the degraded
+/// latch set (logged once), and — every flush being its own recovery
+/// probe — the next window rewrites the full union. The first flush that
+/// lands clears the latch.
+fn flush_window(store: &WarmStore, pending: &mut Vec<(u64, WarmEntry)>, m: &ServiceMetrics) {
+    match store.merge_and_flush(pending.drain(..)) {
+        Ok(()) => {
+            if m.warm_degraded.swap(false, Ordering::Relaxed) {
+                eprintln!("goma: warm-store flush recovered; disk tier healthy again");
+            }
+        }
+        Err(e) => {
+            m.warm_write_failures.fetch_add(1, Ordering::Relaxed);
+            if !m.warm_degraded.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "goma: warm-store flush failed ({e}); entering RAM-only degraded mode \
+                     (answers keep flowing, proofs stay cached in RAM, and each flush \
+                     window retries the full union)"
+                );
+            }
+        }
+    }
+}
+
 fn service_loop(
     rx: Receiver<Msg>,
     cache: BoundedShardCache,
@@ -852,9 +935,12 @@ fn service_loop(
             Ok(Msg::Solve(r)) => *r,
             Ok(Msg::Shutdown) => break,
             Err(RecvTimeoutError::Timeout) => {
-                // Idle period: land whatever window accumulated.
-                if !pending.is_empty() {
-                    store.merge_and_flush(pending.drain(..));
+                // Idle period: land whatever window accumulated — and, in
+                // degraded mode, probe for recovery even when the window
+                // is empty (the store's merged view still carries the
+                // proofs earlier failed flushes could not land).
+                if !pending.is_empty() || m.warm_degraded.load(Ordering::Relaxed) {
+                    flush_window(&store, &mut pending, &m);
                     last_flush = Instant::now();
                 }
                 continue;
@@ -999,6 +1085,19 @@ fn service_loop(
                                     m.shard_solves.fetch_add(1, Ordering::Relaxed);
                                     m.shard_retries
                                         .fetch_add(r.certificate.shard_retries, Ordering::Relaxed);
+                                    m.shard_respawns
+                                        .fetch_add(r.certificate.shard_respawns, Ordering::Relaxed);
+                                    m.breaker_trips
+                                        .fetch_add(r.certificate.breaker_trips, Ordering::Relaxed);
+                                    // Latch: open while the latest dist
+                                    // solve tripped its spawn breaker,
+                                    // clear on the next clean one — the
+                                    // readiness probe's view of fleet
+                                    // health (DESIGN.md §13).
+                                    m.breaker_open.store(
+                                        r.certificate.breaker_trips > 0,
+                                        Ordering::Relaxed,
+                                    );
                                     Ok(r)
                                 }
                                 Err(DistError::Solve(e)) => Err(e),
@@ -1075,14 +1174,14 @@ fn service_loop(
         if pending.len() >= flush_every
             || (!pending.is_empty() && last_flush.elapsed() >= flush_interval)
         {
-            store.merge_and_flush(pending.drain(..));
+            flush_window(&store, &mut pending, &m);
             last_flush = Instant::now();
         }
     }
     // Pool exit: land the final window. The store's merged view already
     // carries the loaded set and every earlier flush, so this writes the
     // full union even though only the tail is handed over here.
-    store.merge_and_flush(pending.drain(..));
+    flush_window(&store, &mut pending, &m);
     // ...then, as the dispatcher's very last act before the receiver drops,
     // drain anything still queued so the gauges stay honest: those waiters
     // get ServiceUnavailable from their dropped reply senders and are

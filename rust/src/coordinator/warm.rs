@@ -10,7 +10,7 @@
 //! first — the disk tier is bounded like the RAM tier, and eviction only
 //! ever costs a future re-solve, never an answer change.
 //!
-//! **Format v5** (`warm_cache_v5.tsv` inside the cache dir): a header line
+//! **Format v6** (`warm_cache_v6.tsv` inside the cache dir): a header line
 //! ([`WARM_CACHE_HEADER`]) followed by one TSV entry per solve key. Keys
 //! are the 64-bit solve fingerprints of
 //! [`super::service::solve_fingerprint`] — shape, *full* architecture
@@ -21,10 +21,12 @@
 //! mappings as cross-shape seed **donors** for other fingerprints on the
 //! same architecture (DESIGN.md §6) — the reason v2 was bumped. v4 tracked
 //! the bound-ordered engine (DESIGN.md §8: reordered-scan counters plus
-//! the unit-level skip counters); v5 adds the distributed-solve provenance
-//! counters (`shards`/`shard_retries`, DESIGN.md §10) to the persisted
-//! certificate, so v4 entries no longer carry the full certificate — they
-//! are rejected wholesale by the header, like every prior version. Every
+//! the unit-level skip counters); v5 added the distributed-solve
+//! provenance counters (`shards`/`shard_retries`, DESIGN.md §10); v6 adds
+//! the supervision counters (`shard_respawns`/`breaker_trips`, DESIGN.md
+//! §13) to the persisted certificate, so v5 entries no longer carry the
+//! full certificate — they are rejected wholesale by the header, like
+//! every prior version. Every
 //! `f64` is serialized as its IEEE-754 bit pattern in hex (`to_bits`), so
 //! a warm result is **bit-identical** to the original solve. Infeasible
 //! outcomes persist too (`err` lines): the negative cache is as warm as
@@ -42,22 +44,22 @@
 
 use crate::mapping::{Axis, Bypass, Mapping, Tile};
 use crate::solver::{Certificate, SolveError, SolveResult};
+use crate::util::fault::{self, Fault};
 use std::collections::HashMap;
-use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// First line of every store file; the version must match exactly. Kept in
 /// lockstep with [`super::service::CACHE_FORMAT_VERSION`] so a version
-/// bump really does reject old files wholesale (v5: the certificate
-/// gained the distributed-solve provenance counters
-/// `shards`/`shard_retries`, DESIGN.md §10).
-pub const WARM_CACHE_HEADER: &str = "# goma-warm-cache v5";
+/// bump really does reject old files wholesale (v6: the certificate
+/// gained the supervision provenance counters
+/// `shard_respawns`/`breaker_trips`, DESIGN.md §13).
+pub const WARM_CACHE_HEADER: &str = "# goma-warm-cache v6";
 
 /// File name of the store inside a service's `--cache-dir` (versioned in
 /// lockstep with the header: a pre-bump file is simply never opened).
-pub const WARM_CACHE_FILE: &str = "warm_cache_v5.tsv";
+pub const WARM_CACHE_FILE: &str = "warm_cache_v6.tsv";
 
 /// One persisted outcome: the solve succeeded (full result) or proved the
 /// key infeasible (negative entry).
@@ -145,7 +147,17 @@ impl WarmStore {
     /// With a `cap_bytes`, oldest-merged entries are compacted away first
     /// until the serialized file fits the cap. A store without a path
     /// merges in memory only.
-    pub fn merge_and_flush(&self, entries: impl IntoIterator<Item = (u64, WarmEntry)>) {
+    ///
+    /// The merge into the RAM view happens *before* (and regardless of)
+    /// the file write, so a failed flush — disk full, torn tmp file —
+    /// loses nothing: the entries stay merged, and the next successful
+    /// flush writes the full union. The error is returned so the service
+    /// can count it and enter degraded (RAM-only) mode (DESIGN.md §13);
+    /// the on-disk file is never left corrupt (tmp + rename).
+    pub fn merge_and_flush(
+        &self,
+        entries: impl IntoIterator<Item = (u64, WarmEntry)>,
+    ) -> std::io::Result<()> {
         let mut merged = self.merged.lock().unwrap();
         for (fp, v) in entries {
             let seq = merged.next_seq;
@@ -155,10 +167,9 @@ impl WarmStore {
         if let Some(cap) = self.cap_bytes {
             compact(&mut merged, cap);
         }
-        if let Some(path) = &self.path {
-            if let Err(e) = write_file(path, &merged.entries) {
-                eprintln!("[coordinator] warm-cache flush to {} failed: {e}", path.display());
-            }
+        match &self.path {
+            Some(path) => write_file(path, &merged.entries),
+            None => Ok(()),
         }
     }
 }
@@ -222,6 +233,7 @@ fn entry_line(fp: u64, e: &WarmEntry) -> String {
 }
 
 fn write_file(path: &Path, entries: &HashMap<u64, (WarmEntry, u64)>) -> std::io::Result<()> {
+    use std::fmt::Write as _;
     use std::sync::atomic::{AtomicU64, Ordering};
     // Unique per writer: concurrent flushes into one shared cache dir (two
     // processes, or two services in one process) must not interleave on a
@@ -235,17 +247,39 @@ fn write_file(path: &Path, entries: &HashMap<u64, (WarmEntry, u64)>) -> std::io:
         std::process::id(),
         TMP_SEQ.fetch_add(1, Ordering::Relaxed)
     ));
-    {
-        let mut f = std::fs::File::create(&tmp)?;
-        writeln!(f, "{WARM_CACHE_HEADER}")?;
-        // Sorted keys: deterministic file contents for a given entry set.
-        let mut keys: Vec<u64> = entries.keys().copied().collect();
-        keys.sort_unstable();
-        for fp in keys {
-            let (e, _) = &entries[&fp];
-            writeln!(f, "{}", entry_line(fp, e))?;
+    let mut text = String::new();
+    let _ = writeln!(text, "{WARM_CACHE_HEADER}");
+    // Sorted keys: deterministic file contents for a given entry set.
+    let mut keys: Vec<u64> = entries.keys().copied().collect();
+    keys.sort_unstable();
+    for fp in keys {
+        let (e, _) = &entries[&fp];
+        let _ = writeln!(text, "{}", entry_line(fp, e));
+    }
+    // Chaos site `warm.flush.write`: the injected failure modes of the
+    // *tmp-file* write. `err:enospc` is the degraded-mode trigger; `torn`
+    // leaves a truncated tmp behind and fails before the rename, which is
+    // exactly why the real file can never be corrupted by a died flush.
+    match fault::hit("warm.flush.write") {
+        None => {}
+        Some(Fault::Delay(d)) => std::thread::sleep(d),
+        Some(Fault::Kill) => std::process::exit(fault::KILL_EXIT_CODE),
+        Some(Fault::Err(flavor)) => return Err(fault::flavor_error(flavor)),
+        Some(Fault::Torn(keep)) => {
+            std::fs::write(&tmp, &text.as_bytes()[..keep.min(text.len())])?;
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "injected torn write: tmp file truncated before rename",
+            ));
+        }
+        Some(Fault::Corrupt) => {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "injected corruption",
+            ))
         }
     }
+    std::fs::write(&tmp, &text)?;
     std::fs::rename(&tmp, path)
 }
 
@@ -275,10 +309,10 @@ fn bypass_of(s: &str) -> Option<Bypass> {
     Bypass::from_bits(s.parse::<u8>().ok()?)
 }
 
-/// The 32 payload fields of an `ok` line (following the fingerprint, the
+/// The 34 payload fields of an `ok` line (following the fingerprint, the
 /// kind tag, and the arch/options fingerprint), tab-joined: 9 tile
 /// lengths, the two walking axes, the two bypass bitmasks, the 7 energy
-/// terms, the certificate (3 bounds, 7 counters, proved bit), and the
+/// terms, the certificate (3 bounds, 9 counters, proved bit), and the
 /// solve time.
 fn format_result(r: &SolveResult) -> String {
     let m = &r.mapping;
@@ -287,7 +321,7 @@ fn format_result(r: &SolveResult) -> String {
     format!(
         "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t\
          {}\t{}\t{}\t{}\t{}\t{}\t{}\t\
-         {}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+         {}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
         m.l1.x,
         m.l1.y,
         m.l1.z,
@@ -318,6 +352,8 @@ fn format_result(r: &SolveResult) -> String {
         c.units_skipped,
         c.shards,
         c.shard_retries,
+        c.shard_respawns,
+        c.breaker_trips,
         c.proved_optimal as u8,
         fx(r.solve_time.as_secs_f64()),
     )
@@ -337,7 +373,7 @@ fn parse_line(line: &str) -> Option<(u64, WarmEntry)> {
             Some((fp, WarmEntry { arch_fp, outcome: Err(SolveError::NoFeasibleMapping) }))
         }
         "ok" => {
-            if f.len() != 35 {
+            if f.len() != 37 {
                 return None;
             }
             let t = |i: usize| f[3 + i].parse::<u64>().ok();
@@ -370,13 +406,15 @@ fn parse_line(line: &str) -> Option<(u64, WarmEntry)> {
                 units_skipped: f[30].parse().ok()?,
                 shards: f[31].parse().ok()?,
                 shard_retries: f[32].parse().ok()?,
-                proved_optimal: match f[33] {
+                shard_respawns: f[33].parse().ok()?,
+                breaker_trips: f[34].parse().ok()?,
+                proved_optimal: match f[35] {
                     "1" => true,
                     "0" => false,
                     _ => return None,
                 },
             };
-            let solve_time = Duration::try_from_secs_f64(hex_f64(f[34])?).ok()?;
+            let solve_time = Duration::try_from_secs_f64(hex_f64(f[36])?).ok()?;
             Some((
                 fp,
                 WarmEntry {
@@ -426,6 +464,8 @@ mod tests {
         assert_eq!(back.certificate.units_skipped, r.certificate.units_skipped);
         assert_eq!(back.certificate.shards, r.certificate.shards);
         assert_eq!(back.certificate.shard_retries, r.certificate.shard_retries);
+        assert_eq!(back.certificate.shard_respawns, r.certificate.shard_respawns);
+        assert_eq!(back.certificate.breaker_trips, r.certificate.breaker_trips);
         assert_eq!(back.certificate.proved_optimal, r.certificate.proved_optimal);
         assert_eq!(
             back.solve_time.as_secs_f64().to_bits(),
@@ -483,10 +523,12 @@ mod tests {
             "# goma-warm-cache v3\n00aa\terr\t00bb\tinfeasible\n",
             // A v4-era store (pre-shard-counter certificate): likewise.
             "# goma-warm-cache v4\n00aa\terr\t00bb\tinfeasible\n",
+            // A v5-era store (pre-supervision-counter certificate): likewise.
+            "# goma-warm-cache v5\n00aa\terr\t00bb\tinfeasible\n",
         ] {
             std::fs::write(&path, old).unwrap();
             let store = WarmStore::open(Some(dir.clone()), None);
-            assert_eq!(store.loaded_len(), 0, "pre-v5 file must be ignored wholesale: {old:?}");
+            assert_eq!(store.loaded_len(), 0, "pre-v6 file must be ignored wholesale: {old:?}");
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -498,16 +540,46 @@ mod tests {
         std::fs::remove_file(dir.join(WARM_CACHE_FILE)).ok();
         let a = WarmEntry { arch_fp: 1, outcome: Err(SolveError::NoFeasibleMapping) };
         let s1 = WarmStore::open(Some(dir.clone()), None);
-        s1.merge_and_flush([(0xaa, a.clone())]);
+        s1.merge_and_flush([(0xaa, a.clone())]).unwrap();
         // A later process merges only its own new window: the flush must
         // carry the union (regression: `merged` used to start empty, so a
         // flush that was not preceded by re-merging every shard silently
         // dropped the loaded set from the rewritten file).
         let s2 = WarmStore::open(Some(dir.clone()), None);
         assert_eq!(s2.loaded_len(), 1);
-        s2.merge_and_flush([(0xbb, a.clone())]);
+        s2.merge_and_flush([(0xbb, a.clone())]).unwrap();
         let s3 = WarmStore::open(Some(dir.clone()), None);
         assert_eq!(s3.loaded_len(), 2, "a partial flush must keep the loaded entries");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_flush_keeps_disk_intact_and_ram_merged() {
+        let _serial = fault::test_guard();
+        let dir = std::env::temp_dir().join(format!("goma_warm_fail_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(WARM_CACHE_FILE);
+        std::fs::remove_file(&path).ok();
+        let e = |afp| WarmEntry { arch_fp: afp, outcome: Err(SolveError::NoFeasibleMapping) };
+        let store = WarmStore::open(Some(dir.clone()), None);
+        store.merge_and_flush([(1, e(1))]).unwrap();
+        let good = std::fs::read_to_string(&path).unwrap();
+
+        // Flush 1 hits injected ENOSPC, flush 2 a torn tmp write; both
+        // fail, and the real file must still carry exactly the last good
+        // contents — the tmp+rename discipline at work.
+        fault::install("9:warm.flush.write=err:enospc@0;warm.flush.write=torn:10@1").unwrap();
+        let r = store.merge_and_flush([(2, e(2))]);
+        assert_eq!(r.unwrap_err().kind(), std::io::ErrorKind::StorageFull);
+        assert!(store.merge_and_flush([(3, e(3))]).is_err());
+        fault::clear();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), good);
+
+        // The failed windows stayed merged in RAM: the next successful
+        // flush writes the full union, losing nothing.
+        store.merge_and_flush(std::iter::empty()).unwrap();
+        let back = WarmStore::open(Some(dir.clone()), None);
+        assert_eq!(back.loaded_len(), 3, "failed flushes must not lose entries");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -522,8 +594,8 @@ mod tests {
         let line = entry_line(1, &e(1)).len() as u64 + 1;
         let cap = WARM_CACHE_HEADER.len() as u64 + 1 + 2 * line;
         let store = WarmStore::open(Some(dir.clone()), Some(cap));
-        store.merge_and_flush([(1, e(1))]);
-        store.merge_and_flush([(2, e(2)), (3, e(3))]);
+        store.merge_and_flush([(1, e(1))]).unwrap();
+        store.merge_and_flush([(2, e(2)), (3, e(3))]).unwrap();
         assert!(std::fs::metadata(&path).unwrap().len() <= cap, "file must fit the cap");
         let back = WarmStore::open(Some(dir.clone()), Some(cap));
         let kept: Vec<u64> = back.loaded().map(|(fp, _)| fp).collect();
@@ -532,8 +604,8 @@ mod tests {
         assert!(kept.contains(&2) && kept.contains(&3));
         // Re-merging a key refreshes its recency: after touching 2, adding
         // 4 compacts 3 away, not 2.
-        back.merge_and_flush([(2, e(2))]);
-        back.merge_and_flush([(4, e(4))]);
+        back.merge_and_flush([(2, e(2))]).unwrap();
+        back.merge_and_flush([(4, e(4))]).unwrap();
         let last = WarmStore::open(Some(dir.clone()), Some(cap));
         let kept: Vec<u64> = last.loaded().map(|(fp, _)| fp).collect();
         assert!(kept.contains(&2) && kept.contains(&4) && !kept.contains(&3), "{kept:?}");

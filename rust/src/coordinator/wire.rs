@@ -411,6 +411,8 @@ pub fn result_to_json(r: &SolveResult) -> Json {
                 ("units_skipped", Json::u64(c.units_skipped)),
                 ("shards", Json::u64(c.shards)),
                 ("shard_retries", Json::u64(c.shard_retries)),
+                ("shard_respawns", Json::u64(c.shard_respawns)),
+                ("breaker_trips", Json::u64(c.breaker_trips)),
                 ("proved_optimal", Json::Bool(c.proved_optimal)),
             ]),
         ),
@@ -463,6 +465,8 @@ pub fn result_from_json(v: &Json) -> Result<SolveResult, String> {
         units_skipped: get_u64(c, "units_skipped")?,
         shards: get_u64(c, "shards")?,
         shard_retries: get_u64(c, "shard_retries")?,
+        shard_respawns: get_u64(c, "shard_respawns")?,
+        breaker_trips: get_u64(c, "breaker_trips")?,
         proved_optimal: c
             .get("proved_optimal")
             .and_then(Json::as_bool)

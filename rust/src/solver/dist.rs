@@ -29,19 +29,41 @@
 //! timing-dependent provenance (which chunk saw which bound depends on
 //! scheduling); with exchange off they are fully deterministic.
 //!
-//! **Faults**: a worker that dies, hangs past the protocol timeout, or
-//! corrupts its stream is killed and its chunk is re-queued — on a
-//! surviving worker, or scanned in-process by the coordinator itself when
-//! no worker survives. A chunk is pure data, so the retry reproduces the
-//! identical outcome: shard death is a latency event, never a wrong
-//! answer. Retries are counted in [`Certificate::shard_retries`].
+//! **Supervision** (DESIGN.md §13): workers heartbeat on the framed
+//! protocol (`hb` frames every [`HEARTBEAT_EVERY`], written whenever the
+//! stdout lock is free), so the coordinator's per-task timeout measures
+//! *protocol silence* — a healthy worker grinding a long chunk is never
+//! declared dead, while a wedged or vanished one goes silent and is
+//! killed within one timeout window. A dead worker's chunk is re-queued
+//! (a chunk is pure data, so the retry reproduces the identical outcome)
+//! and its slot is respawned with exponential backoff, at most
+//! [`MAX_RESPAWNS_PER_SLOT`] times per slot. [`BREAKER_THRESHOLD`]
+//! *consecutive* spawn failures trip a circuit breaker: no further
+//! respawns, and whatever chunks remain are scanned in-process by the
+//! coordinator's own sweep. Every one of these events is a latency event,
+//! never a wrong answer, and each is counted in the certificate:
+//! [`Certificate::shard_retries`], [`Certificate::shard_respawns`],
+//! [`Certificate::breaker_trips`].
+//!
 //! A *handshake* mismatch is different — a worker speaking another
 //! [`CACHE_FORMAT_VERSION`] or computing another arch
 //! `param_fingerprint` is a configuration error (stale binary, wrong
 //! accelerator), and merging its results could be silently wrong, so it
-//! is rejected at spawn with [`DistError::Worker`] instead of retried.
+//! is rejected with [`DistError::Worker`] and never retried, at first
+//! spawn or at respawn alike.
+//!
+//! **Chaos sites** (see [`crate::util::fault`]): the coordinator guards
+//! `dist.spawn`, `dist.send`, and `dist.recv`; the worker serves
+//! `shard.task` (kill/delay before scanning), `shard.done.write`
+//! (corrupt/torn/kill on the answer frame), and the handshake spoofs
+//! `shard.hello.version` / `shard.hello.fingerprint` (`corrupt` doctors
+//! the reported value). A worker-side `delay` holds the stdout lock while
+//! it stalls, which silences the heartbeats too — an injected delay past
+//! the task timeout is therefore indistinguishable from a real wedge.
 //!
 //! [`Certificate::shard_retries`]: super::Certificate::shard_retries
+//! [`Certificate::shard_respawns`]: super::Certificate::shard_respawns
+//! [`Certificate::breaker_trips`]: super::Certificate::breaker_trips
 //! [`CACHE_FORMAT_VERSION`]: crate::coordinator::CACHE_FORMAT_VERSION
 
 use super::engine::{
@@ -53,12 +75,14 @@ use super::space::SearchSpace;
 use crate::arch::{all_templates, Accelerator};
 use crate::coordinator::CACHE_FORMAT_VERSION;
 use crate::mapping::{Axis, Bypass, GemmShape, Mapping, Tile};
+use crate::util::fault::{self, Fault};
 use crate::util::json::Json;
 use std::collections::VecDeque;
 use std::fmt;
-use std::io::{BufReader, Read, Write};
+use std::io::{BufReader, Read, Stdout, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -73,14 +97,33 @@ const MAX_FRAME: usize = 1 << 26;
 /// chunk boundaries depend only on `(unit_sched.len(), shards)`.
 const CHUNKS_PER_SHARD: usize = 4;
 
+/// How often a worker emits an `hb` frame while the stdout lock is free.
+/// Far below any sane task timeout, so a healthy worker can never be
+/// declared silent by scheduling jitter alone.
+const HEARTBEAT_EVERY: Duration = Duration::from_millis(100);
+
+/// Respawn budget per worker slot. A slot whose worker keeps dying is
+/// given up after this many respawns; its chunks drain to surviving
+/// slots or the coordinator's in-process sweep. Deliberately small —
+/// respawn is for transient deaths, not for masking a crash loop.
+const MAX_RESPAWNS_PER_SLOT: u32 = 2;
+
+/// First respawn backoff; doubles per attempt up to
+/// [`RESPAWN_BACKOFF_CAP`]. Short on purpose: a solve is latency-bound
+/// and the cap keeps a flapping worker from stalling the queue.
+const RESPAWN_BACKOFF_BASE: Duration = Duration::from_millis(10);
+const RESPAWN_BACKOFF_CAP: Duration = Duration::from_millis(320);
+
+/// Consecutive spawn *failures* (across all slots) that trip the circuit
+/// breaker. Once open it stays open for the rest of the solve: spawning
+/// is evidently broken (binary gone, fd/pid exhaustion), so the
+/// coordinator stops burning time on it and sweeps in-process.
+const BREAKER_THRESHOLD: u32 = 3;
+
 /// Env override for the worker binary path (highest-priority default:
 /// [`DistOptions::worker_bin`]; fallback: `current_exe`). Integration
 /// tests point this at the built `goma` binary.
 pub const SHARD_BIN_ENV: &str = "GOMA_SHARD_BIN";
-
-/// Env hook the coordinator sets on *one* spawned worker to inject a
-/// protocol fault (test instrumentation; see [`DistOptions::fault`]).
-pub const SHARD_FAULT_ENV: &str = "GOMA_SHARD_FAULT";
 
 /// Coordinator configuration for [`solve_dist`].
 #[derive(Debug, Clone)]
@@ -97,18 +140,20 @@ pub struct DistOptions {
     /// `std::env::current_exe()` (the production path: `goma` re-executes
     /// itself with `solve-shard`).
     pub worker_bin: Option<PathBuf>,
-    /// Per-task protocol timeout: a worker that has not answered a
-    /// dispatched chunk within this budget is declared hung, killed, and
-    /// its chunk re-queued.
+    /// Per-task protocol timeout: a worker that has been *silent* (no
+    /// `done`, no heartbeat) for this long after a dispatched chunk is
+    /// declared wedged, killed, and its chunk re-queued. Heartbeats make
+    /// this a silence budget, not a task-duration cap.
     pub task_timeout: Duration,
-    /// Fault injection (tests only): `(shard index, fault)` sets
-    /// [`SHARD_FAULT_ENV`] on that one worker. Vocabulary (see
-    /// `worker_loop`): `spoof-version`, `spoof-fingerprint`,
-    /// `die-on-task:K`, `hang-on-task:K`, `corrupt-on-task:K`,
-    /// `truncate-on-task:K` with `K` the 0-based task ordinal served by
-    /// that worker.
+    /// Chaos injection (tests only): `(shard index, spec)` sets
+    /// [`fault::CHAOS_ENV`] to `spec` on that one worker and strips it
+    /// from the others. `None` lets workers inherit the parent
+    /// environment — how a process-wide `GOMA_CHAOS` reaches the fleet.
+    /// A respawned worker gets the same treatment, and the fault
+    /// registry's per-process hit counters restart with it, so crash
+    /// loops are expressible (`shard.task=kill@0`).
     #[doc(hidden)]
-    pub fault: Option<(usize, String)>,
+    pub chaos: Option<(usize, String)>,
 }
 
 impl Default for DistOptions {
@@ -118,7 +163,7 @@ impl Default for DistOptions {
             exchange: true,
             worker_bin: None,
             task_timeout: Duration::from_secs(30),
-            fault: None,
+            chaos: None,
         }
     }
 }
@@ -130,9 +175,12 @@ pub enum DistError {
     /// in-process engine ([`SolveError`]); infeasibility here is a merged
     /// proof over every chunk.
     Solve(SolveError),
-    /// The worker fleet could not be set up or trusted: spawn failure, or
-    /// a handshake version/fingerprint mismatch. Says nothing about the
-    /// search space — callers may retry in-process.
+    /// The worker fleet cannot be *trusted*: a handshake
+    /// version/fingerprint mismatch, an accelerator the protocol cannot
+    /// express, or no resolvable worker binary. Says nothing about the
+    /// search space — callers may retry in-process. Mere spawn failures
+    /// are not here: they feed the circuit breaker and the in-process
+    /// sweep finishes the solve.
     Worker(String),
 }
 
@@ -448,10 +496,24 @@ impl Merged {
     }
 }
 
+/// Coordinator state shared across driver threads: the chunk queue, the
+/// merge, and the supervision ledger. The ledger fields are provenance —
+/// they describe *how* the search ran, never what it answered.
 struct Shared {
     queue: VecDeque<(usize, usize)>,
     merged: Merged,
+    /// Chunks re-queued after a worker death (any protocol failure).
     retries: u64,
+    /// Workers respawned into a slot after their predecessor died.
+    respawns: u64,
+    /// Times the spawn circuit breaker tripped (0 or 1 per solve — it
+    /// latches open).
+    breaker_trips: u64,
+    /// Consecutive spawn failures; reset by any successful spawn.
+    spawn_fail_streak: u32,
+    /// Latched by [`BREAKER_THRESHOLD`] consecutive spawn failures; no
+    /// respawns happen while open.
+    breaker_open: bool,
     next_id: u64,
 }
 
@@ -472,17 +534,16 @@ struct Worker {
 fn spawn_worker(
     binary: &Path,
     index: usize,
-    fault: &Option<(usize, String)>,
+    chaos: &Option<(usize, String)>,
 ) -> Result<Worker, String> {
+    fault::check_io("dist.spawn").map_err(|e| format!("injected spawn failure: {e}"))?;
     let mut cmd = Command::new(binary);
-    cmd.arg("solve-shard")
-        .stdin(Stdio::piped())
-        .stdout(Stdio::piped())
-        .stderr(Stdio::null())
-        .env_remove(SHARD_FAULT_ENV);
-    if let Some((fi, f)) = fault {
-        if *fi == index {
-            cmd.env(SHARD_FAULT_ENV, f);
+    cmd.arg("solve-shard").stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::null());
+    if let Some((ci, spec)) = chaos {
+        if *ci == index {
+            cmd.env(fault::CHAOS_ENV, spec);
+        } else {
+            cmd.env_remove(fault::CHAOS_ENV);
         }
     }
     let mut child = cmd
@@ -510,6 +571,22 @@ fn recv_frame(wk: &Worker, timeout: Duration) -> Result<Json, String> {
         Ok(Err(e)) => Err(e),
         Err(mpsc::RecvTimeoutError::Timeout) => Err(format!("protocol timeout after {timeout:?}")),
         Err(mpsc::RecvTimeoutError::Disconnected) => Err("protocol stream closed".into()),
+    }
+}
+
+/// Wait for the `done` frame answering `expect_id`, consuming heartbeat
+/// frames along the way. Each frame — heartbeat or answer — restarts the
+/// timeout window, so the timeout measures protocol *silence*: a worker
+/// that is alive but slow keeps heartbeating and is never killed, while a
+/// wedged one (stalled scan thread holds no lock, but a SIGSTOP'd or
+/// livelocked process writes nothing) goes silent and times out.
+fn await_done(wk: &Worker, expect_id: u64, timeout: Duration) -> Result<DoneFrame, String> {
+    loop {
+        let frame = recv_frame(wk, timeout)?;
+        if frame_type(&frame)? == "hb" {
+            continue;
+        }
+        return parse_done(&frame, expect_id);
     }
 }
 
@@ -550,19 +627,132 @@ fn kill_all(workers: &mut [Worker]) {
     }
 }
 
-/// One worker's drive loop: pop a chunk, dispatch it with the current
-/// injected bound, commit the fully parsed answer. Any protocol failure —
-/// write error, timeout, stream end, malformed or mis-addressed frame —
-/// declares the worker dead: kill it, push the chunk back for a survivor
-/// (or the coordinator's in-process sweep), count the retry, and return.
-fn drive_worker(mut wk: Worker, shared: &Mutex<Shared>, exchange: bool, timeout: Duration) {
+/// Everything needed to build a `hello` frame for a (re)spawned worker.
+/// Kept as inputs rather than a prebuilt frame because `time_limit_ms`
+/// must be recomputed at send time — a worker respawned mid-solve gets
+/// the budget actually *remaining*, not the budget at solve start.
+struct HelloInputs<'a> {
+    shape: GemmShape,
+    arch_spec: &'a Json,
+    exact_pe: bool,
+    threads: usize,
+    simd: bool,
+    suffix_bounds: bool,
+    deadline: Option<Instant>,
+    fp: u64,
+}
+
+impl HelloInputs<'_> {
+    fn make_hello(&self, index: usize) -> Json {
+        Json::obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("format_version", Json::u64(CACHE_FORMAT_VERSION as u64)),
+            ("param_fingerprint", Json::u64(self.fp)),
+            ("shard", Json::u64(index as u64)),
+            ("shape", shape_json(self.shape)),
+            ("arch", self.arch_spec.clone()),
+            ("exact_pe", Json::Bool(self.exact_pe)),
+            ("solve_threads", Json::u64(self.threads as u64)),
+            // Scan-kernel knobs ride the handshake (not the environment):
+            // the worker mirrors the coordinator's *resolved* settings, so
+            // certificates stay bit-identical to an in-process solve with
+            // the same options regardless of the worker's own env.
+            ("simd", Json::Bool(self.simd)),
+            ("suffix_bounds", Json::Bool(self.suffix_bounds)),
+            (
+                "time_limit_ms",
+                match self.deadline {
+                    None => Json::Null,
+                    Some(d) => {
+                        let ms = d.saturating_duration_since(Instant::now()).as_millis();
+                        Json::u64(ms.min(u64::MAX as u128) as u64)
+                    }
+                },
+            ),
+        ])
+    }
+}
+
+/// Everything a driver thread needs to run — and re-staff — one worker
+/// slot. Shared by reference across the scoped driver threads.
+struct DriveCtx<'a> {
+    shared: &'a Mutex<Shared>,
+    exchange: bool,
+    timeout: Duration,
+    binary: &'a Path,
+    chaos: &'a Option<(usize, String)>,
+    hello: HelloInputs<'a>,
+}
+
+/// Try to re-staff a dead worker's slot: exponential backoff, spawn,
+/// handshake. Gives up (returns `None`, abandoning the slot) when the
+/// slot's respawn budget is spent, the breaker is open, the queue has
+/// drained (nothing left to do), or the respawned worker fails the
+/// handshake — a config mismatch is no more retryable mid-flight than at
+/// first spawn. Spawn failures feed the breaker and keep trying while
+/// budget remains.
+fn respawn(ctx: &DriveCtx<'_>, index: usize, respawns_left: &mut u32) -> Option<Worker> {
+    let mut backoff = RESPAWN_BACKOFF_BASE;
+    while *respawns_left > 0 {
+        {
+            let sh = ctx.shared.lock().unwrap();
+            if sh.breaker_open || sh.queue.is_empty() {
+                return None;
+            }
+        }
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(RESPAWN_BACKOFF_CAP);
+        *respawns_left -= 1;
+        match spawn_worker(ctx.binary, index, ctx.chaos) {
+            Ok(mut wk) => {
+                let hello = ctx.hello.make_hello(index);
+                match handshake(&mut wk, &hello, ctx.timeout, ctx.hello.fp) {
+                    Ok(()) => {
+                        let mut sh = ctx.shared.lock().unwrap();
+                        sh.spawn_fail_streak = 0;
+                        sh.respawns += 1;
+                        return Some(wk);
+                    }
+                    Err(_) => {
+                        // A respawn that comes up with the wrong format or
+                        // fingerprint is a configuration error, not a
+                        // transient: kill it and abandon the slot.
+                        let _ = wk.child.kill();
+                        let _ = wk.child.wait();
+                        return None;
+                    }
+                }
+            }
+            Err(_) => {
+                let mut sh = ctx.shared.lock().unwrap();
+                sh.spawn_fail_streak += 1;
+                if sh.spawn_fail_streak >= BREAKER_THRESHOLD && !sh.breaker_open {
+                    sh.breaker_open = true;
+                    sh.breaker_trips += 1;
+                    return None;
+                }
+            }
+        }
+    }
+    None
+}
+
+/// One worker slot's drive loop: pop a chunk, dispatch it with the
+/// current injected bound, commit the fully parsed answer. Any protocol
+/// failure — write error, silence timeout, stream end, malformed or
+/// mis-addressed frame — declares the worker dead: kill it, push the
+/// chunk back, count the retry, and try to respawn the slot. The slot
+/// exits when the queue drains or its respawn budget is spent; leftover
+/// chunks fall to the other slots or the coordinator's in-process sweep.
+fn drive_worker(mut wk: Worker, ctx: &DriveCtx<'_>) {
+    let mut respawns_left = MAX_RESPAWNS_PER_SLOT;
     loop {
         let (range, id, bound) = {
-            let mut sh = shared.lock().unwrap();
+            let mut sh = ctx.shared.lock().unwrap();
             let Some(range) = sh.queue.pop_front() else { break };
             let id = sh.next_id;
             sh.next_id += 1;
-            (range, id, sh.merged.bound(exchange))
+            (range, id, sh.merged.bound(ctx.exchange))
         };
         let task = Json::obj(vec![
             ("type", Json::Str("task".into())),
@@ -571,22 +761,30 @@ fn drive_worker(mut wk: Worker, shared: &Mutex<Shared>, exchange: bool, timeout:
             ("end", Json::u64(range.1 as u64)),
             ("bound", bound.map_or(Json::Null, f64_bits)),
         ]);
-        let outcome = write_frame(&mut wk.stdin, &task)
+        let outcome = fault::check_io("dist.send")
+            .and_then(|()| write_frame(&mut wk.stdin, &task))
             .map_err(|e| format!("task write failed: {e}"))
-            .and_then(|()| recv_frame(&wk, timeout))
-            .and_then(|f| parse_done(&f, id));
+            .and_then(|()| {
+                fault::check_io("dist.recv").map_err(|e| format!("frame read failed: {e}"))?;
+                await_done(&wk, id, ctx.timeout)
+            });
         match outcome {
-            Ok(done) => shared.lock().unwrap().merged.commit(done),
+            Ok(done) => ctx.shared.lock().unwrap().merged.commit(done),
             Err(_) => {
                 // Runtime fault. The chunk committed nothing (parse-then-
                 // commit above), so re-scanning it elsewhere reproduces
                 // the identical outcome — a retry, not a wrong answer.
                 let _ = wk.child.kill();
                 let _ = wk.child.wait();
-                let mut sh = shared.lock().unwrap();
-                sh.queue.push_back(range);
-                sh.retries += 1;
-                return;
+                {
+                    let mut sh = ctx.shared.lock().unwrap();
+                    sh.queue.push_back(range);
+                    sh.retries += 1;
+                }
+                match respawn(ctx, wk.index, &mut respawns_left) {
+                    Some(new_wk) => wk = new_wk,
+                    None => return,
+                }
             }
         }
     }
@@ -602,9 +800,11 @@ fn drive_worker(mut wk: Worker, shared: &Mutex<Shared>, exchange: bool, timeout:
 /// `dopts.shards` worker processes. Bit-identical to the in-process
 /// engine in mapping, energy, and certificate bounds for every shard
 /// count, thread count, and fault pattern (DESIGN.md §10; proven by
-/// `rust/tests/dist_solve.rs`) — only the effort counters and the new
-/// [`Certificate::shards`] / [`Certificate::shard_retries`] provenance
-/// fields record *how* the search ran.
+/// `rust/tests/dist_solve.rs` and `rust/tests/chaos.rs`) — only the
+/// effort counters and the [`Certificate::shards`] /
+/// [`Certificate::shard_retries`] / [`Certificate::shard_respawns`] /
+/// [`Certificate::breaker_trips`] provenance fields record *how* the
+/// search ran.
 ///
 /// `seed` is a cross-shape warm bound exactly as in [`SolveRequest::seed`];
 /// the incumbent exchange tightens it with merged values at every task
@@ -613,11 +813,13 @@ fn drive_worker(mut wk: Worker, shared: &Mutex<Shared>, exchange: bool, timeout:
 /// Falls back to the in-process engine (same answer, `shards == 0` in the
 /// certificate) when the space build hits the deadline — a truncated
 /// build is process-local and must not be distributed — and scans
-/// leftover chunks itself when every worker has died, so worker loss can
-/// cost only time.
+/// leftover chunks itself when every worker slot has been abandoned, so
+/// worker loss (or a fleet that never spawned at all) can cost only time.
 ///
 /// [`Certificate::shards`]: super::Certificate::shards
 /// [`Certificate::shard_retries`]: super::Certificate::shard_retries
+/// [`Certificate::shard_respawns`]: super::Certificate::shard_respawns
+/// [`Certificate::breaker_trips`]: super::Certificate::breaker_trips
 pub fn solve_dist(
     shape: GemmShape,
     arch: &Accelerator,
@@ -667,55 +869,7 @@ pub fn solve_dist(
     };
 
     let threads = opts.resolved_threads();
-    let mut workers: Vec<Worker> = Vec::with_capacity(workers_wanted);
-    for index in 0..workers_wanted {
-        match spawn_worker(&binary, index, &dopts.fault) {
-            Ok(wk) => workers.push(wk),
-            Err(e) => {
-                kill_all(&mut workers);
-                return Err(DistError::Worker(e));
-            }
-        }
-    }
     let fp = arch.param_fingerprint();
-    let mut rejected: Option<String> = None;
-    for wk in &mut workers {
-        let hello = Json::obj(vec![
-            ("type", Json::Str("hello".into())),
-            ("format_version", Json::u64(CACHE_FORMAT_VERSION as u64)),
-            ("param_fingerprint", Json::u64(fp)),
-            ("shard", Json::u64(wk.index as u64)),
-            ("shape", shape_json(shape)),
-            ("arch", arch_spec.clone()),
-            ("exact_pe", Json::Bool(opts.exact_pe)),
-            ("solve_threads", Json::u64(threads as u64)),
-            // Scan-kernel knobs ride the handshake (not the environment):
-            // the worker mirrors the coordinator's *resolved* settings, so
-            // certificates stay bit-identical to an in-process solve with
-            // the same options regardless of the worker's own env.
-            ("simd", Json::Bool(opts.resolved_simd())),
-            ("suffix_bounds", Json::Bool(opts.resolved_suffix_bounds())),
-            (
-                "time_limit_ms",
-                match deadline {
-                    None => Json::Null,
-                    Some(d) => {
-                        let ms = d.saturating_duration_since(Instant::now()).as_millis();
-                        Json::u64(ms.min(u64::MAX as u128) as u64)
-                    }
-                },
-            ),
-        ]);
-        if let Err(e) = handshake(wk, &hello, dopts.task_timeout, fp) {
-            rejected = Some(format!("shard {}: {e}", wk.index));
-            break;
-        }
-    }
-    if let Some(e) = rejected {
-        kill_all(&mut workers);
-        return Err(DistError::Worker(e));
-    }
-
     let shared = Mutex::new(Shared {
         queue,
         merged: Merged {
@@ -725,26 +879,82 @@ pub fn solve_dist(
             timed_out: false,
         },
         retries: 0,
+        respawns: 0,
+        breaker_trips: 0,
+        spawn_fail_streak: 0,
+        breaker_open: false,
         next_id: 0,
     });
-    let exchange = dopts.exchange;
-    let timeout = dopts.task_timeout;
-    let shared_ref = &shared;
-    std::thread::scope(|s| {
-        for wk in workers.drain(..) {
-            s.spawn(move || drive_worker(wk, shared_ref, exchange, timeout));
+    let hello_inputs = HelloInputs {
+        shape,
+        arch_spec: &arch_spec,
+        exact_pe: opts.exact_pe,
+        threads,
+        simd: opts.resolved_simd(),
+        suffix_bounds: opts.resolved_suffix_bounds(),
+        deadline,
+        fp,
+    };
+
+    // Staff the fleet. A spawn failure is no longer fatal: it feeds the
+    // circuit breaker, and a fleet of zero workers just means the
+    // in-process sweep below does all the work. A *handshake* failure is
+    // fatal — see `handshake`.
+    let mut workers: Vec<Worker> = Vec::with_capacity(workers_wanted);
+    for index in 0..workers_wanted {
+        if shared.lock().unwrap().breaker_open {
+            break;
         }
-    });
+        match spawn_worker(&binary, index, &dopts.chaos) {
+            Ok(mut wk) => {
+                let hello = hello_inputs.make_hello(index);
+                if let Err(e) = handshake(&mut wk, &hello, dopts.task_timeout, fp) {
+                    let _ = wk.child.kill();
+                    let _ = wk.child.wait();
+                    kill_all(&mut workers);
+                    return Err(DistError::Worker(format!("shard {index}: {e}")));
+                }
+                shared.lock().unwrap().spawn_fail_streak = 0;
+                workers.push(wk);
+            }
+            Err(_) => {
+                let mut sh = shared.lock().unwrap();
+                sh.spawn_fail_streak += 1;
+                if sh.spawn_fail_streak >= BREAKER_THRESHOLD {
+                    sh.breaker_open = true;
+                    sh.breaker_trips += 1;
+                    break;
+                }
+            }
+        }
+    }
+    {
+        let ctx = DriveCtx {
+            shared: &shared,
+            exchange: dopts.exchange,
+            timeout: dopts.task_timeout,
+            binary: &binary,
+            chaos: &dopts.chaos,
+            hello: hello_inputs,
+        };
+        let ctx_ref = &ctx;
+        std::thread::scope(|s| {
+            for wk in workers.drain(..) {
+                s.spawn(move || drive_worker(wk, ctx_ref));
+            }
+        });
+    }
 
     // Sweep any chunks the (now all-exited) drivers left behind — the
-    // zero-survivor path, and the race where the last survivor dies after
-    // the others already drained out. Scanned in-process through the very
-    // same range kernel, so the merge argument is unchanged.
+    // zero-survivor path, the breaker-open path, and the race where the
+    // last survivor dies after the others already drained out. Scanned
+    // in-process through the very same range kernel, so the merge
+    // argument is unchanged.
     loop {
         let (range, bound) = {
             let mut sh = shared.lock().unwrap();
             let Some(range) = sh.queue.pop_front() else { break };
-            (range, sh.merged.bound(exchange))
+            (range, sh.merged.bound(dopts.exchange))
         };
         let out = scan_sched_range(
             &space,
@@ -769,6 +979,8 @@ pub fn solve_dist(
             let mut r = finish(start, shape, arch, mapping, sh.merged.tally, sh.merged.timed_out);
             r.certificate.shards = workers_wanted as u64;
             r.certificate.shard_retries = sh.retries;
+            r.certificate.shard_respawns = sh.respawns;
+            r.certificate.breaker_trips = sh.breaker_trips;
             Ok(r)
         }
         None if sh.merged.timed_out => Err(DistError::Solve(SolveError::Interrupted)),
@@ -783,14 +995,14 @@ pub fn solve_dist(
 /// Entry point of the `goma solve-shard` subcommand: speak the framed
 /// protocol on stdin/stdout until an `exit` frame or stream end. Returns
 /// the process exit code. Never invoked by hand — the coordinator
-/// fork/execs it.
+/// fork/execs it. Installs the chaos plan from `GOMA_CHAOS` first, so a
+/// coordinator-set (or inherited) spec steers this incarnation — and a
+/// respawned incarnation starts its hit counters over.
 pub fn worker_main() -> i32 {
-    let fault = std::env::var(SHARD_FAULT_ENV).ok();
+    fault::install_from_env();
     let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
     let mut input = BufReader::new(stdin.lock());
-    let mut output = stdout.lock();
-    match worker_loop(&mut input, &mut output, fault.as_deref()) {
+    match worker_loop(&mut input) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("goma solve-shard: {e}");
@@ -799,17 +1011,12 @@ pub fn worker_main() -> i32 {
     }
 }
 
-/// Does the injected fault string name this task ordinal? (Fault strings
-/// are `<kind>-on-task:K`; `K` counts tasks this worker has served.)
-fn fault_fires(fault: Option<&str>, prefix: &str, served: u64) -> bool {
-    fault.and_then(|f| f.strip_prefix(prefix)).and_then(|k| k.parse::<u64>().ok()) == Some(served)
-}
-
-fn worker_loop(
-    input: &mut impl Read,
-    output: &mut impl Write,
-    fault: Option<&str>,
-) -> Result<(), String> {
+fn worker_loop(input: &mut impl Read) -> Result<(), String> {
+    // Stdout is shared between the task loop and the heartbeat thread;
+    // our own mutex guarantees frame atomicity (one guard held across a
+    // whole `write_frame`). Plain `Stdout` rather than `StdoutLock`, so
+    // the mutex is Sync.
+    let output = Mutex::new(std::io::stdout());
     let hello = read_frame(input)?;
     if frame_type(&hello)? != "hello" {
         return Err(format!("expected a hello frame, got {:?}", frame_type(&hello)?));
@@ -834,12 +1041,12 @@ fn worker_loop(
     };
     let mut version = CACHE_FORMAT_VERSION as u64;
     let mut fp = arch.param_fingerprint();
-    // Handshake spoof hooks (tests): report doctored values so the
+    // Handshake spoof sites (chaos): report doctored values so the
     // coordinator's at-spawn rejection path is exercisable end-to-end.
-    if fault == Some("spoof-version") {
+    if matches!(fault::hit("shard.hello.version"), Some(Fault::Corrupt)) {
         version += 1;
     }
-    if fault == Some("spoof-fingerprint") {
+    if matches!(fault::hit("shard.hello.fingerprint"), Some(Fault::Corrupt)) {
         fp ^= 1;
     }
     let ready = Json::obj(vec![
@@ -847,14 +1054,47 @@ fn worker_loop(
         ("format_version", Json::u64(version)),
         ("param_fingerprint", Json::u64(fp)),
     ]);
-    write_frame(output, &ready).map_err(|e| format!("ready write failed: {e}"))?;
+    write_frame(&mut *output.lock().unwrap(), &ready)
+        .map_err(|e| format!("ready write failed: {e}"))?;
 
-    // Deterministic rebuild (no deadline: the coordinator refused to
-    // distribute a truncated build, so ours is bit-for-bit the same
-    // schedule and every chunk index means the same units).
-    let space = SearchSpace::build_bounded(shape, &arch, exact_pe, true, None);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // Heartbeats start right after `ready`, so they also cover the
+        // space rebuild below — a big rebuild must not read as silence.
+        s.spawn(|| {
+            let hb = Json::obj(vec![("type", Json::Str("hb".into()))]);
+            loop {
+                std::thread::sleep(HEARTBEAT_EVERY);
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let mut out = output.lock().unwrap();
+                if write_frame(&mut *out, &hb).is_err() {
+                    break;
+                }
+            }
+        });
+        // Deterministic rebuild (no deadline: the coordinator refused to
+        // distribute a truncated build, so ours is bit-for-bit the same
+        // schedule and every chunk index means the same units).
+        let space = SearchSpace::build_bounded(shape, &arch, exact_pe, true, None);
+        let r = serve_tasks(input, &output, &space, &arch, threads, cfg, deadline);
+        stop.store(true, Ordering::Relaxed);
+        r
+    })
+}
+
+/// The worker's task loop, heartbeats already running on `output`.
+fn serve_tasks(
+    input: &mut impl Read,
+    output: &Mutex<Stdout>,
+    space: &SearchSpace,
+    arch: &Accelerator,
+    threads: usize,
+    cfg: ScanConfig,
+    deadline: Option<Instant>,
+) -> Result<(), String> {
     let n = space.unit_sched.len();
-    let mut served: u64 = 0;
     loop {
         let frame = read_frame(input)?;
         match frame_type(&frame)? {
@@ -872,32 +1112,55 @@ fn worker_loop(
                         v.as_u64().ok_or_else(|| "invalid field \"bound\"".to_string())?,
                     )),
                 };
-                if fault_fires(fault, "die-on-task:", served) {
-                    // Observably identical to a SIGKILL: the stream just
-                    // ends mid-protocol, no farewell frame, nonzero exit.
-                    std::process::exit(137);
+                match fault::hit("shard.task") {
+                    Some(Fault::Kill) => {
+                        // Observably identical to a SIGKILL: the stream
+                        // just ends mid-protocol, no farewell frame.
+                        std::process::exit(fault::KILL_EXIT_CODE);
+                    }
+                    Some(Fault::Delay(d)) => {
+                        // Hold the stdout lock across the stall: a wedged
+                        // process stops heartbeating too, and that
+                        // *silence* is what the coordinator's timeout
+                        // detects. A delay shorter than the timeout is
+                        // ridden out; a longer one gets us killed.
+                        let _mute = output.lock().unwrap();
+                        std::thread::sleep(d);
+                    }
+                    _ => {}
                 }
-                if fault_fires(fault, "hang-on-task:", served) {
-                    // Wedge until the coordinator's protocol timeout
-                    // declares us dead and kills the process.
-                    std::thread::sleep(Duration::from_secs(3600));
+                let outc = scan_sched_range(space, arch, s, e, bound, threads, cfg, deadline);
+                match fault::hit("shard.done.write") {
+                    Some(Fault::Corrupt) => {
+                        let mut out = output.lock().unwrap();
+                        let _ = out.write_all(&12u32.to_be_bytes());
+                        let _ = out.write_all(b"not-json!!!!");
+                        let _ = out.flush();
+                        std::process::exit(1);
+                    }
+                    Some(Fault::Torn(keep)) => {
+                        // Full-length prefix, truncated body: the reader
+                        // blocks on the missing bytes until the stream
+                        // ends, exactly like a real torn pipe.
+                        let text = done_json(id, &outc).to_text();
+                        let mut out = output.lock().unwrap();
+                        let _ = out.write_all(&(text.len() as u32).to_be_bytes());
+                        let _ = out.write_all(&text.as_bytes()[..keep.min(text.len())]);
+                        let _ = out.flush();
+                        std::process::exit(1);
+                    }
+                    Some(Fault::Err(_)) => std::process::exit(1),
+                    Some(Fault::Kill) => std::process::exit(fault::KILL_EXIT_CODE),
+                    Some(Fault::Delay(d)) => {
+                        std::thread::sleep(d);
+                        write_frame(&mut *output.lock().unwrap(), &done_json(id, &outc))
+                            .map_err(|e| format!("done write failed: {e}"))?;
+                    }
+                    None => {
+                        write_frame(&mut *output.lock().unwrap(), &done_json(id, &outc))
+                            .map_err(|e| format!("done write failed: {e}"))?;
+                    }
                 }
-                let out = scan_sched_range(&space, &arch, s, e, bound, threads, cfg, deadline);
-                if fault_fires(fault, "corrupt-on-task:", served) {
-                    let _ = output.write_all(&12u32.to_be_bytes());
-                    let _ = output.write_all(b"not-json!!!!");
-                    let _ = output.flush();
-                    std::process::exit(1);
-                }
-                if fault_fires(fault, "truncate-on-task:", served) {
-                    let _ = output.write_all(&64u32.to_be_bytes());
-                    let _ = output.write_all(b"{\"type\":");
-                    let _ = output.flush();
-                    std::process::exit(1);
-                }
-                write_frame(output, &done_json(id, &out))
-                    .map_err(|e| format!("done write failed: {e}"))?;
-                served += 1;
             }
             t => return Err(format!("unexpected frame type {t:?}")),
         }
@@ -1028,14 +1291,5 @@ mod tests {
         fields.retain(|(k, _)| k != "nodes");
         assert!(parse_done(&Json::Obj(fields), 0).is_err());
         assert_eq!(merged.tally.nodes, 12, "failed parses committed nothing");
-    }
-
-    #[test]
-    fn fault_strings_address_one_task_ordinal() {
-        assert!(fault_fires(Some("die-on-task:2"), "die-on-task:", 2));
-        assert!(!fault_fires(Some("die-on-task:2"), "die-on-task:", 1));
-        assert!(!fault_fires(Some("die-on-task:2"), "hang-on-task:", 2));
-        assert!(!fault_fires(None, "die-on-task:", 0));
-        assert!(!fault_fires(Some("die-on-task:x"), "die-on-task:", 0));
     }
 }

@@ -815,6 +815,8 @@ pub(crate) fn finish(
             units_skipped: tally.units_skipped,
             shards: 0,
             shard_retries: 0,
+            shard_respawns: 0,
+            breaker_trips: 0,
             proved_optimal: !timed_out,
         },
         solve_time: start.elapsed(),
@@ -1234,6 +1236,8 @@ mod tests {
         assert_eq!(ca.units_skipped, cb.units_skipped, "{label}: units_skipped");
         assert_eq!(ca.shards, cb.shards, "{label}: shards");
         assert_eq!(ca.shard_retries, cb.shard_retries, "{label}: shard_retries");
+        assert_eq!(ca.shard_respawns, cb.shard_respawns, "{label}: shard_respawns");
+        assert_eq!(ca.breaker_trips, cb.breaker_trips, "{label}: breaker_trips");
         assert_eq!(ca.proved_optimal, cb.proved_optimal, "{label}: proved");
     }
 

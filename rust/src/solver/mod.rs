@@ -110,6 +110,14 @@ pub struct Certificate {
     /// its protocol stream (DESIGN.md §10). A retry re-scans pure data, so
     /// this counter is provenance only — the merged answer is unchanged.
     pub shard_retries: u64,
+    /// Workers respawned into a slot whose previous incarnation died
+    /// (DESIGN.md §13). Like `shard_retries`, pure provenance: a respawned
+    /// worker rebuilds the identical space and re-scans pure data.
+    pub shard_respawns: u64,
+    /// Times the spawn circuit breaker tripped (it latches, so 0 or 1 per
+    /// solve): [`solve_dist`] stopped respawning after consecutive spawn
+    /// failures and the coordinator's in-process sweep finished the solve.
+    pub breaker_trips: u64,
     /// Whether the search ran to completion (gap provably 0).
     pub proved_optimal: bool,
 }

@@ -1,0 +1,386 @@
+//! Deterministic, seedable fault injection at named sites — the chaos
+//! layer behind `GOMA_CHAOS=seed:spec`.
+//!
+//! A *site* is a stable dotted name compiled into the code path it guards
+//! (`warm.flush.write`, `server.conn.write`, `dist.spawn`,
+//! `shard.task`, ...). Each call to [`hit`] advances that site's hit
+//! counter and returns the fault the installed plan assigns to that
+//! ordinal, if any. Everything is counter-driven — no clocks, no
+//! randomness — so a given `(spec, request order)` pair always fires the
+//! same faults at the same places, and a failing chaos run can be
+//! replayed byte-for-byte from its spec string alone. The seed does not
+//! perturb the registry itself; it is surfaced via [`seed`] so test
+//! harnesses can derive their request schedules from the same knob that
+//! names the run.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! GOMA_CHAOS = <seed> ":" [ <rule> *( ";" <rule> ) ]
+//! rule       = <site> "=" <kind> [ "@" <sel> ]
+//! kind       = "kill" | "delay:" <ms> | "err" [ ":" <flavor> ]
+//!            | "torn:" <bytes> | "corrupt"
+//! flavor     = "enospc" | "timeout" | "pipe"
+//! sel        = <n> | <lo> ".." <hi>          ; default: every hit
+//! ```
+//!
+//! `@n` fires on the n-th hit of the site only (0-based); `@lo..hi` on
+//! the half-open range; no selector fires on every hit. Hit counters are
+//! per-process: a respawned worker starts its ordinals over, which is
+//! exactly what makes crash loops expressible (`shard.task=kill@0` kills
+//! every incarnation's first task until the supervisor gives up).
+//!
+//! ## Compilation
+//!
+//! The registry is compiled in under `cfg(any(test, feature = "chaos"))`;
+//! release builds carry only inert no-op stubs, so a production binary
+//! cannot be chaos-steered even with the env var set (it logs one notice
+//! and ignores it). Tests and benches always get the real registry via
+//! the self dev-dependency in `Cargo.toml`.
+
+use std::time::Duration;
+
+/// The runtime knob: `GOMA_CHAOS=seed:spec` (see the module docs).
+pub const CHAOS_ENV: &str = "GOMA_CHAOS";
+
+/// Exit code a [`Fault::Kill`] dies with — mirrors SIGKILL's shell code
+/// so supervision treats injected and real kills identically.
+pub const KILL_EXIT_CODE: i32 = 137;
+
+/// What a site is told to do on a matched hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Terminate the process immediately (exit code [`KILL_EXIT_CODE`]).
+    Kill,
+    /// Stall the site for the given duration before proceeding normally.
+    Delay(Duration),
+    /// Fail the site with an IO error of the given flavor.
+    Err(Flavor),
+    /// For write sites: emit only the first `n` bytes, then fail.
+    Torn(usize),
+    /// For protocol sites: emit damaged bytes / doctored fields.
+    Corrupt,
+}
+
+/// The `io::ErrorKind` a [`Fault::Err`] surfaces as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    /// `StorageFull` — the ENOSPC degraded-mode trigger.
+    Enospc,
+    /// `TimedOut` — what a tripped write/read timeout returns.
+    Timeout,
+    /// `BrokenPipe` — the vanished-peer write error.
+    Pipe,
+    /// `Other` — an unclassified IO failure.
+    Generic,
+}
+
+/// Materialize a flavor as the `io::Error` the real failure would be.
+pub fn flavor_error(flavor: Flavor) -> std::io::Error {
+    use std::io::{Error, ErrorKind};
+    match flavor {
+        Flavor::Enospc => Error::new(ErrorKind::StorageFull, "injected ENOSPC"),
+        Flavor::Timeout => Error::new(ErrorKind::TimedOut, "injected timeout"),
+        Flavor::Pipe => Error::new(ErrorKind::BrokenPipe, "injected broken pipe"),
+        Flavor::Generic => Error::other("injected IO error"),
+    }
+}
+
+/// Convenience wrapper for plain IO sites: applies a [`Fault::Delay`]
+/// inline (sleep, then `Ok`), dies on [`Fault::Kill`], and maps every
+/// failure-shaped fault to its `io::Error`. Sites that can honor partial
+/// writes ([`Fault::Torn`]) should call [`hit`] directly instead.
+pub fn check_io(site: &str) -> std::io::Result<()> {
+    match hit(site) {
+        None => Ok(()),
+        Some(Fault::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(Fault::Kill) => std::process::exit(KILL_EXIT_CODE),
+        Some(Fault::Err(flavor)) => Err(flavor_error(flavor)),
+        Some(Fault::Torn(_)) | Some(Fault::Corrupt) => {
+            Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "injected corruption"))
+        }
+    }
+}
+
+#[cfg(any(test, feature = "chaos"))]
+mod imp {
+    use super::{Fault, Flavor, CHAOS_ENV};
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Duration;
+
+    #[derive(Debug, Clone, PartialEq, Eq)]
+    struct Rule {
+        site: String,
+        fault: Fault,
+        /// Matched hit ordinals: `[lo, hi)`; `hi == None` is unbounded.
+        lo: u64,
+        hi: Option<u64>,
+    }
+
+    #[derive(Debug, Default)]
+    struct Plan {
+        seed: u64,
+        rules: Vec<Rule>,
+        counts: HashMap<String, u64>,
+    }
+
+    fn registry() -> &'static Mutex<Option<Plan>> {
+        static REGISTRY: OnceLock<Mutex<Option<Plan>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(None))
+    }
+
+    fn parse_rule(text: &str) -> Result<Rule, String> {
+        let (site, rest) =
+            text.split_once('=').ok_or_else(|| format!("rule '{text}' has no '='"))?;
+        if site.is_empty() {
+            return Err(format!("rule '{text}' has an empty site"));
+        }
+        let (kind, sel) = match rest.split_once('@') {
+            Some((k, s)) => (k, Some(s)),
+            None => (rest, None),
+        };
+        let fault = if kind == "kill" {
+            Fault::Kill
+        } else if let Some(ms) = kind.strip_prefix("delay:") {
+            let ms: u64 = ms.parse().map_err(|_| format!("bad delay millis in '{text}'"))?;
+            Fault::Delay(Duration::from_millis(ms))
+        } else if kind == "err" {
+            Fault::Err(Flavor::Generic)
+        } else if let Some(flavor) = kind.strip_prefix("err:") {
+            Fault::Err(match flavor {
+                "enospc" => Flavor::Enospc,
+                "timeout" => Flavor::Timeout,
+                "pipe" => Flavor::Pipe,
+                other => return Err(format!("unknown err flavor '{other}' in '{text}'")),
+            })
+        } else if let Some(bytes) = kind.strip_prefix("torn:") {
+            let n: usize = bytes.parse().map_err(|_| format!("bad torn bytes in '{text}'"))?;
+            Fault::Torn(n)
+        } else if kind == "corrupt" {
+            Fault::Corrupt
+        } else {
+            return Err(format!("unknown fault kind '{kind}' in '{text}'"));
+        };
+        let (lo, hi) = match sel {
+            None => (0, None),
+            Some(s) => match s.split_once("..") {
+                Some((a, b)) => {
+                    let lo: u64 = a.parse().map_err(|_| format!("bad range lo in '{text}'"))?;
+                    let hi: u64 = b.parse().map_err(|_| format!("bad range hi in '{text}'"))?;
+                    if hi <= lo {
+                        return Err(format!("empty hit range in '{text}'"));
+                    }
+                    (lo, Some(hi))
+                }
+                None => {
+                    let n: u64 = s.parse().map_err(|_| format!("bad hit ordinal in '{text}'"))?;
+                    (n, Some(n + 1))
+                }
+            },
+        };
+        Ok(Rule { site: site.to_string(), fault, lo, hi })
+    }
+
+    fn parse(spec: &str) -> Result<Plan, String> {
+        let (seed, rules_text) =
+            spec.split_once(':').ok_or_else(|| format!("'{spec}' has no 'seed:' prefix"))?;
+        let seed: u64 = seed.parse().map_err(|_| format!("bad seed in '{spec}'"))?;
+        let mut rules = Vec::new();
+        for rule in rules_text.split(';').filter(|r| !r.is_empty()) {
+            rules.push(parse_rule(rule)?);
+        }
+        Ok(Plan { seed, rules, counts: HashMap::new() })
+    }
+
+    /// Install a chaos plan from its spec string, replacing any previous
+    /// plan and resetting every hit counter.
+    pub fn install(spec: &str) -> Result<(), String> {
+        let plan = parse(spec)?;
+        *registry().lock().unwrap() = Some(plan);
+        Ok(())
+    }
+
+    /// Install from `GOMA_CHAOS` if set; `true` when a plan was installed.
+    /// A malformed spec aborts loudly — a chaos run that silently ran
+    /// fault-free would be worse than no run.
+    pub fn install_from_env() -> bool {
+        match std::env::var(CHAOS_ENV) {
+            Ok(spec) => {
+                install(&spec).unwrap_or_else(|e| panic!("bad {CHAOS_ENV} spec: {e}"));
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Remove the plan; every site becomes a no-op again.
+    pub fn clear() {
+        *registry().lock().unwrap() = None;
+    }
+
+    /// The installed plan's seed (0 when none) — for harnesses deriving
+    /// their schedules from the chaos knob.
+    pub fn seed() -> u64 {
+        registry().lock().unwrap().as_ref().map_or(0, |p| p.seed)
+    }
+
+    /// Whether a plan is installed (even an empty one).
+    pub fn active() -> bool {
+        registry().lock().unwrap().is_some()
+    }
+
+    /// Record one hit of `site` and return the fault assigned to this
+    /// ordinal, if any. First matching rule wins.
+    pub fn hit(site: &str) -> Option<Fault> {
+        let mut guard = registry().lock().unwrap();
+        let plan = guard.as_mut()?;
+        let n = plan.counts.entry(site.to_string()).or_insert(0);
+        let ordinal = *n;
+        *n += 1;
+        plan.rules
+            .iter()
+            .find(|r| r.site == site && ordinal >= r.lo && r.hi.is_none_or(|hi| ordinal < hi))
+            .map(|r| r.fault)
+    }
+}
+
+#[cfg(not(any(test, feature = "chaos")))]
+mod imp {
+    use super::{Fault, CHAOS_ENV};
+
+    /// Chaos is not compiled into this build; installing is refused so a
+    /// caller that *requires* injection fails loudly instead of running a
+    /// silently fault-free "chaos" pass.
+    pub fn install(_spec: &str) -> Result<(), String> {
+        Err("fault injection not compiled in (build with --features chaos)".to_string())
+    }
+
+    /// Release builds note-and-ignore the env knob (returns `false`).
+    pub fn install_from_env() -> bool {
+        if std::env::var(CHAOS_ENV).is_ok() {
+            eprintln!("[chaos] {CHAOS_ENV} is set but this build has no chaos support; ignoring");
+        }
+        false
+    }
+
+    pub fn clear() {}
+
+    pub fn seed() -> u64 {
+        0
+    }
+
+    pub fn active() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn hit(_site: &str) -> Option<Fault> {
+        None
+    }
+}
+
+pub use imp::{active, clear, hit, install, install_from_env, seed};
+
+/// Serialize tests that install chaos plans: the registry is
+/// process-global, and `cargo test` runs a binary's tests on parallel
+/// threads. Every test (in any module) that calls [`install`] must hold
+/// this guard for its whole install→assert→[`clear`] span. Compiled only
+/// alongside the real registry — release builds have no plans to race on.
+#[cfg(any(test, feature = "chaos"))]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::{Mutex, OnceLock};
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::MutexGuard;
+
+    /// The registry is process-global; unit tests that install plans must
+    /// not interleave.
+    fn serial() -> MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    #[test]
+    fn spec_round_trip_fires_the_exact_ordinals() {
+        let _guard = serial();
+        install("42:a.b=err:enospc@1;c.d=delay:5;e.f=torn:16@2..4").unwrap();
+        assert_eq!(seed(), 42);
+        assert!(active());
+        // a.b: only hit 1.
+        assert_eq!(hit("a.b"), None);
+        assert_eq!(hit("a.b"), Some(Fault::Err(Flavor::Enospc)));
+        assert_eq!(hit("a.b"), None);
+        // c.d: every hit.
+        for _ in 0..3 {
+            assert_eq!(hit("c.d"), Some(Fault::Delay(Duration::from_millis(5))));
+        }
+        // e.f: hits 2 and 3 only.
+        assert_eq!(hit("e.f"), None);
+        assert_eq!(hit("e.f"), None);
+        assert_eq!(hit("e.f"), Some(Fault::Torn(16)));
+        assert_eq!(hit("e.f"), Some(Fault::Torn(16)));
+        assert_eq!(hit("e.f"), None);
+        // Unnamed sites never fire.
+        assert_eq!(hit("nope"), None);
+        clear();
+        assert!(!active());
+        assert_eq!(hit("c.d"), None);
+    }
+
+    #[test]
+    fn install_resets_hit_counters() {
+        let _guard = serial();
+        install("1:s=kill@0").unwrap();
+        assert_eq!(hit("s"), Some(Fault::Kill));
+        assert_eq!(hit("s"), None);
+        install("1:s=kill@0").unwrap();
+        assert_eq!(hit("s"), Some(Fault::Kill));
+        clear();
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected_with_context() {
+        let _guard = serial();
+        for bad in [
+            "no-colon",
+            "x:a.b",
+            "1:=kill",
+            "1:a.b=explode",
+            "1:a.b=err:eio",
+            "1:a.b=delay:soon",
+            "1:a.b=torn:-1",
+            "1:a.b=kill@x",
+            "1:a.b=kill@3..3",
+        ] {
+            assert!(install(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // Seed with an empty rule list is a valid (inert) plan: the CI
+        // chaos leg uses it to hand the harness a seed without forcing a
+        // site schedule.
+        install("7:").unwrap();
+        assert_eq!(seed(), 7);
+        assert_eq!(hit("anything"), None);
+        clear();
+    }
+
+    #[test]
+    fn check_io_maps_flavors_to_error_kinds() {
+        let _guard = serial();
+        install("1:w=err:enospc@0;w=err:pipe@1;w=err:timeout@2;w=err@3").unwrap();
+        use std::io::ErrorKind;
+        assert_eq!(check_io("w").unwrap_err().kind(), ErrorKind::StorageFull);
+        assert_eq!(check_io("w").unwrap_err().kind(), ErrorKind::BrokenPipe);
+        assert_eq!(check_io("w").unwrap_err().kind(), ErrorKind::TimedOut);
+        assert_eq!(check_io("w").unwrap_err().kind(), ErrorKind::Other);
+        assert!(check_io("w").is_ok(), "past the schedule the site is clean");
+        clear();
+    }
+}

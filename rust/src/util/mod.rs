@@ -1,10 +1,12 @@
 //! Shared numeric utilities: divisor/prime machinery used by the folded
 //! mapping search space, statistics helpers used by the evaluation
 //! pipeline (geomean / median / percentiles of normalized EDP and runtime),
-//! the deterministic worker pool the eval fan-out runs on, and the
-//! dependency-free JSON tree the wire protocol speaks.
+//! the deterministic worker pool the eval fan-out runs on, the
+//! dependency-free JSON tree the wire protocol speaks, and the seedable
+//! fault-injection registry (`util::fault`) the chaos suite drives.
 
 pub mod divisors;
+pub mod fault;
 pub mod fnv;
 pub mod json;
 pub mod parallel;

@@ -1,0 +1,395 @@
+//! Seeded chaos sweep across the serving stack (DESIGN.md §13): every
+//! injected schedule must leave answers **bit-identical** to a
+//! fault-free run, answer every request **exactly once**, keep the
+//! accounting invariants exact, and surface the failure only in the
+//! supervision counters — never in the answer.
+//!
+//! The schedules ride `util::fault` (`GOMA_CHAOS=seed:spec`):
+//!
+//! * worker kills and stalls under the distributed route — respawn
+//!   supervision, `shard_respawns` in certificate and metrics;
+//! * spawn failures tripping the circuit breaker to the in-process
+//!   sweep — `breaker_trips`, `/readyz` flipping degraded and back;
+//! * warm-store ENOSPC and torn tmp writes — RAM-only degraded mode,
+//!   `/readyz` transitions, and the recovery flush that lands the full
+//!   union so nothing proved during the outage is ever lost;
+//! * response-write faults retried by the wire client — the
+//!   `goma_wire_write_errors_total` overlays and exactly-once
+//!   accounting under client retries.
+//!
+//! CI runs this suite twice under `GOMA_CHAOS=101:` and `=202:` — a
+//! seed with no site rules — and every test derives its schedule and
+//! request order from that seed ([`Chaos::seed`]), so the two legs
+//! exercise different orders against the same invariants. The fault
+//! registry is process-global: every test serializes on
+//! [`fault::test_guard`] through the [`Chaos`] RAII helper, which also
+//! restores `GOMA_CHAOS` for the spawned worker fleets on drop.
+
+use goma::arch::Accelerator;
+use goma::coordinator::wire::{self, ArchSpec, SolveSpec};
+use goma::coordinator::{MappingServer, MappingService, ServeOptions, WireClient};
+use goma::mapping::GemmShape;
+use goma::solver::{solve_dist, DistOptions, SolveRequest, SolveResult, SolverOptions};
+use goma::util::fault;
+use goma::util::Rng;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+mod common;
+use common::{assert_bit_identical, test_shards, test_workers};
+
+/// RAII chaos plan: holds the cross-test serialization guard for its
+/// whole lifetime, and on drop clears the registry and restores the
+/// `GOMA_CHAOS` the process started with (CI's `<seed>:` spec), so the
+/// next test — and the worker fleets it spawns — start clean.
+struct Chaos {
+    _guard: std::sync::MutexGuard<'static, ()>,
+    saved_env: Option<String>,
+    touched_env: bool,
+}
+
+impl Chaos {
+    /// The sweep's seed: the leading field of the ambient `GOMA_CHAOS`
+    /// (how CI parameterizes the two legs), else a fixed default.
+    fn seed() -> u64 {
+        std::env::var(fault::CHAOS_ENV)
+            .ok()
+            .and_then(|v| v.split(':').next().and_then(|s| s.parse().ok()))
+            .unwrap_or(7)
+    }
+
+    /// Install `rules` into this process's registry — for coordinator-
+    /// side sites (`warm.flush.write`, `server.conn.*`, `dist.spawn`).
+    fn install(rules: &str) -> Chaos {
+        let guard = fault::test_guard();
+        fault::install(&format!("{}:{rules}", Chaos::seed())).expect("chaos spec");
+        Chaos { _guard: guard, saved_env: None, touched_env: false }
+    }
+
+    /// Export `rules` through the environment — for worker-side sites
+    /// (`shard.*`): every spawned worker installs it via
+    /// `install_from_env`, while this process's registry stays empty.
+    fn env(rules: &str) -> Chaos {
+        let guard = fault::test_guard();
+        let saved = std::env::var(fault::CHAOS_ENV).ok();
+        std::env::set_var(fault::CHAOS_ENV, format!("{}:{rules}", Chaos::seed()));
+        Chaos { _guard: guard, saved_env: saved, touched_env: true }
+    }
+
+    /// End the outage while keeping the serialization guard: the next
+    /// flush/spawn/write proceeds for real — the recovery half of every
+    /// degraded-mode schedule.
+    fn lift(&self) {
+        fault::clear();
+    }
+}
+
+impl Drop for Chaos {
+    fn drop(&mut self) {
+        fault::clear();
+        if self.touched_env {
+            match self.saved_env.take() {
+                Some(v) => std::env::set_var(fault::CHAOS_ENV, v),
+                None => std::env::remove_var(fault::CHAOS_ENV),
+            }
+        }
+    }
+}
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_goma"))
+}
+
+/// Fresh per-test temp dir (tests share one process).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("goma_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The answer half of the contract for runs whose *provenance* counters
+/// legitimately differ from the baseline (respawns, breaker trips):
+/// every field the engine promises is fault-invariant. Fault-free runs
+/// use `common::assert_bit_identical` instead, which pins the full
+/// certificate.
+fn assert_same_answer(run: &SolveResult, base: &SolveResult, label: &str) {
+    let (cr, cb) = (&run.certificate, &base.certificate);
+    assert_eq!(run.mapping, base.mapping, "{label}: mapping");
+    assert_eq!(
+        run.energy.normalized.to_bits(),
+        base.energy.normalized.to_bits(),
+        "{label}: normalized energy"
+    );
+    assert_eq!(
+        run.energy.total_pj.to_bits(),
+        base.energy.total_pj.to_bits(),
+        "{label}: total energy"
+    );
+    assert_eq!(cr.upper_bound.to_bits(), cb.upper_bound.to_bits(), "{label}: upper bound");
+    assert_eq!(cr.lower_bound.to_bits(), cb.lower_bound.to_bits(), "{label}: lower bound");
+    assert_eq!(cr.gap.to_bits(), cb.gap.to_bits(), "{label}: gap");
+    assert_eq!(cr.units_total, cb.units_total, "{label}: units_total");
+    assert_eq!(cr.proved_optimal, cb.proved_optimal, "{label}: proved_optimal");
+}
+
+/// Poll `/readyz` until it reports `want` (10 s budget) — readiness is
+/// asynchronous to the fault by design: the dispatcher flips it at its
+/// next flush window or dist solve, not at injection time.
+fn poll_readyz(addr: SocketAddr, want: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, body) = wire::http_call(addr, "GET", "/readyz", &[], "").unwrap();
+        if body == want {
+            assert_eq!(status, 200, "{want:?} must be an HTTP 200 (deliberate — DESIGN.md §13)");
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "/readyz never reached {want:?}; last saw {status} {body:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Worker-fleet schedules through the full service route: a crash-loop
+/// kill (every incarnation's first task dies — the respawn budget
+/// drains and the in-process sweep finishes) and a benign stall (far
+/// below the silence timeout — pure latency). Both answer bit-for-bit
+/// like the in-process engine; only the kill schedule may move the
+/// supervision counters.
+#[test]
+fn worker_kill_and_stall_schedules_answer_bit_identically() {
+    let shapes = [GemmShape::new(16, 24, 32), GemmShape::new(8, 8, 16), GemmShape::new(12, 8, 24)];
+    let arch = Accelerator::custom("chaos-fleet", 1 << 12, 8, 64);
+    let schedules: [(&str, bool); 2] =
+        [("shard.task=kill@0", true), ("shard.task=delay:150@0", false)];
+    for (rules, lethal) in schedules {
+        let chaos = Chaos::env(rules);
+        // Request order is the seed's lever: both CI legs run the same
+        // schedule over a different order, same invariants.
+        let mut order = shapes.to_vec();
+        Rng::seed_from_u64(Chaos::seed() ^ 0x5EED).shuffle(&mut order);
+
+        let plain = MappingService::default().spawn();
+        let dist = MappingService::default()
+            .with_shards(test_shards().max(2))
+            .with_shard_bin(worker_bin())
+            .spawn();
+        for &shape in &order {
+            let label = format!("{rules} {shape}");
+            let b = plain.map(shape, arch.clone()).unwrap_or_else(|e| panic!("{label}: {e}"));
+            let d = dist.map(shape, arch.clone()).unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_same_answer(&d, &b, &label);
+        }
+        let m = dist.metrics();
+        if lethal {
+            assert!(m.shard_respawns() >= 1, "{rules}: dead slots must be respawned into");
+            assert_eq!(m.breaker_trips(), 0, "{rules}: spawns succeed, breaker stays closed");
+        } else {
+            assert_eq!(m.shard_respawns(), 0, "{rules}: a stall is not a death");
+            assert_eq!(m.shard_retries(), 0, "{rules}: a stall under the timeout costs nothing");
+        }
+        // Exactly once, exactly classified: the accounting invariant is
+        // exact at quiescence under every schedule.
+        let (req, solves, hits, coalesced, errs) = m.snapshot();
+        assert_eq!(req, shapes.len() as u64, "{rules}: every request accepted once");
+        assert_eq!(req, hits + coalesced + solves + errs, "{rules}: accounting invariant");
+        dist.shutdown();
+        plain.shutdown();
+        chaos.lift();
+    }
+}
+
+/// The ENOSPC/torn-write schedule: the warm store's first flush tears
+/// its tmp file, every later one hits ENOSPC. The service enters
+/// RAM-only degraded mode — `/readyz` says `degraded`, answers keep
+/// flowing bit-identically — and once the outage lifts, the next flush
+/// window lands the **full union**, so reopening the store proves
+/// nothing from the degraded window was lost.
+#[test]
+fn enospc_outage_degrades_readyz_and_recovers_without_losing_proofs() {
+    let dir = tmp_dir("enospc");
+    let arch = Accelerator::custom("chaos-warm", 1 << 16, 16, 64);
+    let arch_spec = ArchSpec::Custom {
+        name: "chaos-warm".into(),
+        sram_words: 1 << 16,
+        num_pe: 16,
+        regfile_words: 64,
+    };
+    let shapes =
+        [GemmShape::new(64, 96, 32), GemmShape::new(32, 64, 16), GemmShape::new(64, 64, 64)];
+
+    let chaos = Chaos::install("warm.flush.write=torn:24@0;warm.flush.write=err:enospc");
+    let service = MappingService::default()
+        .with_workers(test_workers())
+        .with_cache_dir(&dir)
+        .with_flush_every(1)
+        .with_flush_interval(Duration::from_millis(50))
+        .spawn();
+    let server = MappingServer::spawn(service, ServeOptions::default()).expect("bind");
+    let addr = server.addr();
+    poll_readyz(addr, "ok\n");
+
+    // Solve through the real client path while the disk tier is down.
+    let mut client = WireClient::new(addr.to_string());
+    let answers: Vec<_> = shapes
+        .iter()
+        .map(|&s| *client.solve(&SolveSpec::new(s, arch_spec.clone())).expect("feasible"))
+        .collect();
+    assert_eq!(client.retries(), 0, "a warm-store outage is invisible on the wire");
+
+    let m = server.service().metrics();
+    poll_readyz(addr, "degraded\n");
+    assert!(m.warm_degraded(), "the degraded latch backs the probe");
+    assert!(m.warm_write_failures() >= 1, "every failed flush is counted");
+
+    // Lift the outage: the dispatcher's idle probe retries the flush
+    // (the merged RAM view still carries everything) and recovery is
+    // visible on the probe without any new traffic.
+    chaos.lift();
+    poll_readyz(addr, "ok\n");
+    assert!(!m.warm_degraded());
+
+    // Answers were never touched: bit-identical to a fault-free service,
+    // and the invariant is exact at quiescence.
+    let plain = MappingService::default().with_workers(test_workers()).spawn();
+    for (i, &shape) in shapes.iter().enumerate() {
+        let b = plain.map(shape, arch.clone()).expect("feasible");
+        assert_bit_identical(&answers[i], &b, &format!("degraded window, {shape}"));
+    }
+    plain.shutdown();
+    let (req, solves, hits, coalesced, errs) = m.snapshot();
+    assert_eq!(req, hits + coalesced + solves + errs, "accounting invariant");
+    assert_eq!(errs, 0);
+    server.shutdown();
+
+    // Durability: nothing proved during the outage was lost, and the
+    // torn tmp never corrupted the real store (tmp + rename).
+    let reopened = MappingService::default()
+        .with_workers(test_workers())
+        .with_cache_dir(&dir)
+        .spawn();
+    for (i, &shape) in shapes.iter().enumerate() {
+        let r = reopened.map(shape, arch.clone()).expect("feasible");
+        assert_bit_identical(&r, &answers[i], &format!("reopened store, {shape}"));
+    }
+    let rm = reopened.metrics();
+    let (_, solves2, ..) = rm.snapshot();
+    assert_eq!(solves2, 0, "every proof from the degraded window must be on disk");
+    assert_eq!(rm.warm_hits(), shapes.len() as u64);
+    assert_eq!(solves, shapes.len() as u64, "the first service solved each key exactly once");
+    reopened.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The spawn-failure schedule: every worker spawn fails, the circuit
+/// breaker trips after its threshold, and the in-process sweep finishes
+/// the solve bit-identically. The trip is visible in the certificate,
+/// the service metrics, and `/readyz` — and a later clean dist solve
+/// closes the breaker again.
+#[test]
+fn spawn_breaker_trips_to_the_in_process_sweep_and_readyz_tracks_it() {
+    let arch = Accelerator::custom("chaos-breaker", 1 << 12, 8, 64);
+    let arch_spec = ArchSpec::Custom {
+        name: "chaos-breaker".into(),
+        sram_words: 1 << 12,
+        num_pe: 8,
+        regfile_words: 64,
+    };
+    let chaos = Chaos::install("dist.spawn=err");
+
+    // Certificate-level: solve_dist itself survives a fleet that cannot
+    // spawn at all, with the trip on the certificate.
+    let shape = GemmShape::new(16, 24, 32);
+    let base = SolveRequest::new(shape, &arch)
+        .options(SolverOptions::default())
+        .threads(1)
+        .solve()
+        .expect("feasible");
+    let dopts =
+        DistOptions { shards: 4, worker_bin: Some(worker_bin()), ..DistOptions::default() };
+    let swept = solve_dist(shape, &arch, SolverOptions::default(), None, &dopts)
+        .expect("the sweep must finish the solve");
+    assert_same_answer(&swept, &base, "breaker sweep");
+    assert!(swept.certificate.breaker_trips >= 1, "the trip must be on the certificate");
+
+    // Service + probe level: the trip latches `/readyz` to degraded...
+    let service = MappingService::default()
+        .with_shards(test_shards().max(2))
+        .with_shard_bin(worker_bin())
+        .spawn();
+    let server = MappingServer::spawn(service, ServeOptions::default()).expect("bind");
+    let addr = server.addr();
+    let mut client = WireClient::new(addr.to_string());
+    let r = client.solve(&SolveSpec::new(shape, arch_spec.clone())).expect("feasible");
+    assert_same_answer(&r, &base, "breaker via service");
+    let m = server.service().metrics();
+    assert!(m.breaker_trips() >= 1, "the trip must be on the metrics");
+    assert!(m.breaker_open(), "the trip must latch the breaker gauge");
+    poll_readyz(addr, "degraded\n");
+
+    // ...and the first clean dist solve after the outage closes it.
+    chaos.lift();
+    let shape2 = GemmShape::new(8, 8, 16);
+    let base2 = SolveRequest::new(shape2, &arch)
+        .options(SolverOptions::default())
+        .threads(1)
+        .solve()
+        .expect("feasible");
+    let r2 = client.solve(&SolveSpec::new(shape2, arch_spec)).expect("feasible");
+    assert_same_answer(&r2, &base2, "post-recovery solve");
+    assert!(!m.breaker_open(), "a clean dist solve closes the breaker");
+    poll_readyz(addr, "ok\n");
+    server.shutdown();
+}
+
+/// The response-write schedule — the deterministic half of the write-
+/// error regression: the first response write is injected to fail with
+/// a broken pipe (then, second leg, a timeout). The wire client retries
+/// to the bit-identical answer, the failure lands in the matching
+/// overlay counter, and both attempts are classified exactly once.
+#[test]
+fn injected_write_faults_are_counted_and_retried_to_the_identical_answer() {
+    let arch = Accelerator::custom("chaos-wire", 1 << 16, 16, 64);
+    let arch_spec = ArchSpec::Custom {
+        name: "chaos-wire".into(),
+        sram_words: 1 << 16,
+        num_pe: 16,
+        regfile_words: 64,
+    };
+    for flavor in ["pipe", "timeout"] {
+        let _chaos = Chaos::install(&format!("server.conn.write=err:{flavor}@0"));
+        let service = MappingService::default().with_workers(test_workers()).spawn();
+        let server = MappingServer::spawn(service, ServeOptions::default()).expect("bind");
+        let addr = server.addr();
+
+        let mut client = WireClient::new(addr.to_string());
+        let shape = GemmShape::new(64, 96, 32);
+        let r = client.solve(&SolveSpec::new(shape, arch_spec.clone())).expect("retry recovers");
+        assert!(client.retries() >= 1, "{flavor}: the first write was injected to fail");
+        let b = server.service().map(shape, arch.clone()).expect("feasible");
+        assert_bit_identical(&r, &b, &format!("{flavor}: retried answer"));
+
+        let m = server.metrics();
+        let (timeouts, pipes) = (m.write_timeouts(), m.write_pipe_errors());
+        match flavor {
+            "pipe" => assert_eq!((pipes, timeouts), (1, 0), "pipe flavor → pipe counter"),
+            _ => assert_eq!((timeouts, pipes), (1, 0), "timeout flavor → timeout counter"),
+        }
+        // Both attempts were answered and classified exactly once each —
+        // a failed write is an overlay, never a reclassification.
+        assert_eq!(m.answered_ok(), 2, "{flavor}: first attempt answered, retry answered");
+        assert_eq!(
+            m.solve_requests(),
+            m.answered_ok()
+                + m.answered_err()
+                + m.shed_overload()
+                + m.shed_quota()
+                + m.bad_requests(),
+            "{flavor}: the wire invariant stays exact under write faults"
+        );
+        server.shutdown();
+    }
+}

@@ -96,5 +96,7 @@ pub fn assert_bit_identical(a: &SolveResult, b: &SolveResult, label: &str) {
     assert_eq!(ca.units_skipped, cb.units_skipped, "{label}: units_skipped");
     assert_eq!(ca.shards, cb.shards, "{label}: shards");
     assert_eq!(ca.shard_retries, cb.shard_retries, "{label}: shard_retries");
+    assert_eq!(ca.shard_respawns, cb.shard_respawns, "{label}: shard_respawns");
+    assert_eq!(ca.breaker_trips, cb.breaker_trips, "{label}: breaker_trips");
     assert_eq!(ca.proved_optimal, cb.proved_optimal, "{label}: proved_optimal");
 }

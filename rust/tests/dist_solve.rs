@@ -196,15 +196,25 @@ fn killed_hung_and_corrupted_shards_recover_to_the_identical_answer() {
         .threads(1)
         .solve()
         .expect("the fault instance must be feasible");
-    let faults =
-        ["die-on-task:0", "hang-on-task:0", "corrupt-on-task:0", "truncate-on-task:1"];
+    // Chaos specs (util::fault grammar, seed:site=kind@ordinal), injected
+    // into shard index 1 via `DistOptions::chaos`. A respawned worker
+    // restarts its per-process hit ordinals, so `@0` faults re-fire in
+    // every incarnation — the respawn budget drains and the in-process
+    // sweep finishes the leftovers, which is exactly the crash-loop path.
+    let faults = [
+        "7:shard.task=kill@0",
+        "7:shard.task=delay:3600000@0",
+        "7:shard.done.write=corrupt@0",
+        "7:shard.done.write=torn:8@1",
+    ];
     for fault in faults {
-        // Hang detection rides the protocol timeout; everything else is
+        // Hang detection rides the protocol-silence timeout (heartbeats
+        // restart it; the injected delay mutes them); everything else is
         // detected the moment the stream breaks, so the short timeout is
         // harmless there too (healthy chunks answer in milliseconds).
         let dopts = DistOptions {
             task_timeout: Duration::from_millis(2000),
-            fault: Some((1, fault.to_string())),
+            chaos: Some((1, fault.to_string())),
             ..dopts(4)
         };
         let dist = solve_dist(shape, &arch, SolverOptions::default(), None, &dopts)
@@ -213,6 +223,14 @@ fn killed_hung_and_corrupted_shards_recover_to_the_identical_answer() {
         assert!(
             dist.certificate.shard_retries >= 1,
             "fault {fault}: the re-queued range must be visible in shard_retries"
+        );
+        assert!(
+            dist.certificate.shard_respawns >= 1,
+            "fault {fault}: the dead slot must have been respawned into"
+        );
+        assert_eq!(
+            dist.certificate.breaker_trips, 0,
+            "fault {fault}: spawns all succeed, so the breaker must stay closed"
         );
         assert!(dist.certificate.shards >= 1, "fault {fault}: shard provenance");
     }
@@ -265,10 +283,12 @@ fn infeasible_shard_ranges_do_not_mask_a_feasible_optimum() {
 fn mismatched_workers_are_rejected_at_spawn_with_a_clear_error() {
     let shape = GemmShape::new(8, 8, 8);
     let arch = Accelerator::custom("dist-hs", 1 << 12, 4, 64);
-    let spoofs =
-        [("spoof-version", "version mismatch"), ("spoof-fingerprint", "fingerprint mismatch")];
+    let spoofs = [
+        ("7:shard.hello.version=corrupt", "version mismatch"),
+        ("7:shard.hello.fingerprint=corrupt", "fingerprint mismatch"),
+    ];
     for (fault, needle) in spoofs {
-        let dopts = DistOptions { fault: Some((0, fault.to_string())), ..dopts(2) };
+        let dopts = DistOptions { chaos: Some((0, fault.to_string())), ..dopts(2) };
         match solve_dist(shape, &arch, SolverOptions::default(), None, &dopts) {
             Err(DistError::Worker(msg)) => {
                 assert!(

@@ -15,6 +15,10 @@
 //!   shed 429 beyond the in-flight cap and all complete under retry;
 //! * **deadlines** — a request whose deadline expires while queued is
 //!   answered `interrupted`, and the key is provably not poisoned;
+//! * **readiness & abandonment** — `/readyz` routes and method-checks
+//!   like the other probes, and clients that vanish before reading their
+//!   response land in the write-error overlay counters without wedging a
+//!   connection thread or skewing the accounting invariant;
 //! * **`/metrics` golden** — the exposition parses as Prometheus text
 //!   format (HELP/TYPE discipline, sample syntax, cumulative histogram)
 //!   and its counters agree with the in-process metrics.
@@ -303,6 +307,14 @@ fn bad_requests_health_and_unknown_routes() {
     let (status, body) = wire::http_call(addr, "GET", "/healthz", &[], "").unwrap();
     assert_eq!((status, body.as_str()), (200, "ok\n"));
 
+    // Readiness is its own probe: a healthy idle server reports `ok`, and
+    // the route is GET-only like the other probes (DESIGN.md §13 — the
+    // degraded/draining states are exercised by the chaos suite).
+    let (status, body) = wire::http_call(addr, "GET", "/readyz", &[], "").unwrap();
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+    let (status, _) = wire::http_call(addr, "POST", "/readyz", &[], "").unwrap();
+    assert_eq!(status, 405, "POST /readyz is a method error, not a 404");
+
     let (status, _) = wire::http_call(addr, "GET", "/nope", &[], "").unwrap();
     assert_eq!(status, 404);
     let (status, _) = wire::http_call(addr, "GET", "/solve", &[], "").unwrap();
@@ -324,6 +336,59 @@ fn bad_requests_health_and_unknown_routes() {
         m.solve_requests(),
         m.answered_ok() + m.answered_err() + m.shed_overload() + m.shed_quota() + m.bad_requests()
     );
+    server.shutdown();
+}
+
+#[test]
+fn abandoned_clients_are_counted_and_never_wedge_the_server() {
+    // Regression for the response-write path: a client that sends a full
+    // request and vanishes before reading the reply must not hang a
+    // connection thread (writes carry `WRITE_TIMEOUT`) and must not skew
+    // the accounting — the request *was* answered; a failed write is an
+    // overlay counter, never a reclassification.
+    use std::io::Write;
+    let service = MappingService::default().with_workers(test_workers()).spawn();
+    let server = MappingServer::spawn(service, ServeOptions::default()).expect("bind");
+    let addr = server.addr();
+
+    let n = 6u64;
+    let spec = SolveSpec::new(GemmShape::new(96, 64, 32), arch_spec());
+    let body = spec.to_json().to_text();
+    for _ in 0..n {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        let req = format!(
+            "POST /solve HTTP/1.1\r\nHost: goma\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        // Dropped without ever reading: depending on timing the server's
+        // write sees a reset pipe, a timeout, or a buffered success — all
+        // are legal outcomes; none may wedge a thread or lose a request.
+    }
+
+    // The server stays fully serviceable afterwards...
+    let (r, _) = solve_with_retries(addr, "survivor", &spec);
+    r.expect("feasible");
+    // ...and every abandoned request was still read, solved, and answered
+    // exactly once (poll briefly: the abandoned requests race the
+    // survivor's answer through independent connection threads).
+    let m = server.metrics();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while m.answered_ok() < n + 1 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(m.answered_ok(), n + 1, "answered even when the client vanished");
+    assert_eq!(
+        m.solve_requests(),
+        m.answered_ok() + m.answered_err() + m.shed_overload() + m.shed_quota() + m.bad_requests(),
+        "write failures must not break the accounting invariant"
+    );
+    // Any write failures landed in the overlay counters, at most one per
+    // abandoned client (zero is legal: a small response can land in the
+    // kernel buffer before the peer's reset arrives).
+    let overlay = m.write_timeouts() + m.write_pipe_errors() + m.write_other_errors();
+    assert!(overlay <= n, "at most one write error per abandoned client, saw {overlay}");
     server.shutdown();
 }
 
@@ -434,6 +499,16 @@ fn metrics_endpoint_is_valid_prometheus_text_and_agrees_with_counters() {
     assert_eq!(prev, scalar("goma_wire_request_duration_seconds_count"));
     assert_eq!(prev, answered, "the histogram counts answered requests");
     assert!(scalar("goma_wire_request_duration_seconds_sum") >= 0.0);
+
+    // The supervision and write-error families are present from the very
+    // first scrape (zero-valued on a healthy run) so dashboards and the CI
+    // smoke assertions never see a family appear mid-flight.
+    assert_eq!(scalar("goma_service_shard_respawns_total"), 0.0);
+    assert_eq!(scalar("goma_service_breaker_trips_total"), 0.0);
+    assert_eq!(scalar("goma_service_warm_write_failures_total"), 0.0);
+    let write_errs = &samples["goma_wire_write_errors_total"];
+    assert_eq!(write_errs.len(), 3, "timeout/pipe/other series are always exposed");
+    assert_eq!(write_errs.iter().map(|(_, v)| v).sum::<f64>(), 0.0, "healthy run");
 
     // Counters scraped over the wire agree with the in-process accessors.
     let m = server.metrics();

@@ -116,16 +116,17 @@ fn infeasible_outcomes_persist_as_negative_entries() {
 #[test]
 fn version_mismatch_is_rejected_wholesale() {
     let dir = tmp_dir("version");
-    // Pre-v5 stores (and any foreign file) must be ignored, not misparsed —
-    // the v4 case is the live migration path of the v5 format bump (the
-    // persisted certificate gained the distributed-solve provenance
-    // counters, `shards`/`shard_retries`), exactly as v3 was for v4's
-    // unit-counter bump before it.
+    // Pre-v6 stores (and any foreign file) must be ignored, not misparsed —
+    // the v5 case is the live migration path of the v6 format bump (the
+    // persisted certificate gained the supervision counters,
+    // `shard_respawns`/`breaker_trips`), exactly as v4 was for v5's
+    // shard-counter bump before it.
     for old in [
         "# goma-warm-cache v0\n00aa\terr\tinfeasible\n",
         "# goma-warm-cache v2\n00aa\terr\tinfeasible\n",
         "# goma-warm-cache v3\n00aa\terr\t00bb\tinfeasible\n",
         "# goma-warm-cache v4\n00aa\terr\t00bb\tinfeasible\n",
+        "# goma-warm-cache v5\n00aa\terr\t00bb\tinfeasible\n",
     ] {
         std::fs::write(dir.join(WARM_CACHE_FILE), old).unwrap();
         let h = spawn_with(&dir);
